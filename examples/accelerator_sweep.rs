@@ -1,0 +1,82 @@
+//! Accelerator-deployment study (extends paper §4.5): how BESA's learned
+//! non-uniform sparsity translates to ViTCoD hardware speedup, compared to
+//! uniform pruning, across accelerator configurations (PE split, density
+//! threshold). This is the exploration a deployment engineer runs before
+//! committing to a hardware config.
+//!
+//! ```bash
+//! cargo run --release --example accelerator_sweep
+//! ```
+
+use besa::coordinator::Pipeline;
+use besa::data::batcher::CalibrationSet;
+use besa::model::{ParamStore, LAYER_NAMES};
+use besa::prune::besa::{BesaConfig, BesaPruner};
+use besa::prune::wanda::WandaPruner;
+use besa::runtime::Engine;
+use besa::sim::{simulate_block, SimConfig};
+
+fn main() -> anyhow::Result<()> {
+    besa::util::logging::init_from_env();
+    let config = std::env::var("BESA_SWEEP_CONFIG").unwrap_or_else(|_| "test".to_string());
+    let engine = Engine::new(std::path::Path::new("artifacts"), &config)?;
+    let cfg = engine.config().clone();
+
+    // a pruned model per method (fresh init is fine: the sim only reads masks)
+    let ckpt = std::path::PathBuf::from(format!("runs/{config}-dense.bst"));
+    let dense = if ckpt.exists() {
+        ParamStore::load(&cfg, &ckpt)?
+    } else {
+        ParamStore::init(&cfg, 9)
+    };
+    let calib = CalibrationSet::sample(&cfg, cfg.batch, 5);
+
+    let mut besa_m = dense.clone();
+    Pipeline::new(&engine, calib.batches.clone())
+        .run(&mut besa_m, &mut BesaPruner::new(BesaConfig::default()))?;
+    let mut wanda_m = dense.clone();
+    Pipeline::new(&engine, calib.batches).run(&mut wanda_m, &mut WandaPruner { sparsity: 0.5 })?;
+
+    println!("\n== ViTCoD config sweep: end-to-end block speedup ==");
+    println!(
+        "{:<28} {:>12} {:>12} {:>10}",
+        "accelerator config", "wanda", "besa", "besa/wanda"
+    );
+    for (name, denser, sparser, thresh) in [
+        ("64+64 PEs, thresh 0.5", 64usize, 64usize, 0.5f64),
+        ("96+32 PEs, thresh 0.5", 96, 32, 0.5),
+        ("32+96 PEs, thresh 0.5", 32, 96, 0.5),
+        ("64+64 PEs, thresh 0.25", 64, 64, 0.25),
+        ("64+64 PEs, thresh 0.75", 64, 64, 0.75),
+    ] {
+        let sim = SimConfig {
+            denser_pes: denser,
+            sparser_pes: sparser,
+            density_threshold: thresh,
+            tokens: cfg.seq_len,
+            ..Default::default()
+        };
+        let total = |p: &ParamStore| -> anyhow::Result<(u64, u64)> {
+            let sims = simulate_block(p, &cfg, &sim)?;
+            Ok((
+                sims.iter().map(|s| s.sparse_cycles).sum::<u64>(),
+                sims.iter().map(|s| s.dense_cycles).sum::<u64>(),
+            ))
+        };
+        let (wc, dc) = total(&wanda_m)?;
+        let (bc, _) = total(&besa_m)?;
+        println!(
+            "{name:<28} {:>11.2}x {:>11.2}x {:>10.3}",
+            dc as f64 / wc as f64,
+            dc as f64 / bc as f64,
+            wc as f64 / bc as f64
+        );
+    }
+
+    println!("\n== per-layer BESA sparsity allocation (block 0) ==");
+    for w in LAYER_NAMES {
+        let t = besa_m.get(&ParamStore::layer_name(0, w))?;
+        println!("  {w:<6} sparsity {:.2}%", t.zero_fraction() * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Joint compression (paper §3.3 / Table 3): 4-bit weight quantization
+//! with learnable clipping strengths optimized *jointly* with BESA's
+//! sparsity allocation, vs. the quantize-then-Wanda baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example joint_compression
+//! ```
+
+use besa::coordinator::{trainer, Pipeline};
+use besa::data::batcher::CalibrationSet;
+use besa::model::ParamStore;
+use besa::prune::besa::{BesaConfig, BesaPruner};
+use besa::prune::wanda::WandaPruner;
+use besa::quant::{quantize_model, QuantSpec};
+use besa::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    besa::util::logging::init_from_env();
+    let config = std::env::var("BESA_JOINT_CONFIG").unwrap_or_else(|_| "test".to_string());
+    let engine = Engine::new(std::path::Path::new("artifacts"), &config)?;
+    let cfg = engine.config().clone();
+
+    // dense model: checkpoint if present, else a quick pretrain
+    let ckpt = std::path::PathBuf::from(format!("runs/{config}-dense.bst"));
+    let mut dense;
+    if ckpt.exists() {
+        dense = ParamStore::load(&cfg, &ckpt)?;
+    } else {
+        dense = ParamStore::init(&cfg, 5);
+        trainer::pretrain(
+            &engine,
+            &mut dense,
+            &trainer::TrainConfig { steps: 150, lr: 3e-3, seed: 5, log_every: 50 },
+        )?;
+    }
+
+    let calib = CalibrationSet::sample(&cfg, 2 * cfg.batch, 0xCA11B);
+
+    // Joint: BESA learns theta AND gamma against the block reconstruction
+    let mut joint = dense.clone();
+    Pipeline::new(&engine, calib.batches.clone()).run(
+        &mut joint,
+        &mut BesaPruner::new(BesaConfig { sparsity: 0.5, quant: true, ..Default::default() }),
+    )?;
+
+    // Baseline: quantize with fixed clipping, then Wanda-prune
+    let mut jw = dense.clone();
+    quantize_model(&mut jw, &cfg, QuantSpec::default())?;
+    Pipeline::new(&engine, calib.batches).run(&mut jw, &mut WandaPruner { sparsity: 0.5 })?;
+
+    println!("\n{:<14} {:>10} {:>10} {:>10} {:>9}", "variant", "wiki-syn", "c4-syn", "ptb-syn", "sparsity");
+    for (name, m) in [("dense", &dense), ("joint (besa)", &joint), ("joint-wanda", &jw)] {
+        let ppl = besa::eval::perplexity_all(&engine, m, 8, 77)?;
+        print!("{name:<14}");
+        for (_, v) in &ppl {
+            print!(" {v:>10.4}");
+        }
+        println!(" {:>9.3}", m.prunable_sparsity(cfg.n_blocks));
+    }
+    println!("\nexpected shape (paper Table 3): joint (besa) < joint-wanda on every dataset");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: the public-API happy path in ~40 lines.
+//!
+//! Trains a small dense LM on the synthetic corpus, prunes it with BESA at
+//! 50% unstructured sparsity, and compares perplexity against the dense
+//! model and a Wanda baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use besa::coordinator::{trainer, Pipeline};
+use besa::data::batcher::CalibrationSet;
+use besa::data::Domain;
+use besa::model::ParamStore;
+use besa::prune::besa::{BesaConfig, BesaPruner};
+use besa::prune::wanda::WandaPruner;
+use besa::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    besa::util::logging::init_from_env();
+    // 1. engine: loads + compiles the AOT artifacts for the `test` config
+    let engine = Engine::new(std::path::Path::new("artifacts"), "test")?;
+    let cfg = engine.config().clone();
+
+    // 2. pretrain a dense model (the stand-in for downloading a checkpoint)
+    let mut dense = ParamStore::init(&cfg, 42);
+    let stats = trainer::pretrain(
+        &engine,
+        &mut dense,
+        &trainer::TrainConfig { steps: 120, lr: 3e-3, seed: 42, log_every: 40 },
+    )?;
+    println!(
+        "dense model: {} params, loss {:.3} -> {:.3}",
+        cfg.total_param_count(),
+        stats.losses[0],
+        stats.losses.last().unwrap()
+    );
+
+    // 3. prune with BESA (Algorithm 1) and with Wanda for comparison
+    let calib = CalibrationSet::sample(&cfg, 2 * cfg.batch, 7);
+    let mut besa_model = dense.clone();
+    Pipeline::new(&engine, calib.batches.clone())
+        .run(&mut besa_model, &mut BesaPruner::new(BesaConfig::default()))?;
+    let mut wanda_model = dense.clone();
+    Pipeline::new(&engine, calib.batches)
+        .run(&mut wanda_model, &mut WandaPruner { sparsity: 0.5 })?;
+
+    // 4. compare perplexity
+    for (name, m) in [("dense", &dense), ("besa", &besa_model), ("wanda", &wanda_model)] {
+        let ppl = besa::eval::perplexity(&engine, m, Domain::WikiSyn, 4, 77)?;
+        println!(
+            "{name:>6}: wiki-syn ppl {ppl:.4}  (sparsity {:.3})",
+            m.prunable_sparsity(cfg.n_blocks)
+        );
+    }
+    Ok(())
+}

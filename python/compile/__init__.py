@@ -1,0 +1,1 @@
+"""Build-time compile package: L2 jax graphs + L1 kernels + AOT lowering."""

@@ -1,0 +1,380 @@
+"""AOT lowering: every L2 graph -> HLO *text* + a JSON manifest.
+
+Run once by `make artifacts` (python never touches the request path):
+
+    python -m compile.aot --config md --out ../artifacts
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the rust `xla` 0.1.6 crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records, for every artifact, the positional input/output
+specs (name, dtype, shape) so the rust runtime can validate literals
+before execution and tests can assert the contract.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import besa, model
+from .configs import CONFIGS, LAYER_NAMES, ModelConfig
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _named(specs):
+    """specs: list of (name, ShapeDtypeStruct) -> manifest fragment."""
+    return [
+        {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)} for n, s in specs
+    ]
+
+
+class Emitter:
+    def __init__(self, cfg: ModelConfig, outdir: str):
+        self.cfg = cfg
+        self.dir = os.path.join(outdir, cfg.name)
+        os.makedirs(self.dir, exist_ok=True)
+        self.manifest = {
+            "config": {
+                "name": cfg.name,
+                "vocab": cfg.vocab,
+                "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads,
+                "n_blocks": cfg.n_blocks,
+                "d_ffn": cfg.d_ffn,
+                "seq_len": cfg.seq_len,
+                "batch": cfg.batch,
+                "n_rates": cfg.n_rates,
+                "norm_eps": cfg.norm_eps,
+                "rope_base": cfg.rope_base,
+                "layer_shapes": {n: list(s) for n, s in cfg.layer_shapes().items()},
+                "param_order": model.param_order(cfg),
+            },
+            "artifacts": {},
+        }
+
+    def emit(self, name, fn, in_specs, out_names):
+        """Lower fn at the given positional specs and write <name>.hlo.txt."""
+        lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *[s for _, s in in_specs])
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _named(in_specs),
+            "outputs": _named(list(zip(out_names, out_avals))),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {self.cfg.name}/{name}: {len(text)/1e6:.2f} MB HLO text")
+
+    def finish(self):
+        with open(os.path.join(self.dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+def weight_specs(cfg, prefix=""):
+    return [(prefix + n, spec(s)) for n, s in cfg.layer_shapes().items()]
+
+
+def norm_specs(cfg, prefix=""):
+    d = cfg.d_model
+    return [(prefix + "norm1", spec((d,))), (prefix + "norm2", spec((d,)))]
+
+
+def rank_specs(cfg, prefix=""):
+    return [(prefix + "rank_" + n, spec(s, I32)) for n, s in cfg.layer_shapes().items()]
+
+
+def theta_specs(cfg, rowwise: bool, prefix=""):
+    dd = cfg.n_rates - 1
+    return [
+        (prefix + "theta_" + n, spec((s[0] if rowwise else 1, dd)))
+        for n, s in cfg.layer_shapes().items()
+    ]
+
+
+def gamma_specs(cfg, prefix=""):
+    return [(prefix + "gamma_" + n, spec((2,))) for n in cfg.layer_shapes()]
+
+
+def emit_config(cfg: ModelConfig, outdir: str):
+    em = Emitter(cfg, outdir)
+    B, S, d, V = cfg.batch, cfg.seq_len, cfg.d_model, cfg.vocab
+    x3 = spec((B, S, d))
+    toks = spec((B, S), I32)
+    names7 = LAYER_NAMES
+
+    # --- embedding / head -------------------------------------------------
+    em.emit(
+        "embed",
+        lambda tokens, emb: (model.embed(tokens, emb),),
+        [("tokens", toks), ("emb", spec((V, d)))],
+        ["x"],
+    )
+    em.emit(
+        "head_nll",
+        lambda x, nf, emb, tokens: (model.head_nll(x, nf, emb, tokens, cfg),),
+        [("x", x3), ("norm_f", spec((d,))), ("emb", spec((V, d))), ("tokens", toks)],
+        ["nll"],
+    )
+
+    # --- block forward (dense / masked / capture) -------------------------
+    def mk_block(masked, capture):
+        def f(*args):
+            x = args[0]
+            w = dict(zip(names7, args[1:8]))
+            norms = (args[8], args[9])
+            masks = dict(zip(names7, args[10:17])) if masked else None
+            out = model.block_forward(x, w, norms, cfg, masks=masks, capture=capture)
+            return out if not capture else (out[0], *out[1])
+
+        return f
+
+    base_in = [("x", x3)] + weight_specs(cfg) + norm_specs(cfg)
+    mask_in = [("mask_" + n, spec(s)) for n, s in cfg.layer_shapes().items()]
+    em.emit("block_fwd", mk_block(False, False), base_in, ["y"])
+    em.emit("block_fwd_masked", mk_block(True, False), base_in + mask_in, ["y"])
+    em.emit(
+        "block_capture",
+        mk_block(False, True),
+        base_in,
+        ["y", "h1", "att", "h2", "act"],
+    )
+
+    # --- BESA steps --------------------------------------------------------
+    def mk_besa(rowwise, granularity, quant):
+        def f(*args):
+            i = 0
+
+            def take(k):
+                nonlocal i
+                out = args[i : i + k]
+                i += k
+                return out
+
+            th = dict(zip(names7, take(7)))
+            xp, yd = take(2)
+            w = dict(zip(names7, take(7)))
+            norms = tuple(take(2))
+            rk = dict(zip(names7, take(7)))
+            lam, ah = take(2)
+            gm = dict(zip(names7, take(7))) if quant else None
+            return besa.besa_step(
+                th, xp, yd, w, norms, rk, lam, ah, cfg, granularity, gammas=gm
+            )
+
+        return f
+
+    def besa_inputs(rowwise, quant):
+        ins = (
+            theta_specs(cfg, rowwise)
+            + [("x_pruned", x3), ("y_dense", x3)]
+            + weight_specs(cfg)
+            + norm_specs(cfg)
+            + rank_specs(cfg)
+            + [("lam", spec(())), ("alpha_hat", spec(()))]
+        )
+        if quant:
+            ins += gamma_specs(cfg)
+        return ins
+
+    besa_outs = ["loss", "recon", "mean_alpha"] + ["dtheta_" + n for n in names7]
+    em.emit(
+        "besa_step_row", mk_besa(True, "block", False), besa_inputs(True, False), besa_outs
+    )
+
+    # Table 5 "sparsity step" ablation: same step graph at other D values
+    import dataclasses
+
+    for alt_d in cfg.alt_rates:
+        alt_cfg = dataclasses.replace(cfg, n_rates=alt_d, alt_rates=())
+        alt_em_cfg = em.cfg  # emit into the same dir/manifest
+        del alt_em_cfg
+
+        def mk_besa_alt(acfg):
+            def f(*args):
+                i = 0
+
+                def take(k):
+                    nonlocal i
+                    out = args[i : i + k]
+                    i += k
+                    return out
+
+                th = dict(zip(names7, take(7)))
+                xp, yd = take(2)
+                w = dict(zip(names7, take(7)))
+                norms = tuple(take(2))
+                rk = dict(zip(names7, take(7)))
+                lam, ah = take(2)
+                return besa.besa_step(th, xp, yd, w, norms, rk, lam, ah, acfg, "block")
+
+            return f
+
+        alt_theta = [
+            ("theta_" + n, spec((s[0], alt_d - 1)))
+            for n, s in cfg.layer_shapes().items()
+        ]
+        alt_in = (
+            alt_theta
+            + [("x_pruned", x3), ("y_dense", x3)]
+            + weight_specs(cfg)
+            + norm_specs(cfg)
+            + rank_specs(cfg)
+            + [("lam", spec(())), ("alpha_hat", spec(()))]
+        )
+        em.emit(f"besa_step_row_d{alt_d}", mk_besa_alt(alt_cfg), alt_in, besa_outs)
+    em.emit(
+        "besa_step_layer",
+        mk_besa(False, "block", False),
+        besa_inputs(False, False),
+        besa_outs,
+    )
+    em.emit(
+        "besa_step_attnmlp",
+        mk_besa(True, "attn_mlp", False),
+        besa_inputs(True, False),
+        besa_outs,
+    )
+    em.emit(
+        "besa_quant_step_row",
+        mk_besa(True, "block", True),
+        besa_inputs(True, True),
+        besa_outs + ["dgamma_" + n for n in names7],
+    )
+
+    # --- two-block granularity (Table 6) -----------------------------------
+    def two_block(*args):
+        i = 0
+
+        def take(k):
+            nonlocal i
+            out = args[i : i + k]
+            i += k
+            return out
+
+        th = [dict(zip(names7, take(7))) for _ in range(2)]
+        xp, yd = take(2)
+        w = [dict(zip(names7, take(7))) for _ in range(2)]
+        norms = [tuple(take(2)) for _ in range(2)]
+        rk = [dict(zip(names7, take(7))) for _ in range(2)]
+        lam, ah = take(2)
+        return besa.two_block_step(th, xp, yd, w, norms, rk, lam, ah, cfg)
+
+    tb_in = (
+        theta_specs(cfg, True, "b0_")
+        + theta_specs(cfg, True, "b1_")
+        + [("x_pruned", x3), ("y_dense", x3)]
+        + weight_specs(cfg, "b0_")
+        + weight_specs(cfg, "b1_")
+        + norm_specs(cfg, "b0_")
+        + norm_specs(cfg, "b1_")
+        + rank_specs(cfg, "b0_")
+        + rank_specs(cfg, "b1_")
+        + [("lam", spec(())), ("alpha_hat", spec(()))]
+    )
+    tb_out = (
+        ["loss", "recon", "mean_alpha"]
+        + ["b0_dtheta_" + n for n in names7]
+        + ["b1_dtheta_" + n for n in names7]
+    )
+    em.emit("two_block_step", two_block, tb_in, tb_out)
+
+    # --- mask decode + quant apply per distinct layer shape -----------------
+    distinct = {}
+    for n, s in cfg.layer_shapes().items():
+        distinct.setdefault(s, n)
+    for shape, _n in distinct.items():
+        r, c = shape
+        tag = f"{r}x{c}"
+
+        def mk_decode(sh):
+            def f(theta, rank):
+                m, a = besa.theta_to_mask(theta, rank, cfg)
+                return m, a
+
+            return f
+
+        em.emit(
+            f"mask_decode_{tag}",
+            mk_decode(shape),
+            [("theta", spec((r, cfg.n_rates - 1))), ("rank", spec((r, c), I32))],
+            ["mask", "alpha"],
+        )
+
+        def mk_quant(sh):
+            from .kernels.fake_quant import fake_quant
+
+            def f(w, gamma):
+                return (fake_quant(w, gamma[0], gamma[1], 4),)
+
+            return f
+
+        em.emit(
+            f"quant_apply_{tag}",
+            mk_quant(shape),
+            [("w", spec((r, c))), ("gamma", spec((2,)))],
+            ["wq"],
+        )
+
+    # --- whole-model pretraining step --------------------------------------
+    porder = model.param_order(cfg)
+
+    def pshape(name):
+        if name == "embed":
+            return (V, d)
+        if name.endswith(("norm1", "norm2")) or name == "norm_f":
+            return (d,)
+        return cfg.layer_shapes()[name.split(".")[-1]]
+
+    train_in = [(n, spec(pshape(n))) for n in porder] + [("tokens", toks)]
+
+    def train(*args):
+        return model.lm_train_step(args[:-1], args[-1], cfg)
+
+    em.emit(
+        "lm_train_step", train, train_in, ["loss"] + ["d_" + n for n in porder]
+    )
+
+    em.finish()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", action="append", default=None, help="config name(s)")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    names = args.config or list(CONFIGS)
+    for name in names:
+        print(f"[aot] lowering config '{name}'")
+        emit_config(CONFIGS[name], args.out)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

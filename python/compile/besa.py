@@ -1,0 +1,181 @@
+"""L2: the BESA training-step graphs (paper Eqn. 1-6, Algorithm 1 inner loop).
+
+One `besa_step` executes: theta -> beta -> cumbeta/alpha -> STE masks
+(L1 kernel) -> masked block forward (L1 kernels) -> blockwise
+reconstruction + sparsity loss -> gradients w.r.t. theta (and gamma for
+the joint-quantization variant). The rust coordinator owns the Adam loop
+and calls this artifact once per calibration minibatch.
+
+Granularities (paper Table 6): "block" (default) constrains the mean
+sparsity of all 7 layers of one block; "attn-mlp" constrains the attention
+(wq..wo) and MLP (wg,wu,wd) groups separately; "two-block" spans 14 layers
+of two consecutive blocks. "layer" granularity is exactly Wanda and lives
+in rust (prune/wanda.rs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import LAYER_NAMES, ModelConfig
+from .kernels.besa_mask import besa_mask_ste
+from .kernels.fake_quant import fake_quant
+from .model import block_forward
+
+
+def rates(cfg: ModelConfig):
+    """Candidate pruning rates p_d = d/D for d = 1..D (p_0 = 0 implicit)."""
+    d = cfg.n_rates
+    return jnp.arange(1, d + 1, dtype=jnp.float32) / d
+
+
+def beta_from_theta(theta):
+    """beta = softmax(theta) over D-1 learnable logits, beta_D = 0.
+
+    theta: [R, D-1] (row-wise) or [1, D-1] (layer-wise, broadcast).
+    Returns beta [R, D] with the last rate's probability pinned to zero so
+    the most important bucket is never pruned (paper boundary condition).
+    """
+    b = jax.nn.softmax(theta, axis=-1)
+    return jnp.concatenate([b, jnp.zeros_like(b[..., :1])], axis=-1)
+
+
+def theta_to_mask(theta, rank, cfg: ModelConfig):
+    """theta [R|1, D-1], rank int32 [R, C] -> (mask [R, C], alpha [R])."""
+    r = rank.shape[0]
+    beta = beta_from_theta(theta)
+    beta = jnp.broadcast_to(beta, (r, cfg.n_rates))
+    # Exclusive cumsum: keep-probability of bucket k is c[k] = sum_{d<=k} beta_d
+    # (paper Eqn. 4: P = sum_{d>k} beta_d = 1 - c[k]; bucket 0 covers ranks
+    # [0, C*p_1) and must have P = 1 when beta is a point mass at p_1).
+    cumb = jnp.concatenate(
+        [jnp.zeros_like(beta[..., :1]), jnp.cumsum(beta, axis=-1)[..., :-1]], axis=-1
+    )
+    alpha = jnp.sum(beta * rates(cfg)[None, :], axis=-1)  # [R]
+    mask = besa_mask_ste(rank, cumb, alpha)
+    return mask, alpha
+
+
+GROUPS = {
+    "block": [LAYER_NAMES],
+    "attn_mlp": [["wq", "wk", "wv", "wo"], ["wg", "wu", "wd"]],
+}
+
+
+def besa_block_loss(
+    thetas,
+    x_pruned,
+    y_dense,
+    weights,
+    norms,
+    ranks,
+    lam,
+    alpha_hat,
+    cfg: ModelConfig,
+    granularity: str = "block",
+    gammas=None,
+    bits: int = 4,
+):
+    """L^block = L^recon / ||y_dense||^2 + lam * sum_groups (alpha_g - alpha_hat)^2.
+
+    thetas: dict name -> [R|1, D-1] logits.
+    gammas: optional dict name -> [2] clipping strengths (joint quant).
+    Returns (loss, (recon, mean_alpha)).
+    """
+    masks, alphas = {}, {}
+    qweights = {}
+    for n in LAYER_NAMES:
+        w = weights[n]
+        if gammas is not None:
+            w = fake_quant(w, gammas[n][0], gammas[n][1], bits)
+        qweights[n] = w
+        masks[n], alphas[n] = theta_to_mask(thetas[n], ranks[n], cfg)
+    y = block_forward(x_pruned, qweights, norms, cfg, masks=masks)
+    recon = jnp.sum((y - y_dense) ** 2) / jnp.maximum(jnp.sum(y_dense**2), 1e-9)
+    sparse = 0.0
+    for group in GROUPS[granularity]:
+        num = sum(jnp.sum(alphas[n]) * ranks[n].shape[1] for n in group)
+        den = sum(alphas[n].shape[0] * ranks[n].shape[1] for n in group)
+        sparse = sparse + (num / den - alpha_hat) ** 2
+    mean_num = sum(jnp.sum(alphas[n]) * ranks[n].shape[1] for n in LAYER_NAMES)
+    mean_den = sum(alphas[n].shape[0] * ranks[n].shape[1] for n in LAYER_NAMES)
+    loss = recon + lam * sparse
+    return loss, (recon, mean_num / mean_den)
+
+
+def besa_step(
+    thetas,
+    x_pruned,
+    y_dense,
+    weights,
+    norms,
+    ranks,
+    lam,
+    alpha_hat,
+    cfg: ModelConfig,
+    granularity: str = "block",
+    gammas=None,
+    bits: int = 4,
+):
+    """One optimization step's forward+backward.
+
+    Returns (loss, recon, mean_alpha, dtheta[7], [dgamma[7]]).
+    """
+
+    def f(th, gm):
+        return besa_block_loss(
+            {n: th[i] for i, n in enumerate(LAYER_NAMES)},
+            x_pruned,
+            y_dense,
+            weights,
+            norms,
+            ranks,
+            lam,
+            alpha_hat,
+            cfg,
+            granularity,
+            gammas=None if gm is None else {n: gm[i] for i, n in enumerate(LAYER_NAMES)},
+            bits=bits,
+        )
+
+    th = [thetas[n] for n in LAYER_NAMES]
+    if gammas is None:
+        (loss, (recon, ma)), dth = jax.value_and_grad(lambda t: f(t, None), has_aux=True)(th)
+        return (loss, recon, ma, *dth)
+    gm = [gammas[n] for n in LAYER_NAMES]
+    (loss, (recon, ma)), (dth, dgm) = jax.value_and_grad(
+        f, argnums=(0, 1), has_aux=True
+    )(th, gm)
+    return (loss, recon, ma, *dth, *dgm)
+
+
+def two_block_step(
+    thetas2, x_pruned, y_dense, weights2, norms2, ranks2, lam, alpha_hat, cfg
+):
+    """Two-block granularity (paper Table 6 "Two Blocks").
+
+    All *2 args are pairs (block l, block l+1); the reconstruction target is
+    the dense output after both blocks and a single sparsity constraint
+    covers all 14 layers.
+    """
+
+    def f(th_pair):
+        x = x_pruned
+        alphas_all, sizes_all = [], []
+        for b in range(2):
+            th = {n: th_pair[b * 7 + i] for i, n in enumerate(LAYER_NAMES)}
+            masks, alphas = {}, {}
+            for n in LAYER_NAMES:
+                masks[n], alphas[n] = theta_to_mask(th[n], ranks2[b][n], cfg)
+                alphas_all.append(jnp.sum(alphas[n]) * ranks2[b][n].shape[1])
+                sizes_all.append(alphas[n].shape[0] * ranks2[b][n].shape[1])
+            x = block_forward(x, weights2[b], norms2[b], cfg, masks=masks)
+        recon = jnp.sum((x - y_dense) ** 2) / jnp.maximum(jnp.sum(y_dense**2), 1e-9)
+        ma = sum(alphas_all) / sum(sizes_all)
+        loss = recon + lam * (ma - alpha_hat) ** 2
+        return loss, (recon, ma)
+
+    th = [thetas2[b][n] for b in range(2) for n in LAYER_NAMES]
+    (loss, (recon, ma)), dth = jax.value_and_grad(f, has_aux=True)(th)
+    return (loss, recon, ma, *dth)

@@ -1,0 +1,64 @@
+"""Model / pruning configurations shared by the AOT compiler and tests.
+
+These are the "LLaMA family" stand-ins of the reproduction (see DESIGN.md
+§Substitutions): same architecture (pre-norm, RoPE, SwiGLU, 7 linear weights
+per block, tied embedding head), scaled to sizes that pretrain in minutes on
+a CPU PJRT client. The rust side reads the same values from the manifest
+emitted by aot.py — python is never imported at run time.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int  # byte-level tokenizer
+    d_model: int
+    n_heads: int
+    n_blocks: int
+    d_ffn: int
+    seq_len: int  # fixed AOT sequence length
+    batch: int  # fixed AOT batch (calibration minibatch & eval batch)
+    # BESA hyperparameters baked into artifact shapes
+    n_rates: int = 100  # D: number of candidate pruning rates (sparsity step 1/D)
+    # extra candidate-rate counts to lower besa_step variants for
+    # (Table 5 "sparsity step" ablation); empty for most configs
+    alt_rates: tuple = ()
+    rope_base: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    # The seven prunable linear weights of one block, in pipeline order.
+    # Shapes follow the Wanda convention: W[out, in], importance is sorted
+    # per *row* (output channel) over the input dimension.
+    def layer_shapes(self):
+        d, f = self.d_model, self.d_ffn
+        return {
+            "wq": (d, d),
+            "wk": (d, d),
+            "wv": (d, d),
+            "wo": (d, d),
+            "wg": (f, d),
+            "wu": (f, d),
+            "wd": (d, f),
+        }
+
+    def block_param_count(self) -> int:
+        return sum(r * c for r, c in self.layer_shapes().values())
+
+
+CONFIGS = {
+    # unit-test scale: exercised by pytest and cargo test
+    "test": ModelConfig("test", 256, 32, 2, 2, 88, 32, 4, n_rates=16),
+    # the "model family" standing in for LLaMA-7B/13B/30B (DESIGN.md)
+    "sm": ModelConfig("sm", 256, 64, 4, 4, 172, 64, 8, n_rates=32, alt_rates=(8, 64)),
+    "md": ModelConfig("md", 256, 128, 4, 8, 344, 128, 8, n_rates=100),
+    "lg": ModelConfig("lg", 256, 192, 8, 8, 516, 128, 8, n_rates=100),
+}
+
+LAYER_NAMES = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"]

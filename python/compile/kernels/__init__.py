@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret=True on CPU PJRT) + pure-jnp oracles."""
+
+from . import besa_mask, fake_quant, masked_matmul, ref, wanda  # noqa: F401

@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: differentiable BESA mask generation (paper Eqn. 4-6).
+
+This is the paper's "customized CUDA operator" rethought for TPU
+(DESIGN.md §Hardware-Adaptation): instead of warp-parallel row scans, the
+bucket index k(r) = floor(r*D/C) is pure vector math on the VPU, the
+per-element keep-probability is a take_along_axis gather from a [TR, D]
+cumbeta tile resident in VMEM, and the whole thing fuses with the masked
+matmul downstream. Sorting is *not* in this kernel — ranks are computed
+once per block (Algorithm 1, line 4) outside the optimization loop.
+
+The straight-through estimator is expressed as a jax.custom_vjp around the
+forward/backward kernel pair, so the same primitive serves the besa_step
+training graph and the mask_decode artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+# custom-calls; real-TPU perf is estimated analytically (DESIGN.md §Perf).
+INTERPRET = True
+
+
+def _row_tile(n_rows: int) -> int:
+    for t in (64, 32, 16, 8, 4, 2, 1):
+        if n_rows % t == 0:
+            return t
+    return 1
+
+
+def _mask_fwd_kernel(rank_ref, cumb_ref, alpha_ref, mask_ref, keep_ref, *, n_rates):
+    rank = rank_ref[...]  # [TR, C] int32
+    cumb = cumb_ref[...]  # [TR, D]
+    alpha = alpha_ref[...]  # [TR, 1]
+    c = rank.shape[-1]
+    k = jnp.minimum((rank * n_rates) // c, n_rates - 1)
+    keep = jnp.take_along_axis(cumb, k, axis=1)
+    mask = ((1.0 - keep) < alpha).astype(cumb.dtype)
+    mask_ref[...] = mask
+    keep_ref[...] = keep
+
+
+def _mask_bwd_kernel(rank_ref, g_ref, out_ref, *, n_rates):
+    rank = rank_ref[...]  # [TR, C]
+    g = g_ref[...]  # [TR, C]
+    c = rank.shape[-1]
+    k = jnp.minimum((rank * n_rates) // c, n_rates - 1)
+    onehot = (k[:, :, None] == jnp.arange(n_rates)[None, None, :]).astype(g.dtype)
+    out_ref[...] = jnp.einsum("rc,rcd->rd", g, onehot)
+
+
+def besa_mask_kernel(rank, cumbeta, alpha):
+    """Raw forward kernel: (mask, keepprob), no autodiff semantics."""
+    r, c = rank.shape
+    d = cumbeta.shape[-1]
+    tr = _row_tile(r)
+    grid = (r // tr,)
+    return pl.pallas_call(
+        functools.partial(_mask_fwd_kernel, n_rates=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, c), lambda i: (i, 0)),
+            pl.BlockSpec((tr, d), lambda i: (i, 0)),
+            pl.BlockSpec((tr, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tr, c), lambda i: (i, 0)),
+            pl.BlockSpec((tr, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), cumbeta.dtype),
+            jax.ShapeDtypeStruct((r, c), cumbeta.dtype),
+        ],
+        interpret=INTERPRET,
+    )(rank, cumbeta, alpha.reshape(r, 1))
+
+
+def besa_mask_grad_kernel(rank, g, n_rates):
+    """Raw backward kernel: bucket-binned segment sum of g -> [R, D]."""
+    r, c = rank.shape
+    tr = _row_tile(r)
+    grid = (r // tr,)
+    return pl.pallas_call(
+        functools.partial(_mask_bwd_kernel, n_rates=n_rates),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, c), lambda i: (i, 0)),
+            pl.BlockSpec((tr, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, n_rates), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n_rates), g.dtype),
+        interpret=INTERPRET,
+    )(rank, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def besa_mask_ste(rank, cumbeta, alpha):
+    """STE mask: forward = hard 0/1 mask, backward routes dL/dM into cumbeta
+    via the bucket map (paper Eqn. 6: dM/d(beta_d) = 1[d <= k])."""
+    mask, _ = besa_mask_kernel(rank, cumbeta, alpha)
+    return mask
+
+
+def _ste_fwd(rank, cumbeta, alpha):
+    mask, _ = besa_mask_kernel(rank, cumbeta, alpha)
+    return mask, (rank, cumbeta.shape[-1])
+
+
+def _ste_bwd(res, g):
+    rank, n_rates = res
+    gcum = besa_mask_grad_kernel(rank, g, n_rates)
+    # alpha enters the loss only through the (differentiable) sparsity
+    # penalty, not through the hard mask: no gradient here (Eqn. 6).
+    return (None, gcum, jnp.zeros(rank.shape[0], gcum.dtype))
+
+
+besa_mask_ste.defvjp(_ste_fwd, _ste_bwd)

@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: min-max fake quantization with learnable clipping.
+
+Implements paper Eqn. 7 (OmniQuant-style): the weight tensor is quantized
+to N-bit integers with scale/zero-point derived from *learnable* clipping
+strengths gamma0/gamma1 in [0, 1], then dequantized. STE on the round op
+makes the graph differentiable w.r.t. both w and the gammas, so joint
+pruning+quantization (paper §3.3, Table 3) trains both the BESA betas and
+the clipping strengths in one besa_quant_step artifact.
+
+The elementwise quant runs as a Pallas kernel over weight tiles; the
+global min/max reduction (a scalar) stays in jnp where XLA fuses it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _tile(n: int, pref: int = 128) -> int:
+    for t in (pref, 64, 32, 16, 8, 4, 2, 1):
+        if n % t == 0 and t <= n:
+            return t
+    return 1
+
+
+def _quant_kernel(w_ref, h_ref, z_ref, o_ref, *, qmax):
+    w = w_ref[...]
+    h = h_ref[0, 0]
+    z = z_ref[0, 0]
+    q = jnp.clip(jnp.round(w / h) + z, 0.0, qmax)
+    o_ref[...] = (q - z) * h
+
+
+def _quant_elementwise(w, h, z, bits):
+    r, c = w.shape
+    tr, tc = _tile(r), _tile(c, pref=512)
+    qmax = 2.0**bits - 1.0
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax),
+        grid=(r // tr, c // tc),
+        in_specs=[
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        interpret=INTERPRET,
+    )(w, h.reshape(1, 1), z.reshape(1, 1))
+
+
+def _ste_round(x):
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _soft_fake_quant(w, gamma0, gamma1, bits: int):
+    """STE surrogate: identical forward values, fully differentiable."""
+    qmax = 2.0**bits - 1.0
+    wmin = gamma0 * jnp.min(w)
+    wmax = gamma1 * jnp.max(w)
+    h = jnp.maximum((wmax - wmin) / qmax, 1e-8)
+    z = _ste_round(-wmin / h)
+    return (jnp.clip(_ste_round(w / h) + z, 0.0, qmax) - z) * h
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant(w, gamma0, gamma1, bits: int):
+    """Differentiable fake quantization (forward = ref.fake_quant_ref).
+
+    Forward runs the Pallas elementwise kernel; backward differentiates the
+    STE surrogate (round treated as identity), so gradients reach both w and
+    the clipping strengths gamma0/gamma1 through h and z.
+    """
+    qmax = 2.0**bits - 1.0
+    wmin = gamma0 * jnp.min(w)
+    wmax = gamma1 * jnp.max(w)
+    h = jnp.maximum((wmax - wmin) / qmax, 1e-8)
+    z = jnp.round(-wmin / h)
+    return _quant_elementwise(w, h, z, bits)
+
+
+def _fq_fwd(w, gamma0, gamma1, bits):
+    return fake_quant(w, gamma0, gamma1, bits), (w, gamma0, gamma1)
+
+
+def _fq_bwd(bits, res, g):
+    w, gamma0, gamma1 = res
+    _, vjp = jax.vjp(lambda w_, g0, g1: _soft_fake_quant(w_, g0, g1, bits), w, gamma0, gamma1)
+    return vjp(g)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)

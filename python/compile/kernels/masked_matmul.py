@@ -1,0 +1,130 @@
+"""L1 Pallas kernels: tiled (masked) matmul — the pruned linear layer.
+
+y = x @ (w * m).T with x [M, K], w/m [N, K] (Wanda row convention).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the mask multiply happens on
+the weight tile *in VMEM* right before it is fed to the MXU, so the sparse
+weight never round-trips to HBM densified. Tiles are MXU-shaped
+(up to 128x128); the K dimension is kept whole per tile (our model dims,
+<= 516, fit VMEM comfortably: 128*516*4B = 258 KiB/tile).
+
+A jax.custom_vjp provides the exact backward as three more tiled matmuls:
+  dx = g @ (w*m);  dw = (g.T @ x) * m;  dm = (g.T @ x) * w
+so gradients flow to the mask (and through the STE into the BESA betas).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _tile(n: int, pref: int = 128) -> int:
+    for t in (pref, 64, 32, 16, 8, 4, 2, 1):
+        if n % t == 0 and t <= n:
+            return t
+    return 1
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(x, w.T).astype(o_ref.dtype)
+
+
+def _mmm_kernel(x_ref, w_ref, m_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    w = (w_ref[...] * m_ref[...]).astype(jnp.float32)
+    o_ref[...] = jnp.dot(x, w.T).astype(o_ref.dtype)
+
+
+def matmul_t(x, w):
+    """y[M,N] = x[M,K] @ w[N,K].T as a tiled Pallas kernel."""
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, (x.shape, w.shape)
+    tm, tn = _tile(m), _tile(n)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def _masked_matmul_raw(x, w, m):
+    mm, k = x.shape
+    n, k2 = w.shape
+    assert k == k2
+    tm, tn = _tile(mm), _tile(n)
+    return pl.pallas_call(
+        _mmm_kernel,
+        grid=(mm // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, m)
+
+
+@jax.custom_vjp
+def dense_matmul(x, w):
+    """y = x @ w.T, differentiable (used by the dense forward / pretraining)."""
+    return matmul_t(x, w)
+
+
+def _dmm_fwd(x, w):
+    return matmul_t(x, w), (x, w)
+
+
+def _dmm_bwd(res, g):
+    x, w = res
+    dx = matmul_t(g, jnp.swapaxes(w, 0, 1))
+    dw = matmul_t(jnp.swapaxes(g, 0, 1), jnp.swapaxes(x, 0, 1))
+    return dx, dw
+
+
+dense_matmul.defvjp(_dmm_fwd, _dmm_bwd)
+
+
+@jax.custom_vjp
+def masked_matmul(x, w, m):
+    """y = x @ (w*m).T, differentiable in x, w and m."""
+    return _masked_matmul_raw(x, w, m)
+
+
+def _mmm_fwd(x, w, m):
+    return _masked_matmul_raw(x, w, m), (x, w, m)
+
+
+def _mmm_bwd(res, g):
+    x, w, m = res
+    wm = w * m
+    # dx[M,K] = g[M,N] @ wm[N,K]  (matmul_t computes a @ b.T)
+    dx = matmul_t(g, jnp.swapaxes(wm, 0, 1))
+    # gtx[N,K] = g.T[N,M] @ x[M,K]
+    gtx = matmul_t(jnp.swapaxes(g, 0, 1), jnp.swapaxes(x, 0, 1))
+    return dx, gtx * m, gtx * w
+
+
+masked_matmul.defvjp(_mmm_fwd, _mmm_bwd)
+
+
+def linear(x3, w, m=None):
+    """Apply (masked) linear to a [B, S, K] activation, returns [B, S, N]."""
+    b, s, k = x3.shape
+    x2 = x3.reshape(b * s, k)
+    y2 = masked_matmul(x2, w, m) if m is not None else dense_matmul(x2, w)
+    return y2.reshape(b, s, w.shape[0])

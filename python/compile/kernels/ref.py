@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function here is the mathematical definition of the corresponding
+kernel in this package; pytest sweeps shapes/dtypes with hypothesis and
+asserts allclose between the kernel (interpret=True) and these references.
+"""
+
+import jax.numpy as jnp
+
+
+def bucket_of_rank(rank, n_cols: int, n_rates: int):
+    """Bucket index k(r) = floor(r * D / C) for rank r in [0, C).
+
+    Candidate pruning rates are p_d = d / D for d = 0..D; an element whose
+    ascending-importance rank falls in [C*p_k, C*p_{k+1}) belongs to bucket
+    k and has pruning probability P = sum_{d>k} beta_d = 1 - cumbeta[k].
+    """
+    return jnp.minimum((rank * n_rates) // n_cols, n_rates - 1).astype(jnp.int32)
+
+
+def besa_mask_ref(rank, cumbeta, alpha):
+    """Hard BESA mask (Eqn. 4-5 of the paper).
+
+    rank:    int32 [R, C]  ascending per-row importance rank (0 = least)
+    cumbeta: f32  [R, D]   cumsum of beta over candidate rates (beta_D = 0)
+    alpha:   f32  [R]      per-row expected sparsity  sum_d beta_d * p_d
+    returns (mask [R, C], keepprob [R, C]) where keepprob = cumbeta[k(rank)]
+    and mask = 1[1 - keepprob < alpha]  (P < alpha  =>  keep).
+    """
+    r, c = rank.shape
+    d = cumbeta.shape[-1]
+    k = bucket_of_rank(rank, c, d)
+    keep = jnp.take_along_axis(cumbeta, k, axis=1)
+    prune_prob = 1.0 - keep
+    mask = (prune_prob < alpha[:, None]).astype(cumbeta.dtype)
+    return mask, keep
+
+
+def besa_mask_bwd_ref(rank, g, n_rates: int):
+    """Backward of the STE mask w.r.t. cumbeta: bin g by bucket.
+
+    grad_cumbeta[i, d] = sum_j g[i, j] * 1[k(rank[i,j]) == d]
+    """
+    r, c = rank.shape
+    k = bucket_of_rank(rank, c, n_rates)
+    onehot = (k[:, :, None] == jnp.arange(n_rates)[None, None, :]).astype(g.dtype)
+    return jnp.einsum("rc,rcd->rd", g, onehot)
+
+
+def matmul_ref(x, w):
+    """y = x @ w.T with f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32).T).astype(x.dtype)
+
+
+def masked_matmul_ref(x, w, m):
+    """y = x @ (w * m).T — the pruned linear layer."""
+    return matmul_ref(x, w * m)
+
+
+def wanda_importance_ref(w, colnorm):
+    """delta_ij = |W_ij| * ||X_:,j||_2 (Wanda metric, Eqn. 2)."""
+    return jnp.abs(w) * colnorm[None, :]
+
+
+def fake_quant_ref(w, gamma0, gamma1, bits: int):
+    """Min-max fake quantization with learnable clipping (Eqn. 7)."""
+    qmax = 2.0**bits - 1.0
+    wmin = gamma0 * jnp.min(w)
+    wmax = gamma1 * jnp.max(w)
+    h = jnp.maximum((wmax - wmin) / qmax, 1e-8)
+    z = jnp.round(-wmin / h)
+    q = jnp.clip(jnp.round(w / h) + z, 0.0, qmax)
+    return (q - z) * h
+
+
+def rmsnorm_ref(x, gain, eps: float = 1e-5):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x / jnp.sqrt(var + eps) * gain).astype(x.dtype)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: Wanda importance scoring (paper Eqn. 2).
+
+delta_ij = |W_ij| * ||X_:,j||_2 — elementwise magnitude times the
+broadcast column norm of the calibration activations. The norm vector is
+accumulated streaming over calibration batches (rust side / L2 capture
+graph); this kernel only does the broadcast-multiply over weight tiles so
+it can fuse with the sort-free rank consumers.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _tile(n: int, pref: int = 128) -> int:
+    for t in (pref, 64, 32, 16, 8, 4, 2, 1):
+        if n % t == 0 and t <= n:
+            return t
+    return 1
+
+
+def _wanda_kernel(w_ref, n_ref, o_ref):
+    o_ref[...] = jnp.abs(w_ref[...]) * n_ref[...]
+
+
+def wanda_importance(w, colnorm):
+    """scores [R, C] = |w| * colnorm[None, :]."""
+    r, c = w.shape
+    tr, tc = _tile(r), _tile(c, pref=512)
+    return pl.pallas_call(
+        _wanda_kernel,
+        grid=(r // tr, c // tc),
+        in_specs=[
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        interpret=INTERPRET,
+    )(w, colnorm.reshape(1, c))
+
+
+def ranks_from_scores(scores):
+    """Ascending per-row rank of each element (0 = least important).
+
+    rank = argsort(argsort(scores)) — computed ONCE per block (Algorithm 1
+    line 4), outside the beta-optimization loop; stays in jnp/XLA because
+    sort is the one op that does not map to the TPU VPU/MXU.
+    """
+    order = jnp.argsort(scores, axis=-1)
+    return jnp.argsort(order, axis=-1).astype(jnp.int32)

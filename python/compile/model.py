@@ -1,0 +1,151 @@
+"""L2: LLaMA-architecture transformer in JAX, built on the L1 kernels.
+
+Every linear projection goes through the Pallas (masked) matmul so the
+same graph serves dense forward (mask=None), pruned forward (hard masks),
+and the BESA training step (STE masks). RoPE, RMSNorm and attention are
+jnp — XLA fuses them; the matmuls are the MXU hot path.
+
+Weight convention: W[out, in] (Wanda rows = output channels), applied as
+x @ W.T via kernels.masked_matmul.linear.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import LAYER_NAMES, ModelConfig
+from .kernels.masked_matmul import linear
+
+
+def rmsnorm(x, gain, eps):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * (1.0 / jnp.sqrt(var + eps)) * gain).astype(x.dtype)
+
+
+def rope_angles(cfg: ModelConfig):
+    dh = cfg.d_head
+    inv = 1.0 / (cfg.rope_base ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    pos = jnp.arange(cfg.seq_len, dtype=jnp.float32)
+    ang = pos[:, None] * inv[None, :]  # [S, dh/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(q, cos, sin):
+    # q: [B, H, S, dh]
+    q1, q2 = q[..., 0::2], q[..., 1::2]
+    out1 = q1 * cos - q2 * sin
+    out2 = q1 * sin + q2 * cos
+    return jnp.stack([out1, out2], axis=-1).reshape(q.shape)
+
+
+def attention(q, k, v, cfg: ModelConfig):
+    b, s, d = q.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    cos, sin = rope_angles(cfg)
+    cos, sin = cos[None, None, :s], sin[None, None, :s]
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+def block_forward(x, weights, norms, cfg: ModelConfig, masks=None, capture=False):
+    """One transformer block.
+
+    weights: dict name -> W[out, in] for the seven prunable projections.
+    norms:   (g1, g2) RMSNorm gains.
+    masks:   optional dict name -> 0/1 (or STE) mask, same shape as W.
+    capture: additionally return the inputs seen by each linear layer
+             (for Wanda column norms and SparseGPT Hessians).
+    """
+    m = (lambda n: masks[n]) if masks is not None else (lambda n: None)
+    g1, g2 = norms
+    h1 = rmsnorm(x, g1, cfg.norm_eps)
+    q = linear(h1, weights["wq"], m("wq"))
+    k = linear(h1, weights["wk"], m("wk"))
+    v = linear(h1, weights["wv"], m("wv"))
+    att = attention(q, k, v, cfg)
+    o = linear(att, weights["wo"], m("wo"))
+    x2 = x + o
+    h2 = rmsnorm(x2, g2, cfg.norm_eps)
+    gate = linear(h2, weights["wg"], m("wg"))
+    up = linear(h2, weights["wu"], m("wu"))
+    act = jax.nn.silu(gate) * up
+    down = linear(act, weights["wd"], m("wd"))
+    y = x2 + down
+    if capture:
+        # inputs to {q,k,v}, {o}, {gate,up}, {down} respectively
+        return y, (h1, att, h2, act)
+    return y
+
+
+def embed(tokens, emb):
+    return emb[tokens]
+
+
+def head_nll(x, gain_f, emb, tokens, cfg: ModelConfig):
+    """Per-position next-token NLL [B, S] (last position zeroed).
+
+    Head is tied to the embedding: logits = rmsnorm(x) @ emb.T.
+    """
+    h = rmsnorm(x, gain_f, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, emb)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.roll(tokens, -1, axis=1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    valid = jnp.ones_like(nll).at[:, -1].set(0.0)
+    return nll * valid
+
+
+# ---------------------------------------------------------------------------
+# Whole-model graphs (pretraining + eval), parameterized by a flat list in a
+# fixed order so the rust side can feed literals positionally.
+# ---------------------------------------------------------------------------
+
+
+def param_order(cfg: ModelConfig):
+    """Canonical parameter name order shared with rust (model/params.rs)."""
+    names = ["embed"]
+    for l in range(cfg.n_blocks):
+        for w in LAYER_NAMES:
+            names.append(f"blocks.{l}.{w}")
+        names.append(f"blocks.{l}.norm1")
+        names.append(f"blocks.{l}.norm2")
+    names.append("norm_f")
+    return names
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    names = param_order(cfg)
+    assert len(flat) == len(names), (len(flat), len(names))
+    p = dict(zip(names, flat))
+    blocks = []
+    for l in range(cfg.n_blocks):
+        w = {n: p[f"blocks.{l}.{n}"] for n in LAYER_NAMES}
+        norms = (p[f"blocks.{l}.norm1"], p[f"blocks.{l}.norm2"])
+        blocks.append((w, norms))
+    return p["embed"], blocks, p["norm_f"]
+
+
+def lm_loss(flat_params, tokens, cfg: ModelConfig):
+    emb, blocks, norm_f = unflatten_params(cfg, flat_params)
+    x = embed(tokens, emb)
+    for w, norms in blocks:
+        x = block_forward(x, w, norms, cfg)
+    nll = head_nll(x, norm_f, emb, tokens, cfg)
+    return jnp.sum(nll) / jnp.sum(nll != 0.0).astype(jnp.float32)
+
+
+def lm_train_step(flat_params, tokens, cfg: ModelConfig):
+    """Returns (loss, grads...) — optimizer (Adam) lives in rust."""
+    loss, grads = jax.value_and_grad(lambda fp: lm_loss(fp, tokens, cfg))(
+        list(flat_params)
+    )
+    return (loss, *grads)

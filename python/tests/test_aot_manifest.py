@@ -1,0 +1,77 @@
+"""The emitted artifacts + manifest honor the rust-side contract."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+REQUIRED = [
+    "embed",
+    "head_nll",
+    "block_fwd",
+    "block_fwd_masked",
+    "block_capture",
+    "besa_step_row",
+    "besa_step_layer",
+    "besa_step_attnmlp",
+    "besa_quant_step_row",
+    "two_block_step",
+    "lm_train_step",
+]
+
+
+def manifest(cfg):
+    path = os.path.join(ART, cfg, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip(f"artifacts for '{cfg}' not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("cfg", ["test", "sm", "md"])
+def test_required_artifacts_present(cfg):
+    m = manifest(cfg)
+    for name in REQUIRED:
+        assert name in m["artifacts"], name
+        f = os.path.join(ART, cfg, m["artifacts"][name]["file"])
+        assert os.path.exists(f), f
+        assert os.path.getsize(f) > 100
+
+
+@pytest.mark.parametrize("cfg", ["test"])
+def test_hlo_text_parses_as_hlo_module(cfg):
+    m = manifest(cfg)
+    f = os.path.join(ART, cfg, m["artifacts"]["block_fwd"]["file"])
+    head = open(f).read(200)
+    assert head.startswith("HloModule"), head[:50]
+
+
+def test_besa_step_interface_counts():
+    m = manifest("test")
+    a = m["artifacts"]["besa_step_row"]
+    # 7 theta + x + y + 7 w + 2 norms + 7 ranks + lam + alpha_hat = 27
+    assert len(a["inputs"]) == 27
+    assert len(a["outputs"]) == 10
+    q = m["artifacts"]["besa_quant_step_row"]
+    assert len(q["inputs"]) == 34
+    assert len(q["outputs"]) == 17
+
+
+def test_param_order_matches_train_step():
+    m = manifest("test")
+    porder = m["config"]["param_order"]
+    tr = m["artifacts"]["lm_train_step"]
+    assert [i["name"] for i in tr["inputs"][:-1]] == porder
+    assert tr["inputs"][-1]["name"] == "tokens"
+    assert [o["name"] for o in tr["outputs"]] == ["loss"] + ["d_" + n for n in porder]
+
+
+def test_theta_shapes_rowwise_vs_layerwise():
+    m = manifest("test")
+    row = m["artifacts"]["besa_step_row"]["inputs"][0]
+    lay = m["artifacts"]["besa_step_layer"]["inputs"][0]
+    d = m["config"]["n_rates"]
+    assert row["shape"][1] == d - 1
+    assert lay["shape"][0] == 1

@@ -1,0 +1,138 @@
+"""L1 besa_mask kernel vs pure-jnp oracle, hypothesis shape/value sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import CONFIGS
+from compile import besa
+from compile.kernels import besa_mask, ref
+
+
+def random_ranks(rng, r, c):
+    return np.stack([rng.permutation(c) for _ in range(r)]).astype(np.int32)
+
+
+def random_theta(rng, r, d):
+    return jnp.asarray(rng.normal(size=(r, d - 1)), jnp.float32)
+
+
+def excl_cumsum(beta):
+    """Keep-probability per bucket: c[k] = sum_{d<=k} beta_d (see besa.theta_to_mask)."""
+    return jnp.concatenate(
+        [jnp.zeros_like(beta[..., :1]), jnp.cumsum(beta, axis=-1)[..., :-1]], axis=-1
+    )
+
+
+def mask_inputs(rng, r, c, d):
+    rank = jnp.asarray(random_ranks(rng, r, c))
+    theta = random_theta(rng, r, d)
+    beta = besa.beta_from_theta(theta)
+    cumb = excl_cumsum(beta)
+    p = jnp.arange(1, d + 1, dtype=jnp.float32) / d
+    alpha = jnp.sum(beta * p[None], axis=-1)
+    return rank, cumb, alpha
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.sampled_from([1, 2, 4, 8, 16, 24]),
+    c=st.sampled_from([8, 16, 32, 88, 100]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mask_kernel_matches_ref(r, c, d, seed):
+    rng = np.random.default_rng(seed)
+    rank, cumb, alpha = mask_inputs(rng, r, c, d)
+    m_k, keep_k = besa_mask.besa_mask_kernel(rank, cumb, alpha)
+    m_r, keep_r = ref.besa_mask_ref(rank, cumb, alpha)
+    np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))
+    np.testing.assert_allclose(np.asarray(keep_k), np.asarray(keep_r), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    r=st.sampled_from([2, 4, 8]),
+    c=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mask_bwd_kernel_matches_ref(r, c, d, seed):
+    rng = np.random.default_rng(seed)
+    rank = jnp.asarray(random_ranks(rng, r, c))
+    g = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+    gk = besa_mask.besa_mask_grad_kernel(rank, g, d)
+    gr = ref.besa_mask_bwd_ref(rank, g, d)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-5, atol=1e-6)
+
+
+def test_mask_monotone_in_importance(rng):
+    """Pruning probability must be non-increasing in rank: the kept set is
+    always the top-importance suffix (paper: most important always retained)."""
+    for seed in range(5):
+        r = np.random.default_rng(seed)
+        rank, cumb, alpha = mask_inputs(r, 8, 64, 16)
+        m, _ = besa_mask.besa_mask_kernel(rank, cumb, alpha)
+        m = np.asarray(m)
+        rk = np.asarray(rank)
+        for i in range(m.shape[0]):
+            by_rank = m[i][np.argsort(rk[i])]
+            # once kept (1), stays kept for all higher ranks
+            assert np.all(np.diff(by_rank) >= 0), by_rank
+
+
+def test_most_important_never_pruned(rng):
+    rank, cumb, alpha = mask_inputs(rng, 16, 64, 16)
+    m, _ = besa_mask.besa_mask_kernel(rank, cumb, alpha)
+    m = np.asarray(m)
+    rk = np.asarray(rank)
+    top = np.take_along_axis(m, np.argmax(rk, axis=1)[:, None], axis=1)
+    assert np.all(top == 1.0)
+
+
+def test_concentrated_beta_gives_exact_rate():
+    """If beta is a point mass at rate p_d, exactly d/D of each row is pruned."""
+    c, d = 64, 16
+    rng = np.random.default_rng(0)
+    rank = jnp.asarray(random_ranks(rng, 4, c))
+    for dstar in [1, 4, 8, 12]:
+        theta = np.full((4, d - 1), -30.0, np.float32)
+        theta[:, dstar - 1] = 30.0
+        beta = besa.beta_from_theta(jnp.asarray(theta))
+        cumb = excl_cumsum(beta)
+        p = jnp.arange(1, d + 1, dtype=jnp.float32) / d
+        alpha = jnp.sum(beta * p[None], -1)
+        m, _ = besa_mask.besa_mask_kernel(rank, cumb, alpha)
+        sparsity = 1.0 - np.asarray(m).mean(axis=1)
+        np.testing.assert_allclose(sparsity, dstar / d, atol=1e-6)
+
+
+def test_ste_gradient_matches_bucket_map():
+    """dL/dtheta via the STE must equal the analytic bucket-binned gradient."""
+    rng = np.random.default_rng(7)
+    r, c, d = 4, 32, 8
+    rank = jnp.asarray(random_ranks(rng, r, c))
+    theta = random_theta(rng, r, d)
+    gout = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+
+    def loss(th):
+        beta = besa.beta_from_theta(th)
+        cumb = excl_cumsum(beta)
+        p = jnp.arange(1, d + 1, dtype=jnp.float32) / d
+        alpha = jnp.sum(beta * p[None], -1)
+        m = besa_mask.besa_mask_ste(rank, cumb, alpha)
+        return jnp.sum(m * gout)
+
+    g_kernel = jax.grad(loss)(theta)
+
+    def loss_ref(th):
+        beta = besa.beta_from_theta(th)
+        cumb = excl_cumsum(beta)
+        k = ref.bucket_of_rank(rank, c, d)
+        keep = jnp.take_along_axis(cumb, k, axis=1)  # differentiable surrogate
+        return jnp.sum(keep * gout)
+
+    g_ref = jax.grad(loss_ref)(theta)
+    np.testing.assert_allclose(np.asarray(g_kernel), np.asarray(g_ref), rtol=1e-5, atol=1e-7)

@@ -1,0 +1,128 @@
+"""End-to-end BESA step graph: optimizing theta actually allocates sparsity.
+
+This is the python-side replica of what the rust coordinator does with the
+AOT artifact — a miniature Algorithm 1 inner loop on the `test` config.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import besa, model
+from compile.configs import CONFIGS, LAYER_NAMES
+from compile.kernels import wanda
+
+CFG = CONFIGS["test"]
+
+
+@pytest.fixture
+def block(rng):
+    w = {
+        n: jnp.asarray(rng.normal(size=s) * 0.08, jnp.float32)
+        for n, s in CFG.layer_shapes().items()
+    }
+    norms = (jnp.ones(CFG.d_model), jnp.ones(CFG.d_model))
+    x = jnp.asarray(rng.normal(size=(CFG.batch, CFG.seq_len, CFG.d_model)), jnp.float32)
+    y = model.block_forward(x, w, norms, CFG)
+    ranks = {
+        n: wanda.ranks_from_scores(jnp.abs(w[n]))  # unit colnorm importance
+        for n in LAYER_NAMES
+    }
+    return w, norms, x, y, ranks
+
+
+def zero_thetas(rowwise=True):
+    return {
+        n: jnp.zeros((s[0] if rowwise else 1, CFG.n_rates - 1), jnp.float32)
+        for n, s in CFG.layer_shapes().items()
+    }
+
+
+def test_step_outputs_shapes(block):
+    w, norms, x, y, ranks = block
+    th = zero_thetas()
+    out = besa.besa_step(th, x, y, w, norms, ranks, jnp.float32(5.0), jnp.float32(0.5), CFG)
+    loss, recon, ma = out[:3]
+    dth = out[3:]
+    assert len(dth) == 7
+    for n, g in zip(LAYER_NAMES, dth):
+        assert g.shape == th[n].shape
+    assert np.isfinite(float(loss)) and np.isfinite(float(recon))
+    assert 0.0 <= float(ma) <= 1.0
+
+
+def test_sparsity_penalty_pulls_alpha_to_target(block):
+    """A few Adam-free SGD steps must move mean sparsity toward alpha_hat."""
+    w, norms, x, y, ranks = block
+    th = zero_thetas()
+    lam, ah = jnp.float32(20.0), jnp.float32(0.7)
+    ma0 = None
+    lr = 50.0  # gradients through softmax+STE are tiny; Adam handles this in rust
+    for it in range(30):
+        out = besa.besa_step(th, x, y, w, norms, ranks, lam, ah, CFG)
+        ma = float(out[2])
+        if ma0 is None:
+            ma0 = ma
+        for n, g in zip(LAYER_NAMES, out[3:]):
+            th[n] = th[n] - lr * g
+    assert abs(ma - 0.7) < abs(ma0 - 0.7), (ma0, ma)
+
+
+def test_layerwise_theta_broadcasts(block):
+    w, norms, x, y, ranks = block
+    th = zero_thetas(rowwise=False)
+    out = besa.besa_step(th, x, y, w, norms, ranks, jnp.float32(5.0), jnp.float32(0.5), CFG)
+    assert out[3].shape == (1, CFG.n_rates - 1)
+
+
+def test_quant_step_returns_gamma_grads(block):
+    w, norms, x, y, ranks = block
+    th = zero_thetas()
+    gm = {n: jnp.asarray([1.0, 1.0], jnp.float32) for n in LAYER_NAMES}
+    out = besa.besa_step(
+        th, x, y, w, norms, ranks, jnp.float32(5.0), jnp.float32(0.5), CFG, gammas=gm
+    )
+    assert len(out) == 3 + 14
+    dgm = out[10:]
+    assert all(g.shape == (2,) for g in dgm)
+
+
+def test_attn_mlp_granularity_runs(block):
+    w, norms, x, y, ranks = block
+    th = zero_thetas()
+    out = besa.besa_step(
+        th, x, y, w, norms, ranks, jnp.float32(5.0), jnp.float32(0.5), CFG, "attn_mlp"
+    )
+    assert np.isfinite(float(out[0]))
+
+
+def test_two_block_step_runs(rng, block):
+    w, norms, x, y, ranks = block
+    w2 = {
+        n: jnp.asarray(rng.normal(size=s) * 0.08, jnp.float32)
+        for n, s in CFG.layer_shapes().items()
+    }
+    y2 = model.block_forward(y, w2, norms, CFG)
+    ranks2 = {n: wanda.ranks_from_scores(jnp.abs(w2[n])) for n in LAYER_NAMES}
+    th = [zero_thetas(), zero_thetas()]
+    out = besa.two_block_step(
+        th, x, y2, [w, w2], [norms, norms], [ranks, ranks2],
+        jnp.float32(5.0), jnp.float32(0.5), CFG,
+    )
+    assert len(out) == 3 + 14
+    assert np.isfinite(float(out[0]))
+
+
+def test_recon_zero_at_zero_sparsity(block):
+    """Theta concentrated on the lowest rate -> alpha ~ 1/D, near-dense mask,
+    reconstruction error ~ 0."""
+    w, norms, x, y, ranks = block
+    th = {}
+    for n, s in CFG.layer_shapes().items():
+        t = np.full((s[0], CFG.n_rates - 1), -30.0, np.float32)
+        t[:, 0] = 30.0
+        th[n] = jnp.asarray(t)
+    out = besa.besa_step(th, x, y, w, norms, ranks, jnp.float32(5.0), jnp.float32(0.0), CFG)
+    assert float(out[1]) < 0.05, float(out[1])
+    assert abs(float(out[2]) - 1.0 / CFG.n_rates) < 1e-5

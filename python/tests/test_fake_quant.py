@@ -1,0 +1,55 @@
+"""fake_quant kernel vs oracle + STE gradient sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant as fq
+from compile.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.sampled_from([4, 32, 88]),
+    c=st.sampled_from([8, 32, 128]),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    g0=st.floats(0.5, 1.0),
+    g1=st.floats(0.5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_matches_ref(r, c, bits, g0, g1, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+    got = fq.fake_quant(w, jnp.float32(g0), jnp.float32(g1), bits)
+    want = ref.fake_quant_ref(w, g0, g1, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_quant_levels_bounded():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+    for bits in (2, 4):
+        q = np.asarray(fq.fake_quant(w, jnp.float32(1.0), jnp.float32(1.0), bits))
+        assert len(np.unique(q)) <= 2**bits
+
+
+def test_ste_gradients_nonzero():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+
+    def loss(g0, g1, w):
+        return jnp.sum(fq.fake_quant(w, g0, g1, 4) ** 2)
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(jnp.float32(0.9), jnp.float32(0.9), w)
+    assert float(jnp.abs(g[0])) > 0
+    assert float(jnp.abs(g[1])) > 0
+    assert float(jnp.linalg.norm(g[2])) > 0
+
+
+def test_identity_when_bits_large():
+    """16-bit quantization of a small-range tensor is near-lossless."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+    q = fq.fake_quant(w, jnp.float32(1.0), jnp.float32(1.0), 16)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(w), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,89 @@
+"""L1 (masked) matmul kernels vs jnp oracle, forward and VJP."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_matmul as mm
+from compile.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 4, 8, 32, 100]),
+    k=st.sampled_from([8, 32, 88]),
+    n=st.sampled_from([4, 32, 88]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(mm.matmul_t(x, w)), np.asarray(ref.matmul_ref(x, w)), rtol=2e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([2, 8, 32]),
+    k=st.sampled_from([8, 32, 88]),
+    n=st.sampled_from([4, 32]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_matmul_matches_ref(m, k, n, density, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    msk = jnp.asarray((rng.random((n, k)) < density).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(mm.masked_matmul(x, w, msk)),
+        np.asarray(ref.masked_matmul_ref(x, w, msk)),
+        rtol=2e-5,
+        atol=1e-5,
+    )
+
+
+def test_masked_matmul_vjp_exact():
+    rng = np.random.default_rng(3)
+    m, k, n = 8, 16, 12
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    msk = jnp.asarray((rng.random((n, k)) < 0.5).astype(np.float32))
+
+    def f_kernel(x, w, msk):
+        return jnp.sum(jnp.sin(mm.masked_matmul(x, w, msk)))
+
+    def f_ref(x, w, msk):
+        return jnp.sum(jnp.sin(ref.masked_matmul_ref(x, w, msk)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, msk)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, msk)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=1e-5)
+
+
+def test_dense_matmul_vjp_exact():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(12, 16)), jnp.float32)
+    gk = jax.grad(lambda x, w: jnp.sum(jnp.tanh(mm.dense_matmul(x, w))), (0, 1))(x, w)
+    gr = jax.grad(lambda x, w: jnp.sum(jnp.tanh(ref.matmul_ref(x, w))), (0, 1))(x, w)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=1e-5)
+
+
+def test_linear_3d_shapes():
+    rng = np.random.default_rng(5)
+    x3 = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 16)), jnp.float32)
+    y = mm.linear(x3, w)
+    assert y.shape == (2, 8, 24)
+    np.testing.assert_allclose(
+        np.asarray(y).reshape(16, 24),
+        np.asarray(ref.matmul_ref(x3.reshape(16, 16), w)),
+        rtol=2e-5,
+        atol=1e-5,
+    )

@@ -1,0 +1,43 @@
+"""wanda_importance kernel + rank computation properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, wanda
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.sampled_from([4, 32, 88]),
+    c=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wanda_matches_ref(r, c, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+    n = jnp.asarray(np.abs(rng.normal(size=(c,))), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(wanda.wanda_importance(w, n)),
+        np.asarray(ref.wanda_importance_ref(w, n)),
+        rtol=1e-6,
+    )
+
+
+def test_ranks_are_permutations():
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.normal(size=(8, 33)), jnp.float32)
+    rk = np.asarray(wanda.ranks_from_scores(s))
+    for row in rk:
+        assert sorted(row.tolist()) == list(range(33))
+
+
+def test_ranks_order_matches_scores():
+    rng = np.random.default_rng(1)
+    s = np.abs(rng.normal(size=(4, 16))).astype(np.float32)
+    rk = np.asarray(wanda.ranks_from_scores(jnp.asarray(s)))
+    for i in range(4):
+        order = np.argsort(s[i])
+        # element with the smallest score gets rank 0
+        assert rk[i][order[0]] == 0
+        assert rk[i][order[-1]] == 15

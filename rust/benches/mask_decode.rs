@@ -1,0 +1,23 @@
+//! Bench: rust-side BESA mask decode (the paper's "customized CUDA
+//! operator" analogue on the coordinator side) across layer shapes.
+
+use besa::prune::importance::{decode_mask, ranks};
+use besa::tensor::Tensor;
+use besa::util::bench::Bench;
+use besa::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("mask_decode");
+    let mut rng = Rng::seed(1);
+    for (r, c, d) in [(64usize, 64usize, 32usize), (128, 128, 100), (344, 128, 100), (512, 512, 100)] {
+        let theta =
+            Tensor::from_f32(&[r, d - 1], (0..r * (d - 1)).map(|_| rng.normal_f32()).collect());
+        let scores = Tensor::from_f32(&[r, c], (0..r * c).map(|_| rng.normal_f32()).collect());
+        let rk = ranks(&scores);
+        b.run_throughput(&format!("decode {r}x{c} D={d}"), (r * c) as f64, "elem/s", || {
+            decode_mask(&theta, &rk, d)
+        });
+        b.run_throughput(&format!("rank  {r}x{c}"), (r * c) as f64, "elem/s", || ranks(&scores));
+    }
+    b.report();
+}

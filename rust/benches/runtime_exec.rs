@@ -1,0 +1,93 @@
+//! Bench: PJRT runtime hot path — per-artifact execution latency and the
+//! coordinator-side overhead (literal conversion, validation).
+
+use besa::model::{ParamStore, LAYER_NAMES};
+use besa::runtime::Engine;
+use besa::tensor::Tensor;
+use besa::util::bench::Bench;
+use besa::util::rng::Rng;
+
+fn main() {
+    let engine = match Engine::new(std::path::Path::new("artifacts"), "test") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping runtime_exec bench (artifacts missing): {e}");
+            return;
+        }
+    };
+    let cfg = engine.config().clone();
+    let params = ParamStore::init(&cfg, 1);
+    let mut rng = Rng::seed(2);
+    let n = cfg.batch * cfg.seq_len * cfg.d_model;
+    let x = Tensor::from_f32(
+        &[cfg.batch, cfg.seq_len, cfg.d_model],
+        (0..n).map(|_| rng.normal_f32() * 0.5).collect(),
+    );
+    let toks = Tensor::from_i32(
+        &[cfg.batch, cfg.seq_len],
+        (0..cfg.batch * cfg.seq_len).map(|i| (i % 256) as i32).collect(),
+    );
+
+    let mut b = Bench::new("runtime_exec").budget_secs(2.0);
+    let tokens_per = (cfg.batch * cfg.seq_len) as f64;
+
+    let emb = params.get("embed").unwrap();
+    b.run_throughput("embed", tokens_per, "tok/s", || engine.run("embed", &[&toks, emb]).unwrap());
+
+    let mut block_ins: Vec<&Tensor> = vec![&x];
+    for w in LAYER_NAMES {
+        block_ins.push(params.get(&ParamStore::layer_name(0, w)).unwrap());
+    }
+    block_ins.push(params.get("blocks.0.norm1").unwrap());
+    block_ins.push(params.get("blocks.0.norm2").unwrap());
+    b.run_throughput("block_fwd", tokens_per, "tok/s", || {
+        engine.run("block_fwd", &block_ins).unwrap()
+    });
+    b.run_throughput("block_capture", tokens_per, "tok/s", || {
+        engine.run("block_capture", &block_ins).unwrap()
+    });
+
+    // besa_step: the pruning-loop hot path
+    let y = engine.run("block_fwd", &block_ins).unwrap().into_iter().next().unwrap();
+    let thetas: Vec<Tensor> = LAYER_NAMES
+        .iter()
+        .map(|w| Tensor::zeros(&[cfg.layer_shape(w)[0], cfg.n_rates - 1]))
+        .collect();
+    let ranks: Vec<Tensor> = LAYER_NAMES
+        .iter()
+        .map(|w| {
+            let s = cfg.layer_shape(w);
+            let rows: Vec<i32> = (0..s[0])
+                .flat_map(|_| rng.permutation(s[1]).into_iter().map(|v| v as i32))
+                .collect();
+            Tensor::from_i32(&[s[0], s[1]], rows)
+        })
+        .collect();
+    let lam = Tensor::scalar(8.0);
+    let ah = Tensor::scalar(0.5);
+    let mut ins: Vec<&Tensor> = thetas.iter().collect();
+    ins.push(&x);
+    ins.push(&y);
+    for w in LAYER_NAMES {
+        ins.push(params.get(&ParamStore::layer_name(0, w)).unwrap());
+    }
+    ins.push(params.get("blocks.0.norm1").unwrap());
+    ins.push(params.get("blocks.0.norm2").unwrap());
+    ins.extend(ranks.iter());
+    ins.push(&lam);
+    ins.push(&ah);
+    b.run_throughput("besa_step_row (fwd+bwd)", tokens_per, "tok/s", || {
+        engine.run("besa_step_row", &ins).unwrap()
+    });
+
+    // coordinator-side overhead: literal conversion alone
+    b.run("tensor->literal (x)", || x.to_literal().unwrap());
+    b.run("literal->tensor (x)", || {
+        let l = x.to_literal().unwrap();
+        Tensor::from_literal(&l).unwrap()
+    });
+
+    b.report();
+    let (compile_s, exec_s, calls) = engine.stats();
+    println!("engine totals: {calls} calls, exec {exec_s:.2}s, compile {compile_s:.2}s");
+}

@@ -1,0 +1,37 @@
+//! Bench: the SparseGPT OBS solver (baseline infrastructure) — Cholesky +
+//! blocked sweep cost per layer shape.
+
+use besa::linalg::Mat;
+use besa::prune::sparsegpt::sparsegpt_layer;
+use besa::tensor::Tensor;
+use besa::util::bench::Bench;
+use besa::util::rng::Rng;
+
+fn problem(rows: usize, cols: usize, seed: u64) -> (Tensor, Mat) {
+    let mut rng = Rng::seed(seed);
+    let w = Tensor::from_f32(&[rows, cols], (0..rows * cols).map(|_| rng.normal_f32()).collect());
+    let n = cols * 2;
+    let x: Vec<f32> = (0..n * cols).map(|_| rng.normal_f32()).collect();
+    let mut h = Mat::zeros(cols, cols);
+    h.add_gram_f32(&x, n);
+    (w, h)
+}
+
+fn main() {
+    let mut b = Bench::new("sparsegpt_obs").budget_secs(2.0);
+    for (r, c) in [(64usize, 64usize), (128, 128), (344, 128), (128, 344), (512, 512)] {
+        let (w0, h) = problem(r, c, 1);
+        b.run_throughput(&format!("obs {r}x{c} @50%"), (r * c) as f64, "weights/s", || {
+            let mut w = w0.clone();
+            sparsegpt_layer(&mut w, &h, 0.5, 32, 0.01).unwrap()
+        });
+    }
+    // cholesky alone, the cubic term
+    for n in [128usize, 344, 512] {
+        let (_, h) = problem(4, n, 2);
+        b.run(&format!("cholesky_inverse_upper {n}x{n}"), || {
+            besa::linalg::cholesky_inverse_upper(&h).unwrap()
+        });
+    }
+    b.report();
+}

@@ -1,0 +1,58 @@
+//! Bench: end-to-end Table-1 pipeline cost — full block-sequential pruning
+//! of the `test` model per method. This is the wall-clock the paper quotes
+//! as "prunes LLaMA-70B in five hours on one A100", scaled to our substrate.
+
+use besa::coordinator::Pipeline;
+use besa::data::batcher::CalibrationSet;
+use besa::model::ParamStore;
+use besa::prune::besa::{BesaConfig, BesaPruner};
+use besa::prune::magnitude::MagnitudePruner;
+use besa::prune::sparsegpt::SparseGptPruner;
+use besa::prune::wanda::WandaPruner;
+use besa::runtime::Engine;
+use besa::util::bench::Bench;
+
+fn main() {
+    let engine = match Engine::new(std::path::Path::new("artifacts"), "test") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping table1_pipeline bench (artifacts missing): {e}");
+            return;
+        }
+    };
+    let cfg = engine.config().clone();
+    let dense = ParamStore::init(&cfg, 3);
+    let calib = CalibrationSet::sample(&cfg, cfg.batch, 11);
+
+    let mut b = Bench::new("table1_pipeline").warmup(1).budget_secs(3.0);
+    let params_per = cfg.block_param_count() as f64 * cfg.n_blocks as f64;
+
+    b.run_throughput("magnitude (full model)", params_per, "weights/s", || {
+        let mut p = dense.clone();
+        Pipeline::new(&engine, calib.batches.clone())
+            .run(&mut p, &mut MagnitudePruner { sparsity: 0.5 })
+            .unwrap()
+    });
+    b.run_throughput("wanda (full model)", params_per, "weights/s", || {
+        let mut p = dense.clone();
+        Pipeline::new(&engine, calib.batches.clone())
+            .run(&mut p, &mut WandaPruner { sparsity: 0.5 })
+            .unwrap()
+    });
+    b.run_throughput("sparsegpt (full model)", params_per, "weights/s", || {
+        let mut p = dense.clone();
+        Pipeline::new(&engine, calib.batches.clone())
+            .run(&mut p, &mut SparseGptPruner { sparsity: 0.5, ..Default::default() })
+            .unwrap()
+    });
+    b.run_throughput("besa e4 (full model)", params_per, "weights/s", || {
+        let mut p = dense.clone();
+        Pipeline::new(&engine, calib.batches.clone())
+            .run(
+                &mut p,
+                &mut BesaPruner::new(BesaConfig { epochs: 4, ..Default::default() }),
+            )
+            .unwrap()
+    });
+    b.report();
+}

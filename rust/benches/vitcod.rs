@@ -1,0 +1,41 @@
+//! Bench: ViTCoD simulator throughput (Table 4 infrastructure) across the
+//! LLaMA-7B layer shapes the paper reports, scaled and unscaled.
+
+use besa::sim::{dense_cycles, simulate_spmm, Csr, SimConfig};
+use besa::tensor::Tensor;
+use besa::util::bench::Bench;
+use besa::util::rng::Rng;
+
+fn sparse(rows: usize, cols: usize, sparsity: f64, seed: u64) -> Csr {
+    let mut rng = Rng::seed(seed);
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| if rng.f64() < sparsity { 0.0 } else { rng.normal_f32() })
+        .collect();
+    Csr::from_dense(&Tensor::from_f32(&[rows, cols], data))
+}
+
+fn main() {
+    let mut b = Bench::new("vitcod_simulator");
+    let cfg = SimConfig::default();
+    // our model-family shapes + the paper's LLaMA-7B shapes
+    for (name, r, c) in [
+        ("md qkv 128x128", 128usize, 128usize),
+        ("md gate 344x128", 344, 128),
+        ("llama7b qkv 4096x4096", 4096, 4096),
+        ("llama7b gate 11008x4096", 11008, 4096),
+    ] {
+        let w = sparse(r, c, 0.5, 42);
+        b.run_throughput(&format!("simulate {name}"), w.nnz() as f64, "nnz/s", || {
+            simulate_spmm(&w, &cfg)
+        });
+    }
+    // sparsity sweep on one shape: the Table-4 "who wins by how much" series
+    println!("\n  speedup vs sparsity (1024x1024, ViTCoD default config):");
+    for s in [0.3, 0.5, 0.7, 0.9] {
+        let w = sparse(1024, 1024, s, 7);
+        let cycles = simulate_spmm(&w, &cfg).cycles;
+        let dense = dense_cycles(1024, 1024, &cfg);
+        println!("    sparsity {s:.1}: speedup {:.2}x", dense as f64 / cycles as f64);
+    }
+    b.report();
+}

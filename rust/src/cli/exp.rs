@@ -1,0 +1,620 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md experiment
+//! index). Every driver prints the paper-style rows and appends a
+//! machine-readable record to `results/<exp>.json`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::{perplexity, perplexity_all};
+use crate::model::ParamStore;
+use crate::prune::besa::{BesaConfig, BesaPruner};
+use crate::prune::importance::Metric;
+use crate::prune::Method;
+use crate::util::args::Args;
+use crate::util::json::{self, Json};
+
+use super::runs;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .context("usage: besa exp <table1|table2|table3|table4|table5|table6|fig1a|fig1b|fig3|fig4>")?
+        .clone();
+    match which.as_str() {
+        "table1" => table1(args),
+        "table2" => table2(args),
+        "table3" => table3(args),
+        "table4" => table4(args),
+        "table5" => table5(args),
+        "table6" => table6(args),
+        "fig1a" => fig1a(args),
+        "fig1b" => fig1b(args),
+        "fig3" => fig3(args),
+        "fig4" => fig4(args),
+        "all" => {
+            for e in [
+                "table1", "table2", "table3", "table4", "table5", "table6", "fig1a", "fig1b",
+                "fig3", "fig4",
+            ] {
+                let mut argv = vec!["exp".to_string(), e.to_string()];
+                argv.extend(raw_opts(args));
+                dispatch(&Args::parse(argv)?)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+}
+
+fn raw_opts(args: &Args) -> Vec<String> {
+    // carry common options through to sub-experiments
+    let mut out = Vec::new();
+    for k in ["configs", "config", "artifacts", "runs", "eval-batches", "calib-seqs", "epochs"] {
+        if let Some(v) = args.get(k) {
+            out.push(format!("--{k}={v}"));
+        }
+    }
+    out
+}
+
+fn save_result(name: &str, payload: Json) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}.json");
+    std::fs::write(&path, payload.to_string_pretty())?;
+    println!("[results -> {path}]");
+    Ok(())
+}
+
+fn eval_batches(args: &Args) -> Result<usize> {
+    args.usize_or("eval-batches", 12)
+}
+
+/// Prune a fresh copy of the dense checkpoint and measure ppl on all domains.
+fn prune_and_eval(
+    args: &Args,
+    engine: &crate::runtime::Engine,
+    dense: &ParamStore,
+    method: Method,
+    sparsity: f64,
+) -> Result<(Vec<(String, f64)>, crate::coordinator::PruneRun, ParamStore)> {
+    let mut p = dense.clone();
+    let run = runs::prune_with(engine, &mut p, method, sparsity, args)?;
+    let ppl = perplexity_all(engine, &p, eval_batches(args)?, 77)?;
+    Ok((ppl, run, p))
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: perplexity @ 50% unstructured sparsity, 3 datasets x model family
+// ---------------------------------------------------------------------------
+pub fn table1(args: &Args) -> Result<()> {
+    let configs = args.list_or("configs", &["sm", "md"]);
+    let sparsity = args.f64_or("sparsity", 0.5)?;
+    let methods = [Method::Dense, Method::SparseGpt, Method::Wanda, Method::Besa];
+    println!("\n== Table 1: perplexity, unstructured {:.0}% sparsity ==", sparsity * 100.0);
+    let mut rows: Vec<Json> = Vec::new();
+    // dataset-major like the paper
+    let mut per_cfg: BTreeMap<String, BTreeMap<&str, Vec<(String, f64)>>> = BTreeMap::new();
+    for config in &configs {
+        let engine = runs::engine_for(args, config)?;
+        let dense = runs::load_params(args, &engine)?;
+        for m in methods {
+            let ppl = if m == Method::Dense {
+                perplexity_all(&engine, &dense, eval_batches(args)?, 77)?
+            } else {
+                prune_and_eval(args, &engine, &dense, m, sparsity)?.0
+            };
+            for (d, v) in &ppl {
+                rows.push(json::obj(vec![
+                    ("config", json::s(config)),
+                    ("method", json::s(m.name())),
+                    ("dataset", json::s(d)),
+                    ("ppl", json::num(*v)),
+                ]));
+            }
+            per_cfg.entry(config.clone()).or_default().insert(m.name(), ppl);
+        }
+    }
+    for dataset in ["wiki-syn", "c4-syn", "ptb-syn"] {
+        println!("\n  dataset {dataset}:");
+        print!("  {:<10}", "method");
+        for c in &configs {
+            print!(" {c:>10}");
+        }
+        println!();
+        for m in methods {
+            print!("  {:<10}", m.name());
+            for c in &configs {
+                let v = per_cfg[c][m.name()]
+                    .iter()
+                    .find(|(d, _)| d == dataset)
+                    .map(|(_, v)| *v)
+                    .unwrap_or(f64::NAN);
+                print!(" {v:>10.4}");
+            }
+            println!();
+        }
+    }
+    save_result("table1", Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: zero-shot probe accuracy
+// ---------------------------------------------------------------------------
+pub fn table2(args: &Args) -> Result<()> {
+    let configs = args.list_or("configs", &["sm", "md"]);
+    let sparsity = args.f64_or("sparsity", 0.5)?;
+    let n_items = args.usize_or("items", 40)?;
+    let methods = [Method::Dense, Method::SparseGpt, Method::Wanda, Method::Besa];
+    println!("\n== Table 2: zero-shot probe accuracy (%) @ {:.0}% sparsity ==", sparsity * 100.0);
+    let mut rows = Vec::new();
+    for config in &configs {
+        let engine = runs::engine_for(args, config)?;
+        let dense = runs::load_params(args, &engine)?;
+        println!("\n  model {config}:");
+        println!(
+            "  {:<10} {:>10} {:>10} {:>10} {:>8} {:>10} {:>8} {:>8}",
+            "method", "wiki-cloze", "c4-cloze", "ptb-cloze", "copy", "retrieval", "numeric", "avg"
+        );
+        for m in methods {
+            let params = if m == Method::Dense {
+                dense.clone()
+            } else {
+                let mut p = dense.clone();
+                runs::prune_with(&engine, &mut p, m, sparsity, args)?;
+                p
+            };
+            let res = crate::eval::probes::run_all(&engine, &params, n_items, 99)?;
+            print!("  {:<10}", m.name());
+            for r in &res {
+                print!(" {:>8.1}{}", r.accuracy * 100.0, if r.task == "numeric" { " " } else { " " });
+                rows.push(json::obj(vec![
+                    ("config", json::s(config)),
+                    ("method", json::s(m.name())),
+                    ("task", json::s(&r.task)),
+                    ("accuracy", json::num(r.accuracy)),
+                ]));
+            }
+            println!();
+        }
+    }
+    save_result("table2", Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Table 3: joint pruning + 4-bit quantization
+// ---------------------------------------------------------------------------
+pub fn table3(args: &Args) -> Result<()> {
+    let configs = args.list_or("configs", &["sm", "md"]);
+    let sparsity = args.f64_or("sparsity", 0.5)?;
+    println!("\n== Table 3: joint 4-bit quantization + {:.0}% pruning ==", sparsity * 100.0);
+    let mut rows = Vec::new();
+    println!(
+        "  {:<6} {:<9} {:>10} {:>10} {:>10}",
+        "model", "variant", "wiki-syn", "c4-syn", "ptb-syn"
+    );
+    for config in &configs {
+        let engine = runs::engine_for(args, config)?;
+        let dense = runs::load_params(args, &engine)?;
+        let nb = eval_batches(args)?;
+
+        let dense_ppl = perplexity_all(&engine, &dense, nb, 77)?;
+
+        // Joint: BESA with learnable clipping (besa_quant_step artifact)
+        let mut joint = dense.clone();
+        {
+            let calib = runs::calibration(args, &engine)?;
+            let pipeline = crate::coordinator::Pipeline::new(&engine, calib.batches);
+            let mut cfg = runs::besa_config(sparsity, args)?;
+            cfg.quant = true;
+            let mut pruner = BesaPruner::new(cfg);
+            pipeline.run(&mut joint, &mut pruner)?;
+        }
+        let joint_ppl = perplexity_all(&engine, &joint, nb, 77)?;
+
+        // Joint-Wanda baseline: quantize first (gamma = 1), then Wanda
+        let mut jw = dense.clone();
+        crate::quant::quantize_model(&mut jw, engine.config(), crate::quant::QuantSpec::default())?;
+        runs::prune_with(&engine, &mut jw, Method::Wanda, sparsity, args)?;
+        let jw_ppl = perplexity_all(&engine, &jw, nb, 77)?;
+
+        for (name, ppl) in
+            [("dense", &dense_ppl), ("joint", &joint_ppl), ("joint-wanda", &jw_ppl)]
+        {
+            print!("  {:<6} {:<9}", config, name);
+            for (_, v) in ppl {
+                print!(" {v:>10.4}");
+            }
+            println!();
+            for (d, v) in ppl {
+                rows.push(json::obj(vec![
+                    ("config", json::s(config)),
+                    ("variant", json::s(name)),
+                    ("dataset", json::s(d)),
+                    ("ppl", json::num(*v)),
+                ]));
+            }
+        }
+    }
+    save_result("table3", Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: ViTCoD cycles + speedup per layer shape
+// ---------------------------------------------------------------------------
+pub fn table4(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "md");
+    let sparsity = args.f64_or("sparsity", 0.5)?;
+    let engine = runs::engine_for(args, &config)?;
+    let dense = runs::load_params(args, &engine)?;
+    let cfg = engine.config().clone();
+    let sim = crate::sim::SimConfig { tokens: cfg.seq_len, ..Default::default() };
+
+    println!("\n== Table 4: ViTCoD runtime (cycles) per layer, model {config} ==");
+    let mut variants: Vec<(String, ParamStore)> = vec![];
+    for m in [Method::SparseGpt, Method::Wanda, Method::Besa] {
+        let mut p = dense.clone();
+        runs::prune_with(&engine, &mut p, m, sparsity, args)?;
+        variants.push((m.name().to_string(), p));
+    }
+
+    let layer_names = crate::model::LAYER_NAMES;
+    print!("  {:<24}", "row");
+    for l in layer_names {
+        print!(" {l:>10}");
+    }
+    println!();
+    let mut rows = Vec::new();
+
+    // dense runtime row
+    let dense_sims = crate::sim::simulate_block(&dense, &cfg, &sim)?;
+    print!("  {:<24}", "dense runtime");
+    for s in &dense_sims {
+        print!(" {:>10}", s.dense_cycles);
+    }
+    println!();
+
+    for (name, p) in &variants {
+        let sims = crate::sim::simulate_block(p, &cfg, &sim)?;
+        print!("  {:<24}", format!("avg runtime ({name})"));
+        for s in &sims {
+            print!(" {:>10}", s.sparse_cycles);
+            rows.push(json::obj(vec![
+                ("method", json::s(name)),
+                ("layer", json::s(&s.layer)),
+                ("cycles", json::num(s.sparse_cycles as f64)),
+                ("dense_cycles", json::num(s.dense_cycles as f64)),
+                ("sparsity", json::num(s.sparsity)),
+                ("speedup", json::num(s.speedup)),
+            ]));
+        }
+        println!();
+    }
+    // BESA per-layer sparsity + speedup (the paper's last two rows)
+    let besa = &variants.last().unwrap().1;
+    let sims = crate::sim::simulate_block(besa, &cfg, &sim)?;
+    print!("  {:<24}", "BESA sparsity");
+    for s in &sims {
+        print!(" {:>9.2}%", s.sparsity * 100.0);
+    }
+    println!();
+    print!("  {:<24}", "BESA speedup");
+    for s in &sims {
+        print!(" {:>9.2}x", s.speedup);
+    }
+    println!();
+    save_result("table4", Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Table 5: ablations — epochs, sparsity step (D), importance metric
+// ---------------------------------------------------------------------------
+pub fn table5(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = runs::engine_for(args, &config)?;
+    let dense = runs::load_params(args, &engine)?;
+    let nb = eval_batches(args)?;
+    let mut rows = Vec::new();
+
+    println!("\n== Table 5a: epochs ablation (model {config}) ==");
+    println!("  {:<8} {:>10} {:>10} {:>10}", "epochs", "wiki-syn", "c4-syn", "ptb-syn");
+    for epochs in [4usize, 12, 24, 48] {
+        let mut p = dense.clone();
+        let calib = runs::calibration(args, &engine)?;
+        let pipeline = crate::coordinator::Pipeline::new(&engine, calib.batches);
+        let mut bc = runs::besa_config(0.5, args)?;
+        bc.epochs = epochs;
+        let mut pruner = BesaPruner::new(bc);
+        pipeline.run(&mut p, &mut pruner)?;
+        let ppl = perplexity_all(&engine, &p, nb, 77)?;
+        print!("  {epochs:<8}");
+        for (d, v) in &ppl {
+            print!(" {v:>10.4}");
+            rows.push(json::obj(vec![
+                ("ablation", json::s("epochs")),
+                ("value", json::num(epochs as f64)),
+                ("dataset", json::s(d)),
+                ("ppl", json::num(*v)),
+            ]));
+        }
+        println!();
+    }
+
+    println!("\n== Table 5b: sparsity-step (candidate-rate count D) ablation ==");
+    println!("  {:<8} {:>10} {:>10} {:>10}", "D", "wiki-syn", "c4-syn", "ptb-syn");
+    let mut dvals = vec![engine.config().n_rates];
+    for alt in alt_rate_artifacts(&engine) {
+        dvals.push(alt);
+    }
+    dvals.sort();
+    dvals.dedup();
+    for d in dvals {
+        let mut p = dense.clone();
+        let calib = runs::calibration(args, &engine)?;
+        let pipeline = crate::coordinator::Pipeline::new(&engine, calib.batches);
+        let mut bc = runs::besa_config(0.5, args)?;
+        let mut pruner = BesaPruner::new(bc.clone());
+        if d != engine.config().n_rates {
+            pruner = BesaPruner::new(bc);
+            pruner.rate_override = Some(d);
+        }
+        pipeline.run(&mut p, &mut pruner)?;
+        let ppl = perplexity_all(&engine, &p, nb, 77)?;
+        print!("  {d:<8}");
+        for (ds, v) in &ppl {
+            print!(" {v:>10.4}");
+            rows.push(json::obj(vec![
+                ("ablation", json::s("n_rates")),
+                ("value", json::num(d as f64)),
+                ("dataset", json::s(ds)),
+                ("ppl", json::num(*v)),
+            ]));
+        }
+        println!();
+    }
+
+    println!("\n== Table 5c: importance-metric ablation ==");
+    println!("  {:<10} {:>10} {:>10} {:>10}", "metric", "wiki-syn", "c4-syn", "ptb-syn");
+    for (name, metric) in [
+        ("weight", Metric::WeightMagnitude),
+        ("wanda", Metric::Wanda),
+        ("sparsegpt", Metric::SparseGpt),
+    ] {
+        let mut p = dense.clone();
+        let calib = runs::calibration(args, &engine)?;
+        let pipeline = crate::coordinator::Pipeline::new(&engine, calib.batches);
+        let mut bc = runs::besa_config(0.5, args)?;
+        bc.metric = metric;
+        let mut pruner = BesaPruner::new(bc);
+        pipeline.run(&mut p, &mut pruner)?;
+        let ppl = perplexity_all(&engine, &p, nb, 77)?;
+        print!("  {name:<10}");
+        for (ds, v) in &ppl {
+            print!(" {v:>10.4}");
+            rows.push(json::obj(vec![
+                ("ablation", json::s("metric")),
+                ("value", json::s(name)),
+                ("dataset", json::s(ds)),
+                ("ppl", json::num(*v)),
+            ]));
+        }
+        println!();
+    }
+    save_result("table5", Json::Arr(rows))
+}
+
+fn alt_rate_artifacts(engine: &crate::runtime::Engine) -> Vec<usize> {
+    engine
+        .manifest
+        .artifacts
+        .keys()
+        .filter_map(|k| k.strip_prefix("besa_step_row_d").and_then(|s| s.parse().ok()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 + Fig 5: learning granularity
+// ---------------------------------------------------------------------------
+pub fn table6(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = runs::engine_for(args, &config)?;
+    let dense = runs::load_params(args, &engine)?;
+    let nb = eval_batches(args)?;
+    let mut rows = Vec::new();
+    println!("\n== Table 6: learning granularity (model {config}) ==");
+    println!(
+        "  {:<14} {:>10} {:>10} {:>10}   block recon errors (Fig 5)",
+        "granularity", "wiki-syn", "c4-syn", "ptb-syn"
+    );
+
+    let mut run_one = |name: &str,
+                       ppl: Vec<(String, f64)>,
+                       errs: Vec<f64>,
+                       rows: &mut Vec<Json>|
+     -> Result<()> {
+        print!("  {name:<14}");
+        for (_, v) in &ppl {
+            print!(" {v:>10.4}");
+        }
+        print!("   [");
+        for e in &errs {
+            print!("{e:.2e} ");
+        }
+        println!("]");
+        rows.push(json::obj(vec![
+            ("granularity", json::s(name)),
+            (
+                "ppl",
+                Json::Arr(ppl.iter().map(|(d, v)| {
+                    json::obj(vec![("dataset", json::s(d)), ("ppl", json::num(*v))])
+                }).collect()),
+            ),
+            ("block_errors", Json::Arr(errs.iter().map(|e| json::num(*e)).collect())),
+        ]));
+        Ok(())
+    };
+
+    // layer == Wanda
+    let (ppl, run, _) = prune_and_eval(args, &engine, &dense, Method::Wanda, 0.5)?;
+    run_one("layer (wanda)", ppl, run.block_errors, &mut rows)?;
+
+    // attn-mlp
+    {
+        let mut p = dense.clone();
+        let calib = runs::calibration(args, &engine)?;
+        let pipeline = crate::coordinator::Pipeline::new(&engine, calib.batches);
+        let mut bc = runs::besa_config(0.5, args)?;
+        bc.granularity = crate::prune::besa::Granularity::AttnMlp;
+        let mut pruner = BesaPruner::new(bc);
+        let run = pipeline.run(&mut p, &mut pruner)?;
+        let ppl = perplexity_all(&engine, &p, nb, 77)?;
+        run_one("attn-mlp", ppl, run.block_errors, &mut rows)?;
+    }
+
+    // block (BESA default)
+    let (ppl, run, _) = prune_and_eval(args, &engine, &dense, Method::Besa, 0.5)?;
+    run_one("block (besa)", ppl, run.block_errors, &mut rows)?;
+
+    // two blocks
+    {
+        let mut p = dense.clone();
+        let calib = runs::calibration(args, &engine)?;
+        let bc = runs::besa_config(0.5, args)?;
+        let (_, errs) =
+            crate::prune::besa::two_block_prune(&engine, &mut p, &calib.batches, &bc)?;
+        let ppl = perplexity_all(&engine, &p, nb, 77)?;
+        run_one("two blocks", ppl, errs, &mut rows)?;
+    }
+    save_result("table6", Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1a: blockwise error accumulation, layerwise (wanda) vs BESA
+// ---------------------------------------------------------------------------
+pub fn fig1a(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = runs::engine_for(args, &config)?;
+    let dense = runs::load_params(args, &engine)?;
+    println!("\n== Fig 1a: relative output error after each pruned block ==");
+    let mut rows = Vec::new();
+    for m in [Method::Wanda, Method::Besa] {
+        let (_, run, _) = prune_and_eval(args, &engine, &dense, m, 0.5)?;
+        print!("  {:<10}", m.name());
+        for e in &run.block_errors {
+            print!(" {e:>10.3e}");
+        }
+        println!();
+        rows.push(json::obj(vec![
+            ("method", json::s(m.name())),
+            ("block_errors", Json::Arr(run.block_errors.iter().map(|e| json::num(*e)).collect())),
+        ]));
+    }
+    save_result("fig1a", Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1b: layers tolerate sparsity unequally — prune a single block at
+// varying sparsity and track wiki-syn ppl
+// ---------------------------------------------------------------------------
+pub fn fig1b(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = runs::engine_for(args, &config)?;
+    let dense = runs::load_params(args, &engine)?;
+    let cfg = engine.config().clone();
+    let nb = eval_batches(args)?;
+    let sweep = [0.25, 0.5, 0.75, 0.9];
+    println!("\n== Fig 1b: wiki-syn ppl vs single-block sparsity ==");
+    print!("  {:<8}", "block");
+    for s in sweep {
+        print!(" {:>9.0}%", s * 100.0);
+    }
+    println!();
+    let mut rows = Vec::new();
+    for l in 0..cfg.n_blocks {
+        print!("  {l:<8}");
+        let mut series = Vec::new();
+        for s in sweep {
+            let mut p = dense.clone();
+            // magnitude-prune only block l (cheap, no pipeline needed)
+            for w in crate::model::LAYER_NAMES {
+                let name = ParamStore::layer_name(l, w);
+                let t = p.get(&name)?.clone();
+                let mask = crate::prune::topk_row_mask(
+                    &crate::prune::importance::magnitude_scores(&t),
+                    s,
+                );
+                let mut t2 = t;
+                for (v, m) in t2.f32s_mut().iter_mut().zip(mask.f32s()) {
+                    *v *= m;
+                }
+                p.set(&name, t2)?;
+            }
+            let ppl = perplexity(&engine, &p, crate::data::Domain::WikiSyn, nb, 77)?;
+            print!(" {ppl:>10.4}");
+            series.push(json::num(ppl));
+        }
+        println!();
+        rows.push(json::obj(vec![("block", json::num(l as f64)), ("ppl", Json::Arr(series))]));
+    }
+    save_result("fig1b", Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3: ppl vs model sparsity (methods)
+// ---------------------------------------------------------------------------
+pub fn fig3(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = runs::engine_for(args, &config)?;
+    let dense = runs::load_params(args, &engine)?;
+    let sweep = [0.125, 0.25, 0.375, 0.5, 0.625, 0.75];
+    println!("\n== Fig 3: wiki-syn ppl vs sparsity (model {config}) ==");
+    print!("  {:<10}", "method");
+    for s in sweep {
+        print!(" {:>9.1}%", s * 100.0);
+    }
+    println!();
+    let nb = eval_batches(args)?;
+    let mut rows = Vec::new();
+    for m in [Method::Magnitude, Method::SparseGpt, Method::Wanda, Method::Besa] {
+        print!("  {:<10}", m.name());
+        let mut series = Vec::new();
+        for s in sweep {
+            let mut p = dense.clone();
+            runs::prune_with(&engine, &mut p, m, s, args)?;
+            let ppl = perplexity(&engine, &p, crate::data::Domain::WikiSyn, nb, 77)?;
+            print!(" {ppl:>10.4}");
+            series.push(json::num(ppl));
+        }
+        println!();
+        rows.push(json::obj(vec![("method", json::s(m.name())), ("ppl", Json::Arr(series))]));
+    }
+    save_result("fig3", Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4: calibration-size ablation
+// ---------------------------------------------------------------------------
+pub fn fig4(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = runs::engine_for(args, &config)?;
+    let dense = runs::load_params(args, &engine)?;
+    let cfg = engine.config().clone();
+    let nb = eval_batches(args)?;
+    let sizes: Vec<usize> =
+        [1usize, 2, 4, 8, 16].iter().map(|k| k * cfg.batch).collect();
+    println!("\n== Fig 4: wiki-syn ppl vs calibration size (model {config}) ==");
+    println!("  {:<10} {:>10}", "calib seqs", "ppl");
+    let mut rows = Vec::new();
+    for n in sizes {
+        let mut p = dense.clone();
+        let calib = crate::data::batcher::CalibrationSet::sample(&cfg, n, 0xCA11B);
+        let pipeline = crate::coordinator::Pipeline::new(&engine, calib.batches);
+        let mut pruner = BesaPruner::new(runs::besa_config(0.5, args)?);
+        pipeline.run(&mut p, &mut pruner)?;
+        let ppl = perplexity(&engine, &p, crate::data::Domain::WikiSyn, nb, 77)?;
+        println!("  {n:<10} {ppl:>10.4}");
+        rows.push(json::obj(vec![("calib_seqs", json::num(n as f64)), ("ppl", json::num(ppl))]));
+    }
+    save_result("fig4", Json::Arr(rows))
+}

@@ -1,0 +1,63 @@
+//! Command-line interface: subcommand dispatch for the `besa` binary.
+//!
+//! ```text
+//! besa pretrain  --config md --steps 300 --out runs/md.bst
+//! besa prune     --config md --ckpt runs/md.bst --method besa --sparsity 0.5
+//! besa eval      --config md --ckpt runs/md-besa.bst
+//! besa probe     --config md --ckpt runs/md-besa.bst
+//! besa simulate  --config md --ckpt runs/md-besa.bst
+//! besa exp       table1|table2|table3|table4|table5|table6|fig1a|fig1b|fig3|fig4  [--configs sm,md]
+//! ```
+
+pub mod exp;
+pub mod runs;
+
+use anyhow::{bail, Result};
+
+use crate::util::args::Args;
+
+pub fn main(argv: Vec<String>) -> Result<()> {
+    crate::util::logging::init_from_env();
+    let args = Args::parse(argv)?;
+    if let Some(lvl) = args.get("log") {
+        crate::util::logging::set_level_str(lvl);
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "pretrain" => runs::cmd_pretrain(&args),
+        "prune" => runs::cmd_prune(&args),
+        "eval" => runs::cmd_eval(&args),
+        "probe" => runs::cmd_probe(&args),
+        "simulate" => runs::cmd_simulate(&args),
+        "exp" => exp::dispatch(&args),
+        "help" | _ => {
+            print_help();
+            if cmd != "help" {
+                bail!("unknown command '{cmd}'");
+            }
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "besa — BESA pruning reproduction (ICLR 2024)\n\
+         \n\
+         USAGE: besa <command> [options]\n\
+         \n\
+         COMMANDS\n\
+         \x20 pretrain   train a dense LM checkpoint on the synthetic corpus\n\
+         \x20 prune      prune a checkpoint (besa|wanda|sparsegpt|magnitude)\n\
+         \x20 eval       perplexity on wiki-syn / c4-syn / ptb-syn\n\
+         \x20 probe      zero-shot probe accuracy (6 tasks)\n\
+         \x20 simulate   ViTCoD accelerator cycles for a pruned checkpoint\n\
+         \x20 exp        regenerate a paper table/figure (table1..table6, fig1a, fig1b, fig3, fig4)\n\
+         \n\
+         COMMON OPTIONS\n\
+         \x20 --config <test|sm|md|lg>     model config (default sm)\n\
+         \x20 --artifacts <dir>            artifact root (default ./artifacts)\n\
+         \x20 --runs <dir>                 checkpoint/run dir (default ./runs)\n\
+         \x20 --log <level>                error|warn|info|debug|trace\n"
+    );
+}

@@ -1,0 +1,254 @@
+//! Plumbing shared by CLI commands and experiment drivers: engine
+//! construction, checkpoint paths, pruner construction, and the
+//! pretrain/prune/eval/probe/simulate commands.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{trainer, BlockPruner, Pipeline, PruneRun};
+use crate::data::batcher::CalibrationSet;
+use crate::model::ParamStore;
+use crate::prune::besa::{BesaConfig, BesaPruner, Granularity};
+use crate::prune::importance::Metric;
+use crate::prune::magnitude::MagnitudePruner;
+use crate::prune::sparsegpt::SparseGptPruner;
+use crate::prune::wanda::WandaPruner;
+use crate::prune::Method;
+use crate::runtime::Engine;
+use crate::util::args::Args;
+
+pub fn artifacts_root(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+/// Layered configuration: built-in defaults < TOML file < CLI flags.
+/// The file is `--config-file <path>` or `configs/besa.toml` when present.
+pub fn file_config(args: &Args) -> crate::util::toml::Toml {
+    let path = match args.get("config-file") {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from("configs/besa.toml"),
+    };
+    if path.exists() {
+        match crate::util::toml::Toml::load(&path) {
+            Ok(t) => {
+                crate::debuglog!("loaded config file {}", path.display());
+                t
+            }
+            Err(e) => {
+                crate::warnlog!("ignoring bad config file {}: {e:#}", path.display());
+                crate::util::toml::Toml::default()
+            }
+        }
+    } else {
+        crate::util::toml::Toml::default()
+    }
+}
+
+pub fn runs_dir(args: &Args) -> PathBuf {
+    let d = PathBuf::from(args.str_or("runs", "runs"));
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+pub fn engine_for(args: &Args, config: &str) -> Result<Engine> {
+    Engine::new(&artifacts_root(args), config)
+}
+
+pub fn dense_ckpt_path(args: &Args, config: &str) -> PathBuf {
+    runs_dir(args).join(format!("{config}-dense.bst"))
+}
+
+/// Load a checkpoint; `--ckpt` wins, else the default dense path.
+pub fn load_params(args: &Args, engine: &Engine) -> Result<ParamStore> {
+    let cfg = engine.config();
+    let path = match args.get("ckpt") {
+        Some(p) => PathBuf::from(p),
+        None => dense_ckpt_path(args, &cfg.name),
+    };
+    if !path.exists() {
+        bail!(
+            "checkpoint {} not found — run `besa pretrain --config {}` first",
+            path.display(),
+            cfg.name
+        );
+    }
+    ParamStore::load(cfg, &path)
+}
+
+/// Build the pruner named by `--method` at `--sparsity`.
+pub fn make_pruner(method: Method, sparsity: f64, args: &Args) -> Result<Box<dyn BlockPruner>> {
+    Ok(match method {
+        Method::Magnitude => Box::new(MagnitudePruner { sparsity }),
+        Method::Wanda => Box::new(WandaPruner { sparsity }),
+        Method::SparseGpt => Box::new(SparseGptPruner {
+            sparsity,
+            blocksize: args.usize_or("obs-blocksize", 32)?,
+            percdamp: args.f64_or("percdamp", 0.01)?,
+        }),
+        Method::Besa => Box::new(BesaPruner::new(besa_config(sparsity, args)?)),
+        Method::Dense => bail!("method 'dense' is not a pruner"),
+    })
+}
+
+pub fn besa_config(sparsity: f64, args: &Args) -> Result<BesaConfig> {
+    let file = file_config(args);
+    Ok(BesaConfig {
+        sparsity,
+        epochs: args.usize_or("epochs", file.usize_or("prune.epochs", 24))?,
+        lr: args.f32_or("lr", file.f64_or("prune.lr", 5e-2) as f32)?,
+        lambda: args.f32_or("lambda", file.f64_or("prune.lambda", 8.0) as f32)?,
+        row_wise: if args.has("layerwise") { false } else { file.bool_or("prune.rowwise", true) },
+        granularity: match args
+            .str_or("granularity", &file.str_or("prune.granularity", "block"))
+            .as_str()
+        {
+            "attn-mlp" | "attn_mlp" => Granularity::AttnMlp,
+            _ => Granularity::Block,
+        },
+        metric: Metric::from_name(&args.str_or("metric", &file.str_or("prune.metric", "wanda")))
+            .context("--metric must be weight|wanda|sparsegpt")?,
+        quant: args.has("quant"),
+    })
+}
+
+pub fn calibration(args: &Args, engine: &Engine) -> Result<CalibrationSet> {
+    let cfg = engine.config();
+    let file = file_config(args);
+    let n = args.usize_or("calib-seqs", file.usize_or("calib.seqs", 4 * cfg.batch))?;
+    Ok(CalibrationSet::sample(
+        cfg,
+        n,
+        args.u64_or("calib-seed", file.usize_or("calib.seed", 0xCA11B) as u64)?,
+    ))
+}
+
+/// Prune `params` in place; returns the run telemetry.
+pub fn prune_with(
+    engine: &Engine,
+    params: &mut ParamStore,
+    method: Method,
+    sparsity: f64,
+    args: &Args,
+) -> Result<PruneRun> {
+    let calib = calibration(args, engine)?;
+    let pipeline = Pipeline::new(engine, calib.batches);
+    let mut pruner = make_pruner(method, sparsity, args)?;
+    pipeline.run(params, pruner.as_mut())
+}
+
+// ---------------------------------------------------------------------------
+// commands
+// ---------------------------------------------------------------------------
+
+pub fn cmd_pretrain(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = engine_for(args, &config)?;
+    let cfg = engine.config().clone();
+    let mut params = ParamStore::init(&cfg, args.u64_or("seed", 1234)?);
+    let tc = trainer::TrainConfig {
+        steps: args.usize_or("steps", 300)?,
+        lr: args.f32_or("lr", 3e-3)?,
+        seed: args.u64_or("seed", 1234)?,
+        log_every: args.usize_or("log-every", 20)?,
+    };
+    let stats = trainer::pretrain(&engine, &mut params, &tc)?;
+    let out = match args.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => dense_ckpt_path(args, &config),
+    };
+    params.save(&out)?;
+    let first = stats.losses.first().copied().unwrap_or(0.0);
+    let last = stats.losses.last().copied().unwrap_or(0.0);
+    println!(
+        "pretrained {config}: {} params, {} steps, loss {first:.3} -> {last:.3}, {:.1}s, saved {}",
+        cfg.total_param_count(),
+        stats.losses.len(),
+        stats.secs,
+        out.display()
+    );
+    Ok(())
+}
+
+pub fn cmd_prune(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = engine_for(args, &config)?;
+    let method = Method::from_name(&args.str_or("method", "besa"))
+        .context("--method must be besa|wanda|sparsegpt|magnitude")?;
+    let sparsity = args.f64_or("sparsity", 0.5)?;
+    let mut params = load_params(args, &engine)?;
+    let run = prune_with(&engine, &mut params, method, sparsity, args)?;
+    let out = match args.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => runs_dir(args).join(format!("{config}-{}.bst", method.name())),
+    };
+    params.save(&out)?;
+    let cfg = engine.config();
+    println!(
+        "pruned {config} with {}: global sparsity {:.4}, {:.1}s, saved {}",
+        method.name(),
+        params.prunable_sparsity(cfg.n_blocks),
+        run.secs,
+        out.display()
+    );
+    for r in &run.reports {
+        println!(
+            "  block {}: sparsity {:.4} recon {:.3e}",
+            r.block,
+            r.mean_sparsity(cfg),
+            r.recon_error
+        );
+    }
+    Ok(())
+}
+
+pub fn cmd_eval(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = engine_for(args, &config)?;
+    let params = load_params(args, &engine)?;
+    let n = args.usize_or("eval-batches", 16)?;
+    for (domain, ppl) in crate::eval::perplexity_all(&engine, &params, n, 77)? {
+        println!("{domain:>10}: ppl {ppl:.4}");
+    }
+    Ok(())
+}
+
+pub fn cmd_probe(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = engine_for(args, &config)?;
+    let params = load_params(args, &engine)?;
+    let n = args.usize_or("items", 50)?;
+    for r in crate::eval::probes::run_all(&engine, &params, n, 99)? {
+        println!("{:>12}: {:.2}% ({} items)", r.task, r.accuracy * 100.0, r.items);
+    }
+    Ok(())
+}
+
+pub fn cmd_simulate(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "sm");
+    let engine = engine_for(args, &config)?;
+    let params = load_params(args, &engine)?;
+    let cfg = engine.config();
+    let sim = crate::sim::SimConfig {
+        tokens: args.usize_or("tokens", cfg.seq_len)?,
+        ..Default::default()
+    };
+    println!(
+        "{:<10} {:>6}x{:<6} {:>9} {:>12} {:>12} {:>8} {:>6}",
+        "layer", "out", "in", "sparsity", "dense cyc", "sparse cyc", "speedup", "util"
+    );
+    for s in crate::sim::simulate_block(&params, cfg, &sim)? {
+        println!(
+            "{:<10} {:>6}x{:<6} {:>8.2}% {:>12} {:>12} {:>7.2}x {:>6.2}",
+            s.layer,
+            s.rows,
+            s.cols,
+            s.sparsity * 100.0,
+            s.dense_cycles,
+            s.sparse_cycles,
+            s.speedup,
+            s.utilization
+        );
+    }
+    Ok(())
+}

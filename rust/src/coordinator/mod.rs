@@ -1,0 +1,230 @@
+//! The block-sequential pruning pipeline (paper Algorithm 1).
+//!
+//! Maintains two activation streams over the calibration set — the
+//! full-precision path `X_fp` (through dense blocks) and the pruned path
+//! `X_p` (through already-pruned blocks) — prunes one transformer block at
+//! a time, then advances both streams. This is what bounds GPU/host memory
+//! in the paper and lets a 7B-180B model prune on one device; here it
+//! bounds host memory and keeps every PJRT executable shape-static.
+
+pub mod trainer;
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::model::{ModelConfig, ParamStore, LAYER_NAMES};
+use crate::prune::importance::ColNorms;
+use crate::prune::{BlockMasks, BlockReport};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::util::Stopwatch;
+
+/// Everything a block pruner may consume for one block.
+pub struct BlockCtx<'a> {
+    pub engine: &'a Engine,
+    pub cfg: &'a ModelConfig,
+    pub block: usize,
+    /// the seven prunable weights (cloned, mutable by SparseGPT updates)
+    pub weights: BTreeMap<String, Tensor>,
+    pub norms: [Tensor; 2],
+    /// pruned-path inputs, one [B,S,d] per calibration minibatch
+    pub x_pruned: &'a [Tensor],
+    /// dense targets F(W, X_fp), one per minibatch (Algorithm 1 line 3)
+    pub y_dense: &'a [Tensor],
+    /// streaming column norms of the layer inputs (pruned path)
+    pub colnorms: ColNorms,
+    /// gram matrices X^T X of the layer inputs, keyed by capture point
+    /// ("h1", "att", "h2", "act"); present only when `need_hessian`
+    pub hessians: BTreeMap<String, crate::linalg::Mat>,
+}
+
+impl<'a> BlockCtx<'a> {
+    pub fn weight(&self, layer: &str) -> &Tensor {
+        &self.weights[layer]
+    }
+
+    pub fn hessian_for(&self, layer: &str) -> &crate::linalg::Mat {
+        let key = match layer {
+            "wq" | "wk" | "wv" => "h1",
+            "wo" => "att",
+            "wg" | "wu" => "h2",
+            "wd" => "act",
+            other => panic!("unknown layer {other}"),
+        };
+        &self.hessians[key]
+    }
+}
+
+/// A pruning algorithm plugged into the pipeline.
+pub trait BlockPruner {
+    fn name(&self) -> &str;
+    /// Whether the pipeline must accumulate input gram matrices.
+    fn needs_hessian(&self) -> bool {
+        false
+    }
+    /// Produce 0/1 masks for the block. May also update `ctx.weights`
+    /// in place (SparseGPT's OBS reconstruction does).
+    fn prune_block(&mut self, ctx: &mut BlockCtx) -> Result<(BlockMasks, BlockReport)>;
+}
+
+/// Result of a full pipeline run.
+pub struct PruneRun {
+    pub reports: Vec<BlockReport>,
+    /// relative blockwise output error ||X_p - X_fp||^2 / ||X_fp||^2 after
+    /// each pruned block (Fig. 1a series)
+    pub block_errors: Vec<f64>,
+    pub masks: Vec<BlockMasks>,
+    pub secs: f64,
+}
+
+pub struct Pipeline<'a> {
+    pub engine: &'a Engine,
+    pub calib: Vec<Tensor>,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(engine: &'a Engine, calib: Vec<Tensor>) -> Pipeline<'a> {
+        Pipeline { engine, calib }
+    }
+
+    /// Embed all calibration batches: the starting activations of both paths.
+    fn embed_all(&self, params: &ParamStore) -> Result<Vec<Tensor>> {
+        let emb = params.get("embed")?;
+        self.calib
+            .iter()
+            .map(|toks| {
+                let out = self.engine.run("embed", &[toks, emb])?;
+                Ok(out.into_iter().next().unwrap())
+            })
+            .collect()
+    }
+
+    /// Run Algorithm 1: prune every block of `params` in place with `pruner`.
+    pub fn run(&self, params: &mut ParamStore, pruner: &mut dyn BlockPruner) -> Result<PruneRun> {
+        let cfg = self.engine.config().clone();
+        let sw = Stopwatch::start();
+        let mut x_fp = self.embed_all(params)?;
+        let mut x_p = x_fp.clone();
+        let mut reports = Vec::new();
+        let mut block_errors = Vec::new();
+        let mut all_masks = Vec::new();
+
+        for l in 0..cfg.n_blocks {
+            let bsw = Stopwatch::start();
+            // ---- gather block inputs -------------------------------------
+            let weights: BTreeMap<String, Tensor> = LAYER_NAMES
+                .iter()
+                .map(|w| ((*w).to_string(), params.get(&ParamStore::layer_name(l, w)).unwrap().clone()))
+                .collect();
+            let norms = [
+                params.get(&format!("blocks.{l}.norm1"))?.clone(),
+                params.get(&format!("blocks.{l}.norm2"))?.clone(),
+            ];
+
+            // dense targets on the dense path
+            let mut y_dense = Vec::with_capacity(x_fp.len());
+            for x in &x_fp {
+                let mut ins: Vec<&Tensor> = vec![x];
+                ins.extend(LAYER_NAMES.iter().map(|w| &weights[*w]));
+                ins.push(&norms[0]);
+                ins.push(&norms[1]);
+                let out = self.engine.run("block_fwd", &ins)?;
+                y_dense.push(out.into_iter().next().unwrap());
+            }
+
+            // captures on the pruned path: colnorms (+ optional hessians)
+            let mut colnorms = ColNorms::new(&cfg);
+            let mut hessians: BTreeMap<String, crate::linalg::Mat> = BTreeMap::new();
+            if pruner.needs_hessian() {
+                hessians.insert("h1".into(), crate::linalg::Mat::zeros(cfg.d_model, cfg.d_model));
+                hessians.insert("att".into(), crate::linalg::Mat::zeros(cfg.d_model, cfg.d_model));
+                hessians.insert("h2".into(), crate::linalg::Mat::zeros(cfg.d_model, cfg.d_model));
+                hessians.insert("act".into(), crate::linalg::Mat::zeros(cfg.d_ffn, cfg.d_ffn));
+            }
+            for x in &x_p {
+                let mut ins: Vec<&Tensor> = vec![x];
+                ins.extend(LAYER_NAMES.iter().map(|w| &weights[*w]));
+                ins.push(&norms[0]);
+                ins.push(&norms[1]);
+                let out = self.engine.run("block_capture", &ins)?;
+                // outputs: y, h1, att, h2, act
+                colnorms.accumulate(&out[1], &out[2], &out[3], &out[4]);
+                if pruner.needs_hessian() {
+                    let toks = cfg.tokens_per_batch();
+                    hessians.get_mut("h1").unwrap().add_gram_f32(out[1].f32s(), toks);
+                    hessians.get_mut("att").unwrap().add_gram_f32(out[2].f32s(), toks);
+                    hessians.get_mut("h2").unwrap().add_gram_f32(out[3].f32s(), toks);
+                    hessians.get_mut("act").unwrap().add_gram_f32(out[4].f32s(), toks);
+                }
+            }
+
+            // ---- prune ---------------------------------------------------
+            let mut ctx = BlockCtx {
+                engine: self.engine,
+                cfg: &cfg,
+                block: l,
+                weights,
+                norms,
+                x_pruned: &x_p,
+                y_dense: &y_dense,
+                colnorms,
+                hessians,
+            };
+            let (masks, mut report) = pruner.prune_block(&mut ctx)?;
+            report.block = l;
+
+            // ---- apply masks (and any OBS weight updates) -----------------
+            for w in LAYER_NAMES {
+                let name = ParamStore::layer_name(l, w);
+                let mut t = ctx.weights.remove(w).context("weight consumed twice")?;
+                let m = masks.get(w).with_context(|| format!("pruner returned no mask for {w}"))?;
+                for (v, mv) in t.f32s_mut().iter_mut().zip(m.f32s()) {
+                    *v *= mv;
+                }
+                params.set(&name, t)?;
+            }
+
+            // ---- advance both paths ---------------------------------------
+            let weights_now: Vec<&Tensor> =
+                LAYER_NAMES.iter().map(|w| params.get(&ParamStore::layer_name(l, w)).unwrap()).collect();
+            let norms_now = [
+                params.get(&format!("blocks.{l}.norm1"))?,
+                params.get(&format!("blocks.{l}.norm2"))?,
+            ];
+            let mut err_num = 0.0f64;
+            let mut err_den = 0.0f64;
+            for (i, x) in x_p.iter_mut().enumerate() {
+                let mut ins: Vec<&Tensor> = vec![&*x];
+                ins.extend(weights_now.iter().copied());
+                ins.push(norms_now[0]);
+                ins.push(norms_now[1]);
+                let out = self.engine.run("block_fwd", &ins)?;
+                let y_p = out.into_iter().next().unwrap();
+                let y_fp = &y_dense[i];
+                for (a, b) in y_p.f32s().iter().zip(y_fp.f32s()) {
+                    let d = (*a - *b) as f64;
+                    err_num += d * d;
+                    err_den += (*b as f64) * (*b as f64);
+                }
+                *x = y_p;
+            }
+            x_fp = y_dense;
+            block_errors.push(err_num / err_den.max(1e-12));
+
+            crate::info!(
+                "block {l}/{}: {} sparsity={:.4} recon={:.3e} err_acc={:.3e} ({:.1}s)",
+                cfg.n_blocks,
+                pruner.name(),
+                report.mean_sparsity(&cfg),
+                report.recon_error,
+                block_errors[l],
+                bsw.secs()
+            );
+            reports.push(report);
+            all_masks.push(masks);
+        }
+
+        Ok(PruneRun { reports, block_errors, masks: all_masks, secs: sw.secs() })
+    }
+}

@@ -1,0 +1,83 @@
+//! LM pretraining driver: Adam over all model parameters with gradients
+//! from the AOT `lm_train_step` artifact. Produces the dense checkpoints
+//! the pruning experiments start from (the repo's stand-in for downloading
+//! LLaMA weights — DESIGN.md §Substitutions).
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Domain};
+use crate::model::ParamStore;
+use crate::prune::adam::{Adam, AdamConfig};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::util::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// mix all three domains (model must know every eval distribution)
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 300, lr: 3e-3, seed: 1234, log_every: 20 }
+    }
+}
+
+pub struct TrainStats {
+    pub losses: Vec<f64>,
+    pub secs: f64,
+    pub tokens_seen: usize,
+}
+
+/// Train in place; returns the loss curve. Domains are interleaved
+/// round-robin so each step sees one domain's batch.
+pub fn pretrain(engine: &Engine, params: &mut ParamStore, tc: &TrainConfig) -> Result<TrainStats> {
+    let cfg = engine.config().clone();
+    let mut batchers: Vec<Batcher> = Domain::all()
+        .iter()
+        .map(|d| Batcher::new(*d, tc.seed, &cfg))
+        .collect();
+    let n_params = cfg.param_order.len();
+    let mut adam = Adam::new(AdamConfig { lr: tc.lr, ..Default::default() }, n_params);
+    let sw = Stopwatch::start();
+    let mut losses = Vec::with_capacity(tc.steps);
+
+    let n_dom = batchers.len();
+    for step in 0..tc.steps {
+        let tokens = batchers[step % n_dom].next_batch();
+        let mut ins: Vec<&Tensor> = params.ordered();
+        ins.push(&tokens);
+        let out = engine.run("lm_train_step", &ins)?;
+        let loss = out[0].scalar_value() as f64;
+        losses.push(loss);
+        let grads: Vec<&Tensor> = out[1..].iter().collect();
+        // Adam over the canonical order
+        let order: Vec<String> = params.order().to_vec();
+        let mut refs: Vec<*mut Tensor> = Vec::with_capacity(order.len());
+        for name in &order {
+            refs.push(params.get_mut(name)? as *mut Tensor);
+        }
+        // SAFETY: names are unique (BTreeMap keys), so the raw pointers
+        // alias distinct tensors.
+        let mut muts: Vec<&mut Tensor> =
+            refs.into_iter().map(|p| unsafe { &mut *p }).collect();
+        adam.step(&mut muts, &grads);
+
+        if step % tc.log_every == 0 || step + 1 == tc.steps {
+            crate::info!(
+                "pretrain step {step}/{}: loss {loss:.4} ({:.1} tok/s)",
+                tc.steps,
+                ((step + 1) * cfg.tokens_per_batch()) as f64 / sw.secs()
+            );
+        }
+    }
+    Ok(TrainStats {
+        losses,
+        secs: sw.secs(),
+        tokens_seen: tc.steps * cfg.tokens_per_batch(),
+    })
+}

@@ -1,0 +1,89 @@
+//! Batcher: turns corpus streams into fixed-shape `[B, S]` token tensors
+//! (the AOT artifacts are shape-specialized), plus the calibration sampler
+//! mirroring the paper's "128 sequences × 2048 tokens from C4" protocol.
+
+use crate::model::ModelConfig;
+use crate::tensor::Tensor;
+
+use super::corpus::{Corpus, Domain};
+
+pub struct Batcher {
+    pub batch: usize,
+    pub seq_len: usize,
+    corpus: Corpus,
+}
+
+impl Batcher {
+    pub fn new(domain: Domain, seed: u64, cfg: &ModelConfig) -> Batcher {
+        Batcher { batch: cfg.batch, seq_len: cfg.seq_len, corpus: Corpus::new(domain, seed) }
+    }
+
+    /// Next `[B, S]` i32 token tensor.
+    pub fn next_batch(&mut self) -> Tensor {
+        let mut data = Vec::with_capacity(self.batch * self.seq_len);
+        for _ in 0..self.batch {
+            data.extend(self.corpus.take(self.seq_len));
+        }
+        Tensor::from_i32(&[self.batch, self.seq_len], data)
+    }
+
+    /// `n` batches (deterministic continuation of the stream).
+    pub fn batches(&mut self, n: usize) -> Vec<Tensor> {
+        (0..n).map(|_| self.next_batch()).collect()
+    }
+}
+
+/// Calibration set: `n_seqs` sequences drawn from the calibration domain
+/// (C4-syn by default, like the paper), packed into `[B, S]` minibatches.
+pub struct CalibrationSet {
+    pub batches: Vec<Tensor>,
+    pub n_seqs: usize,
+}
+
+impl CalibrationSet {
+    pub fn sample(cfg: &ModelConfig, n_seqs: usize, seed: u64) -> CalibrationSet {
+        assert!(n_seqs % cfg.batch == 0, "n_seqs {} must be a multiple of batch {}", n_seqs, cfg.batch);
+        let mut b = Batcher::new(Domain::C4Syn, seed, cfg);
+        CalibrationSet { batches: b.batches(n_seqs / cfg.batch), n_seqs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+
+    #[test]
+    fn batch_shapes() {
+        let cfg = test_config();
+        let mut b = Batcher::new(Domain::C4Syn, 1, &cfg);
+        let t = b.next_batch();
+        assert_eq!(t.shape, vec![cfg.batch, cfg.seq_len]);
+        assert_eq!(t.i32s().len(), cfg.batch * cfg.seq_len);
+    }
+
+    #[test]
+    fn batches_distinct_and_deterministic() {
+        let cfg = test_config();
+        let mut b1 = Batcher::new(Domain::WikiSyn, 9, &cfg);
+        let mut b2 = Batcher::new(Domain::WikiSyn, 9, &cfg);
+        let x1 = b1.next_batch();
+        let y1 = b1.next_batch();
+        assert_ne!(x1, y1);
+        assert_eq!(x1, b2.next_batch());
+    }
+
+    #[test]
+    fn calibration_counts() {
+        let cfg = test_config();
+        let c = CalibrationSet::sample(&cfg, 16, 0);
+        assert_eq!(c.batches.len(), 16 / cfg.batch);
+    }
+
+    #[test]
+    #[should_panic]
+    fn calibration_requires_multiple_of_batch() {
+        let cfg = test_config();
+        CalibrationSet::sample(&cfg, cfg.batch + 1, 0);
+    }
+}

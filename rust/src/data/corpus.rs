@@ -1,0 +1,224 @@
+//! Synthetic-grammar corpus generators.
+//!
+//! Three distinct probabilistic grammars stand in for the paper's
+//! evaluation corpora (DESIGN.md §Substitutions):
+//!
+//! * [`Domain::WikiSyn`]  — encyclopedic sentences: entities, relative
+//!   clauses, dates (→ WikiText2 role: shifted-but-related eval set).
+//! * [`Domain::C4Syn`]    — web-prose style, the **calibration source**
+//!   (the paper calibrates on C4's first shard).
+//! * [`Domain::PtbSyn`]   — telegraphic newswire with numbers and
+//!   abbreviations (→ PTB role: strongest domain shift).
+//!
+//! All corpora share the byte vocabulary but differ in word inventory,
+//! sentence templates and punctuation statistics, so a model trained on
+//! the mixture has learnable structure and the three eval streams rank
+//! pruning damage differently — the property the paper's three-dataset
+//! tables measure.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    WikiSyn,
+    C4Syn,
+    PtbSyn,
+}
+
+impl Domain {
+    pub fn from_name(s: &str) -> Option<Domain> {
+        match s {
+            "wiki-syn" | "wikitext2" | "wiki" => Some(Domain::WikiSyn),
+            "c4-syn" | "c4" => Some(Domain::C4Syn),
+            "ptb-syn" | "ptb" => Some(Domain::PtbSyn),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::WikiSyn => "wiki-syn",
+            Domain::C4Syn => "c4-syn",
+            Domain::PtbSyn => "ptb-syn",
+        }
+    }
+
+    pub fn all() -> [Domain; 3] {
+        [Domain::WikiSyn, Domain::C4Syn, Domain::PtbSyn]
+    }
+}
+
+const WIKI_ENTITIES: &[&str] = &[
+    "aldoria", "brevik", "castellan", "dormund", "elvaria", "fenwick", "galdor",
+    "hestia", "ivarstead", "jorvik", "kaldwin", "lorath", "meridia", "norvale",
+];
+const WIKI_NOUNS: &[&str] = &[
+    "province", "dynasty", "treaty", "river", "cathedral", "archive", "garrison",
+    "festival", "observatory", "parliament", "harbor", "railway",
+];
+const WIKI_VERBS: &[&str] = &[
+    "established", "annexed", "chronicled", "restored", "governed", "surveyed",
+    "commissioned", "abolished", "fortified", "documented",
+];
+
+const C4_SUBJECTS: &[&str] = &[
+    "the team", "our community", "this product", "the platform", "a new study",
+    "the project", "local makers", "the service", "many readers", "the update",
+];
+const C4_VERBS: &[&str] = &[
+    "offers", "improves", "supports", "launches", "explores", "delivers",
+    "simplifies", "recommends", "features", "celebrates",
+];
+const C4_OBJECTS: &[&str] = &[
+    "a better workflow", "fresh ideas", "practical tools", "weekly guides",
+    "free resources", "great results", "simple recipes", "honest reviews",
+    "useful tips", "open data",
+];
+const C4_TAILS: &[&str] = &[
+    "for everyone", "this season", "at no cost", "with ease", "in minutes",
+    "around the world", "every day", "on any device",
+];
+
+const PTB_TICKERS: &[&str] = &[
+    "acme corp", "unitex", "borall inc", "midland gas", "trano plc", "velcor",
+    "quorum ltd", "sandric", "paxton co",
+];
+const PTB_VERBS: &[&str] =
+    &["rose", "fell", "gained", "slipped", "climbed", "eased", "jumped", "dropped"];
+const PTB_UNITS: &[&str] = &["points", "cents a share", "pct", "dlrs", "mln dlrs"];
+
+/// Streaming corpus: deterministic for a (domain, seed) pair.
+pub struct Corpus {
+    pub domain: Domain,
+    rng: Rng,
+    buf: Vec<i32>,
+    pos: usize,
+}
+
+impl Corpus {
+    pub fn new(domain: Domain, seed: u64) -> Corpus {
+        Corpus { domain, rng: Rng::seed(seed ^ domain_tag(domain)), buf: Vec::new(), pos: 0 }
+    }
+
+    fn sentence(&mut self) -> String {
+        let r = &mut self.rng;
+        match self.domain {
+            Domain::WikiSyn => {
+                let e1 = *r.choice(WIKI_ENTITIES);
+                let n1 = *r.choice(WIKI_NOUNS);
+                let v = *r.choice(WIKI_VERBS);
+                let e2 = *r.choice(WIKI_ENTITIES);
+                let year = 1100 + r.below(900);
+                match r.below(3) {
+                    0 => format!("the {n1} of {e1} was {v} in {year}. "),
+                    1 => format!("{e1}, a {n1} near {e2}, was {v} by the {} of {e2}. ",
+                        *r.choice(WIKI_NOUNS)),
+                    _ => format!("in {year} the {n1} at {e1} was {v} and later renamed {e2}. "),
+                }
+            }
+            Domain::C4Syn => {
+                let s = *r.choice(C4_SUBJECTS);
+                let v = *r.choice(C4_VERBS);
+                let o = *r.choice(C4_OBJECTS);
+                let t = *r.choice(C4_TAILS);
+                match r.below(3) {
+                    0 => format!("{s} {v} {o} {t}. "),
+                    1 => format!("here is why {s} {v} {o}: it just works {t}. "),
+                    _ => format!("{s} now {v} {o}, and {} {} {o} too. ",
+                        *r.choice(C4_SUBJECTS), *r.choice(C4_VERBS)),
+                }
+            }
+            Domain::PtbSyn => {
+                let t1 = *r.choice(PTB_TICKERS);
+                let v = *r.choice(PTB_VERBS);
+                let amt = r.below(95) + 1;
+                let u = *r.choice(PTB_UNITS);
+                match r.below(3) {
+                    0 => format!("{t1} shares {v} {amt} {u}. "),
+                    1 => format!("{t1} said net {v} to {amt} {u} in the quarter. "),
+                    _ => format!("analysts said {t1} {v} {amt} {u} after the report. "),
+                }
+            }
+        }
+    }
+
+    fn refill(&mut self) {
+        let s = self.sentence();
+        self.buf.extend(super::tokenize(&s));
+    }
+
+    /// Next `n` tokens of the infinite stream.
+    pub fn take(&mut self, n: usize) -> Vec<i32> {
+        while self.buf.len() - self.pos < n {
+            self.refill();
+        }
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        // periodically drop consumed prefix
+        if self.pos > 1 << 20 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        out
+    }
+
+    /// `count` independent sequences of length `seq_len` (each starting at a
+    /// sentence boundary for the first, then streaming).
+    pub fn sequences(&mut self, count: usize, seq_len: usize) -> Vec<Vec<i32>> {
+        (0..count).map(|_| self.take(seq_len)).collect()
+    }
+}
+
+fn domain_tag(d: Domain) -> u64 {
+    match d {
+        Domain::WikiSyn => 0x5741,
+        Domain::C4Syn => 0xC4C4,
+        Domain::PtbSyn => 0x97B9,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Corpus::new(Domain::C4Syn, 1).take(512);
+        let b = Corpus::new(Domain::C4Syn, 1).take(512);
+        let c = Corpus::new(Domain::C4Syn, 2).take(512);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn domains_differ() {
+        let a = Corpus::new(Domain::WikiSyn, 1).take(2048);
+        let b = Corpus::new(Domain::PtbSyn, 1).take(2048);
+        assert_ne!(a, b);
+        // PTB-syn is digit-heavy relative to wiki-syn's prose
+        let digits = |v: &[i32]| v.iter().filter(|t| (b'0' as i32..=b'9' as i32).contains(t)).count();
+        assert!(digits(&b) > digits(&a) / 2, "ptb {} wiki {}", digits(&b), digits(&a));
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let v = Corpus::new(Domain::WikiSyn, 3).take(4096);
+        assert!(v.iter().all(|t| (0..256).contains(t)));
+    }
+
+    #[test]
+    fn text_is_readable() {
+        let mut c = Corpus::new(Domain::C4Syn, 4);
+        let txt = crate::data::detokenize(&c.take(200));
+        assert!(txt.contains(' '), "{txt}");
+    }
+
+    #[test]
+    fn sequences_shape() {
+        let mut c = Corpus::new(Domain::PtbSyn, 5);
+        let seqs = c.sequences(3, 64);
+        assert_eq!(seqs.len(), 3);
+        assert!(seqs.iter().all(|s| s.len() == 64));
+        assert_ne!(seqs[0], seqs[1]);
+    }
+}

@@ -1,0 +1,33 @@
+//! Data substrate: synthetic-corpus generators standing in for the paper's
+//! WikiText2 / C4 / PTB (DESIGN.md §Substitutions), a byte-level tokenizer,
+//! a deterministic batcher, and the calibration sampler.
+
+pub mod batcher;
+pub mod corpus;
+
+pub use batcher::Batcher;
+pub use corpus::{Corpus, Domain};
+
+/// Byte-level tokenizer: vocab = 256, identity mapping. The paper prunes
+/// models with subword vocabularies; byte-level keeps the substrate simple
+/// while exercising identical model/pruning code paths.
+pub fn tokenize(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|b| *b as i32).collect()
+}
+
+pub fn detokenize(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|t| (*t).clamp(0, 255) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenize_roundtrip() {
+        let s = "the quick brown fox 123";
+        assert_eq!(detokenize(&tokenize(s)), s);
+        assert!(tokenize(s).iter().all(|t| (0..256).contains(t)));
+    }
+}

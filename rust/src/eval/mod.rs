@@ -1,0 +1,82 @@
+//! Evaluation harnesses: streaming perplexity (the paper's primary metric)
+//! and prompt-based zero-shot probes (Table 2's protocol on synthetic
+//! tasks — DESIGN.md §Substitutions).
+
+pub mod probes;
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Domain};
+use crate::model::{ModelConfig, ParamStore, LAYER_NAMES};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Forward a `[B,S]` token batch through the whole model, returning the
+/// per-position NLL `[B,S]` (last position zeroed). Blocks stream one at a
+/// time through the shape-static `block_fwd` artifact — the same execution
+/// layout the pruning pipeline uses.
+pub fn forward_nll(engine: &Engine, params: &ParamStore, tokens: &Tensor) -> Result<Tensor> {
+    let cfg = engine.config();
+    let emb = params.get("embed")?;
+    let mut x = engine.run("embed", &[tokens, emb])?.into_iter().next().unwrap();
+    for l in 0..cfg.n_blocks {
+        let mut ins: Vec<&Tensor> = vec![&x];
+        for w in LAYER_NAMES {
+            ins.push(params.get(&ParamStore::layer_name(l, w))?);
+        }
+        ins.push(params.get(&format!("blocks.{l}.norm1"))?);
+        ins.push(params.get(&format!("blocks.{l}.norm2"))?);
+        x = engine.run("block_fwd", &ins)?.into_iter().next().unwrap();
+    }
+    let nll = engine
+        .run("head_nll", &[&x, params.get("norm_f")?, emb, tokens])?
+        .into_iter()
+        .next()
+        .unwrap();
+    Ok(nll)
+}
+
+/// Byte-level perplexity over `n_batches` fresh batches of `domain`.
+pub fn perplexity(
+    engine: &Engine,
+    params: &ParamStore,
+    domain: Domain,
+    n_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let cfg = engine.config().clone();
+    let mut batcher = Batcher::new(domain, seed, &cfg);
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    for _ in 0..n_batches {
+        let tokens = batcher.next_batch();
+        let nll = forward_nll(engine, params, &tokens)?;
+        total_nll += nll.f32s().iter().map(|v| *v as f64).sum::<f64>();
+        total_tok += cfg.batch * (cfg.seq_len - 1); // last position is zeroed
+    }
+    Ok((total_nll / total_tok as f64).exp())
+}
+
+/// Perplexity on all three evaluation domains (one Table-1 row).
+pub fn perplexity_all(
+    engine: &Engine,
+    params: &ParamStore,
+    n_batches: usize,
+    seed: u64,
+) -> Result<Vec<(String, f64)>> {
+    Domain::all()
+        .iter()
+        .map(|d| Ok((d.name().to_string(), perplexity(engine, params, *d, n_batches, seed)?)))
+        .collect()
+}
+
+/// Sum of NLL over a token span `[lo, hi)` of sequence `b` — scoring a
+/// continuation: NLL of token t is stored at position t-1.
+pub fn span_nll(nll: &Tensor, cfg: &ModelConfig, b: usize, lo: usize, hi: usize) -> f64 {
+    let s = cfg.seq_len;
+    let row = &nll.f32s()[b * s..(b + 1) * s];
+    row[lo.saturating_sub(1)..hi.saturating_sub(1).min(s)]
+        .iter()
+        .map(|v| *v as f64)
+        .sum()
+}

@@ -1,0 +1,257 @@
+//! Zero-shot probe tasks (Table 2 substitute, DESIGN.md §Substitutions).
+//!
+//! Protocol mirrors LM-Eval's ranked-choice scoring: each item is a prompt
+//! plus two candidate continuations (correct / corrupted); the model scores
+//! both by continuation NLL and accuracy is the fraction where the correct
+//! one wins. Six tasks over the synthetic domains measure capability
+//! retention after pruning:
+//!
+//! * `wiki-cloze`, `c4-cloze`, `ptb-cloze` — grammatical continuation vs.
+//!   a word-swapped corruption, one per domain (PIQA/BoolQ role).
+//! * `copy`     — verbatim repetition of an earlier fragment vs. novel text
+//!   (HellaSwag-like surface coherence).
+//! * `retrieval`— an entity mentioned in the prompt vs. an unseen one
+//!   (WinoGrande-like binding).
+//! * `numeric`  — well-formed amount-unit pattern vs. malformed (ARC-like).
+
+use anyhow::Result;
+
+use crate::data::corpus::{Corpus, Domain};
+use crate::data::tokenize;
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ProbeItem {
+    pub prompt: String,
+    pub correct: String,
+    pub wrong: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ProbeResult {
+    pub task: String,
+    pub accuracy: f64,
+    pub items: usize,
+}
+
+fn swap_words(s: &str, rng: &mut Rng) -> String {
+    let mut words: Vec<&str> = s.split(' ').collect();
+    if words.len() >= 2 {
+        let i = rng.below(words.len());
+        let mut j = rng.below(words.len());
+        let mut guard = 0;
+        while (words[j] == words[i]) && guard < 8 {
+            j = rng.below(words.len());
+            guard += 1;
+        }
+        words.swap(i, j);
+    }
+    words.join(" ")
+}
+
+fn gen_cloze(domain: Domain, n: usize, seed: u64) -> Vec<ProbeItem> {
+    let mut c = Corpus::new(domain, seed);
+    let mut rng = Rng::seed(seed ^ 0xC102E);
+    let mut out = Vec::new();
+    while out.len() < n {
+        let text = crate::data::detokenize(&c.take(160));
+        // split at a sentence boundary: prompt = first part, continuation = rest
+        if let Some(dot) = text[..100.min(text.len())].rfind(". ") {
+            let prompt = text[..dot + 2].to_string();
+            let cont: String = text[dot + 2..].chars().take(40).collect();
+            if cont.len() < 12 {
+                continue;
+            }
+            let wrong = swap_words(&cont, &mut rng);
+            if wrong == cont {
+                continue;
+            }
+            out.push(ProbeItem { prompt, correct: cont, wrong });
+        }
+    }
+    out
+}
+
+fn gen_copy(n: usize, seed: u64) -> Vec<ProbeItem> {
+    let mut c = Corpus::new(Domain::C4Syn, seed ^ 7);
+    let mut d = Corpus::new(Domain::WikiSyn, seed ^ 9);
+    (0..n)
+        .map(|_| {
+            let frag = crate::data::detokenize(&c.take(28));
+            let other = crate::data::detokenize(&d.take(28));
+            ProbeItem {
+                prompt: format!("{frag} {frag} {frag} "),
+                correct: frag,
+                wrong: other,
+            }
+        })
+        .collect()
+}
+
+fn gen_retrieval(n: usize, seed: u64) -> Vec<ProbeItem> {
+    let mut rng = Rng::seed(seed ^ 0xE7);
+    let entities = [
+        "aldoria", "brevik", "castellan", "dormund", "elvaria", "fenwick", "galdor", "hestia",
+    ];
+    (0..n)
+        .map(|_| {
+            let a = *rng.choice(&entities);
+            let mut b = *rng.choice(&entities);
+            while b == a {
+                b = *rng.choice(&entities);
+            }
+            ProbeItem {
+                prompt: format!(
+                    "the province of {a} was established in 1200. the province of "
+                ),
+                correct: a.to_string(),
+                wrong: b.to_string(),
+            }
+        })
+        .collect()
+}
+
+fn gen_numeric(n: usize, seed: u64) -> Vec<ProbeItem> {
+    let mut rng = Rng::seed(seed ^ 0x4242);
+    (0..n)
+        .map(|_| {
+            let amt = rng.below(90) + 1;
+            ProbeItem {
+                prompt: format!("acme corp shares rose {amt} "),
+                correct: "points. ".to_string(),
+                wrong: "pzq#!x. ".to_string(),
+            }
+        })
+        .collect()
+}
+
+pub fn all_tasks(n_items: usize, seed: u64) -> Vec<(String, Vec<ProbeItem>)> {
+    vec![
+        ("wiki-cloze".into(), gen_cloze(Domain::WikiSyn, n_items, seed)),
+        ("c4-cloze".into(), gen_cloze(Domain::C4Syn, n_items, seed + 1)),
+        ("ptb-cloze".into(), gen_cloze(Domain::PtbSyn, n_items, seed + 2)),
+        ("copy".into(), gen_copy(n_items, seed + 3)),
+        ("retrieval".into(), gen_retrieval(n_items, seed + 4)),
+        ("numeric".into(), gen_numeric(n_items, seed + 5)),
+    ]
+}
+
+/// Pack `prompt + continuation` into one fixed-shape row; returns the
+/// token row and the continuation span `[lo, hi)`.
+fn pack(cfg: &ModelConfig, prompt: &str, cont: &str) -> (Vec<i32>, usize, usize) {
+    let s = cfg.seq_len;
+    let mut toks = tokenize(prompt);
+    let mut cont_toks = tokenize(cont);
+    // left-truncate prompt if needed, keep the continuation whole
+    if toks.len() + cont_toks.len() > s {
+        let keep = s.saturating_sub(cont_toks.len());
+        toks = toks[toks.len() - keep..].to_vec();
+    }
+    let lo = toks.len();
+    toks.append(&mut cont_toks);
+    let hi = toks.len().min(s);
+    toks.truncate(s);
+    // pad with spaces (in-vocab, low-information)
+    while toks.len() < s {
+        toks.push(b' ' as i32);
+    }
+    (toks, lo, hi)
+}
+
+/// Score one task: batched ranked-choice accuracy.
+pub fn run_task(
+    engine: &Engine,
+    params: &ParamStore,
+    items: &[ProbeItem],
+) -> Result<f64> {
+    let cfg = engine.config().clone();
+    let b = cfg.batch;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    // two rows per item (correct / wrong); process b/2 items per batch
+    let per_batch = (b / 2).max(1);
+    for chunk in items.chunks(per_batch) {
+        let mut rows = Vec::with_capacity(b * cfg.seq_len);
+        let mut spans = Vec::new();
+        for item in chunk {
+            for cand in [&item.correct, &item.wrong] {
+                let (toks, lo, hi) = pack(&cfg, &item.prompt, cand);
+                rows.extend(toks);
+                spans.push((lo, hi));
+            }
+        }
+        // pad the batch dimension
+        while rows.len() < b * cfg.seq_len {
+            rows.extend(vec![b' ' as i32; cfg.seq_len]);
+            spans.push((0, 0));
+        }
+        let tokens = Tensor::from_i32(&[b, cfg.seq_len], rows);
+        let nll = crate::eval::forward_nll(engine, params, &tokens)?;
+        for (i, _item) in chunk.iter().enumerate() {
+            let (lo_c, hi_c) = spans[2 * i];
+            let (lo_w, hi_w) = spans[2 * i + 1];
+            let len_c = (hi_c - lo_c).max(1) as f64;
+            let len_w = (hi_w - lo_w).max(1) as f64;
+            let s_c = crate::eval::span_nll(&nll, &cfg, 2 * i, lo_c, hi_c) / len_c;
+            let s_w = crate::eval::span_nll(&nll, &cfg, 2 * i + 1, lo_w, hi_w) / len_w;
+            if s_c < s_w {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Full Table-2 row: all six tasks plus the average.
+pub fn run_all(
+    engine: &Engine,
+    params: &ParamStore,
+    n_items: usize,
+    seed: u64,
+) -> Result<Vec<ProbeResult>> {
+    let mut out = Vec::new();
+    for (task, items) in all_tasks(n_items, seed) {
+        let accuracy = run_task(engine, params, &items)?;
+        out.push(ProbeResult { task, accuracy, items: items.len() });
+    }
+    let avg = out.iter().map(|r| r.accuracy).sum::<f64>() / out.len() as f64;
+    out.push(ProbeResult { task: "average".into(), accuracy: avg, items: 0 });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_generate_distinct_candidates() {
+        for (name, items) in all_tasks(8, 42) {
+            assert_eq!(items.len(), 8, "{name}");
+            for it in &items {
+                assert_ne!(it.correct, it.wrong, "{name}: {it:?}");
+                assert!(!it.prompt.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn pack_respects_seq_len() {
+        let cfg = crate::model::config::tests::test_config();
+        let long_prompt = "x".repeat(100);
+        let (toks, lo, hi) = pack(&cfg, &long_prompt, "yes it is");
+        assert_eq!(toks.len(), cfg.seq_len);
+        assert!(lo < hi && hi <= cfg.seq_len);
+    }
+
+    #[test]
+    fn cloze_deterministic() {
+        let a = gen_cloze(Domain::WikiSyn, 4, 1);
+        let b = gen_cloze(Domain::WikiSyn, 4, 1);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[0].prompt, b[0].prompt);
+    }
+}

@@ -1,0 +1,33 @@
+//! # BESA — Blockwise Parameter-Efficient Sparsity Allocation
+//!
+//! A production-grade Rust reproduction of *“BESA: Pruning Large Language
+//! Models with Blockwise Parameter-Efficient Sparsity Allocation”*
+//! (Xu et al., ICLR 2024), built as a three-layer stack:
+//!
+//! * **L1/L2 (build time)** — Pallas kernels + JAX graphs under `python/`,
+//!   AOT-lowered once to HLO text artifacts (`make artifacts`).
+//! * **L3 (this crate)** — the coordinator: loads the artifacts through the
+//!   PJRT C API ([`runtime`]), owns the sequential block-by-block pruning
+//!   pipeline (paper Algorithm 1) in [`coordinator`] and [`prune`], the
+//!   pruning baselines (magnitude / Wanda / SparseGPT), joint
+//!   quantization ([`quant`]), evaluation harnesses ([`eval`]), the
+//!   synthetic-corpus data substrate ([`data`]) and the ViTCoD
+//!   accelerator cycle simulator ([`sim`], paper §4.5 + Appendix B).
+//!
+//! Python never runs after artifact generation: the `besa` binary is
+//! self-contained.
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod prune;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{bail, Context, Result};

@@ -1,0 +1,276 @@
+//! Dense linear-algebra substrate (no external BLAS): matrix type,
+//! symmetric accumulation, Cholesky factorization/inversion and
+//! triangular solves — everything SparseGPT's OBS solver needs.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense square-capable matrix of f64 (numerical code keeps f64
+/// internally; model tensors are f32 at the boundaries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub d: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, d: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = rows[0].len();
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.d[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    /// self += x^T x for a batch of row-vectors x [n, cols] (Hessian accum).
+    pub fn add_gram_f32(&mut self, x: &[f32], n: usize) {
+        assert_eq!(self.rows, self.cols);
+        let c = self.cols;
+        assert_eq!(x.len(), n * c);
+        for s in 0..n {
+            let row = &x[s * c..(s + 1) * c];
+            for i in 0..c {
+                let xi = row[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                let out = &mut self.d[i * c..(i + 1) * c];
+                for j in 0..c {
+                    out[j] += xi * row[j] as f64;
+                }
+            }
+        }
+    }
+
+    pub fn add_diag(&mut self, v: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += v;
+        }
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.d[k * other.cols..(k + 1) * other.cols];
+                let dst = &mut out.d[i * other.cols..(i + 1) * other.cols];
+                for j in 0..other.cols {
+                    dst[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.d
+            .iter()
+            .zip(&other.d)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.d[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.d[i * self.cols + j]
+    }
+}
+
+/// Cholesky factorization A = L L^T (lower). Fails on non-PD input.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum={sum:.3e})");
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    y
+}
+
+/// Solve L^T x = y (backward substitution).
+pub fn solve_lower_t(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// Full inverse via Cholesky: A^-1 = (L L^T)^-1. O(n^3).
+pub fn cholesky_inverse(a: &Mat) -> Result<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for col in 0..n {
+        e.iter_mut().for_each(|v| *v = 0.0);
+        e[col] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for row in 0..n {
+            inv[(row, col)] = x[row];
+        }
+    }
+    Ok(inv)
+}
+
+/// Upper-triangular Cholesky factor of the *inverse*: returns U with
+/// A^-1 = U^T U — exactly torch's `linalg.cholesky(inv(H), upper=True)`,
+/// the factor SparseGPT's OBS sweep consumes (U = L^T for inv = L L^T).
+pub fn cholesky_inverse_upper(a: &Mat) -> Result<Mat> {
+    let inv = cholesky_inverse(a)?;
+    let l = cholesky(&inv)?;
+    Ok(l.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::seed(seed);
+        let mut b = Mat::zeros(n, n);
+        for v in b.d.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64 * 0.1);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(24, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-9, "{}", a.max_abs_diff(&rec));
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(16, 2);
+        let inv = cholesky_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Mat::eye(16)) < 1e-8);
+    }
+
+    #[test]
+    fn upper_factor_of_inverse() {
+        let a = random_spd(12, 3);
+        let u = cholesky_inverse_upper(&a).unwrap();
+        // U must be upper triangular
+        for i in 0..12 {
+            for j in 0..i {
+                assert!(u[(i, j)].abs() < 1e-12);
+            }
+        }
+        // inv = U^T U (torch upper-cholesky convention)
+        let rec = u.transpose().matmul(&u);
+        let inv = cholesky_inverse(&a).unwrap();
+        assert!(rec.max_abs_diff(&inv) < 1e-8);
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let a = random_spd(8, 4);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..8).map(|i| i as f64 - 3.0).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // L L^T x = b  =>  A x = b
+        let ax: Vec<f64> = (0..8)
+            .map(|i| (0..8).map(|j| a[(i, j)] * x[j]).sum::<f64>())
+            .collect();
+        for (u, v) in ax.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gram_accumulation() {
+        let mut h = Mat::zeros(3, 3);
+        let x: Vec<f32> = vec![1., 2., 3., 4., 5., 6.]; // two rows
+        h.add_gram_f32(&x, 2);
+        // H = x^T x
+        assert_eq!(h[(0, 0)], 1.0 + 16.0);
+        assert_eq!(h[(1, 2)], 2.0 * 3.0 + 5.0 * 6.0);
+    }
+
+    #[test]
+    fn non_pd_rejected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! `besa` — leader entrypoint for the BESA pruning framework.
+//! See `besa help` or README.md for usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = besa::cli::main(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

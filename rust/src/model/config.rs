@@ -1,0 +1,142 @@
+//! Model configuration — parsed from the artifact manifest so rust and the
+//! AOT python graphs can never disagree on shapes.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub d_ffn: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_rates: usize,
+    pub norm_eps: f64,
+    pub param_order: Vec<String>,
+}
+
+/// The seven prunable projections of one block, in pipeline order
+/// (must match python/compile/configs.py LAYER_NAMES).
+pub const LAYER_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+impl ModelConfig {
+    pub fn from_json(v: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: v.at(&["name"]).as_str().context("config.name")?.to_string(),
+            vocab: v.at(&["vocab"]).as_usize().context("vocab")?,
+            d_model: v.at(&["d_model"]).as_usize().context("d_model")?,
+            n_heads: v.at(&["n_heads"]).as_usize().context("n_heads")?,
+            n_blocks: v.at(&["n_blocks"]).as_usize().context("n_blocks")?,
+            d_ffn: v.at(&["d_ffn"]).as_usize().context("d_ffn")?,
+            seq_len: v.at(&["seq_len"]).as_usize().context("seq_len")?,
+            batch: v.at(&["batch"]).as_usize().context("batch")?,
+            n_rates: v.at(&["n_rates"]).as_usize().context("n_rates")?,
+            norm_eps: v.at(&["norm_eps"]).as_f64().context("norm_eps")?,
+            param_order: v
+                .at(&["param_order"])
+                .as_arr()
+                .context("param_order")?
+                .iter()
+                .map(|s| s.as_str().unwrap().to_string())
+                .collect(),
+        })
+    }
+
+    /// Shape of one of the seven prunable weights, `[out, in]`.
+    pub fn layer_shape(&self, layer: &str) -> [usize; 2] {
+        let (d, f) = (self.d_model, self.d_ffn);
+        match layer {
+            "wq" | "wk" | "wv" | "wo" => [d, d],
+            "wg" | "wu" => [f, d],
+            "wd" => [d, f],
+            other => panic!("unknown layer {other}"),
+        }
+    }
+
+    /// Shape of any named parameter.
+    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+        if name == "embed" {
+            return vec![self.vocab, self.d_model];
+        }
+        if name == "norm_f" || name.ends_with("norm1") || name.ends_with("norm2") {
+            return vec![self.d_model];
+        }
+        let layer = name.rsplit('.').next().unwrap();
+        self.layer_shape(layer).to_vec()
+    }
+
+    pub fn block_param_count(&self) -> usize {
+        LAYER_NAMES
+            .iter()
+            .map(|l| {
+                let s = self.layer_shape(l);
+                s[0] * s[1]
+            })
+            .sum()
+    }
+
+    pub fn total_param_count(&self) -> usize {
+        self.param_order.iter().map(|n| crate::tensor::numel(&self.param_shape(n))).sum()
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq_len
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    pub fn test_config() -> ModelConfig {
+        let mut order = vec!["embed".to_string()];
+        for l in 0..2 {
+            for w in LAYER_NAMES {
+                order.push(format!("blocks.{l}.{w}"));
+            }
+            order.push(format!("blocks.{l}.norm1"));
+            order.push(format!("blocks.{l}.norm2"));
+        }
+        order.push("norm_f".to_string());
+        ModelConfig {
+            name: "test".into(),
+            vocab: 256,
+            d_model: 32,
+            n_heads: 2,
+            n_blocks: 2,
+            d_ffn: 88,
+            seq_len: 32,
+            batch: 4,
+            n_rates: 16,
+            norm_eps: 1e-5,
+            param_order: order,
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        let c = test_config();
+        assert_eq!(c.layer_shape("wq"), [32, 32]);
+        assert_eq!(c.layer_shape("wg"), [88, 32]);
+        assert_eq!(c.layer_shape("wd"), [32, 88]);
+        assert_eq!(c.param_shape("embed"), vec![256, 32]);
+        assert_eq!(c.param_shape("blocks.1.norm2"), vec![32]);
+        assert_eq!(c.param_shape("blocks.0.wu"), vec![88, 32]);
+        assert_eq!(c.block_param_count(), 4 * 32 * 32 + 3 * 88 * 32);
+    }
+
+    #[test]
+    fn param_count_consistent() {
+        let c = test_config();
+        let total = c.total_param_count();
+        assert_eq!(
+            total,
+            256 * 32 + 2 * (c.block_param_count() + 2 * 32) + 32
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Model substrate: configuration mirror of `python/compile/configs.py`,
+//! parameter store (named tensors in the canonical order shared with the
+//! AOT graphs), initialization, and checkpointing.
+
+pub mod config;
+pub mod params;
+
+pub use config::ModelConfig;
+pub use params::{ParamStore, LAYER_NAMES};

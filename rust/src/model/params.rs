@@ -1,0 +1,197 @@
+//! Parameter store: named tensors in the canonical manifest order, with
+//! LLaMA-style initialization and `.bst` checkpointing.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{io, Tensor};
+use crate::util::rng::Rng;
+
+use super::config::ModelConfig;
+
+pub use super::config::LAYER_NAMES;
+
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub config_name: String,
+    tensors: BTreeMap<String, Tensor>,
+    order: Vec<String>,
+}
+
+impl ParamStore {
+    /// Random init: truncated-normal-ish scaled by 1/sqrt(fan_in) for the
+    /// projections, N(0, 0.02) embeddings, ones for norms.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> ParamStore {
+        let mut rng = Rng::seed(seed);
+        let mut tensors = BTreeMap::new();
+        for name in &cfg.param_order {
+            let shape = cfg.param_shape(name);
+            let t = if shape.len() == 1 {
+                Tensor::ones(&shape)
+            } else if name == "embed" {
+                let n = crate::tensor::numel(&shape);
+                Tensor::from_f32(&shape, (0..n).map(|_| rng.normal_f32() * 0.02).collect())
+            } else {
+                let fan_in = shape[1] as f32;
+                let std = 1.0 / fan_in.sqrt();
+                let n = crate::tensor::numel(&shape);
+                Tensor::from_f32(&shape, (0..n).map(|_| rng.normal_f32() * std).collect())
+            };
+            tensors.insert(name.clone(), t);
+        }
+        ParamStore { config_name: cfg.name.clone(), tensors, order: cfg.param_order.clone() }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("missing param '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.tensors.get_mut(name).with_context(|| format!("missing param '{name}'"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        match self.tensors.get(name) {
+            Some(old) if old.shape != t.shape => {
+                bail!("set '{name}': shape {:?} != existing {:?}", t.shape, old.shape)
+            }
+            _ => {}
+        }
+        self.tensors.insert(name.to_string(), t);
+        Ok(())
+    }
+
+    pub fn order(&self) -> &[String] {
+        &self.order
+    }
+
+    /// Tensors in canonical (manifest) order, for positional artifact input.
+    pub fn ordered(&self) -> Vec<&Tensor> {
+        self.order.iter().map(|n| &self.tensors[n]).collect()
+    }
+
+    /// The seven prunable weights of block `l`, in LAYER_NAMES order.
+    pub fn block_weights(&self, l: usize) -> Vec<&Tensor> {
+        LAYER_NAMES.iter().map(|w| &self.tensors[&format!("blocks.{l}.{w}")]).collect()
+    }
+
+    pub fn block_norms(&self, l: usize) -> [&Tensor; 2] {
+        [
+            &self.tensors[&format!("blocks.{l}.norm1")],
+            &self.tensors[&format!("blocks.{l}.norm2")],
+        ]
+    }
+
+    pub fn layer_name(l: usize, w: &str) -> String {
+        format!("blocks.{l}.{w}")
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        io::save(path, &self.tensors)
+    }
+
+    pub fn load(cfg: &ModelConfig, path: &Path) -> Result<ParamStore> {
+        let tensors = io::load(path)?;
+        for name in &cfg.param_order {
+            let t = tensors
+                .get(name)
+                .with_context(|| format!("checkpoint {} missing '{name}'", path.display()))?;
+            let want = cfg.param_shape(name);
+            if t.shape != want {
+                bail!("checkpoint '{name}': shape {:?} != config {:?}", t.shape, want);
+            }
+        }
+        Ok(ParamStore {
+            config_name: cfg.name.clone(),
+            tensors,
+            order: cfg.param_order.clone(),
+        })
+    }
+
+    /// Apply a set of 0/1 masks multiplicatively to block weights.
+    pub fn apply_masks(&mut self, l: usize, masks: &BTreeMap<String, Tensor>) -> Result<()> {
+        for w in LAYER_NAMES {
+            let name = Self::layer_name(l, w);
+            let mask = masks.get(w).with_context(|| format!("missing mask {w}"))?;
+            let t = self.get_mut(&name)?;
+            if mask.shape != t.shape {
+                bail!("mask {w}: shape {:?} != weight {:?}", mask.shape, t.shape);
+            }
+            for (v, m) in t.f32s_mut().iter_mut().zip(mask.f32s()) {
+                *v *= m;
+            }
+        }
+        Ok(())
+    }
+
+    /// Global sparsity over the seven prunable weights of all blocks.
+    pub fn prunable_sparsity(&self, n_blocks: usize) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for l in 0..n_blocks {
+            for w in LAYER_NAMES {
+                let t = &self.tensors[&Self::layer_name(l, w)];
+                zeros += t.f32s().iter().filter(|x| **x == 0.0).count();
+                total += t.numel();
+            }
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+
+    #[test]
+    fn init_shapes_and_determinism() {
+        let cfg = test_config();
+        let a = ParamStore::init(&cfg, 7);
+        let b = ParamStore::init(&cfg, 7);
+        let c = ParamStore::init(&cfg, 8);
+        assert_eq!(a.get("embed").unwrap().shape, vec![256, 32]);
+        assert_eq!(a.get("blocks.0.wq").unwrap().f32s(), b.get("blocks.0.wq").unwrap().f32s());
+        assert_ne!(a.get("blocks.0.wq").unwrap().f32s(), c.get("blocks.0.wq").unwrap().f32s());
+        assert_eq!(a.ordered().len(), cfg.param_order.len());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let cfg = test_config();
+        let p = ParamStore::init(&cfg, 1);
+        let dir = std::env::temp_dir().join(format!("params_test_{}", std::process::id()));
+        let path = dir.join("m.bst");
+        p.save(&path).unwrap();
+        let q = ParamStore::load(&cfg, &path).unwrap();
+        assert_eq!(p.get("blocks.1.wd").unwrap(), q.get("blocks.1.wd").unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn masks_apply() {
+        let cfg = test_config();
+        let mut p = ParamStore::init(&cfg, 2);
+        let mut masks = BTreeMap::new();
+        for w in LAYER_NAMES {
+            let shape = cfg.layer_shape(w);
+            let mut m = Tensor::ones(&[shape[0], shape[1]]);
+            let half = m.numel() / 2;
+            m.f32s_mut()[..half].iter_mut().for_each(|v| *v = 0.0);
+            masks.insert(w.to_string(), m);
+        }
+        p.apply_masks(0, &masks).unwrap();
+        let s = p.prunable_sparsity(1);
+        assert!((s - 0.5).abs() < 0.02, "{s}");
+    }
+
+    #[test]
+    fn set_rejects_shape_change() {
+        let cfg = test_config();
+        let mut p = ParamStore::init(&cfg, 3);
+        assert!(p.set("norm_f", Tensor::zeros(&[7])).is_err());
+        assert!(p.set("norm_f", Tensor::zeros(&[32])).is_ok());
+    }
+}

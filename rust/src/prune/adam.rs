@@ -1,0 +1,122 @@
+//! Adam optimizer over named tensors. The AOT step artifacts return
+//! gradients; parameter state and the update rule live here in rust so the
+//! request path stays python-free.
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+#[derive(Debug)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl Adam {
+    /// One slot per parameter tensor (sized lazily on first step).
+    pub fn new(cfg: AdamConfig, n_params: usize) -> Adam {
+        Adam { cfg, m: vec![Vec::new(); n_params], v: vec![Vec::new(); n_params], t: 0 }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// In-place update: params[i] -= lr * mhat / (sqrt(vhat) + eps).
+    pub fn step(&mut self, params: &mut [&mut Tensor], grads: &[&Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let t = self.t as f32;
+        let bc1 = 1.0 - self.cfg.beta1.powf(t);
+        let bc2 = 1.0 - self.cfg.beta2.powf(t);
+        for i in 0..params.len() {
+            let p = params[i].f32s_mut();
+            let g = grads[i].f32s();
+            assert_eq!(p.len(), g.len(), "param/grad length mismatch at {i}");
+            if self.m[i].is_empty() {
+                self.m[i] = vec![0.0; p.len()];
+                self.v[i] = vec![0.0; p.len()];
+            }
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            for j in 0..p.len() {
+                let mut gj = g[j];
+                if self.cfg.weight_decay > 0.0 {
+                    gj += self.cfg.weight_decay * p[j];
+                }
+                m[j] = self.cfg.beta1 * m[j] + (1.0 - self.cfg.beta1) * gj;
+                v[j] = self.cfg.beta2 * v[j] + (1.0 - self.cfg.beta2) * gj * gj;
+                let mhat = m[j] / bc1;
+                let vhat = v[j] / bc2;
+                p[j] -= self.cfg.lr * mhat / (vhat.sqrt() + self.cfg.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adam on f(x) = (x - 3)^2 converges to 3.
+    #[test]
+    fn converges_on_quadratic() {
+        let mut x = Tensor::from_f32(&[1], vec![0.0]);
+        let mut opt = Adam::new(AdamConfig { lr: 0.1, ..Default::default() }, 1);
+        for _ in 0..300 {
+            let g = Tensor::from_f32(&[1], vec![2.0 * (x.f32s()[0] - 3.0)]);
+            opt.step(&mut [&mut x], &[&g]);
+        }
+        assert!((x.f32s()[0] - 3.0).abs() < 1e-2, "{}", x.f32s()[0]);
+    }
+
+    /// Adam is approximately scale-invariant in the gradient magnitude —
+    /// the property that makes it the right optimizer for the tiny STE
+    /// gradients flowing out of the mask kernel.
+    #[test]
+    fn scale_invariance() {
+        let run = |scale: f32| {
+            let mut x = Tensor::from_f32(&[1], vec![0.0]);
+            let mut opt = Adam::new(AdamConfig { lr: 0.05, ..Default::default() }, 1);
+            for _ in 0..100 {
+                let g = Tensor::from_f32(&[1], vec![scale * (x.f32s()[0] - 1.0)]);
+                opt.step(&mut [&mut x], &[&g]);
+            }
+            x.f32s()[0]
+        };
+        let a = run(1.0);
+        let b = run(1e-6);
+        assert!((a - b).abs() < 0.05, "{a} vs {b}");
+    }
+
+    #[test]
+    fn multi_param_independent() {
+        let mut x = Tensor::from_f32(&[2], vec![0.0, 0.0]);
+        let mut y = Tensor::from_f32(&[1], vec![5.0]);
+        let mut opt = Adam::new(AdamConfig { lr: 0.2, ..Default::default() }, 2);
+        for _ in 0..200 {
+            let gx = Tensor::from_f32(&[2], vec![x.f32s()[0] + 1.0, x.f32s()[1] - 2.0]);
+            let gy = Tensor::from_f32(&[1], vec![y.f32s()[0]]);
+            opt.step(&mut [&mut x, &mut y], &[&gx, &gy]);
+        }
+        assert!((x.f32s()[0] + 1.0).abs() < 0.05);
+        assert!((x.f32s()[1] - 2.0).abs() < 0.05);
+        assert!(y.f32s()[0].abs() < 0.05);
+    }
+}

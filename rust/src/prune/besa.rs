@@ -1,0 +1,397 @@
+//! BESA (the paper's contribution): differentiable sparsity allocation via
+//! learnable per-rate probabilities, optimized per block against the
+//! blockwise reconstruction loss (Eqn. 1) with Adam — the rust half of
+//! Algorithm 1. The heavy math (STE masks, masked block forward, gradients)
+//! runs inside the AOT `besa_step_*` artifact; this module owns theta
+//! state, the optimizer loop, convergence control and final mask decode.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{BlockCtx, BlockPruner};
+use crate::model::LAYER_NAMES;
+use crate::prune::adam::{Adam, AdamConfig};
+use crate::prune::importance::{decode_mask, Metric};
+use crate::prune::{BlockMasks, BlockReport};
+use crate::tensor::Tensor;
+
+/// Sparsity-allocation granularity (paper Table 6). `Layer` is Wanda and
+/// lives in [`crate::prune::wanda`]; `TwoBlocks` is driven by
+/// [`two_block_prune`] from the experiment harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    AttnMlp,
+    Block,
+}
+
+#[derive(Debug, Clone)]
+pub struct BesaConfig {
+    pub sparsity: f64,
+    /// epochs over the calibration minibatches (paper default: 1 on
+    /// 128x2048 tokens; our minibatches are smaller so default higher)
+    pub epochs: usize,
+    pub lr: f32,
+    /// sparsity-penalty weight λ (Eqn. 1)
+    pub lambda: f32,
+    /// row-wise (paper default, D*C_out params/layer) or layer-wise (D)
+    pub row_wise: bool,
+    pub granularity: Granularity,
+    pub metric: Metric,
+    /// joint weight-quantization (paper §3.3): learn clipping strengths too
+    pub quant: bool,
+}
+
+impl Default for BesaConfig {
+    fn default() -> Self {
+        BesaConfig {
+            sparsity: 0.5,
+            epochs: 24,
+            lr: 5e-2,
+            lambda: 8.0,
+            row_wise: true,
+            granularity: Granularity::Block,
+            metric: Metric::Wanda,
+            quant: false,
+        }
+    }
+}
+
+pub struct BesaPruner {
+    pub cfg: BesaConfig,
+    /// use the `besa_step_row_d<N>` artifact with N candidate rates instead
+    /// of the config default (Table 5 sparsity-step ablation)
+    pub rate_override: Option<usize>,
+    /// per-block training curves: (loss, recon, mean_alpha) per step
+    pub curves: Vec<Vec<(f64, f64, f64)>>,
+}
+
+impl BesaPruner {
+    pub fn new(cfg: BesaConfig) -> BesaPruner {
+        BesaPruner { cfg, rate_override: None, curves: Vec::new() }
+    }
+
+    fn n_rates(&self, ctx: &BlockCtx) -> usize {
+        self.rate_override.unwrap_or(ctx.cfg.n_rates)
+    }
+
+    fn artifact_name(&self) -> String {
+        if let Some(d) = self.rate_override {
+            return format!("besa_step_row_d{d}");
+        }
+        if self.cfg.quant {
+            "besa_quant_step_row".to_string()
+        } else {
+            match (self.cfg.row_wise, self.cfg.granularity) {
+                (true, Granularity::Block) => "besa_step_row",
+                (true, Granularity::AttnMlp) => "besa_step_attnmlp",
+                (false, Granularity::Block) => "besa_step_layer",
+                (false, Granularity::AttnMlp) => "besa_step_attnmlp",
+            }
+            .to_string()
+        }
+    }
+
+    fn init_thetas(&self, ctx: &BlockCtx) -> Vec<Tensor> {
+        let n_rates = self.n_rates(ctx);
+        LAYER_NAMES
+            .iter()
+            .map(|w| {
+                let shape = ctx.cfg.layer_shape(w);
+                let rows = if self.cfg.row_wise { shape[0] } else { 1 };
+                Tensor::zeros(&[rows, n_rates - 1])
+            })
+            .collect()
+    }
+}
+
+impl BlockPruner for BesaPruner {
+    fn name(&self) -> &str {
+        if self.cfg.quant {
+            "besa+quant"
+        } else {
+            "besa"
+        }
+    }
+
+    fn needs_hessian(&self) -> bool {
+        self.cfg.metric == Metric::SparseGpt
+    }
+
+    fn prune_block(&mut self, ctx: &mut BlockCtx) -> Result<(BlockMasks, BlockReport)> {
+        if !self.cfg.row_wise && self.cfg.quant {
+            bail!("joint quantization is only lowered row-wise (besa_quant_step_row)");
+        }
+        let n_rates = self.n_rates(ctx);
+        let ranks = crate::prune::wanda::block_ranks(ctx, self.cfg.metric);
+        let mut thetas = self.init_thetas(ctx);
+        let mut gammas: Vec<Tensor> =
+            LAYER_NAMES.iter().map(|_| Tensor::from_f32(&[2], vec![1.0, 1.0])).collect();
+
+        let n_opt = if self.cfg.quant { 14 } else { 7 };
+        let mut adam = Adam::new(AdamConfig { lr: self.cfg.lr, ..Default::default() }, n_opt);
+        let lam = Tensor::scalar(self.cfg.lambda);
+        let alpha_hat = Tensor::scalar(self.cfg.sparsity as f32);
+        let artifact = self.artifact_name();
+
+        // §Perf (L3): all loop-invariant inputs are converted to PJRT
+        // literals once per block; the Adam loop only pays for the θ (and
+        // γ) conversion each step. See EXPERIMENTS.md §Perf for the delta.
+        let to_lit = |t: &Tensor| t.to_literal();
+        let xy_lits: Vec<(xla::Literal, xla::Literal)> = ctx
+            .x_pruned
+            .iter()
+            .zip(ctx.y_dense)
+            .map(|(x, y)| Ok((to_lit(x)?, to_lit(y)?)))
+            .collect::<Result<_>>()?;
+        let weight_lits: Vec<xla::Literal> = LAYER_NAMES
+            .iter()
+            .map(|w| to_lit(&ctx.weights[*w]))
+            .collect::<Result<_>>()?;
+        let norm_lits = [to_lit(&ctx.norms[0])?, to_lit(&ctx.norms[1])?];
+        let rank_lits: Vec<xla::Literal> =
+            ranks.iter().map(to_lit).collect::<Result<_>>()?;
+        let lam_lit = to_lit(&lam)?;
+        let ah_lit = to_lit(&alpha_hat)?;
+
+        let mut curve = Vec::new();
+        let mut last = (0.0, 0.0, 0.0);
+        for _epoch in 0..self.cfg.epochs {
+            for (x_lit, y_lit) in &xy_lits {
+                let theta_lits: Vec<xla::Literal> =
+                    thetas.iter().map(to_lit).collect::<Result<_>>()?;
+                let gamma_lits: Vec<xla::Literal> = if self.cfg.quant {
+                    gammas.iter().map(to_lit).collect::<Result<_>>()?
+                } else {
+                    Vec::new()
+                };
+                let mut ins: Vec<&xla::Literal> = theta_lits.iter().collect();
+                ins.push(x_lit);
+                ins.push(y_lit);
+                ins.extend(weight_lits.iter());
+                ins.push(&norm_lits[0]);
+                ins.push(&norm_lits[1]);
+                ins.extend(rank_lits.iter());
+                ins.push(&lam_lit);
+                ins.push(&ah_lit);
+                ins.extend(gamma_lits.iter());
+                let out = ctx.engine.run_literals(&artifact, &ins)?;
+                last = (
+                    out[0].scalar_value() as f64,
+                    out[1].scalar_value() as f64,
+                    out[2].scalar_value() as f64,
+                );
+                curve.push(last);
+                let grads: Vec<&Tensor> = out[3..3 + n_opt].iter().collect();
+                if self.cfg.quant {
+                    let mut params: Vec<&mut Tensor> = thetas.iter_mut().collect();
+                    params.extend(gammas.iter_mut());
+                    adam.step(&mut params, &grads);
+                } else {
+                    let mut params: Vec<&mut Tensor> = thetas.iter_mut().collect();
+                    adam.step(&mut params, &grads);
+                }
+            }
+        }
+
+        // quantize weights with the learned clipping before masking
+        if self.cfg.quant {
+            for (i, w) in LAYER_NAMES.iter().enumerate() {
+                let shape = ctx.cfg.layer_shape(w);
+                let tag = format!("quant_apply_{}x{}", shape[0], shape[1]);
+                let wt = ctx.weights[*w].clone();
+                let out = ctx.engine.run(&tag, &[&wt, &gammas[i]])?;
+                *ctx.weights.get_mut(*w).unwrap() = out.into_iter().next().unwrap();
+            }
+        }
+
+        let mut masks = BlockMasks::new();
+        let mut report = BlockReport::default();
+        for (i, w) in LAYER_NAMES.iter().enumerate() {
+            let (mask, _alphas) = decode_mask(&thetas[i], &ranks[i], n_rates);
+            report.layer_sparsity.insert((*w).to_string(), mask.zero_fraction());
+            masks.insert((*w).to_string(), mask);
+        }
+        report.recon_error = last.1;
+        report.steps = curve.len();
+        self.curves.push(curve);
+        Ok((masks, report))
+    }
+}
+
+/// Two-block granularity (paper Table 6 "Two Blocks"): prunes blocks
+/// `2i, 2i+1` jointly against the dense output after both. Standalone
+/// driver because the pipeline advances one block at a time.
+pub fn two_block_prune(
+    engine: &crate::runtime::Engine,
+    params: &mut crate::model::ParamStore,
+    calib: &[Tensor],
+    cfg: &BesaConfig,
+) -> Result<(Vec<BlockReport>, Vec<f64>)> {
+    let mcfg = engine.config().clone();
+    if mcfg.n_blocks % 2 != 0 {
+        bail!("two-block granularity needs an even block count");
+    }
+    let emb = params.get("embed")?.clone();
+    let mut x_fp: Vec<Tensor> = calib
+        .iter()
+        .map(|t| Ok(engine.run("embed", &[t, &emb])?.into_iter().next().unwrap()))
+        .collect::<Result<_>>()?;
+    let mut x_p = x_fp.clone();
+    let mut reports = Vec::new();
+    let mut block_errors = Vec::new();
+
+    for pair in 0..mcfg.n_blocks / 2 {
+        let (l0, l1) = (2 * pair, 2 * pair + 1);
+        let weights: Vec<Vec<Tensor>> = [l0, l1]
+            .iter()
+            .map(|l| {
+                LAYER_NAMES
+                    .iter()
+                    .map(|w| params.get(&crate::model::ParamStore::layer_name(*l, w)).unwrap().clone())
+                    .collect()
+            })
+            .collect();
+        let norms: Vec<[Tensor; 2]> = [l0, l1]
+            .iter()
+            .map(|l| {
+                [
+                    params.get(&format!("blocks.{l}.norm1")).unwrap().clone(),
+                    params.get(&format!("blocks.{l}.norm2")).unwrap().clone(),
+                ]
+            })
+            .collect();
+
+        // dense target after two blocks + per-pair colnorms on pruned path
+        let mut y_dense = Vec::new();
+        for x in &x_fp {
+            let mut cur = x.clone();
+            for b in 0..2 {
+                let mut ins: Vec<&Tensor> = vec![&cur];
+                ins.extend(weights[b].iter());
+                ins.push(&norms[b][0]);
+                ins.push(&norms[b][1]);
+                cur = engine.run("block_fwd", &ins)?.into_iter().next().unwrap();
+            }
+            y_dense.push(cur);
+        }
+        let mut colnorms =
+            [crate::prune::importance::ColNorms::new(&mcfg), crate::prune::importance::ColNorms::new(&mcfg)];
+        let mut x_mid = Vec::new();
+        for x in &x_p {
+            let mut cur = x.clone();
+            for b in 0..2 {
+                let mut ins: Vec<&Tensor> = vec![&cur];
+                ins.extend(weights[b].iter());
+                ins.push(&norms[b][0]);
+                ins.push(&norms[b][1]);
+                let out = engine.run("block_capture", &ins)?;
+                colnorms[b].accumulate(&out[1], &out[2], &out[3], &out[4]);
+                cur = out.into_iter().next().unwrap();
+                if b == 0 {
+                    x_mid.push(cur.clone());
+                }
+            }
+        }
+        let _ = x_mid;
+
+        // ranks per block
+        let ranks: Vec<Vec<Tensor>> = (0..2)
+            .map(|b| {
+                LAYER_NAMES
+                    .iter()
+                    .enumerate()
+                    .map(|(i, w)| {
+                        let scores = crate::prune::importance::wanda_scores(
+                            &weights[b][i],
+                            &colnorms[b].for_layer(w),
+                        );
+                        crate::prune::importance::ranks(&scores)
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // theta optimization over 14 logits tensors
+        let mut thetas: Vec<Tensor> = (0..2)
+            .flat_map(|_| {
+                LAYER_NAMES.iter().map(|w| {
+                    let shape = mcfg.layer_shape(w);
+                    Tensor::zeros(&[shape[0], mcfg.n_rates - 1])
+                })
+            })
+            .collect();
+        let mut adam = Adam::new(AdamConfig { lr: cfg.lr, ..Default::default() }, 14);
+        let lam = Tensor::scalar(cfg.lambda);
+        let alpha_hat = Tensor::scalar(cfg.sparsity as f32);
+        let mut last_recon = 0.0;
+        for _ in 0..cfg.epochs {
+            for (x, y) in x_p.iter().zip(&y_dense) {
+                let mut ins: Vec<&Tensor> = thetas.iter().collect();
+                ins.push(x);
+                ins.push(y);
+                for b in 0..2 {
+                    ins.extend(weights[b].iter());
+                }
+                for n in &norms {
+                    ins.push(&n[0]);
+                    ins.push(&n[1]);
+                }
+                for b in 0..2 {
+                    ins.extend(ranks[b].iter());
+                }
+                ins.push(&lam);
+                ins.push(&alpha_hat);
+                let out = engine.run("two_block_step", &ins)?;
+                last_recon = out[1].scalar_value() as f64;
+                let grads: Vec<&Tensor> = out[3..17].iter().collect();
+                let mut ps: Vec<&mut Tensor> = thetas.iter_mut().collect();
+                adam.step(&mut ps, &grads);
+            }
+        }
+
+        // decode + apply masks, advance streams
+        for b in 0..2 {
+            let l = 2 * pair + b;
+            let mut report = BlockReport { block: l, ..Default::default() };
+            for (i, w) in LAYER_NAMES.iter().enumerate() {
+                let (mask, _) = decode_mask(&thetas[b * 7 + i], &ranks[b][i], mcfg.n_rates);
+                report.layer_sparsity.insert((*w).to_string(), mask.zero_fraction());
+                let name = crate::model::ParamStore::layer_name(l, w);
+                let mut t = params.get(&name)?.clone();
+                for (v, m) in t.f32s_mut().iter_mut().zip(mask.f32s()) {
+                    *v *= m;
+                }
+                params.set(&name, t)?;
+            }
+            report.recon_error = last_recon;
+            reports.push(report);
+        }
+        // advance pruned + dense paths through the (now masked) pair
+        let mut err_num = 0.0;
+        let mut err_den = 0.0;
+        for (i, x) in x_p.iter_mut().enumerate() {
+            let mut cur = x.clone();
+            for l in [l0, l1] {
+                let w_now: Vec<&Tensor> = LAYER_NAMES
+                    .iter()
+                    .map(|w| params.get(&crate::model::ParamStore::layer_name(l, w)).unwrap())
+                    .collect();
+                let n1 = params.get(&format!("blocks.{l}.norm1"))?;
+                let n2 = params.get(&format!("blocks.{l}.norm2"))?;
+                let mut ins: Vec<&Tensor> = vec![&cur];
+                ins.extend(w_now);
+                ins.push(n1);
+                ins.push(n2);
+                cur = engine.run("block_fwd", &ins)?.into_iter().next().unwrap();
+            }
+            for (a, b) in cur.f32s().iter().zip(y_dense[i].f32s()) {
+                let d = (*a - *b) as f64;
+                err_num += d * d;
+                err_den += (*b as f64) * (*b as f64);
+            }
+            *x = cur;
+        }
+        block_errors.push(err_num / err_den.max(1e-12));
+        x_fp = y_dense;
+    }
+    Ok((reports, block_errors))
+}

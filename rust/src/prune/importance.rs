@@ -1,0 +1,271 @@
+//! Weight-importance scoring (paper Eqn. 2) and rank computation.
+//!
+//! Column activation norms are accumulated streaming over calibration
+//! minibatches from the `block_capture` artifact outputs; scores are
+//! `|W| * colnorm` (Wanda), `|W|` (magnitude ablation) or the SparseGPT
+//! metric `w^2 / diag(H^-1)` (importance-metric ablation, Table 5 right).
+//! Ranks (ascending per-row importance positions) are computed **once per
+//! block** — Algorithm 1 line 4 — and fed to the besa_step artifact.
+
+use anyhow::Result;
+
+use crate::model::config::ModelConfig;
+use crate::tensor::Tensor;
+
+/// Which importance metric sorts the weights (Table 5 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    WeightMagnitude,
+    Wanda,
+    SparseGpt,
+}
+
+impl Metric {
+    pub fn from_name(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().as_str() {
+            "weight" | "magnitude" => Some(Metric::WeightMagnitude),
+            "wanda" => Some(Metric::Wanda),
+            "sparsegpt" => Some(Metric::SparseGpt),
+            _ => None,
+        }
+    }
+}
+
+/// Streaming accumulator for per-column squared activation norms of the
+/// four capture points of a block (inputs of {q,k,v}, {o}, {gate,up}, {down}).
+#[derive(Debug, Clone)]
+pub struct ColNorms {
+    /// sum of squares per column, one vec per capture point
+    pub h1: Vec<f64>,
+    pub att: Vec<f64>,
+    pub h2: Vec<f64>,
+    pub act: Vec<f64>,
+    pub tokens: usize,
+}
+
+impl ColNorms {
+    pub fn new(cfg: &ModelConfig) -> ColNorms {
+        ColNorms {
+            h1: vec![0.0; cfg.d_model],
+            att: vec![0.0; cfg.d_model],
+            h2: vec![0.0; cfg.d_model],
+            act: vec![0.0; cfg.d_ffn],
+            tokens: 0,
+        }
+    }
+
+    /// Accumulate from one `block_capture` output set ([B,S,d] tensors).
+    pub fn accumulate(&mut self, h1: &Tensor, att: &Tensor, h2: &Tensor, act: &Tensor) {
+        accumulate_sq(&mut self.h1, h1);
+        accumulate_sq(&mut self.att, att);
+        accumulate_sq(&mut self.h2, h2);
+        accumulate_sq(&mut self.act, act);
+        self.tokens += h1.numel() / self.h1.len();
+    }
+
+    /// L2 norm vector for the input columns of a given layer.
+    pub fn for_layer(&self, layer: &str) -> Vec<f32> {
+        let sq = match layer {
+            "wq" | "wk" | "wv" => &self.h1,
+            "wo" => &self.att,
+            "wg" | "wu" => &self.h2,
+            "wd" => &self.act,
+            other => panic!("unknown layer {other}"),
+        };
+        sq.iter().map(|v| (v.sqrt()) as f32).collect()
+    }
+}
+
+fn accumulate_sq(acc: &mut [f64], x: &Tensor) {
+    let c = acc.len();
+    let data = x.f32s();
+    debug_assert_eq!(data.len() % c, 0);
+    for row in data.chunks_exact(c) {
+        for (a, v) in acc.iter_mut().zip(row) {
+            *a += (*v as f64) * (*v as f64);
+        }
+    }
+}
+
+/// Wanda scores: |W_ij| * ||X_:,j||_2.
+pub fn wanda_scores(w: &Tensor, colnorm: &[f32]) -> Tensor {
+    let (r, c) = (w.shape[0], w.shape[1]);
+    assert_eq!(c, colnorm.len());
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        let wrow = &w.f32s()[i * c..(i + 1) * c];
+        let orow = &mut out[i * c..(i + 1) * c];
+        for j in 0..c {
+            orow[j] = wrow[j].abs() * colnorm[j];
+        }
+    }
+    Tensor::from_f32(&[r, c], out)
+}
+
+/// Magnitude scores: |W_ij|.
+pub fn magnitude_scores(w: &Tensor) -> Tensor {
+    Tensor::from_f32(&w.shape, w.f32s().iter().map(|v| v.abs()).collect())
+}
+
+/// SparseGPT metric scores: w_ij^2 / diag(H^-1)_j (importance ablation).
+pub fn sparsegpt_scores(w: &Tensor, hinv_diag: &[f64]) -> Tensor {
+    let (r, c) = (w.shape[0], w.shape[1]);
+    assert_eq!(c, hinv_diag.len());
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            let wv = w.f32s()[i * c + j] as f64;
+            out[i * c + j] = (wv * wv / hinv_diag[j].max(1e-12)) as f32;
+        }
+    }
+    Tensor::from_f32(&[r, c], out)
+}
+
+/// Ascending per-row ranks: rank 0 = least important. Ties broken by
+/// column index (stable), matching jnp.argsort(argsort(.)).
+pub fn ranks(scores: &Tensor) -> Tensor {
+    let (r, c) = (scores.shape[0], scores.shape[1]);
+    let mut out = vec![0i32; r * c];
+    let mut idx: Vec<usize> = Vec::with_capacity(c);
+    for i in 0..r {
+        let row = &scores.f32s()[i * c..(i + 1) * c];
+        idx.clear();
+        idx.extend(0..c);
+        idx.sort_by(|a, b| {
+            row[*a]
+                .partial_cmp(&row[*b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(b))
+        });
+        for (pos, &j) in idx.iter().enumerate() {
+            out[i * c + j] = pos as i32;
+        }
+    }
+    Tensor::from_i32(&[r, c], out)
+}
+
+/// Decode BESA theta logits into a hard 0/1 mask — the rust-side mirror of
+/// the `besa_mask` Pallas kernel (cross-checked against the `mask_decode`
+/// artifact in integration tests).
+///
+/// theta: [R or 1, D-1] logits; ranks: [R, C]. Returns (mask, per-row alpha).
+pub fn decode_mask(theta: &Tensor, ranks: &Tensor, n_rates: usize) -> (Tensor, Vec<f64>) {
+    let (r, c) = (ranks.shape[0], ranks.shape[1]);
+    let trows = theta.shape[0];
+    assert!(trows == r || trows == 1, "theta rows {trows} vs ranks rows {r}");
+    let dm1 = theta.shape[1];
+    assert_eq!(dm1 + 1, n_rates);
+    let mut mask = vec![1.0f32; r * c];
+    let mut alphas = vec![0.0f64; r];
+    let mut beta = vec![0.0f64; n_rates];
+    let mut cum = vec![0.0f64; n_rates];
+    for i in 0..r {
+        let trow = if trows == 1 { 0 } else { i };
+        let logits = &theta.f32s()[trow * dm1..(trow + 1) * dm1];
+        // softmax over D-1 logits; beta_D = 0
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut z = 0.0f64;
+        for (d, l) in logits.iter().enumerate() {
+            beta[d] = ((*l as f64) - mx).exp();
+            z += beta[d];
+        }
+        for b in beta[..dm1].iter_mut() {
+            *b /= z;
+        }
+        beta[n_rates - 1] = 0.0;
+        // alpha = sum beta_d * p_d, p_d = (d+1)/D for array index d
+        let mut alpha = 0.0f64;
+        for (d, b) in beta.iter().enumerate() {
+            alpha += b * (d + 1) as f64 / n_rates as f64;
+        }
+        alphas[i] = alpha;
+        // exclusive cumsum: keep-prob of bucket k is cum[k] = sum_{d<k} beta_d
+        cum[0] = 0.0;
+        for d in 1..n_rates {
+            cum[d] = cum[d - 1] + beta[d - 1];
+        }
+        for j in 0..c {
+            let rank = ranks.i32s()[i * c + j] as usize;
+            let k = ((rank * n_rates) / c).min(n_rates - 1);
+            let prune_prob = 1.0 - cum[k];
+            if prune_prob >= alpha {
+                mask[i * c + j] = 0.0;
+            }
+        }
+    }
+    (Tensor::from_f32(&[r, c], mask), alphas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn colnorm_accumulation() {
+        let cfg = crate::model::config::tests::test_config();
+        let mut cn = ColNorms::new(&cfg);
+        let ones = Tensor::ones(&[2, 4, cfg.d_model]);
+        let act = Tensor::ones(&[2, 4, cfg.d_ffn]);
+        cn.accumulate(&ones, &ones, &ones, &act);
+        cn.accumulate(&ones, &ones, &ones, &act);
+        let n = cn.for_layer("wq");
+        // 16 tokens of 1.0 -> sqrt(16) = 4
+        assert!((n[0] - 4.0).abs() < 1e-6);
+        assert_eq!(cn.tokens, 16);
+        assert_eq!(cn.for_layer("wd").len(), cfg.d_ffn);
+    }
+
+    #[test]
+    fn wanda_vs_magnitude() {
+        let w = Tensor::from_f32(&[1, 3], vec![-2.0, 1.0, 0.5]);
+        let ws = wanda_scores(&w, &[1.0, 4.0, 2.0]);
+        assert_eq!(ws.f32s(), &[2.0, 4.0, 1.0]);
+        let ms = magnitude_scores(&w);
+        assert_eq!(ms.f32s(), &[2.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn ranks_are_ascending_positions() {
+        let s = Tensor::from_f32(&[2, 4], vec![0.3, 0.1, 0.4, 0.2, 5., 5., 1., 9.]);
+        let r = ranks(&s);
+        assert_eq!(&r.i32s()[..4], &[2, 0, 3, 1]);
+        // ties broken by column: cols 0,1 scored 5,5 -> ranks 1,2
+        assert_eq!(&r.i32s()[4..], &[1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn decode_mask_point_mass() {
+        // theta point mass at rate index k -> sparsity (k+1)/D over each row
+        let n_rates = 8;
+        let c = 32;
+        let mut logits = vec![-30.0f32; n_rates - 1];
+        logits[3] = 30.0; // p = 4/8 = 0.5
+        let theta = Tensor::from_f32(&[1, n_rates - 1], logits);
+        let mut rng = crate::util::rng::Rng::seed(0);
+        let perm: Vec<i32> = rng.permutation(c).iter().map(|v| *v as i32).collect();
+        let ranks_t = Tensor::from_i32(&[1, c], perm);
+        let (mask, alphas) = decode_mask(&theta, &ranks_t, n_rates);
+        assert!((alphas[0] - 0.5).abs() < 1e-9);
+        assert!((mask.zero_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_mask_prunes_least_important() {
+        let n_rates = 4;
+        let c = 8;
+        let mut logits = vec![-30.0f32; 3];
+        logits[1] = 30.0; // alpha = 2/4 = 0.5
+        let theta = Tensor::from_f32(&[1, 3], logits);
+        let ranks_t = Tensor::from_i32(&[1, c], (0..c as i32).collect());
+        let (mask, _) = decode_mask(&theta, &ranks_t, n_rates);
+        // ranks 0..3 pruned, 4..7 kept
+        assert_eq!(mask.f32s(), &[0., 0., 0., 0., 1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn sparsegpt_metric_shape() {
+        let w = Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let s = sparsegpt_scores(&w, &[1.0, 0.25]);
+        assert_eq!(s.f32s(), &[1., 16., 9., 64.]);
+    }
+}

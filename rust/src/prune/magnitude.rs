@@ -1,0 +1,30 @@
+//! Magnitude-pruning baseline: lowest-|W| fraction of each row (the
+//! "Weight" column of the paper's importance-metric ablation, Table 5).
+
+use anyhow::Result;
+
+use crate::coordinator::{BlockCtx, BlockPruner};
+use crate::model::LAYER_NAMES;
+use crate::prune::importance::magnitude_scores;
+use crate::prune::{topk_row_mask, BlockMasks, BlockReport};
+
+pub struct MagnitudePruner {
+    pub sparsity: f64,
+}
+
+impl BlockPruner for MagnitudePruner {
+    fn name(&self) -> &str {
+        "magnitude"
+    }
+
+    fn prune_block(&mut self, ctx: &mut BlockCtx) -> Result<(BlockMasks, BlockReport)> {
+        let mut masks = BlockMasks::new();
+        let mut report = BlockReport::default();
+        for w in LAYER_NAMES {
+            let mask = topk_row_mask(&magnitude_scores(ctx.weight(w)), self.sparsity);
+            report.layer_sparsity.insert(w.to_string(), mask.zero_fraction());
+            masks.insert(w.to_string(), mask);
+        }
+        Ok((masks, report))
+    }
+}

@@ -1,0 +1,129 @@
+//! Pruning: the paper's BESA algorithm plus the three baselines it is
+//! evaluated against (magnitude, Wanda, SparseGPT), all operating on the
+//! same block-sequential calibration pipeline ([`crate::coordinator`]).
+
+pub mod adam;
+pub mod besa;
+pub mod importance;
+pub mod magnitude;
+pub mod sparsegpt;
+pub mod wanda;
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// Per-layer masks for one transformer block, keyed by layer name
+/// (`wq`..`wd`), values are 0/1 f32 tensors of the weight shape.
+pub type BlockMasks = BTreeMap<String, Tensor>;
+
+/// Which pruning algorithm to run over the block pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Dense,
+    Magnitude,
+    Wanda,
+    SparseGpt,
+    Besa,
+}
+
+impl Method {
+    pub fn from_name(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Some(Method::Dense),
+            "magnitude" | "mag" => Some(Method::Magnitude),
+            "wanda" => Some(Method::Wanda),
+            "sparsegpt" => Some(Method::SparseGpt),
+            "besa" => Some(Method::Besa),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Dense => "dense",
+            Method::Magnitude => "magnitude",
+            Method::Wanda => "wanda",
+            Method::SparseGpt => "sparsegpt",
+            Method::Besa => "besa",
+        }
+    }
+}
+
+/// Summary of pruning one block: achieved sparsity per layer + losses.
+#[derive(Debug, Clone, Default)]
+pub struct BlockReport {
+    pub block: usize,
+    pub layer_sparsity: BTreeMap<String, f64>,
+    pub recon_error: f64,
+    pub steps: usize,
+}
+
+impl BlockReport {
+    pub fn mean_sparsity(&self, cfg: &crate::model::ModelConfig) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (name, s) in &self.layer_sparsity {
+            let sh = cfg.layer_shape(name);
+            let n = (sh[0] * sh[1]) as f64;
+            num += s * n;
+            den += n;
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Build a 0/1 mask keeping the `keep` highest-scored entries of each row.
+pub fn topk_row_mask(scores: &Tensor, sparsity: f64) -> Tensor {
+    let rows = scores.shape[0];
+    let cols = scores.shape[1];
+    let prune = ((cols as f64) * sparsity).round() as usize;
+    let mut mask = vec![1.0f32; rows * cols];
+    let mut idx: Vec<usize> = Vec::with_capacity(cols);
+    for r in 0..rows {
+        let row = &scores.f32s()[r * cols..(r + 1) * cols];
+        idx.clear();
+        idx.extend(0..cols);
+        idx.sort_by(|a, b| row[*a].partial_cmp(&row[*b]).unwrap_or(std::cmp::Ordering::Equal));
+        for &j in idx.iter().take(prune) {
+            mask[r * cols + j] = 0.0;
+        }
+    }
+    Tensor::from_f32(&[rows, cols], mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in [Method::Dense, Method::Magnitude, Method::Wanda, Method::SparseGpt, Method::Besa]
+        {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("nope"), None);
+    }
+
+    #[test]
+    fn topk_mask_exact_sparsity() {
+        let scores = Tensor::from_f32(&[2, 4], vec![0.1, 0.4, 0.3, 0.2, 9.0, 1.0, 5.0, 3.0]);
+        let m = topk_row_mask(&scores, 0.5);
+        assert_eq!(m.f32s(), &[0., 1., 1., 0., 1., 0., 1., 0.]);
+        assert_eq!(m.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn block_report_weighted_mean() {
+        let cfg = crate::model::config::tests::test_config();
+        let mut r = BlockReport::default();
+        for w in crate::model::LAYER_NAMES {
+            r.layer_sparsity.insert(w.to_string(), 0.5);
+        }
+        assert!((r.mean_sparsity(&cfg) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,255 @@
+//! SparseGPT baseline (Frantar & Alistarh, 2023): blocked Optimal Brain
+//! Surgeon with weight updates, implemented from scratch on the
+//! [`crate::linalg`] substrate.
+//!
+//! Per layer with weight `W [R, C]` and input Hessian `H = X^T X + λI`:
+//! compute `Hinv = U U^T` (upper Cholesky factor of `H^{-1}`), then sweep
+//! columns in blocks of `blocksize`; inside a block, per row, mark the
+//! lowest-score entries (`w^2 / [U]_{jj}^2`) for pruning at the target
+//! rate and propagate the OBS error compensation
+//! `w_k -= (w_j / [U]_{jj}) * [U]_{j,k}` to the remaining columns.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{BlockCtx, BlockPruner};
+use crate::linalg::{cholesky_inverse_upper, Mat};
+use crate::model::LAYER_NAMES;
+use crate::prune::{BlockMasks, BlockReport};
+use crate::tensor::Tensor;
+
+pub struct SparseGptPruner {
+    pub sparsity: f64,
+    pub blocksize: usize,
+    /// Hessian dampening as a fraction of the mean diagonal (paper: 0.01).
+    pub percdamp: f64,
+}
+
+impl Default for SparseGptPruner {
+    fn default() -> Self {
+        SparseGptPruner { sparsity: 0.5, blocksize: 32, percdamp: 0.01 }
+    }
+}
+
+/// Prune one weight matrix in place; returns the 0/1 mask.
+pub fn sparsegpt_layer(
+    w: &mut Tensor,
+    hessian: &Mat,
+    sparsity: f64,
+    blocksize: usize,
+    percdamp: f64,
+) -> Result<Tensor> {
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    assert_eq!(hessian.rows, cols);
+
+    // dead columns (never-activated inputs) are zeroed and skipped via damping
+    let mut h = hessian.clone();
+    let mean_diag = (0..cols).map(|i| h[(i, i)]).sum::<f64>() / cols as f64;
+    h.add_diag(percdamp * mean_diag + 1e-10);
+    for j in 0..cols {
+        if hessian[(j, j)] == 0.0 {
+            for i in 0..rows {
+                w.f32s_mut()[i * cols + j] = 0.0;
+            }
+        }
+    }
+
+    let u = cholesky_inverse_upper(&h).context("cholesky of inverse hessian")?;
+
+    let mut mask = vec![1.0f32; rows * cols];
+    let wdata = w.f32s_mut();
+    // error accumulator per row for cross-block compensation
+    let mut err = vec![0.0f64; blocksize];
+
+    let mut j0 = 0;
+    while j0 < cols {
+        let j1 = (j0 + blocksize).min(cols);
+        let bs = j1 - j0;
+        for r in 0..rows {
+            // score entries of this block slice for this row
+            let mut scored: Vec<(f64, usize)> = (j0..j1)
+                .map(|j| {
+                    let wv = wdata[r * cols + j] as f64;
+                    let d = u[(j, j)];
+                    ((wv * wv) / (d * d).max(1e-18), j)
+                })
+                .collect();
+            scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let n_prune = ((bs as f64) * sparsity).round() as usize;
+            let prune_set: Vec<usize> = scored[..n_prune].iter().map(|(_, j)| *j).collect();
+
+            err[..bs].iter_mut().for_each(|e| *e = 0.0);
+            for j in j0..j1 {
+                let wv = wdata[r * cols + j] as f64;
+                let d = u[(j, j)];
+                let q = if prune_set.contains(&j) { 0.0 } else { wv };
+                let e = (wv - q) / d;
+                if q == 0.0 && prune_set.contains(&j) {
+                    mask[r * cols + j] = 0.0;
+                    wdata[r * cols + j] = 0.0;
+                }
+                if e != 0.0 {
+                    // compensate remaining columns inside the block
+                    for k in j + 1..j1 {
+                        wdata[r * cols + k] -= (e * u[(j, k)]) as f32;
+                    }
+                    err[j - j0] = e;
+                }
+            }
+            // propagate compensation to all later blocks
+            for j in j0..j1 {
+                let e = err[j - j0];
+                if e == 0.0 {
+                    continue;
+                }
+                for k in j1..cols {
+                    wdata[r * cols + k] -= (e * u[(j, k)]) as f32;
+                }
+            }
+        }
+        j0 = j1;
+    }
+
+    // re-zero masked entries (compensation from later columns never touches
+    // earlier ones because U is upper-triangular, but keep the invariant
+    // explicit and cheap)
+    for r in 0..rows {
+        for j in 0..cols {
+            if mask[r * cols + j] == 0.0 {
+                wdata[r * cols + j] = 0.0;
+            }
+        }
+    }
+    Ok(Tensor::from_f32(&[rows, cols], mask))
+}
+
+impl BlockPruner for SparseGptPruner {
+    fn name(&self) -> &str {
+        "sparsegpt"
+    }
+
+    fn needs_hessian(&self) -> bool {
+        true
+    }
+
+    fn prune_block(&mut self, ctx: &mut BlockCtx) -> Result<(BlockMasks, BlockReport)> {
+        let mut masks = BlockMasks::new();
+        let mut report = BlockReport::default();
+        for w in LAYER_NAMES {
+            let hess = ctx.hessian_for(w).clone();
+            let weight = ctx.weights.get_mut(w).unwrap();
+            let mask = sparsegpt_layer(weight, &hess, self.sparsity, self.blocksize, self.percdamp)?;
+            report.layer_sparsity.insert(w.to_string(), mask.zero_fraction());
+            masks.insert(w.to_string(), mask);
+        }
+        Ok((masks, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_problem(rows: usize, cols: usize, n: usize, seed: u64) -> (Tensor, Mat, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let w = Tensor::from_f32(
+            &[rows, cols],
+            (0..rows * cols).map(|_| rng.normal_f32()).collect(),
+        );
+        // correlated inputs (x = z A, low-rank-ish mixing): the regime where
+        // OBS compensation matters — with isotropic x, H ~ nI and SparseGPT
+        // degenerates to magnitude pruning
+        let k = (cols / 2).max(1);
+        let a: Vec<f32> = (0..k * cols).map(|_| rng.normal_f32()).collect();
+        let mut x = vec![0.0f32; n * cols];
+        for s in 0..n {
+            let z: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            for j in 0..cols {
+                let mut v = 0.0;
+                for t in 0..k {
+                    v += z[t] * a[t * cols + j];
+                }
+                x[s * cols + j] = v / (k as f32).sqrt() + 0.1 * rng.normal_f32();
+            }
+        }
+        let mut h = Mat::zeros(cols, cols);
+        h.add_gram_f32(&x, n);
+        (w, h, x)
+    }
+
+    fn recon_error(w0: &Tensor, w1: &Tensor, x: &[f32], n: usize) -> f64 {
+        // || X w0^T - X w1^T ||^2
+        let cols = w0.shape[1];
+        let rows = w0.shape[0];
+        let mut err = 0.0;
+        for s in 0..n {
+            let xi = &x[s * cols..(s + 1) * cols];
+            for r in 0..rows {
+                let mut y0 = 0.0f64;
+                let mut y1 = 0.0f64;
+                for j in 0..cols {
+                    y0 += xi[j] as f64 * w0.f32s()[r * cols + j] as f64;
+                    y1 += xi[j] as f64 * w1.f32s()[r * cols + j] as f64;
+                }
+                err += (y0 - y1) * (y0 - y1);
+            }
+        }
+        err
+    }
+
+    #[test]
+    fn achieves_target_sparsity() {
+        let (mut w, h, _) = random_problem(16, 64, 256, 1);
+        let mask = sparsegpt_layer(&mut w, &h, 0.5, 16, 0.01).unwrap();
+        assert!((mask.zero_fraction() - 0.5).abs() < 0.02, "{}", mask.zero_fraction());
+        assert!((w.zero_fraction() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn masked_entries_are_zero() {
+        let (mut w, h, _) = random_problem(8, 32, 128, 2);
+        let mask = sparsegpt_layer(&mut w, &h, 0.6, 8, 0.01).unwrap();
+        for (wv, mv) in w.f32s().iter().zip(mask.f32s()) {
+            if *mv == 0.0 {
+                assert_eq!(*wv, 0.0);
+            }
+        }
+    }
+
+    /// The OBS weight update must beat pure magnitude pruning on the
+    /// calibration reconstruction objective — the entire point of SparseGPT.
+    #[test]
+    fn beats_magnitude_on_reconstruction() {
+        let (w0, h, x) = random_problem(24, 96, 384, 3);
+        let n = 384;
+
+        let mut w_sgpt = w0.clone();
+        sparsegpt_layer(&mut w_sgpt, &h, 0.5, 24, 0.01).unwrap();
+        let e_sgpt = recon_error(&w0, &w_sgpt, &x, n);
+
+        let mag_mask = crate::prune::topk_row_mask(&crate::prune::importance::magnitude_scores(&w0), 0.5);
+        let mut w_mag = w0.clone();
+        for (v, m) in w_mag.f32s_mut().iter_mut().zip(mag_mask.f32s()) {
+            *v *= m;
+        }
+        let e_mag = recon_error(&w0, &w_mag, &x, n);
+        assert!(
+            e_sgpt < e_mag * 0.9,
+            "sparsegpt {e_sgpt:.3} should beat magnitude {e_mag:.3}"
+        );
+    }
+
+    #[test]
+    fn dead_columns_pruned() {
+        let (mut w, mut h, _) = random_problem(4, 16, 64, 4);
+        // kill column 3's activations
+        for j in 0..16 {
+            h[(3, j)] = 0.0;
+            h[(j, 3)] = 0.0;
+        }
+        sparsegpt_layer(&mut w, &h, 0.25, 8, 0.01).unwrap();
+        for r in 0..4 {
+            assert_eq!(w.f32s()[r * 16 + 3], 0.0);
+        }
+    }
+}

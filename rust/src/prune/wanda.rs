@@ -1,0 +1,61 @@
+//! Wanda baseline (Sun et al., 2023): prune the lowest
+//! `|W| * ||X||_2`-scored fraction of each row, uniform rate everywhere.
+//! This is also the paper's "layer" granularity row in Table 6.
+
+use anyhow::Result;
+
+use crate::coordinator::{BlockCtx, BlockPruner};
+use crate::model::LAYER_NAMES;
+use crate::prune::importance::{ranks, wanda_scores};
+use crate::prune::{topk_row_mask, BlockMasks, BlockReport};
+
+pub struct WandaPruner {
+    pub sparsity: f64,
+}
+
+impl BlockPruner for WandaPruner {
+    fn name(&self) -> &str {
+        "wanda"
+    }
+
+    fn prune_block(&mut self, ctx: &mut BlockCtx) -> Result<(BlockMasks, BlockReport)> {
+        let mut masks = BlockMasks::new();
+        let mut report = BlockReport::default();
+        for w in LAYER_NAMES {
+            let weight = ctx.weight(w);
+            let colnorm = ctx.colnorms.for_layer(w);
+            let scores = wanda_scores(weight, &colnorm);
+            let mask = topk_row_mask(&scores, self.sparsity);
+            report.layer_sparsity.insert(w.to_string(), mask.zero_fraction());
+            masks.insert(w.to_string(), mask);
+        }
+        Ok((masks, report))
+    }
+}
+
+/// Precomputed per-layer ranks for a block (used by BESA and tests).
+pub fn block_ranks(ctx: &BlockCtx, metric: crate::prune::importance::Metric) -> Vec<crate::tensor::Tensor> {
+    use crate::prune::importance::{magnitude_scores, sparsegpt_scores, Metric};
+    LAYER_NAMES
+        .iter()
+        .map(|w| {
+            let weight = ctx.weight(w);
+            let scores = match metric {
+                Metric::WeightMagnitude => magnitude_scores(weight),
+                Metric::Wanda => wanda_scores(weight, &ctx.colnorms.for_layer(w)),
+                Metric::SparseGpt => {
+                    let h = ctx.hessian_for(w);
+                    let mut damped = h.clone();
+                    let mean_diag =
+                        (0..h.rows).map(|i| h[(i, i)]).sum::<f64>() / h.rows as f64;
+                    damped.add_diag(0.01 * mean_diag + 1e-8);
+                    let inv = crate::linalg::cholesky_inverse(&damped)
+                        .expect("damped hessian must be PD");
+                    let diag: Vec<f64> = (0..inv.rows).map(|i| inv[(i, i)]).collect();
+                    sparsegpt_scores(weight, &diag)
+                }
+            };
+            ranks(&scores)
+        })
+        .collect()
+}

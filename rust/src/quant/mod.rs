@@ -1,0 +1,134 @@
+//! Weight-only min-max quantization (paper Eqn. 7, OmniQuant-style).
+//!
+//! The joint BESA+quant optimization lives in [`crate::prune::besa`] (the
+//! `besa_quant_step_row` artifact learns clipping strengths γ alongside the
+//! sparsity logits). This module provides the rust-side quantizer used for
+//! the Joint-Wanda baseline (Table 3: quantize first, then Wanda-prune) and
+//! for materializing quantized checkpoints; it is bit-exact with the
+//! `fake_quant` Pallas kernel (cross-checked in integration tests against
+//! the `quant_apply_*` artifacts).
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuantSpec {
+    pub bits: u32,
+    pub gamma0: f32,
+    pub gamma1: f32,
+}
+
+impl Default for QuantSpec {
+    fn default() -> Self {
+        QuantSpec { bits: 4, gamma0: 1.0, gamma1: 1.0 }
+    }
+}
+
+/// Fake-quantize a weight tensor: quantize to `bits` integers with min-max
+/// scaling and learnable clipping, dequantize back to f32.
+pub fn fake_quant(w: &Tensor, spec: QuantSpec) -> Tensor {
+    let data = w.f32s();
+    let qmax = (2f64.powi(spec.bits as i32) - 1.0) as f32;
+    let wmin = data.iter().cloned().fold(f32::INFINITY, f32::min) * spec.gamma0;
+    let wmax = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max) * spec.gamma1;
+    let h = ((wmax - wmin) / qmax).max(1e-8);
+    let z = (-wmin / h).round();
+    let out: Vec<f32> = data
+        .iter()
+        .map(|v| {
+            let q = ((v / h).round() + z).clamp(0.0, qmax);
+            (q - z) * h
+        })
+        .collect();
+    Tensor::from_f32(&w.shape, out)
+}
+
+/// Quantize all prunable weights of a model in place (per-tensor spec).
+pub fn quantize_model(
+    params: &mut crate::model::ParamStore,
+    cfg: &crate::model::ModelConfig,
+    spec: QuantSpec,
+) -> anyhow::Result<()> {
+    for l in 0..cfg.n_blocks {
+        for w in crate::model::LAYER_NAMES {
+            let name = crate::model::ParamStore::layer_name(l, w);
+            let q = fake_quant(params.get(&name)?, spec);
+            params.set(&name, q)?;
+        }
+    }
+    Ok(())
+}
+
+/// Mean squared quantization error (diagnostics + tests).
+pub fn quant_mse(w: &Tensor, spec: QuantSpec) -> f64 {
+    let q = fake_quant(w, spec);
+    w.f32s()
+        .iter()
+        .zip(q.f32s())
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / w.numel() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_w(seed: u64) -> Tensor {
+        let mut rng = Rng::seed(seed);
+        Tensor::from_f32(&[16, 16], (0..256).map(|_| rng.normal_f32()).collect())
+    }
+
+    #[test]
+    fn level_count_bounded() {
+        let w = random_w(1);
+        for bits in [2, 3, 4] {
+            let q = fake_quant(&w, QuantSpec { bits, ..Default::default() });
+            let mut levels: Vec<i64> = q.f32s().iter().map(|v| (v * 1e6) as i64).collect();
+            levels.sort();
+            levels.dedup();
+            assert!(levels.len() <= 1 << bits, "bits={bits}: {} levels", levels.len());
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w = random_w(2);
+        let e4 = quant_mse(&w, QuantSpec { bits: 4, ..Default::default() });
+        let e8 = quant_mse(&w, QuantSpec { bits: 8, ..Default::default() });
+        assert!(e8 < e4 / 10.0, "e4={e4:.3e} e8={e8:.3e}");
+    }
+
+    #[test]
+    fn sixteen_bits_near_lossless() {
+        let w = random_w(3);
+        assert!(quant_mse(&w, QuantSpec { bits: 16, ..Default::default() }) < 1e-8);
+    }
+
+    #[test]
+    fn clipping_shrinks_range() {
+        let w = random_w(4);
+        let q = fake_quant(&w, QuantSpec { bits: 4, gamma0: 0.5, gamma1: 0.5 });
+        let maxabs = q.f32s().iter().cloned().fold(0.0f32, |a, b| a.max(b.abs()));
+        let maxabs_w = w.f32s().iter().cloned().fold(0.0f32, |a, b| a.max(b.abs()));
+        assert!(maxabs <= maxabs_w * 0.75);
+    }
+
+    #[test]
+    fn zeros_preserved() {
+        // quantization must map 0.0 exactly to 0.0 (pruned weights stay
+        // pruned after quantization) as long as 0 is a representable level
+        let mut w = random_w(5);
+        for i in 0..64 {
+            w.f32s_mut()[i] = 0.0;
+        }
+        let q = fake_quant(&w, QuantSpec::default());
+        for i in 0..64 {
+            assert!(
+                q.f32s()[i].abs() < 1e-6,
+                "zero weight quantized to {}",
+                q.f32s()[i]
+            );
+        }
+    }
+}

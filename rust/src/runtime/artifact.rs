@@ -1,0 +1,119 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parses `artifacts/<config>/manifest.json` and exposes the
+//! per-artifact positional input/output tensor specs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn specs_of(v: &Json) -> Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    for item in v.as_arr().context("expected spec array")? {
+        out.push(TensorSpec {
+            name: item.at(&["name"]).as_str().context("spec name")?.to_string(),
+            dtype: item.at(&["dtype"]).as_str().context("spec dtype")?.to_string(),
+            shape: item
+                .at(&["shape"])
+                .as_arr()
+                .context("spec shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect(),
+        });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `artifacts/<config>/manifest.json`.
+    pub fn load(artifacts_root: &Path, config: &str) -> Result<Manifest> {
+        let dir = artifacts_root.join(config);
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` (configs are built by python/compile/aot.py)",
+                path.display()
+            )
+        })?;
+        let root = Json::parse(&src)?;
+        let config = ModelConfig::from_json(root.at(&["config"]))?;
+        let mut artifacts = BTreeMap::new();
+        let arts = root.at(&["artifacts"]).as_obj().context("artifacts object")?;
+        for (name, spec) in arts {
+            let file = dir.join(spec.at(&["file"]).as_str().context("file")?);
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file,
+                    inputs: specs_of(spec.at(&["inputs"]))?,
+                    outputs: specs_of(spec.at(&["outputs"]))?,
+                },
+            );
+        }
+        Ok(Manifest { dir, config, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact '{name}' not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_test_manifest() {
+        let root = artifacts_root();
+        if !root.join("test").exists() {
+            eprintln!("skipping: artifacts/test not built");
+            return;
+        }
+        let m = Manifest::load(&root, "test").unwrap();
+        assert_eq!(m.config.name, "test");
+        let b = m.artifact("besa_step_row").unwrap();
+        assert_eq!(b.inputs.len(), 27);
+        assert_eq!(b.outputs.len(), 10);
+        assert_eq!(b.inputs[0].dtype, "float32");
+        assert!(m.artifact("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Execution engine: one PJRT CPU client + a lazily-populated cache of
+//! compiled executables (compile once, execute many — the pruning loop
+//! calls `besa_step` thousands of times).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::Stopwatch;
+
+use super::{ArtifactSpec, Manifest};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    /// cumulative (compile_secs, execute_secs, execute_calls) metrics
+    stats: RefCell<(f64, f64, u64)>,
+}
+
+impl Engine {
+    pub fn new(artifacts_root: &Path, config: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_root, config)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new((0.0, 0.0, 0)),
+        })
+    }
+
+    pub fn config(&self) -> &crate::model::config::ModelConfig {
+        &self.manifest.config
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let sw = Stopwatch::start();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.stats.borrow_mut().0 += sw.secs();
+        crate::debuglog!("compiled artifact '{name}' in {:.2}s", sw.secs());
+        self.executables.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Validate inputs against the manifest spec (shape + dtype).
+    fn validate(&self, spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            if t.shape != s.shape {
+                bail!(
+                    "artifact '{}' input '{}': shape {:?} != manifest {:?}",
+                    spec.name,
+                    s.name,
+                    t.shape,
+                    s.shape
+                );
+            }
+            if t.dtype_str() != s.dtype {
+                bail!(
+                    "artifact '{}' input '{}': dtype {} != manifest {}",
+                    spec.name,
+                    s.name,
+                    t.dtype_str(),
+                    s.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns output tensors in manifest order.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let spec = self.manifest.artifact(name)?;
+        self.validate(spec, inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_literals(name, &refs)
+    }
+
+    /// Execute with pre-converted literals — the hot-loop entry point.
+    /// Callers (e.g. the BESA β-loop) convert loop-invariant tensors once
+    /// per block and pay only the per-step θ conversion (§Perf, L3).
+    pub fn run_literals(&self, name: &str, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let spec = self.manifest.artifact(name)?;
+        if literals.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                literals.len()
+            );
+        }
+        let sw = Stopwatch::start();
+        let exes = self.executables.borrow();
+        let exe = exes.get(name).unwrap();
+        let result = exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                name,
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let out: Vec<Tensor> =
+            parts.iter().map(Tensor::from_literal).collect::<Result<_>>()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.1 += sw.secs();
+            st.2 += 1;
+        }
+        Ok(out)
+    }
+
+    /// (compile_secs, execute_secs, execute_calls)
+    pub fn stats(&self) -> (f64, f64, u64) {
+        *self.stats.borrow()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.executables.borrow().len()
+    }
+}

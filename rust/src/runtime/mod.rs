@@ -1,0 +1,8 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them once per
+//! process, executes them from the (python-free) hot path.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use engine::Engine;

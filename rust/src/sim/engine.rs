@@ -1,0 +1,185 @@
+//! The cycle model: denser + sparser engines over row-tiled SpMM
+//! (ViTCoD Appendix B). Calibrated so a fully-dense matrix on the combined
+//! PE budget reproduces the paper's dense-runtime column for LLaMA-7B
+//! layer shapes (Table 4) up to a global constant.
+
+use super::csr::Csr;
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// PEs in the denser engine
+    pub denser_pes: usize,
+    /// PEs in the sparser engine
+    pub sparser_pes: usize,
+    /// rows of W processed per spatial tile
+    pub tile_rows: usize,
+    /// dense-operand tokens processed per pass (output-stationary width)
+    pub tile_tokens: usize,
+    /// column-density threshold (fraction of tile rows) above which a
+    /// column is routed to the denser engine
+    pub density_threshold: f64,
+    /// fixed cycles to load a tile's operands HBM -> on-chip buffers
+    pub tile_load_cycles: u64,
+    /// total tokens of the activation matrix
+    pub tokens: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            denser_pes: 64,
+            sparser_pes: 64,
+            tile_rows: 64,
+            tile_tokens: 64,
+            density_threshold: 0.5,
+            tile_load_cycles: 32,
+            tokens: 64,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    pub cycles: u64,
+    pub denser_macs: u64,
+    pub sparser_macs: u64,
+    pub tiles: u64,
+    /// mean PE utilization over both engines (macs / (pes * busy cycles))
+    pub utilization: f64,
+}
+
+/// Cycles for the *unpruned* matrix on the same hardware: all columns are
+/// maximally dense, so the work is pure dense MACs over all PEs.
+pub fn dense_cycles(rows: usize, cols: usize, cfg: &SimConfig) -> u64 {
+    let total_pes = (cfg.denser_pes + cfg.sparser_pes) as u64;
+    let macs = rows as u64 * cols as u64 * cfg.tokens as u64;
+    let row_tiles = rows.div_ceil(cfg.tile_rows) as u64;
+    let tok_tiles = cfg.tokens.div_ceil(cfg.tile_tokens) as u64;
+    macs.div_ceil(total_pes) + row_tiles * tok_tiles * cfg.tile_load_cycles
+}
+
+/// Simulate SpMM of `w` (sparse) against a dense activation of
+/// `cfg.tokens` tokens.
+pub fn simulate_spmm(w: &Csr, cfg: &SimConfig) -> SimResult {
+    let mut res = SimResult::default();
+    let tok_tiles = cfg.tokens.div_ceil(cfg.tile_tokens) as u64;
+    let mut busy_weighted_macs = 0.0f64;
+    let mut busy_cycles_total = 0u64;
+
+    let mut tile_start = 0usize;
+    while tile_start < w.rows {
+        let tile_end = (tile_start + cfg.tile_rows).min(w.rows);
+        let tile_rows = tile_end - tile_start;
+        // column nnz inside this row tile
+        let mut col_nnz = vec![0u32; w.cols];
+        for r in tile_start..tile_end {
+            let (lo, hi) = (w.row_ptr[r] as usize, w.row_ptr[r + 1] as usize);
+            for k in lo..hi {
+                col_nnz[w.col_idx[k] as usize] += 1;
+            }
+        }
+        // density split (Fig. 7): dense columns -> denser engine
+        let thresh = (cfg.density_threshold * tile_rows as f64).ceil() as u32;
+        let mut denser_nnz = 0u64;
+        let mut sparser_nnz = 0u64;
+        for &n in &col_nnz {
+            if n == 0 {
+                continue;
+            }
+            if n >= thresh {
+                denser_nnz += n as u64;
+            } else {
+                sparser_nnz += n as u64;
+            }
+        }
+        // per token-tile: each engine needs ceil(macs / pes) cycles;
+        // engines run concurrently; partial sums flow denser -> sparser
+        // accumulator (the transfer overlaps compute, paper Fig. 7).
+        let tile_tok = cfg.tile_tokens.min(cfg.tokens) as u64;
+        let denser_macs = denser_nnz * tile_tok;
+        let sparser_macs = sparser_nnz * tile_tok;
+        let denser_cycles = denser_macs.div_ceil(cfg.denser_pes as u64);
+        let sparser_cycles = sparser_macs.div_ceil(cfg.sparser_pes as u64);
+        let tile_cycles = denser_cycles.max(sparser_cycles) + cfg.tile_load_cycles;
+
+        res.cycles += tile_cycles * tok_tiles;
+        res.denser_macs += denser_macs * tok_tiles;
+        res.sparser_macs += sparser_macs * tok_tiles;
+        res.tiles += tok_tiles;
+        busy_weighted_macs += (denser_macs + sparser_macs) as f64 * tok_tiles as f64;
+        busy_cycles_total +=
+            (denser_cycles.max(sparser_cycles)) * tok_tiles * (cfg.denser_pes + cfg.sparser_pes) as u64;
+
+        tile_start = tile_end;
+    }
+    res.utilization = if busy_cycles_total > 0 {
+        busy_weighted_macs / busy_cycles_total as f64
+    } else {
+        0.0
+    };
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rows: usize, cols: usize, sparsity: f64, seed: u64) -> Csr {
+        let mut rng = Rng::seed(seed);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| if rng.f64() < sparsity { 0.0 } else { rng.normal_f32() })
+            .collect();
+        Csr::from_dense(&Tensor::from_f32(&[rows, cols], data))
+    }
+
+    #[test]
+    fn denser_plus_sparser_covers_all_macs() {
+        let w = random_sparse(128, 128, 0.5, 1);
+        let cfg = SimConfig::default();
+        let res = simulate_spmm(&w, &cfg);
+        let tok_tiles = cfg.tokens.div_ceil(cfg.tile_tokens) as u64;
+        let expect = w.nnz() as u64 * cfg.tile_tokens.min(cfg.tokens) as u64 * tok_tiles;
+        assert_eq!(res.denser_macs + res.sparser_macs, expect);
+    }
+
+    #[test]
+    fn sparser_matrix_is_faster() {
+        let cfg = SimConfig::default();
+        let w25 = random_sparse(256, 256, 0.25, 2);
+        let w50 = random_sparse(256, 256, 0.50, 2);
+        let w75 = random_sparse(256, 256, 0.75, 2);
+        let c25 = simulate_spmm(&w25, &cfg).cycles;
+        let c50 = simulate_spmm(&w50, &cfg).cycles;
+        let c75 = simulate_spmm(&w75, &cfg).cycles;
+        assert!(c25 > c50 && c50 > c75, "{c25} {c50} {c75}");
+    }
+
+    #[test]
+    fn pruned_beats_dense() {
+        let cfg = SimConfig::default();
+        let w = random_sparse(256, 256, 0.5, 3);
+        let sparse = simulate_spmm(&w, &cfg).cycles;
+        let dense = dense_cycles(256, 256, &cfg);
+        let speedup = dense as f64 / sparse as f64;
+        // ~50% sparsity should land near the paper's 1.5-2.0x band
+        assert!(speedup > 1.2 && speedup < 2.5, "speedup {speedup}");
+    }
+
+    #[test]
+    fn empty_matrix_costs_only_loads() {
+        let cfg = SimConfig::default();
+        let w = Csr::from_dense(&Tensor::zeros(&[64, 64]));
+        let res = simulate_spmm(&w, &cfg);
+        assert_eq!(res.denser_macs + res.sparser_macs, 0);
+        assert_eq!(res.cycles, cfg.tile_load_cycles);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let w = random_sparse(128, 344, 0.5, 4);
+        let res = simulate_spmm(&w, &SimConfig::default());
+        assert!(res.utilization > 0.0 && res.utilization <= 1.0);
+    }
+}

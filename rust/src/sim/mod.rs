@@ -1,0 +1,25 @@
+//! ViTCoD accelerator cycle simulator (paper §4.5 + Appendix B).
+//!
+//! The paper evaluates real-hardware speedup of unstructured sparsity on
+//! the ViTCoD accelerator's simulator (You et al., HPCA'23): a denser and
+//! a sparser engine process sparse-dense matmul (SpMM) workloads in
+//! parallel with an output-stationary dataflow. We re-implement that cycle
+//! model from the paper's description:
+//!
+//! * the pruned weight `W [R, C]` is the sparse operand; activations
+//!   `X [C, T]` are dense; the engines tile `W` spatially over rows and
+//!   accumulate partial sums over C (Fig. 6).
+//! * per tile, columns are *split by density*: denser columns go to the
+//!   denser engine's PE array, sparser columns to the sparser engine
+//!   (Fig. 7); both engines run concurrently and the tile finishes when
+//!   the slower engine does.
+//! * cycles per engine = ceil(assigned nnz MACs / (PEs * tokens-per-pass)),
+//!   plus a fixed per-tile load latency for the HBM→buffer transfer.
+
+pub mod csr;
+pub mod engine;
+pub mod report;
+
+pub use csr::Csr;
+pub use engine::{SimConfig, SimResult, simulate_spmm, dense_cycles};
+pub use report::{simulate_layer, simulate_block, LayerSim};

@@ -1,0 +1,162 @@
+//! `.bst` ("besa tensors") checkpoint format — a safetensors-style
+//! single-file container built from scratch for the offline toolchain.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic  b"BST1"
+//! u32    header_len
+//! header JSON: {"name": {"dtype": "float32", "shape": [..], "offset": N, "nbytes": M}, ...}
+//! data   concatenated raw tensor bytes (8-byte aligned per entry)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::{Data, Tensor};
+
+const MAGIC: &[u8; 4] = b"BST1";
+
+pub fn save(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut header = BTreeMap::new();
+    let mut offset = 0usize;
+    for (name, t) in tensors {
+        let nbytes = t.numel() * 4;
+        header.insert(
+            name.clone(),
+            json::obj(vec![
+                ("dtype", json::s(t.dtype_str())),
+                ("shape", Json::Arr(t.shape.iter().map(|d| Json::Num(*d as f64)).collect())),
+                ("offset", Json::Num(offset as f64)),
+                ("nbytes", Json::Num(nbytes as f64)),
+            ]),
+        );
+        offset += (nbytes + 7) / 8 * 8;
+    }
+    let header_str = Json::Obj(header).to_string();
+
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(header_str.len() as u32).to_le_bytes())?;
+    f.write_all(header_str.as_bytes())?;
+    let mut written = 0usize;
+    for t in tensors.values() {
+        let bytes: &[u8] = match &t.data {
+            Data::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            Data::I32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        };
+        f.write_all(bytes)?;
+        written += bytes.len();
+        let pad = (written + 7) / 8 * 8 - written;
+        f.write_all(&[0u8; 8][..pad])?;
+        written += pad;
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a .bst file (bad magic)", path.display());
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+
+    let mut out = BTreeMap::new();
+    let obj = header.as_obj().context("bst header is not an object")?;
+    for (name, meta) in obj {
+        let dtype = meta.at(&["dtype"]).as_str().context("dtype")?.to_string();
+        let shape: Vec<usize> = meta
+            .at(&["shape"])
+            .as_arr()
+            .context("shape")?
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        let offset = meta.at(&["offset"]).as_usize().context("offset")?;
+        let nbytes = meta.at(&["nbytes"]).as_usize().context("nbytes")?;
+        if offset + nbytes > data.len() {
+            bail!("tensor {name} out of bounds in {}", path.display());
+        }
+        let raw = &data[offset..offset + nbytes];
+        let t = match dtype.as_str() {
+            "float32" => {
+                let mut v = vec![0f32; nbytes / 4];
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        raw.as_ptr(),
+                        v.as_mut_ptr() as *mut u8,
+                        nbytes,
+                    )
+                };
+                Tensor::from_f32(&shape, v)
+            }
+            "int32" => {
+                let mut v = vec![0i32; nbytes / 4];
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        raw.as_ptr(),
+                        v.as_mut_ptr() as *mut u8,
+                        nbytes,
+                    )
+                };
+                Tensor::from_i32(&shape, v)
+            }
+            other => bail!("unknown dtype {other}"),
+        };
+        out.insert(name.clone(), t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bst_test_{}", std::process::id()));
+        let path = dir.join("ckpt.bst");
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]));
+        m.insert("b.ranks".to_string(), Tensor::from_i32(&[3], vec![7, -1, 0]));
+        m.insert("c".to_string(), Tensor::from_f32(&[3], vec![0.5, -0.5, 1e-9]));
+        save(&path, &m).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("bst_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bst");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! Host tensor substrate: a minimal dense tensor (f32 / i32), PJRT literal
+//! conversion, and the `.bst` binary checkpoint format.
+
+pub mod io;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Dense host tensor with row-major layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; numel(shape)]) }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: Data::F32(vec![1.0; numel(shape)]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape {shape:?} vs len {}", data.len());
+        Tensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(numel(shape), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::from_f32(&[], vec![v])
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self.data, Data::F32(_))
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            Data::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self.data {
+            Data::F32(_) => "float32",
+            Data::I32(_) => "int32",
+        }
+    }
+
+    /// 2D accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.f32s()[i * self.shape[1] + j]
+    }
+
+    pub fn scalar_value(&self) -> f32 {
+        self.f32s()[0]
+    }
+
+    pub fn reshaped(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(numel(shape), self.numel());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Fraction of exact zeros (sparsity of a masked weight).
+    pub fn zero_fraction(&self) -> f64 {
+        let d = self.f32s();
+        if d.is_empty() {
+            return 0.0;
+        }
+        d.iter().filter(|x| **x == 0.0).count() as f64 / d.len() as f64
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.f32s().iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Convert to a PJRT literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<usize> = self.shape.clone();
+        match &self.data {
+            Data::F32(v) => {
+                let bytes =
+                    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &dims,
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("literal create failed: {e:?}"))
+            }
+            Data::I32(v) => {
+                let bytes =
+                    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    &dims,
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("literal create failed: {e:?}"))
+            }
+        }
+    }
+
+    /// Convert back from a PJRT literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.shape().map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        let (dims, ty) = match shape {
+            xla::Shape::Array(a) => {
+                let dims: Vec<usize> = a.dims().iter().map(|d| *d as usize).collect();
+                (dims, a.ty())
+            }
+            other => bail!("expected array literal, got {other:?}"),
+        };
+        match ty {
+            xla::ElementType::F32 => {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("literal to_vec f32: {e:?}"))?;
+                Ok(Tensor::from_f32(&dims, v))
+            }
+            xla::ElementType::S32 => {
+                let v = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("literal to_vec i32: {e:?}"))?;
+                Ok(Tensor::from_i32(&dims, v))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype_str(), "float32");
+    }
+
+    #[test]
+    fn zero_fraction() {
+        let t = Tensor::from_f32(&[4], vec![0., 1., 0., 2.]);
+        assert_eq!(t.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dtype_mismatch_panics() {
+        Tensor::from_i32(&[1], vec![3]).f32s();
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::zeros(&[2, 3]).reshaped(&[6]);
+        assert_eq!(t.shape, vec![6]);
+    }
+}

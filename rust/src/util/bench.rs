@@ -1,0 +1,166 @@
+//! Micro-benchmark harness (criterion replacement, offline build).
+//!
+//! Each `cargo bench` target builds a [`Bench`] suite: warmup, timed
+//! iterations until a minimum wall budget, robust stats (mean/p50/p95),
+//! throughput annotation, and text rows that double as the paper-table
+//! regeneration output.
+
+use std::time::Instant;
+
+use super::{mean, percentile, stddev};
+
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    min_secs: f64,
+    max_iters: usize,
+    rows: Vec<Row>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub id: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+    pub iters: usize,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            warmup_iters: 3,
+            min_secs: std::env::var("BESA_BENCH_SECS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1.0),
+            max_iters: 1000,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn budget_secs(mut self, s: f64) -> Self {
+        self.min_secs = s;
+        self
+    }
+
+    /// Time `f`, which returns a value to keep it from being optimized out.
+    pub fn run<T, F: FnMut() -> T>(&mut self, id: &str, mut f: F) -> &Row {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let budget = Instant::now();
+        while budget.elapsed().as_secs_f64() < self.min_secs && samples.len() < self.max_iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let row = Row {
+            id: id.to_string(),
+            mean_ns: mean(&samples),
+            p50_ns: percentile(&samples, 50.0),
+            p95_ns: percentile(&samples, 95.0),
+            std_ns: stddev(&samples),
+            iters: samples.len(),
+            throughput: None,
+        };
+        self.rows.push(row);
+        self.rows.last().unwrap()
+    }
+
+    /// Same but annotate throughput as `items`/sec.
+    pub fn run_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        id: &str,
+        items: f64,
+        unit: &'static str,
+        f: F,
+    ) -> &Row {
+        self.run(id, f);
+        let row = self.rows.last_mut().unwrap();
+        row.throughput = Some((items / (row.mean_ns / 1e9), unit));
+        row
+    }
+
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+
+    pub fn report(&self) {
+        println!("\n== bench: {} ==", self.name);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>8}  throughput",
+            "case", "mean", "p50", "p95", "iters"
+        );
+        for r in &self.rows {
+            let tp = match r.throughput {
+                Some((v, u)) => format!("{} {}", human_rate(v), u),
+                None => String::new(),
+            };
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>8}  {}",
+                r.id,
+                human_ns(r.mean_ns),
+                human_ns(r.p50_ns),
+                human_ns(r.p95_ns),
+                r.iters,
+                tp
+            );
+        }
+    }
+}
+
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub fn human_rate(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_rows() {
+        let mut b = Bench::new("t").warmup(1).budget_secs(0.01);
+        b.run("noop", || 1 + 1);
+        b.run_throughput("tp", 100.0, "items", || std::hint::black_box(7u64).pow(3));
+        assert_eq!(b.rows().len(), 2);
+        assert!(b.rows()[0].iters > 0);
+        assert!(b.rows()[1].throughput.unwrap().0 > 0.0);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(human_ns(500.0), "500 ns");
+        assert!(human_ns(2.5e6).contains("ms"));
+        assert!(human_rate(3.2e6).contains('M'));
+    }
+}

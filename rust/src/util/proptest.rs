@@ -1,0 +1,173 @@
+//! Property-based testing harness (proptest replacement, offline build).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from `gen`,
+//! asserts `prop` on each, and on failure performs greedy shrinking via the
+//! generator's `shrink` candidates before panicking with the minimal
+//! counterexample. Seeds derive from `BESA_PROPTEST_SEED` (default 0xBE5A)
+//! so failures reproduce deterministically.
+
+use std::fmt::Debug;
+
+use super::rng::Rng;
+
+pub trait Strategy {
+    type Value: Clone + Debug;
+    fn sample(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; default: no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+pub fn seed_from_env() -> u64 {
+    std::env::var("BESA_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xBE5A)
+}
+
+pub fn check<S: Strategy>(
+    name: &str,
+    cases: usize,
+    strat: &S,
+    prop: impl Fn(&S::Value) -> Result<(), String>,
+) {
+    let mut rng = Rng::seed(seed_from_env() ^ fxhash(name));
+    for case in 0..cases {
+        let v = strat.sample(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // greedy shrink
+            let mut best = (v.clone(), msg.clone());
+            let mut progress = true;
+            let mut rounds = 0;
+            while progress && rounds < 200 {
+                progress = false;
+                rounds += 1;
+                for cand in strat.shrink(&best.0) {
+                    if let Err(m) = prop(&cand) {
+                        best = (cand, m);
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case}\n  counterexample (shrunk): {:?}\n  reason: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Common strategies
+// ---------------------------------------------------------------------------
+
+pub struct UsizeIn(pub std::ops::RangeInclusive<usize>);
+
+impl Strategy for UsizeIn {
+    type Value = usize;
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let (lo, hi) = (*self.0.start(), *self.0.end());
+        lo + rng.below(hi - lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let lo = *self.0.start();
+        if *v > lo {
+            vec![lo, lo + (*v - lo) / 2, v - 1]
+        } else {
+            vec![]
+        }
+    }
+}
+
+pub struct F32Vec {
+    pub len: std::ops::RangeInclusive<usize>,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Strategy for F32Vec {
+    type Value = Vec<f32>;
+    fn sample(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = UsizeIn(self.len.clone()).sample(rng);
+        (0..n).map(|_| rng.range_f64(self.lo as f64, self.hi as f64) as f32).collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > *self.len.start() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|x| *x != 0.0) {
+            out.push(v.iter().map(|_| 0.0).collect());
+        }
+        out
+    }
+}
+
+/// Pair two independent strategies.
+pub struct Zip<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for Zip<A, B> {
+    type Value = (A::Value, B::Value);
+    fn sample(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.sample(rng), self.1.sample(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check("usize in range", 100, &UsizeIn(3..=9), |v| {
+            if (3..=9).contains(v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn shrinks_to_minimal() {
+        // property "all values < 5" fails; shrinker should find something small
+        check("fails above 5", 200, &UsizeIn(0..=100), |v| {
+            if *v < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn vec_strategy_in_bounds() {
+        let s = F32Vec { len: 1..=8, lo: -2.0, hi: 2.0 };
+        check("vec bounds", 50, &s, |v| {
+            if v.iter().all(|x| (-2.0..=2.0).contains(x)) && (1..=8).contains(&v.len()) {
+                Ok(())
+            } else {
+                Err(format!("{v:?}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,199 @@
+//! TOML-subset parser for run configuration files.
+//!
+//! Supports: `[section]` / `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / flat-array values, `#` comments.
+//! Keys are exposed flattened as `section.sub.key`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Toml {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Toml {
+    pub fn parse(src: &str) -> Result<Toml> {
+        let mut out = Toml::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let h = h
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                prefix = h.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if prefix.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", prefix, k.trim())
+            };
+            out.entries.insert(
+                key,
+                parse_value(v.trim())
+                    .with_context(|| format!("line {}: bad value {:?}", lineno + 1, v.trim()))?,
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Toml> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_i64()).map(|v| v as usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is preserved
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<Value> {
+    if let Some(body) = v.strip_prefix('"') {
+        let body = body.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = v.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Toml::parse(
+            r#"
+            top = 1
+            [prune]
+            sparsity = 0.5      # target
+            method = "besa"
+            rowwise = true
+            [prune.adam]
+            lr = 1e-2
+            steps = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.get("top").unwrap().as_i64(), Some(1));
+        assert_eq!(t.f64_or("prune.sparsity", 0.0), 0.5);
+        assert_eq!(t.str_or("prune.method", ""), "besa");
+        assert!(t.bool_or("prune.rowwise", false));
+        assert_eq!(t.f64_or("prune.adam.lr", 0.0), 0.01);
+        match t.get("prune.adam.steps").unwrap() {
+            Value::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn hash_in_string_kept() {
+        let t = Toml::parse(r#"k = "a#b" # comment"#).unwrap();
+        assert_eq!(t.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Toml::parse("[x").is_err());
+        assert!(Toml::parse("novalue").is_err());
+        assert!(Toml::parse("k = @").is_err());
+    }
+}

@@ -1,0 +1,312 @@
+//! Integration tests over the PJRT runtime + AOT artifacts (config `test`).
+//! These exercise the python->HLO->rust contract end to end and are the
+//! rust-side mirror of python/tests: same math, different engine.
+
+use std::path::{Path, PathBuf};
+
+use besa::data::batcher::CalibrationSet;
+use besa::data::Domain;
+use besa::model::{ParamStore, LAYER_NAMES};
+use besa::prune::besa::{BesaConfig, BesaPruner};
+use besa::prune::importance::decode_mask;
+use besa::prune::wanda::WandaPruner;
+use besa::runtime::Engine;
+use besa::tensor::Tensor;
+use besa::util::rng::Rng;
+
+fn artifacts_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Engine is intentionally !Sync (single-threaded PJRT hot loop with
+/// interior caching), so each test owns one.
+fn engine() -> Engine {
+    Engine::new(&artifacts_root(), "test")
+        .expect("artifacts/test missing — run `make artifacts` before `cargo test`")
+}
+
+fn random_x(rng: &mut Rng, cfg: &besa::model::ModelConfig) -> Tensor {
+    let n = cfg.batch * cfg.seq_len * cfg.d_model;
+    Tensor::from_f32(
+        &[cfg.batch, cfg.seq_len, cfg.d_model],
+        (0..n).map(|_| rng.normal_f32() * 0.5).collect(),
+    )
+}
+
+#[test]
+fn engine_runs_block_fwd() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let params = ParamStore::init(&cfg, 7);
+    let mut rng = Rng::seed(1);
+    let x = random_x(&mut rng, &cfg);
+    let mut ins: Vec<&Tensor> = vec![&x];
+    for w in LAYER_NAMES {
+        ins.push(params.get(&ParamStore::layer_name(0, w)).unwrap());
+    }
+    ins.push(params.get("blocks.0.norm1").unwrap());
+    ins.push(params.get("blocks.0.norm2").unwrap());
+    let out = e.run("block_fwd", &ins).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, x.shape);
+    assert!(out[0].f32s().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn masked_fwd_with_ones_equals_dense() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let params = ParamStore::init(&cfg, 9);
+    let mut rng = Rng::seed(2);
+    let x = random_x(&mut rng, &cfg);
+    let weights: Vec<&Tensor> =
+        LAYER_NAMES.iter().map(|w| params.get(&ParamStore::layer_name(0, w)).unwrap()).collect();
+    let n1 = params.get("blocks.0.norm1").unwrap();
+    let n2 = params.get("blocks.0.norm2").unwrap();
+
+    let mut ins: Vec<&Tensor> = vec![&x];
+    ins.extend(&weights);
+    ins.push(n1);
+    ins.push(n2);
+    let dense = e.run("block_fwd", &ins).unwrap();
+
+    let ones: Vec<Tensor> = LAYER_NAMES
+        .iter()
+        .map(|w| {
+            let s = cfg.layer_shape(w);
+            Tensor::ones(&[s[0], s[1]])
+        })
+        .collect();
+    let mut ins2: Vec<&Tensor> = vec![&x];
+    ins2.extend(&weights);
+    ins2.push(n1);
+    ins2.push(n2);
+    ins2.extend(ones.iter());
+    let masked = e.run("block_fwd_masked", &ins2).unwrap();
+
+    for (a, b) in dense[0].f32s().iter().zip(masked[0].f32s()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+/// The rust-side mask decoder must agree bit-for-bit with the Pallas
+/// kernel lowered into the `mask_decode` artifact — the cross-language
+/// consistency check for the paper's core operator.
+#[test]
+fn rust_decode_matches_pallas_artifact() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let d = cfg.d_model;
+    let mut rng = Rng::seed(3);
+    let n_rates = cfg.n_rates;
+    let theta = Tensor::from_f32(
+        &[d, n_rates - 1],
+        (0..d * (n_rates - 1)).map(|_| rng.normal_f32()).collect(),
+    );
+    let rank_rows: Vec<i32> = (0..d)
+        .flat_map(|_| rng.permutation(d).into_iter().map(|v| v as i32))
+        .collect();
+    let ranks = Tensor::from_i32(&[d, d], rank_rows);
+
+    let out = e.run(&format!("mask_decode_{d}x{d}"), &[&theta, &ranks]).unwrap();
+    let (mask_rs, alphas_rs) = decode_mask(&theta, &ranks, n_rates);
+
+    assert_eq!(out[0].f32s(), mask_rs.f32s(), "mask mismatch rust vs pallas");
+    for (a, b) in out[1].f32s().iter().zip(&alphas_rs) {
+        assert!((*a as f64 - b).abs() < 1e-5, "alpha {a} vs {b}");
+    }
+}
+
+#[test]
+fn rust_quant_matches_artifact() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let d = cfg.d_model;
+    let mut rng = Rng::seed(4);
+    let w = Tensor::from_f32(&[d, d], (0..d * d).map(|_| rng.normal_f32()).collect());
+    let gamma = Tensor::from_f32(&[2], vec![0.9, 0.85]);
+    let out = e.run(&format!("quant_apply_{d}x{d}"), &[&w, &gamma]).unwrap();
+    let rs = besa::quant::fake_quant(
+        &w,
+        besa::quant::QuantSpec { bits: 4, gamma0: 0.9, gamma1: 0.85 },
+    );
+    for (a, b) in out[0].f32s().iter().zip(rs.f32s()) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pretraining_reduces_loss() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let mut params = ParamStore::init(&cfg, 11);
+    let tc = besa::coordinator::trainer::TrainConfig {
+        steps: 30,
+        lr: 3e-3,
+        seed: 5,
+        log_every: 1000,
+    };
+    let stats = besa::coordinator::trainer::pretrain(e, &mut params, &tc).unwrap();
+    let first = besa::util::mean(&stats.losses[..5]);
+    let last = besa::util::mean(&stats.losses[stats.losses.len() - 5..]);
+    assert!(
+        last < first - 0.1,
+        "loss should drop: {first:.3} -> {last:.3}"
+    );
+}
+
+#[test]
+fn wanda_pipeline_hits_target_sparsity() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let mut params = ParamStore::init(&cfg, 13);
+    let calib = CalibrationSet::sample(&cfg, 2 * cfg.batch, 17);
+    let pipeline = besa::coordinator::Pipeline::new(e, calib.batches);
+    let mut pruner = WandaPruner { sparsity: 0.5 };
+    let run = pipeline.run(&mut params, &mut pruner).unwrap();
+    let s = params.prunable_sparsity(cfg.n_blocks);
+    assert!((s - 0.5).abs() < 0.02, "sparsity {s}");
+    assert_eq!(run.reports.len(), cfg.n_blocks);
+    assert_eq!(run.block_errors.len(), cfg.n_blocks);
+    assert!(run.block_errors.iter().all(|e| *e > 0.0));
+}
+
+#[test]
+fn besa_pipeline_allocates_nonuniform_sparsity_near_target() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let mut params = ParamStore::init(&cfg, 19);
+    let calib = CalibrationSet::sample(&cfg, 2 * cfg.batch, 23);
+    let pipeline = besa::coordinator::Pipeline::new(e, calib.batches);
+    let mut pruner = BesaPruner::new(BesaConfig {
+        sparsity: 0.5,
+        epochs: 12,
+        ..Default::default()
+    });
+    let run = pipeline.run(&mut params, &mut pruner).unwrap();
+    let s = params.prunable_sparsity(cfg.n_blocks);
+    assert!((s - 0.5).abs() < 0.08, "global sparsity {s} should approach 0.5");
+    // layer sparsities should differ (the whole point of BESA)
+    let spread: Vec<f64> = run.reports[0].layer_sparsity.values().cloned().collect();
+    let min = spread.iter().cloned().fold(1.0, f64::min);
+    let max = spread.iter().cloned().fold(0.0, f64::max);
+    assert!(max - min > 1e-3, "expected non-uniform allocation, got {spread:?}");
+}
+
+#[test]
+fn eval_and_probes_run_on_pruned_model() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let mut params = ParamStore::init(&cfg, 29);
+    let calib = CalibrationSet::sample(&cfg, cfg.batch, 31);
+    let pipeline = besa::coordinator::Pipeline::new(e, calib.batches);
+    let mut pruner = WandaPruner { sparsity: 0.5 };
+    pipeline.run(&mut params, &mut pruner).unwrap();
+    let ppl = besa::eval::perplexity(e, &params, Domain::WikiSyn, 2, 7).unwrap();
+    assert!(ppl.is_finite() && ppl > 1.0);
+    let probes = besa::eval::probes::run_all(e, &params, 6, 3).unwrap();
+    assert_eq!(probes.len(), 7); // 6 tasks + average
+    for p in &probes {
+        assert!((0.0..=1.0).contains(&p.accuracy));
+    }
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    // wrong arity
+    let x = Tensor::zeros(&[cfg.batch, cfg.seq_len, cfg.d_model]);
+    assert!(e.run("block_fwd", &[&x]).is_err());
+    // wrong shape
+    let params = ParamStore::init(&cfg, 1);
+    let bad = Tensor::zeros(&[1, 2, 3]);
+    let mut ins: Vec<&Tensor> = vec![&bad];
+    for w in LAYER_NAMES {
+        ins.push(params.get(&ParamStore::layer_name(0, w)).unwrap());
+    }
+    ins.push(params.get("blocks.0.norm1").unwrap());
+    ins.push(params.get("blocks.0.norm2").unwrap());
+    assert!(e.run("block_fwd", &ins).is_err());
+    // unknown artifact
+    assert!(e.run("nonexistent", &[]).is_err());
+    // wrong dtype
+    let xi = Tensor::from_i32(
+        &[cfg.batch, cfg.seq_len, cfg.d_model],
+        vec![0; cfg.batch * cfg.seq_len * cfg.d_model],
+    );
+    let mut ins2: Vec<&Tensor> = vec![&xi];
+    for w in LAYER_NAMES {
+        ins2.push(params.get(&ParamStore::layer_name(0, w)).unwrap());
+    }
+    ins2.push(params.get("blocks.0.norm1").unwrap());
+    ins2.push(params.get("blocks.0.norm2").unwrap());
+    assert!(e.run("block_fwd", &ins2).is_err());
+}
+
+#[test]
+fn besa_step_sparsity_converges_toward_target() {
+    // drive the raw artifact directly: mean_alpha must move toward 0.7
+    let e = &engine();
+    let cfg = e.config().clone();
+    let params = ParamStore::init(&cfg, 37);
+    let mut rng = Rng::seed(38);
+    let x = random_x(&mut rng, &cfg);
+
+    let weights: Vec<Tensor> = LAYER_NAMES
+        .iter()
+        .map(|w| params.get(&ParamStore::layer_name(0, w)).unwrap().clone())
+        .collect();
+    let n1 = params.get("blocks.0.norm1").unwrap().clone();
+    let n2 = params.get("blocks.0.norm2").unwrap().clone();
+    let mut ins0: Vec<&Tensor> = vec![&x];
+    ins0.extend(weights.iter());
+    ins0.push(&n1);
+    ins0.push(&n2);
+    let y = e.run("block_fwd", &ins0).unwrap().into_iter().next().unwrap();
+
+    let ranks: Vec<Tensor> = LAYER_NAMES
+        .iter()
+        .map(|w| {
+            let s = cfg.layer_shape(w);
+            let rows: Vec<i32> = (0..s[0])
+                .flat_map(|_| rng.permutation(s[1]).into_iter().map(|v| v as i32))
+                .collect();
+            Tensor::from_i32(&[s[0], s[1]], rows)
+        })
+        .collect();
+    let mut thetas: Vec<Tensor> = LAYER_NAMES
+        .iter()
+        .map(|w| Tensor::zeros(&[cfg.layer_shape(w)[0], cfg.n_rates - 1]))
+        .collect();
+    let lam = Tensor::scalar(20.0);
+    let ah = Tensor::scalar(0.7);
+    let mut adam = besa::prune::adam::Adam::new(
+        besa::prune::adam::AdamConfig { lr: 0.05, ..Default::default() },
+        7,
+    );
+    let mut first_alpha = None;
+    let mut alpha = 0.0;
+    for _ in 0..20 {
+        let mut ins: Vec<&Tensor> = thetas.iter().collect();
+        ins.push(&x);
+        ins.push(&y);
+        ins.extend(weights.iter());
+        ins.push(&n1);
+        ins.push(&n2);
+        ins.extend(ranks.iter());
+        ins.push(&lam);
+        ins.push(&ah);
+        let out = e.run("besa_step_row", &ins).unwrap();
+        alpha = out[2].scalar_value() as f64;
+        first_alpha.get_or_insert(alpha);
+        let grads: Vec<&Tensor> = out[3..10].iter().collect();
+        let mut ps: Vec<&mut Tensor> = thetas.iter_mut().collect();
+        adam.step(&mut ps, &grads);
+    }
+    let first = first_alpha.unwrap();
+    assert!(
+        (alpha - 0.7).abs() < (first - 0.7).abs(),
+        "alpha {first:.3} -> {alpha:.3} should approach 0.7"
+    );
+}
