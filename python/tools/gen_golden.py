@@ -1,0 +1,581 @@
+"""Golden-vector generator for the rust native backend parity suite.
+
+Replicates the rust `util::rng::Rng` (splitmix64-seeded xoshiro256**,
+Box-Muller normals with spare caching) bit-exactly, regenerates the same
+inputs `rust/tests/native_parity.rs` builds, evaluates the reference math
+(float64 numpy transliteration of python/compile/{model,besa}.py — the
+same formulas validated against jax), and writes summary vectors to
+`rust/tests/golden/native_test_vectors.json`.
+
+Run from the repo root:  python3 python/tools/gen_golden.py
+
+The rust test regenerates identical inputs via its own Rng and compares
+native-backend outputs against these values within float32 tolerances.
+No jax/torch required — this is plain numpy.
+"""
+
+import json
+import math
+import os
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+
+class Rng:
+    """Bit-exact mirror of rust util::rng::Rng."""
+
+    def __init__(self, seed: int):
+        sm = seed & MASK64
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            s.append(z ^ (z >> 31))
+        self.s = s
+        self.spare = None
+
+    def next_u64(self) -> int:
+        s = self.s
+        x = (s[1] * 5) & MASK64
+        result = (((x << 7) | (x >> 57)) & MASK64) * 9 & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = ((s[3] << 45) | (s[3] >> 19)) & MASK64
+        return result
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def normal(self) -> float:
+        if self.spare is not None:
+            v = self.spare
+            self.spare = None
+            return v
+        while True:
+            u1 = self.f64()
+            u2 = self.f64()
+            if u1 <= 2.2250738585072014e-308:
+                continue
+            r = math.sqrt(-2.0 * math.log(u1))
+            ang = 2.0 * math.pi * u2
+            self.spare = r * math.sin(ang)
+            return r * math.cos(ang)
+
+    def normal_f32(self) -> float:
+        return np.float32(self.normal())
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def permutation(self, n: int):
+        v = list(range(n))
+        self.shuffle(v)
+        return v
+
+
+# --------------------------- config ("test") --------------------------------
+class Cfg:
+    vocab = 256
+    d_model = 32
+    n_heads = 2
+    n_blocks = 2
+    d_ffn = 88
+    seq_len = 32
+    batch = 4
+    n_rates = 16
+    rope_base = 10000.0
+    norm_eps = 1e-5
+    d_head = 16
+
+
+cfg = Cfg()
+LAYER_NAMES = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+
+
+def layer_shape(w):
+    d, f = cfg.d_model, cfg.d_ffn
+    return {"wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "wg": (f, d), "wu": (f, d), "wd": (d, f)}[w]
+
+
+def param_order():
+    names = ["embed"]
+    for l in range(cfg.n_blocks):
+        names += [f"blocks.{l}.{w}" for w in LAYER_NAMES]
+        names += [f"blocks.{l}.norm1", f"blocks.{l}.norm2"]
+    names.append("norm_f")
+    return names
+
+
+def param_shape(name):
+    if name == "embed":
+        return (cfg.vocab, cfg.d_model)
+    if name == "norm_f" or name.endswith(("norm1", "norm2")):
+        return (cfg.d_model,)
+    return layer_shape(name.rsplit(".", 1)[-1])
+
+
+def param_store_init(seed):
+    """Mirror of rust ParamStore::init."""
+    rng = Rng(seed)
+    params = {}
+    for name in param_order():
+        shape = param_shape(name)
+        n = int(np.prod(shape))
+        if len(shape) == 1:
+            t = np.ones(shape)
+        elif name == "embed":
+            t = np.array([rng.normal_f32() * np.float32(0.02) for _ in range(n)],
+                         dtype=np.float64).reshape(shape)
+        else:
+            std = np.float32(1.0) / np.float32(np.sqrt(np.float32(shape[1])))
+            t = np.array([rng.normal_f32() * std for _ in range(n)],
+                         dtype=np.float64).reshape(shape)
+        params[name] = t
+    return params
+
+
+# --------------------------- reference math (float64) -----------------------
+def rmsnorm(x, gain):
+    var = np.mean(x * x, axis=-1, keepdims=True)
+    return x / np.sqrt(var + cfg.norm_eps) * gain
+
+
+def rmsnorm_bwd(x, gain, gy):
+    d = x.shape[-1]
+    var = np.mean(x * x, axis=-1, keepdims=True)
+    r = 1.0 / np.sqrt(var + cfg.norm_eps)
+    ggain = np.sum(gy * x * r, axis=tuple(range(x.ndim - 1)))
+    s = np.sum(gy * gain * x, axis=-1, keepdims=True)
+    gx = gy * gain * r - (r ** 3 / d) * x * s
+    return gx, ggain
+
+
+def rope_tables():
+    dh = cfg.d_head
+    inv = 1.0 / (cfg.rope_base ** (np.arange(0, dh, 2) / dh))
+    ang = np.arange(cfg.seq_len)[:, None] * inv[None, :]
+    return np.cos(ang), np.sin(ang)
+
+
+def apply_rope(q, cos, sin):
+    q1, q2 = q[..., 0::2], q[..., 1::2]
+    out = np.empty_like(q)
+    out[..., 0::2] = q1 * cos - q2 * sin
+    out[..., 1::2] = q1 * sin + q2 * cos
+    return out
+
+
+def rope_bwd(go, cos, sin):
+    g1, g2 = go[..., 0::2], go[..., 1::2]
+    gq = np.empty_like(go)
+    gq[..., 0::2] = g1 * cos + g2 * sin
+    gq[..., 1::2] = -g1 * sin + g2 * cos
+    return gq
+
+
+def split_heads(x):
+    b, s, d = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def attention_fwd(q, k, v, save=False):
+    qh, kh, vh = split_heads(q), split_heads(k), split_heads(v)
+    cos, sin = rope_tables()
+    qr, kr = apply_rope(qh, cos, sin), apply_rope(kh, cos, sin)
+    att = np.einsum("bhqd,bhkd->bhqk", qr, kr) / np.sqrt(cfg.d_head)
+    s = att.shape[-1]
+    causal = np.tril(np.ones((s, s), bool))
+    att = np.where(causal[None, None], att, -np.inf)
+    att = att - att.max(axis=-1, keepdims=True)
+    e = np.exp(att)
+    p = e / e.sum(axis=-1, keepdims=True)
+    out = merge_heads(np.einsum("bhqk,bhkd->bhqd", p, vh))
+    if save:
+        return out, (qr, kr, vh, p)
+    return out
+
+
+def attention_bwd(saved, gy):
+    qr, kr, vh, p = saved
+    cos, sin = rope_tables()
+    scale = 1.0 / np.sqrt(cfg.d_head)
+    go = split_heads(gy)
+    gp = np.einsum("bhqd,bhkd->bhqk", go, vh)
+    gv = np.einsum("bhqk,bhqd->bhkd", p, go)
+    ga = p * (gp - np.sum(gp * p, axis=-1, keepdims=True))
+    gq = merge_heads(rope_bwd(np.einsum("bhqk,bhkd->bhqd", ga, kr) * scale, cos, sin))
+    gk = merge_heads(rope_bwd(np.einsum("bhqk,bhqd->bhkd", ga, qr) * scale, cos, sin))
+    return gq, gk, merge_heads(gv)
+
+
+def silu(x):
+    return x / (1.0 + np.exp(-x))
+
+
+def silu_grad(x):
+    s = 1.0 / (1.0 + np.exp(-x))
+    return s * (1.0 + x * (1.0 - s))
+
+
+def block_fwd(x, eff, norms, save=False):
+    g1, g2 = norms
+    h1 = rmsnorm(x, g1)
+    q, k, v = h1 @ eff["wq"].T, h1 @ eff["wk"].T, h1 @ eff["wv"].T
+    attout, att_saved = attention_fwd(q, k, v, save=True)
+    o = attout @ eff["wo"].T
+    x2 = x + o
+    h2 = rmsnorm(x2, g2)
+    gate, up = h2 @ eff["wg"].T, h2 @ eff["wu"].T
+    act = silu(gate) * up
+    y = x2 + act @ eff["wd"].T
+    saved = dict(x=x, h1=h1, attout=attout, x2=x2, h2=h2, gate=gate, up=up,
+                 act=act, att=att_saved, eff=eff, norms=norms)
+    return (y, saved) if save else (y, None)
+
+
+def block_bwd(sv, gy):
+    eff, (g1, g2) = sv["eff"], sv["norms"]
+    gw = {}
+    gw["wd"] = np.einsum("bsn,bsk->nk", gy, sv["act"])
+    g_act = gy @ eff["wd"]
+    g_gate = g_act * sv["up"] * silu_grad(sv["gate"])
+    g_up = g_act * silu(sv["gate"])
+    gw["wg"] = np.einsum("bsn,bsk->nk", g_gate, sv["h2"])
+    gw["wu"] = np.einsum("bsn,bsk->nk", g_up, sv["h2"])
+    g_h2 = g_gate @ eff["wg"] + g_up @ eff["wu"]
+    gx2_rms, gnorm2 = rmsnorm_bwd(sv["x2"], g2, g_h2)
+    g_x2 = gy + gx2_rms
+    gw["wo"] = np.einsum("bsn,bsk->nk", g_x2, sv["attout"])
+    g_attout = g_x2 @ eff["wo"]
+    gq, gk, gv = attention_bwd(sv["att"], g_attout)
+    gw["wq"] = np.einsum("bsn,bsk->nk", gq, sv["h1"])
+    gw["wk"] = np.einsum("bsn,bsk->nk", gk, sv["h1"])
+    gw["wv"] = np.einsum("bsn,bsk->nk", gv, sv["h1"])
+    g_h1 = gq @ eff["wq"] + gk @ eff["wk"] + gv @ eff["wv"]
+    gx1_rms, gnorm1 = rmsnorm_bwd(sv["x"], g1, g_h1)
+    return g_x2 + gx1_rms, gw, gnorm1, gnorm2
+
+
+def theta_chain(theta, rows):
+    D = cfg.n_rates
+    e = np.exp(theta - theta.max(axis=-1, keepdims=True))
+    b = e / e.sum(axis=-1, keepdims=True)
+    beta = np.concatenate([b, np.zeros((b.shape[0], 1))], axis=-1)
+    beta = np.broadcast_to(beta, (rows, D))
+    cumb = np.concatenate([np.zeros((rows, 1)), np.cumsum(beta, axis=-1)[:, :-1]], axis=-1)
+    alpha = np.sum(beta * (np.arange(1, D + 1) / D)[None, :], axis=-1)
+    return beta, cumb, alpha
+
+
+def theta_chain_bwd(theta, rows, gcumb, galpha):
+    D = cfg.n_rates
+    e = np.exp(theta - theta.max(axis=-1, keepdims=True))
+    b = e / e.sum(axis=-1, keepdims=True)
+    gbeta = np.zeros((rows, D))
+    suf = np.cumsum(gcumb[:, ::-1], axis=-1)[:, ::-1]
+    gbeta[:, :-1] = suf[:, 1:]
+    gbeta += galpha[:, None] * (np.arange(1, D + 1) / D)[None, :]
+    if theta.shape[0] == 1:
+        gbeta = gbeta.sum(axis=0, keepdims=True)
+    gb = gbeta[:, : D - 1]
+    return b * (gb - np.sum(gb * b, axis=-1, keepdims=True))
+
+
+def bucket(rank, C):
+    return np.minimum((rank * cfg.n_rates) // C, cfg.n_rates - 1)
+
+
+def hard_mask(cumb, alpha, rank):
+    k = bucket(rank, rank.shape[1])
+    keep = np.take_along_axis(cumb, k, axis=1)
+    return ((1.0 - keep) < alpha[:, None]).astype(float)
+
+
+def mask_bwd_to_cumb(rank, g):
+    D = cfg.n_rates
+    k = bucket(rank, rank.shape[1])
+    out = np.zeros((rank.shape[0], D))
+    for d in range(D):
+        out[:, d] = np.sum(g * (k == d), axis=1)
+    return out
+
+
+def fake_quant(w, g0, g1, bits=4):
+    qmax = 2.0 ** bits - 1.0
+    wmin = g0 * w.min()
+    wmax = g1 * w.max()
+    h = max((wmax - wmin) / qmax, 1e-8)
+    z = np.round(-wmin / h)
+    return (np.clip(np.round(w / h) + z, 0.0, qmax) - z) * h
+
+
+def fake_quant_gamma_bwd(w, g0, g1, gout, bits=4):
+    qmax = 2.0 ** bits - 1.0
+    mw, Mw = w.min(), w.max()
+    a0, a1 = g0 * mw, g1 * Mw
+    raw_h = (a1 - a0) / qmax
+    floored = raw_h <= 1e-8
+    h = max(raw_h, 1e-8)
+    z = -a0 / h
+    dh = [0.0, 0.0] if floored else [-1.0 / qmax, 1.0 / qmax]
+    dz = [-1.0 / h + a0 / (h * h) * dh[0], a0 / (h * h) * dh[1]]
+    u = w / h + z
+    inside = (u >= 0.0) & (u <= qmax)
+    c = np.clip(u, 0.0, qmax)
+    out = []
+    for i in range(2):
+        du = -w / (h * h) * dh[i] + dz[i]
+        dout = (inside * du - dz[i]) * h + (c - z) * dh[i]
+        out.append(float(np.sum(gout * dout)))
+    return out[0] * mw, out[1] * Mw
+
+
+def besa_step(thetas, x, y_dense, weights, norms, ranks, lam, ah,
+              grouping="block", gammas=None):
+    chains, masks = {}, {}
+    qw = {}
+    for n in LAYER_NAMES:
+        r = layer_shape(n)[0]
+        beta, cumb, alpha = theta_chain(thetas[n], r)
+        chains[n] = (beta, cumb, alpha)
+        masks[n] = hard_mask(cumb, alpha, ranks[n])
+        w = weights[n]
+        if gammas is not None:
+            w = fake_quant(w, gammas[n][0], gammas[n][1])
+        qw[n] = w
+    eff = {n: qw[n] * masks[n] for n in LAYER_NAMES}
+    y, sv = block_fwd(x, eff, norms, save=True)
+    denom = max(np.sum(y_dense ** 2), 1e-9)
+    recon = np.sum((y - y_dense) ** 2) / denom
+    groups = {"block": [LAYER_NAMES],
+              "attn_mlp": [["wq", "wk", "wv", "wo"], ["wg", "wu", "wd"]]}[grouping]
+
+    def group_term(g):
+        num = sum(chains[n][2].sum() * layer_shape(n)[1] for n in g)
+        den = sum(layer_shape(n)[0] * layer_shape(n)[1] for n in g)
+        return num / den - ah, den
+
+    sparse = sum(gt ** 2 for gt, _ in map(group_term, groups))
+    ma_num = sum(chains[n][2].sum() * layer_shape(n)[1] for n in LAYER_NAMES)
+    ma_den = sum(layer_shape(n)[0] * layer_shape(n)[1] for n in LAYER_NAMES)
+    mean_alpha = ma_num / ma_den
+    loss = recon + lam * sparse
+
+    gy = 2.0 * (y - y_dense) / denom
+    _, gw_eff, _, _ = block_bwd(sv, gy)
+    coef = {}
+    for g in groups:
+        dev, den = group_term(g)
+        for n in g:
+            coef[n] = 2.0 * lam * dev * layer_shape(n)[1] / den
+    dthetas, dgammas = {}, {}
+    for n in LAYER_NAMES:
+        r = layer_shape(n)[0]
+        gM = gw_eff[n] * qw[n]
+        gcumb = mask_bwd_to_cumb(ranks[n], gM)
+        galpha = np.full(r, coef[n])
+        dthetas[n] = theta_chain_bwd(thetas[n], r, gcumb, galpha)
+        if gammas is not None:
+            gqw = gw_eff[n] * masks[n]
+            dgammas[n] = fake_quant_gamma_bwd(weights[n], gammas[n][0], gammas[n][1], gqw)
+    return loss, recon, mean_alpha, dthetas, dgammas
+
+
+def head_and_loss(params, tokens, x):
+    emb, norm_f = params["embed"], params["norm_f"]
+    h = rmsnorm(x, norm_f)
+    logits = np.einsum("bsd,vd->bsv", h, emb)
+    m = logits.max(axis=-1, keepdims=True)
+    logp = logits - (m + np.log(np.sum(np.exp(logits - m), axis=-1, keepdims=True)))
+    tgt = np.roll(tokens, -1, axis=1)
+    nll = -np.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    nll[:, -1] = 0.0
+    return nll, logp, h, tgt
+
+
+def lm_train_step(params, tokens):
+    emb = params["embed"]
+    x = emb[tokens]
+    saves = []
+    for l in range(cfg.n_blocks):
+        eff = {n: params[f"blocks.{l}.{n}"] for n in LAYER_NAMES}
+        norms = (params[f"blocks.{l}.norm1"], params[f"blocks.{l}.norm2"])
+        x, sv = block_fwd(x, eff, norms, save=True)
+        saves.append(sv)
+    nll, logp, h, tgt = head_and_loss(params, tokens, x)
+    count = int(np.sum(nll != 0.0))
+    loss = nll.sum() / count
+    grads = {}
+    gnll = (nll != 0.0).astype(float) / count
+    sm = np.exp(logp)
+    onehot = np.zeros_like(sm)
+    np.put_along_axis(onehot, tgt[..., None], 1.0, axis=-1)
+    glogits = gnll[..., None] * (sm - onehot)
+    gh = np.einsum("bsv,vd->bsd", glogits, emb)
+    gemb = np.einsum("bsv,bsd->vd", glogits, h)
+    gx, grads["norm_f"] = rmsnorm_bwd(x, params["norm_f"], gh)
+    for l in reversed(range(cfg.n_blocks)):
+        gx, gw, gn1, gn2 = block_bwd(saves[l], gx)
+        for n in LAYER_NAMES:
+            grads[f"blocks.{l}.{n}"] = gw[n]
+        grads[f"blocks.{l}.norm1"] = gn1
+        grads[f"blocks.{l}.norm2"] = gn2
+    np.add.at(gemb, tokens.reshape(-1), gx.reshape(-1, cfg.d_model))
+    grads["embed"] = gemb
+    return loss, grads
+
+
+# --------------------------- input generation (mirrors rust test) -----------
+def gen_x(seed, scale=0.5):
+    rng = Rng(seed)
+    n = cfg.batch * cfg.seq_len * cfg.d_model
+    return np.array([rng.normal_f32() * np.float32(scale) for _ in range(n)],
+                    dtype=np.float64).reshape(cfg.batch, cfg.seq_len, cfg.d_model)
+
+
+def gen_tokens(seed):
+    rng = Rng(seed)
+    n = cfg.batch * cfg.seq_len
+    return np.array([rng.below(256) for _ in range(n)]).reshape(cfg.batch, cfg.seq_len)
+
+
+def gen_thetas(seed):
+    rng = Rng(seed)
+    out = {}
+    for n in LAYER_NAMES:
+        r = layer_shape(n)[0]
+        vals = [rng.normal_f32() * np.float32(0.5) for _ in range(r * (cfg.n_rates - 1))]
+        out[n] = np.array(vals, dtype=np.float64).reshape(r, cfg.n_rates - 1)
+    return out
+
+
+def gen_ranks(seed):
+    rng = Rng(seed)
+    out = {}
+    for n in LAYER_NAMES:
+        r, c = layer_shape(n)
+        rows = [rng.permutation(c) for _ in range(r)]
+        out[n] = np.array(rows, dtype=np.int64)
+    return out
+
+
+def stats(a):
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    return {"sum": float(a.sum()), "abs_sum": float(np.abs(a).sum()),
+            "first": [float(v) for v in a[:6]]}
+
+
+def main():
+    params = param_store_init(123)
+    tokens = gen_tokens(7)
+    x = gen_x(11)
+    thetas = gen_thetas(13)
+    ranks = gen_ranks(17)
+    b0 = {n: params[f"blocks.0.{n}"] for n in LAYER_NAMES}
+    norms0 = (params["blocks.0.norm1"], params["blocks.0.norm2"])
+
+    golden = {"config": "test", "seed_doc":
+              "params=ParamStore::init(123); tokens=Rng(7).below(256); "
+              "x=Rng(11).normal_f32*0.5; thetas=Rng(13).normal_f32*0.5; "
+              "ranks=Rng(17).permutation rows"}
+
+    # block_fwd / capture
+    y, sv = block_fwd(x, b0, norms0, save=True)
+    golden["block_fwd_y"] = stats(y)
+    golden["capture_h1"] = stats(sv["h1"])
+    golden["capture_att"] = stats(sv["attout"])
+    golden["capture_h2"] = stats(sv["h2"])
+    golden["capture_act"] = stats(sv["act"])
+
+    # embed + head_nll
+    xemb = params["embed"][tokens]
+    golden["embed_x"] = stats(xemb)
+    nll, _, _, _ = head_and_loss(params, tokens, x)
+    golden["head_nll"] = stats(nll)
+
+    # mask_decode on the 32x32 shape (wq)
+    _, cumb, alpha = theta_chain(thetas["wq"], 32)
+    md_mask = hard_mask(cumb, alpha, ranks["wq"])
+    golden["mask_decode_mask_sum"] = float(md_mask.sum())
+    golden["mask_decode_alpha"] = stats(alpha)
+
+    # quant_apply on wq with gamma (0.9, 0.85)
+    golden["quant_apply_wq"] = stats(fake_quant(b0["wq"], 0.9, 0.85))
+
+    # besa_step_row (lam=2, ah=0.6) against y_dense = dense block output
+    loss, recon, ma, dth, _ = besa_step(thetas, x, y, b0, norms0, ranks, 2.0, 0.6)
+    golden["besa_step_row"] = {
+        "loss": loss, "recon": recon, "mean_alpha": ma,
+        "dtheta": {n: stats(dth[n]) for n in LAYER_NAMES},
+    }
+
+    # besa_step_attnmlp
+    loss_a, recon_a, ma_a, dth_a, _ = besa_step(
+        thetas, x, y, b0, norms0, ranks, 2.0, 0.6, grouping="attn_mlp")
+    golden["besa_step_attnmlp"] = {
+        "loss": loss_a, "recon": recon_a, "mean_alpha": ma_a,
+        "dtheta_wq": stats(dth_a["wq"]), "dtheta_wd": stats(dth_a["wd"]),
+    }
+
+    # besa_step_layer: theta rows = 1 (first row of each row-wise theta)
+    thetas1 = {n: thetas[n][:1].copy() for n in LAYER_NAMES}
+    loss_l, recon_l, ma_l, dth_l, _ = besa_step(
+        thetas1, x, y, b0, norms0, ranks, 2.0, 0.6)
+    golden["besa_step_layer"] = {
+        "loss": loss_l, "recon": recon_l, "mean_alpha": ma_l,
+        "dtheta_wq": stats(dth_l["wq"]), "dtheta_wd": stats(dth_l["wd"]),
+    }
+
+    # besa_quant_step_row with gammas 0.95/0.9 everywhere
+    gammas = {n: (0.95, 0.9) for n in LAYER_NAMES}
+    loss_q, recon_q, ma_q, dth_q, dgm = besa_step(
+        thetas, x, y, b0, norms0, ranks, 2.0, 0.6, gammas=gammas)
+    golden["besa_quant_step_row"] = {
+        "loss": loss_q, "recon": recon_q, "mean_alpha": ma_q,
+        "dtheta_wq": stats(dth_q["wq"]),
+        "dgamma": {n: [dgm[n][0], dgm[n][1]] for n in LAYER_NAMES},
+    }
+
+    # lm_train_step
+    loss_t, grads = lm_train_step(params, tokens)
+    golden["lm_train_step"] = {
+        "loss": loss_t,
+        "d_embed": stats(grads["embed"]),
+        "d_blocks.0.wq": stats(grads["blocks.0.wq"]),
+        "d_blocks.1.wd": stats(grads["blocks.1.wd"]),
+        "d_blocks.0.norm1": stats(grads["blocks.0.norm1"]),
+        "d_norm_f": stats(grads["norm_f"]),
+    }
+
+    out_path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "rust", "tests", "golden", "native_test_vectors.json")
+    out_path = os.path.normpath(out_path)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(golden, f, indent=1)
+    print(f"wrote {out_path}")
+    print(f"  lm loss {loss_t:.6f} (ln V = {math.log(cfg.vocab):.6f})")
+    print(f"  besa_step_row loss {loss:.6f} recon {recon:.6f} mean_alpha {ma:.6f}")
+
+
+if __name__ == "__main__":
+    main()

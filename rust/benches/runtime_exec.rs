@@ -1,5 +1,5 @@
-//! Bench: PJRT runtime hot path — per-artifact execution latency and the
-//! coordinator-side overhead (literal conversion, validation).
+//! Bench: runtime hot path — per-artifact execution latency through the
+//! Engine facade (native backend: hermetic, no artifacts needed).
 
 use besa::model::{ParamStore, LAYER_NAMES};
 use besa::runtime::Engine;
@@ -8,13 +8,7 @@ use besa::util::bench::Bench;
 use besa::util::rng::Rng;
 
 fn main() {
-    let engine = match Engine::new(std::path::Path::new("artifacts"), "test") {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("skipping runtime_exec bench (artifacts missing): {e}");
-            return;
-        }
-    };
+    let engine = Engine::native("test").expect("built-in test config");
     let cfg = engine.config().clone();
     let params = ParamStore::init(&cfg, 1);
     let mut rng = Rng::seed(2);
@@ -47,7 +41,21 @@ fn main() {
         engine.run("block_capture", &block_ins).unwrap()
     });
 
-    // besa_step: the pruning-loop hot path
+    // masked forward: the pruned-model inference path
+    let ones: Vec<Tensor> = LAYER_NAMES
+        .iter()
+        .map(|w| {
+            let s = cfg.layer_shape(w);
+            Tensor::ones(&[s[0], s[1]])
+        })
+        .collect();
+    let mut masked_ins = block_ins.clone();
+    masked_ins.extend(ones.iter());
+    b.run_throughput("block_fwd_masked", tokens_per, "tok/s", || {
+        engine.run("block_fwd_masked", &masked_ins).unwrap()
+    });
+
+    // besa_step: the pruning-loop hot path (fwd + analytic bwd)
     let y = engine.run("block_fwd", &block_ins).unwrap().into_iter().next().unwrap();
     let thetas: Vec<Tensor> = LAYER_NAMES
         .iter()
@@ -80,14 +88,17 @@ fn main() {
         engine.run("besa_step_row", &ins).unwrap()
     });
 
-    // coordinator-side overhead: literal conversion alone
-    b.run("tensor->literal (x)", || x.to_literal().unwrap());
-    b.run("literal->tensor (x)", || {
-        let l = x.to_literal().unwrap();
-        Tensor::from_literal(&l).unwrap()
+    // whole-model training step (all-parameter backward)
+    let mut train_ins: Vec<&Tensor> = params.ordered();
+    train_ins.push(&toks);
+    b.run_throughput("lm_train_step", tokens_per, "tok/s", || {
+        engine.run("lm_train_step", &train_ins).unwrap()
     });
 
     b.report();
     let (compile_s, exec_s, calls) = engine.stats();
-    println!("engine totals: {calls} calls, exec {exec_s:.2}s, compile {compile_s:.2}s");
+    println!(
+        "engine totals ({}): {calls} calls, exec {exec_s:.2}s, compile {compile_s:.2}s",
+        engine.backend_name()
+    );
 }

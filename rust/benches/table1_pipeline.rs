@@ -13,13 +13,7 @@ use besa::runtime::Engine;
 use besa::util::bench::Bench;
 
 fn main() {
-    let engine = match Engine::new(std::path::Path::new("artifacts"), "test") {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("skipping table1_pipeline bench (artifacts missing): {e}");
-            return;
-        }
-    };
+    let engine = Engine::native("test").expect("built-in test config");
     let cfg = engine.config().clone();
     let dense = ParamStore::init(&cfg, 3);
     let calib = CalibrationSet::sample(&cfg, cfg.batch, 11);

@@ -51,7 +51,9 @@ pub fn dispatch(args: &Args) -> Result<()> {
 fn raw_opts(args: &Args) -> Vec<String> {
     // carry common options through to sub-experiments
     let mut out = Vec::new();
-    for k in ["configs", "config", "artifacts", "runs", "eval-batches", "calib-seqs", "epochs"] {
+    for k in
+        ["configs", "config", "backend", "artifacts", "runs", "eval-batches", "calib-seqs", "epochs"]
+    {
         if let Some(v) = args.get(k) {
             out.push(format!("--{k}={v}"));
         }
@@ -405,12 +407,8 @@ pub fn table5(args: &Args) -> Result<()> {
 }
 
 fn alt_rate_artifacts(engine: &crate::runtime::Engine) -> Vec<usize> {
-    engine
-        .manifest
-        .artifacts
-        .keys()
-        .filter_map(|k| k.strip_prefix("besa_step_row_d").and_then(|s| s.parse().ok()))
-        .collect()
+    // populated by both Manifest::load and Manifest::synthesize
+    engine.config().alt_rates.clone()
 }
 
 // ---------------------------------------------------------------------------

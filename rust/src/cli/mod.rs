@@ -56,6 +56,10 @@ fn print_help() {
          \n\
          COMMON OPTIONS\n\
          \x20 --config <test|sm|md|lg>     model config (default sm)\n\
+         \x20 --backend <native|pjrt>      execution backend (default native;\n\
+         \x20                              env: BESA_BACKEND). native needs no\n\
+         \x20                              artifacts; pjrt needs `make artifacts`\n\
+         \x20                              and a build with --features pjrt\n\
          \x20 --artifacts <dir>            artifact root (default ./artifacts)\n\
          \x20 --runs <dir>                 checkpoint/run dir (default ./runs)\n\
          \x20 --log <level>                error|warn|info|debug|trace\n"

@@ -15,11 +15,21 @@ use crate::prune::magnitude::MagnitudePruner;
 use crate::prune::sparsegpt::SparseGptPruner;
 use crate::prune::wanda::WandaPruner;
 use crate::prune::Method;
-use crate::runtime::Engine;
+use crate::runtime::{BackendKind, Engine};
 use crate::util::args::Args;
 
 pub fn artifacts_root(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+/// Backend selection: `--backend native|pjrt` wins, then the
+/// `BESA_BACKEND` env var, defaulting to the hermetic native interpreter.
+pub fn backend_kind(args: &Args) -> Result<BackendKind> {
+    match args.get("backend") {
+        Some(b) => BackendKind::from_name(b)
+            .with_context(|| format!("--backend must be native|pjrt, got '{b}'")),
+        None => Ok(BackendKind::from_env()),
+    }
 }
 
 /// Layered configuration: built-in defaults < TOML file < CLI flags.
@@ -52,7 +62,10 @@ pub fn runs_dir(args: &Args) -> PathBuf {
 }
 
 pub fn engine_for(args: &Args, config: &str) -> Result<Engine> {
-    Engine::new(&artifacts_root(args), config)
+    let kind = backend_kind(args)?;
+    let engine = Engine::with_backend(kind, &artifacts_root(args), config)?;
+    crate::debuglog!("engine: backend={} config={config}", engine.backend_name());
+    Ok(engine)
 }
 
 pub fn dense_ckpt_path(args: &Args, config: &str) -> PathBuf {

@@ -5,7 +5,12 @@
 //! `X_p` (through already-pruned blocks) — prunes one transformer block at
 //! a time, then advances both streams. This is what bounds GPU/host memory
 //! in the paper and lets a 7B-180B model prune on one device; here it
-//! bounds host memory and keeps every PJRT executable shape-static.
+//! bounds host memory and keeps every executable shape-static.
+//!
+//! The per-minibatch loops (dense-target forward, capture pass, path
+//! advance) fan out across scoped threads via [`crate::util::par`]: the
+//! [`Engine`] facade is `Sync`, so calibration minibatches execute
+//! batch-parallel against one shared backend.
 
 pub mod trainer;
 
@@ -18,6 +23,7 @@ use crate::prune::importance::ColNorms;
 use crate::prune::{BlockMasks, BlockReport};
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
+use crate::util::par::par_map;
 use crate::util::Stopwatch;
 
 /// Everything a block pruner may consume for one block.
@@ -91,13 +97,27 @@ impl<'a> Pipeline<'a> {
     /// Embed all calibration batches: the starting activations of both paths.
     fn embed_all(&self, params: &ParamStore) -> Result<Vec<Tensor>> {
         let emb = params.get("embed")?;
-        self.calib
-            .iter()
-            .map(|toks| {
-                let out = self.engine.run("embed", &[toks, emb])?;
-                Ok(out.into_iter().next().unwrap())
-            })
-            .collect()
+        par_map(&self.calib, |toks| {
+            let out = self.engine.run("embed", &[toks, emb])?;
+            Ok(out.into_iter().next().unwrap())
+        })
+    }
+
+    /// `block_fwd` over every minibatch in `xs`, batch-parallel.
+    fn block_fwd_all(
+        &self,
+        xs: &[Tensor],
+        weights: &[&Tensor],
+        norms: [&Tensor; 2],
+    ) -> Result<Vec<Tensor>> {
+        par_map(xs, |x| {
+            let mut ins: Vec<&Tensor> = vec![x];
+            ins.extend(weights.iter().copied());
+            ins.push(norms[0]);
+            ins.push(norms[1]);
+            let out = self.engine.run("block_fwd", &ins)?;
+            Ok(out.into_iter().next().unwrap())
+        })
     }
 
     /// Run Algorithm 1: prune every block of `params` in place with `pruner`.
@@ -115,25 +135,24 @@ impl<'a> Pipeline<'a> {
             // ---- gather block inputs -------------------------------------
             let weights: BTreeMap<String, Tensor> = LAYER_NAMES
                 .iter()
-                .map(|w| ((*w).to_string(), params.get(&ParamStore::layer_name(l, w)).unwrap().clone()))
+                .map(|w| {
+                    ((*w).to_string(), params.get(&ParamStore::layer_name(l, w)).unwrap().clone())
+                })
                 .collect();
             let norms = [
                 params.get(&format!("blocks.{l}.norm1"))?.clone(),
                 params.get(&format!("blocks.{l}.norm2"))?.clone(),
             ];
+            let weight_refs: Vec<&Tensor> = LAYER_NAMES.iter().map(|w| &weights[*w]).collect();
 
-            // dense targets on the dense path
-            let mut y_dense = Vec::with_capacity(x_fp.len());
-            for x in &x_fp {
-                let mut ins: Vec<&Tensor> = vec![x];
-                ins.extend(LAYER_NAMES.iter().map(|w| &weights[*w]));
-                ins.push(&norms[0]);
-                ins.push(&norms[1]);
-                let out = self.engine.run("block_fwd", &ins)?;
-                y_dense.push(out.into_iter().next().unwrap());
-            }
+            // dense targets on the dense path (batch-parallel)
+            let y_dense = self.block_fwd_all(&x_fp, &weight_refs, [&norms[0], &norms[1]])?;
 
-            // captures on the pruned path: colnorms (+ optional hessians)
+            // captures on the pruned path: batch-parallel inside a bounded
+            // window, folding the streaming statistics in deterministic
+            // minibatch order after each window. The window keeps peak
+            // capture memory at O(workers) minibatches, not O(calib set) —
+            // the memory-bounding property of the block-sequential design.
             let mut colnorms = ColNorms::new(&cfg);
             let mut hessians: BTreeMap<String, crate::linalg::Mat> = BTreeMap::new();
             if pruner.needs_hessian() {
@@ -142,20 +161,25 @@ impl<'a> Pipeline<'a> {
                 hessians.insert("h2".into(), crate::linalg::Mat::zeros(cfg.d_model, cfg.d_model));
                 hessians.insert("act".into(), crate::linalg::Mat::zeros(cfg.d_ffn, cfg.d_ffn));
             }
-            for x in &x_p {
-                let mut ins: Vec<&Tensor> = vec![x];
-                ins.extend(LAYER_NAMES.iter().map(|w| &weights[*w]));
-                ins.push(&norms[0]);
-                ins.push(&norms[1]);
-                let out = self.engine.run("block_capture", &ins)?;
-                // outputs: y, h1, att, h2, act
-                colnorms.accumulate(&out[1], &out[2], &out[3], &out[4]);
-                if pruner.needs_hessian() {
-                    let toks = cfg.tokens_per_batch();
-                    hessians.get_mut("h1").unwrap().add_gram_f32(out[1].f32s(), toks);
-                    hessians.get_mut("att").unwrap().add_gram_f32(out[2].f32s(), toks);
-                    hessians.get_mut("h2").unwrap().add_gram_f32(out[3].f32s(), toks);
-                    hessians.get_mut("act").unwrap().add_gram_f32(out[4].f32s(), toks);
+            let window = crate::util::par::workers_for(x_p.len()).max(1);
+            for chunk in x_p.chunks(window) {
+                let captures = par_map(chunk, |x| {
+                    let mut ins: Vec<&Tensor> = vec![x];
+                    ins.extend(weight_refs.iter().copied());
+                    ins.push(&norms[0]);
+                    ins.push(&norms[1]);
+                    self.engine.run("block_capture", &ins)
+                })?;
+                for out in &captures {
+                    // outputs: y, h1, att, h2, act
+                    colnorms.accumulate(&out[1], &out[2], &out[3], &out[4]);
+                    if pruner.needs_hessian() {
+                        let toks = cfg.tokens_per_batch();
+                        hessians.get_mut("h1").unwrap().add_gram_f32(out[1].f32s(), toks);
+                        hessians.get_mut("att").unwrap().add_gram_f32(out[2].f32s(), toks);
+                        hessians.get_mut("h2").unwrap().add_gram_f32(out[3].f32s(), toks);
+                        hessians.get_mut("act").unwrap().add_gram_f32(out[4].f32s(), toks);
+                    }
                 }
             }
 
@@ -178,36 +202,34 @@ impl<'a> Pipeline<'a> {
             for w in LAYER_NAMES {
                 let name = ParamStore::layer_name(l, w);
                 let mut t = ctx.weights.remove(w).context("weight consumed twice")?;
-                let m = masks.get(w).with_context(|| format!("pruner returned no mask for {w}"))?;
+                let m =
+                    masks.get(w).with_context(|| format!("pruner returned no mask for {w}"))?;
                 for (v, mv) in t.f32s_mut().iter_mut().zip(m.f32s()) {
                     *v *= mv;
                 }
                 params.set(&name, t)?;
             }
 
-            // ---- advance both paths ---------------------------------------
-            let weights_now: Vec<&Tensor> =
-                LAYER_NAMES.iter().map(|w| params.get(&ParamStore::layer_name(l, w)).unwrap()).collect();
+            // ---- advance both paths (batch-parallel) ----------------------
+            let weights_now: Vec<&Tensor> = LAYER_NAMES
+                .iter()
+                .map(|w| params.get(&ParamStore::layer_name(l, w)).unwrap())
+                .collect();
             let norms_now = [
                 params.get(&format!("blocks.{l}.norm1"))?,
                 params.get(&format!("blocks.{l}.norm2"))?,
             ];
+            let advanced = self.block_fwd_all(&x_p, &weights_now, norms_now)?;
             let mut err_num = 0.0f64;
             let mut err_den = 0.0f64;
-            for (i, x) in x_p.iter_mut().enumerate() {
-                let mut ins: Vec<&Tensor> = vec![&*x];
-                ins.extend(weights_now.iter().copied());
-                ins.push(norms_now[0]);
-                ins.push(norms_now[1]);
-                let out = self.engine.run("block_fwd", &ins)?;
-                let y_p = out.into_iter().next().unwrap();
+            for (i, y_p) in advanced.into_iter().enumerate() {
                 let y_fp = &y_dense[i];
                 for (a, b) in y_p.f32s().iter().zip(y_fp.f32s()) {
                     let d = (*a - *b) as f64;
                     err_num += d * d;
                     err_den += (*b as f64) * (*b as f64);
                 }
-                *x = y_p;
+                x_p[i] = y_p;
             }
             x_fp = y_dense;
             block_errors.push(err_num / err_den.max(1e-12));

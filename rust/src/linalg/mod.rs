@@ -185,13 +185,56 @@ pub fn cholesky_inverse(a: &Mat) -> Result<Mat> {
     Ok(inv)
 }
 
+/// Invert a lower-triangular matrix in-place-free: N = L^-1 (lower).
+/// Column-by-column forward substitution on the triangular structure —
+/// ~n^3/6 multiply-adds, no RHS assembly.
+pub fn invert_lower(l: &Mat) -> Mat {
+    assert_eq!(l.rows, l.cols);
+    let n = l.rows;
+    let mut inv = Mat::zeros(n, n);
+    for j in 0..n {
+        inv[(j, j)] = 1.0 / l[(j, j)];
+        for i in j + 1..n {
+            let mut sum = 0.0;
+            for k in j..i {
+                sum -= l[(i, k)] * inv[(k, j)];
+            }
+            inv[(i, j)] = sum / l[(i, i)];
+        }
+    }
+    inv
+}
+
 /// Upper-triangular Cholesky factor of the *inverse*: returns U with
 /// A^-1 = U^T U — exactly torch's `linalg.cholesky(inv(H), upper=True)`,
-/// the factor SparseGPT's OBS sweep consumes (U = L^T for inv = L L^T).
+/// the factor SparseGPT's OBS sweep consumes.
+///
+/// Direct path (no explicit inverse, no second factorization): with J the
+/// index-reversal permutation, factor JAJ = L̄ L̄^T once, invert the
+/// triangular L̄, and un-reverse: U = J L̄^-1 J is upper-triangular with
+/// U^T U = J L̄^-T L̄^-1 J = J (JAJ)^-1 J = A^-1. One O(n^3/3)
+/// factorization plus one O(n^3/6) triangular inverse, replacing the old
+/// invert-then-refactor 2x O(n^3) route.
 pub fn cholesky_inverse_upper(a: &Mat) -> Result<Mat> {
-    let inv = cholesky_inverse(a)?;
-    let l = cholesky(&inv)?;
-    Ok(l.transpose())
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    // JAJ: reverse both row and column order
+    let mut rev = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            rev[(i, j)] = a[(n - 1 - i, n - 1 - j)];
+        }
+    }
+    let lbar = cholesky(&rev)?;
+    let ninv = invert_lower(&lbar);
+    // U = J N J (flipping a lower-triangular matrix both ways gives upper)
+    let mut u = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            u[(i, j)] = ninv[(n - 1 - i, n - 1 - j)];
+        }
+    }
+    Ok(u)
 }
 
 #[cfg(test)]
@@ -240,6 +283,21 @@ mod tests {
         let rec = u.transpose().matmul(&u);
         let inv = cholesky_inverse(&a).unwrap();
         assert!(rec.max_abs_diff(&inv) < 1e-8);
+    }
+
+    #[test]
+    fn invert_lower_is_inverse() {
+        let a = random_spd(20, 7);
+        let l = cholesky(&a).unwrap();
+        let inv = invert_lower(&l);
+        // strictly lower-triangular inverse
+        for i in 0..20 {
+            for j in i + 1..20 {
+                assert_eq!(inv[(i, j)], 0.0);
+            }
+        }
+        let prod = inv.matmul(&l);
+        assert!(prod.max_abs_diff(&Mat::eye(20)) < 1e-9);
     }
 
     #[test]

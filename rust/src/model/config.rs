@@ -1,7 +1,10 @@
-//! Model configuration — parsed from the artifact manifest so rust and the
-//! AOT python graphs can never disagree on shapes.
+//! Model configuration. Two sources of truth that can never disagree:
+//! the artifact manifest (PJRT backend — shapes are whatever python lowered)
+//! and the built-in config table below (native backend — mirrors
+//! `python/compile/configs.py` exactly, so the same `test|sm|md|lg` names
+//! work with no artifacts on disk).
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
@@ -16,6 +19,10 @@ pub struct ModelConfig {
     pub seq_len: usize,
     pub batch: usize,
     pub n_rates: usize,
+    /// extra candidate-rate counts lowered as `besa_step_row_d<N>` variants
+    /// (Table 5 sparsity-step ablation)
+    pub alt_rates: Vec<usize>,
+    pub rope_base: f64,
     pub norm_eps: f64,
     pub param_order: Vec<String>,
 }
@@ -23,6 +30,19 @@ pub struct ModelConfig {
 /// The seven prunable projections of one block, in pipeline order
 /// (must match python/compile/configs.py LAYER_NAMES).
 pub const LAYER_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+fn canonical_param_order(n_blocks: usize) -> Vec<String> {
+    let mut order = vec!["embed".to_string()];
+    for l in 0..n_blocks {
+        for w in LAYER_NAMES {
+            order.push(format!("blocks.{l}.{w}"));
+        }
+        order.push(format!("blocks.{l}.norm1"));
+        order.push(format!("blocks.{l}.norm2"));
+    }
+    order.push("norm_f".to_string());
+    order
+}
 
 impl ModelConfig {
     pub fn from_json(v: &Json) -> Result<ModelConfig> {
@@ -36,6 +56,10 @@ impl ModelConfig {
             seq_len: v.at(&["seq_len"]).as_usize().context("seq_len")?,
             batch: v.at(&["batch"]).as_usize().context("batch")?,
             n_rates: v.at(&["n_rates"]).as_usize().context("n_rates")?,
+            // not recorded in older manifests; irrelevant to PJRT execution
+            // (shapes are baked into the HLO) but needed by the native math
+            alt_rates: Vec::new(),
+            rope_base: v.at(&["rope_base"]).as_f64().unwrap_or(10000.0),
             norm_eps: v.at(&["norm_eps"]).as_f64().context("norm_eps")?,
             param_order: v
                 .at(&["param_order"])
@@ -45,6 +69,49 @@ impl ModelConfig {
                 .map(|s| s.as_str().unwrap().to_string())
                 .collect(),
         })
+    }
+
+    /// The built-in config table (mirrors python/compile/configs.py
+    /// CONFIGS). This is what lets the native backend run with zero
+    /// artifacts on disk.
+    pub fn builtin(name: &str) -> Result<ModelConfig> {
+        let (vocab, d_model, n_heads, n_blocks, d_ffn, seq_len, batch, n_rates, alt): (
+            usize,
+            usize,
+            usize,
+            usize,
+            usize,
+            usize,
+            usize,
+            usize,
+            &[usize],
+        ) = match name {
+            "test" => (256, 32, 2, 2, 88, 32, 4, 16, &[]),
+            "sm" => (256, 64, 4, 4, 172, 64, 8, 32, &[8, 64]),
+            "md" => (256, 128, 4, 8, 344, 128, 8, 100, &[]),
+            "lg" => (256, 192, 8, 8, 516, 128, 8, 100, &[]),
+            other => bail!("unknown built-in config '{other}' (have: test|sm|md|lg)"),
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            n_heads,
+            n_blocks,
+            d_ffn,
+            seq_len,
+            batch,
+            n_rates,
+            alt_rates: alt.to_vec(),
+            rope_base: 10000.0,
+            norm_eps: 1e-5,
+            param_order: canonical_param_order(n_blocks),
+        })
+    }
+
+    pub fn d_head(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
     }
 
     /// Shape of one of the seven prunable weights, `[out, in]`.
@@ -94,28 +161,7 @@ pub mod tests {
     use super::*;
 
     pub fn test_config() -> ModelConfig {
-        let mut order = vec!["embed".to_string()];
-        for l in 0..2 {
-            for w in LAYER_NAMES {
-                order.push(format!("blocks.{l}.{w}"));
-            }
-            order.push(format!("blocks.{l}.norm1"));
-            order.push(format!("blocks.{l}.norm2"));
-        }
-        order.push("norm_f".to_string());
-        ModelConfig {
-            name: "test".into(),
-            vocab: 256,
-            d_model: 32,
-            n_heads: 2,
-            n_blocks: 2,
-            d_ffn: 88,
-            seq_len: 32,
-            batch: 4,
-            n_rates: 16,
-            norm_eps: 1e-5,
-            param_order: order,
-        }
+        ModelConfig::builtin("test").unwrap()
     }
 
     #[test]
@@ -128,15 +174,25 @@ pub mod tests {
         assert_eq!(c.param_shape("blocks.1.norm2"), vec![32]);
         assert_eq!(c.param_shape("blocks.0.wu"), vec![88, 32]);
         assert_eq!(c.block_param_count(), 4 * 32 * 32 + 3 * 88 * 32);
+        assert_eq!(c.d_head(), 16);
     }
 
     #[test]
     fn param_count_consistent() {
         let c = test_config();
         let total = c.total_param_count();
-        assert_eq!(
-            total,
-            256 * 32 + 2 * (c.block_param_count() + 2 * 32) + 32
-        );
+        assert_eq!(total, 256 * 32 + 2 * (c.block_param_count() + 2 * 32) + 32);
+    }
+
+    #[test]
+    fn builtin_configs_parse() {
+        for name in ["test", "sm", "md", "lg"] {
+            let c = ModelConfig::builtin(name).unwrap();
+            assert_eq!(c.name, name);
+            assert_eq!(c.param_order.len(), 1 + c.n_blocks * 9 + 1);
+            assert_eq!(c.d_model % c.n_heads, 0);
+        }
+        assert!(ModelConfig::builtin("nope").is_err());
+        assert_eq!(ModelConfig::builtin("sm").unwrap().alt_rates, vec![8, 64]);
     }
 }

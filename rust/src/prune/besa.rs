@@ -2,7 +2,8 @@
 //! learnable per-rate probabilities, optimized per block against the
 //! blockwise reconstruction loss (Eqn. 1) with Adam — the rust half of
 //! Algorithm 1. The heavy math (STE masks, masked block forward, gradients)
-//! runs inside the AOT `besa_step_*` artifact; this module owns theta
+//! runs inside the `besa_step_*` artifact op (native interpreter or PJRT,
+//! behind the [`crate::runtime::Engine`] facade); this module owns theta
 //! state, the optimizer loop, convergence control and final mask decode.
 
 use anyhow::{bail, Result};
@@ -131,49 +132,27 @@ impl BlockPruner for BesaPruner {
         let lam = Tensor::scalar(self.cfg.lambda);
         let alpha_hat = Tensor::scalar(self.cfg.sparsity as f32);
         let artifact = self.artifact_name();
-
-        // §Perf (L3): all loop-invariant inputs are converted to PJRT
-        // literals once per block; the Adam loop only pays for the θ (and
-        // γ) conversion each step. See EXPERIMENTS.md §Perf for the delta.
-        let to_lit = |t: &Tensor| t.to_literal();
-        let xy_lits: Vec<(xla::Literal, xla::Literal)> = ctx
-            .x_pruned
-            .iter()
-            .zip(ctx.y_dense)
-            .map(|(x, y)| Ok((to_lit(x)?, to_lit(y)?)))
-            .collect::<Result<_>>()?;
-        let weight_lits: Vec<xla::Literal> = LAYER_NAMES
-            .iter()
-            .map(|w| to_lit(&ctx.weights[*w]))
-            .collect::<Result<_>>()?;
-        let norm_lits = [to_lit(&ctx.norms[0])?, to_lit(&ctx.norms[1])?];
-        let rank_lits: Vec<xla::Literal> =
-            ranks.iter().map(to_lit).collect::<Result<_>>()?;
-        let lam_lit = to_lit(&lam)?;
-        let ah_lit = to_lit(&alpha_hat)?;
+        let weights: Vec<&Tensor> = LAYER_NAMES.iter().map(|w| &ctx.weights[*w]).collect();
 
         let mut curve = Vec::new();
         let mut last = (0.0, 0.0, 0.0);
         for _epoch in 0..self.cfg.epochs {
-            for (x_lit, y_lit) in &xy_lits {
-                let theta_lits: Vec<xla::Literal> =
-                    thetas.iter().map(to_lit).collect::<Result<_>>()?;
-                let gamma_lits: Vec<xla::Literal> = if self.cfg.quant {
-                    gammas.iter().map(to_lit).collect::<Result<_>>()?
-                } else {
-                    Vec::new()
+            for (x, y) in ctx.x_pruned.iter().zip(ctx.y_dense) {
+                let out = {
+                    let mut ins: Vec<&Tensor> = thetas.iter().collect();
+                    ins.push(x);
+                    ins.push(y);
+                    ins.extend(weights.iter().copied());
+                    ins.push(&ctx.norms[0]);
+                    ins.push(&ctx.norms[1]);
+                    ins.extend(ranks.iter());
+                    ins.push(&lam);
+                    ins.push(&alpha_hat);
+                    if self.cfg.quant {
+                        ins.extend(gammas.iter());
+                    }
+                    ctx.engine.run(&artifact, &ins)?
                 };
-                let mut ins: Vec<&xla::Literal> = theta_lits.iter().collect();
-                ins.push(x_lit);
-                ins.push(y_lit);
-                ins.extend(weight_lits.iter());
-                ins.push(&norm_lits[0]);
-                ins.push(&norm_lits[1]);
-                ins.extend(rank_lits.iter());
-                ins.push(&lam_lit);
-                ins.push(&ah_lit);
-                ins.extend(gamma_lits.iter());
-                let out = ctx.engine.run_literals(&artifact, &ins)?;
                 last = (
                     out[0].scalar_value() as f64,
                     out[1].scalar_value() as f64,
@@ -246,7 +225,9 @@ pub fn two_block_prune(
             .map(|l| {
                 LAYER_NAMES
                     .iter()
-                    .map(|w| params.get(&crate::model::ParamStore::layer_name(*l, w)).unwrap().clone())
+                    .map(|w| {
+                        params.get(&crate::model::ParamStore::layer_name(*l, w)).unwrap().clone()
+                    })
                     .collect()
             })
             .collect();
@@ -273,9 +254,10 @@ pub fn two_block_prune(
             }
             y_dense.push(cur);
         }
-        let mut colnorms =
-            [crate::prune::importance::ColNorms::new(&mcfg), crate::prune::importance::ColNorms::new(&mcfg)];
-        let mut x_mid = Vec::new();
+        let mut colnorms = [
+            crate::prune::importance::ColNorms::new(&mcfg),
+            crate::prune::importance::ColNorms::new(&mcfg),
+        ];
         for x in &x_p {
             let mut cur = x.clone();
             for b in 0..2 {
@@ -286,12 +268,8 @@ pub fn two_block_prune(
                 let out = engine.run("block_capture", &ins)?;
                 colnorms[b].accumulate(&out[1], &out[2], &out[3], &out[4]);
                 cur = out.into_iter().next().unwrap();
-                if b == 0 {
-                    x_mid.push(cur.clone());
-                }
             }
         }
-        let _ = x_mid;
 
         // ranks per block
         let ranks: Vec<Vec<Tensor>> = (0..2)
@@ -325,22 +303,24 @@ pub fn two_block_prune(
         let mut last_recon = 0.0;
         for _ in 0..cfg.epochs {
             for (x, y) in x_p.iter().zip(&y_dense) {
-                let mut ins: Vec<&Tensor> = thetas.iter().collect();
-                ins.push(x);
-                ins.push(y);
-                for b in 0..2 {
-                    ins.extend(weights[b].iter());
-                }
-                for n in &norms {
-                    ins.push(&n[0]);
-                    ins.push(&n[1]);
-                }
-                for b in 0..2 {
-                    ins.extend(ranks[b].iter());
-                }
-                ins.push(&lam);
-                ins.push(&alpha_hat);
-                let out = engine.run("two_block_step", &ins)?;
+                let out = {
+                    let mut ins: Vec<&Tensor> = thetas.iter().collect();
+                    ins.push(x);
+                    ins.push(y);
+                    for b in 0..2 {
+                        ins.extend(weights[b].iter());
+                    }
+                    for n in &norms {
+                        ins.push(&n[0]);
+                        ins.push(&n[1]);
+                    }
+                    for b in 0..2 {
+                        ins.extend(ranks[b].iter());
+                    }
+                    ins.push(&lam);
+                    ins.push(&alpha_hat);
+                    engine.run("two_block_step", &ins)?
+                };
                 last_recon = out[1].scalar_value() as f64;
                 let grads: Vec<&Tensor> = out[3..17].iter().collect();
                 let mut ps: Vec<&mut Tensor> = thetas.iter_mut().collect();

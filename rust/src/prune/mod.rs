@@ -77,19 +77,28 @@ impl BlockReport {
     }
 }
 
-/// Build a 0/1 mask keeping the `keep` highest-scored entries of each row.
+/// Build a 0/1 mask pruning the lowest-scored `sparsity` fraction of each
+/// row. Hot path of Wanda/magnitude pruning (called for every layer of
+/// every block): partial selection via `select_nth_unstable_by` — O(C) per
+/// row instead of a full O(C log C) sort — with NaN-safe `total_cmp`
+/// ordering (NaN ranks highest, i.e. is never preferred for pruning).
 pub fn topk_row_mask(scores: &Tensor, sparsity: f64) -> Tensor {
     let rows = scores.shape[0];
     let cols = scores.shape[1];
-    let prune = ((cols as f64) * sparsity).round() as usize;
+    let prune = (((cols as f64) * sparsity).round() as usize).min(cols);
     let mut mask = vec![1.0f32; rows * cols];
+    if prune == 0 {
+        return Tensor::from_f32(&[rows, cols], mask);
+    }
     let mut idx: Vec<usize> = Vec::with_capacity(cols);
     for r in 0..rows {
         let row = &scores.f32s()[r * cols..(r + 1) * cols];
         idx.clear();
         idx.extend(0..cols);
-        idx.sort_by(|a, b| row[*a].partial_cmp(&row[*b]).unwrap_or(std::cmp::Ordering::Equal));
-        for &j in idx.iter().take(prune) {
+        if prune < cols {
+            idx.select_nth_unstable_by(prune - 1, |a, b| row[*a].total_cmp(&row[*b]));
+        }
+        for &j in &idx[..prune] {
             mask[r * cols + j] = 0.0;
         }
     }

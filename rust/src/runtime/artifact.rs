@@ -1,13 +1,19 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` and the
-//! rust runtime. Parses `artifacts/<config>/manifest.json` and exposes the
-//! per-artifact positional input/output tensor specs.
+//! Artifact specs: the contract between graph definitions and the rust
+//! runtime. Two ways to obtain one:
+//!
+//! * [`Manifest::load`] parses `artifacts/<config>/manifest.json` written by
+//!   `python/compile/aot.py` (PJRT backend — specs describe lowered HLO).
+//! * [`Manifest::synthesize`] derives the identical specs directly from a
+//!   [`ModelConfig`] (native backend — no files on disk at all). The two
+//!   must agree; `python/tests/test_aot_manifest.py` and the rust parity
+//!   suite both assert the shared invariants.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::config::ModelConfig;
+use crate::model::config::{ModelConfig, LAYER_NAMES};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -17,9 +23,20 @@ pub struct TensorSpec {
     pub shape: Vec<usize>,
 }
 
+impl TensorSpec {
+    fn f32(name: impl Into<String>, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: name.into(), dtype: "float32".into(), shape: shape.to_vec() }
+    }
+
+    fn i32(name: impl Into<String>, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: name.into(), dtype: "int32".into(), shape: shape.to_vec() }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
     pub name: String,
+    /// HLO text path (PJRT backend only; empty for synthesized specs).
     pub file: PathBuf,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
@@ -62,7 +79,7 @@ impl Manifest {
             )
         })?;
         let root = Json::parse(&src)?;
-        let config = ModelConfig::from_json(root.at(&["config"]))?;
+        let mut config = ModelConfig::from_json(root.at(&["config"]))?;
         let mut artifacts = BTreeMap::new();
         let arts = root.at(&["artifacts"]).as_obj().context("artifacts object")?;
         for (name, spec) in arts {
@@ -80,7 +97,232 @@ impl Manifest {
                 },
             );
         }
+        // Manifests don't record alt_rates explicitly; recover it from the
+        // lowered besa_step_row_d<N> variants so a manifest-derived config
+        // synthesizes the same op set (Table 5 sparsity-step ablation).
+        config.alt_rates = artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("besa_step_row_d").and_then(|s| s.parse().ok()))
+            .collect();
+        config.alt_rates.sort_unstable();
         Ok(Manifest { dir, config, artifacts })
+    }
+
+    /// Synthesize the full artifact spec set from a config — the exact
+    /// mirror of `python/compile/aot.py::emit_config`, minus the HLO files.
+    pub fn synthesize(config: ModelConfig) -> Manifest {
+        let cfg = &config;
+        let (b, s, d, f, v) = (cfg.batch, cfg.seq_len, cfg.d_model, cfg.d_ffn, cfg.vocab);
+        let x3 = [b, s, d];
+        let mut artifacts = BTreeMap::new();
+        let mut add = |name: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+            artifacts.insert(
+                name.to_string(),
+                ArtifactSpec { name: name.to_string(), file: PathBuf::new(), inputs, outputs },
+            );
+        };
+
+        let weight_specs = |prefix: &str| -> Vec<TensorSpec> {
+            LAYER_NAMES
+                .iter()
+                .map(|w| TensorSpec::f32(format!("{prefix}{w}"), &cfg.layer_shape(w)))
+                .collect()
+        };
+        let norm_specs = |prefix: &str| -> Vec<TensorSpec> {
+            vec![
+                TensorSpec::f32(format!("{prefix}norm1"), &[d]),
+                TensorSpec::f32(format!("{prefix}norm2"), &[d]),
+            ]
+        };
+        let rank_specs = |prefix: &str| -> Vec<TensorSpec> {
+            LAYER_NAMES
+                .iter()
+                .map(|w| TensorSpec::i32(format!("{prefix}rank_{w}"), &cfg.layer_shape(w)))
+                .collect()
+        };
+        let theta_specs = |rowwise: bool, n_rates: usize, prefix: &str| -> Vec<TensorSpec> {
+            LAYER_NAMES
+                .iter()
+                .map(|w| {
+                    let rows = if rowwise { cfg.layer_shape(w)[0] } else { 1 };
+                    TensorSpec::f32(format!("{prefix}theta_{w}"), &[rows, n_rates - 1])
+                })
+                .collect()
+        };
+        let gamma_specs = || -> Vec<TensorSpec> {
+            LAYER_NAMES.iter().map(|w| TensorSpec::f32(format!("gamma_{w}"), &[2])).collect()
+        };
+
+        // --- embedding / head ------------------------------------------------
+        add(
+            "embed",
+            vec![TensorSpec::i32("tokens", &[b, s]), TensorSpec::f32("emb", &[v, d])],
+            vec![TensorSpec::f32("x", &x3)],
+        );
+        add(
+            "head_nll",
+            vec![
+                TensorSpec::f32("x", &x3),
+                TensorSpec::f32("norm_f", &[d]),
+                TensorSpec::f32("emb", &[v, d]),
+                TensorSpec::i32("tokens", &[b, s]),
+            ],
+            vec![TensorSpec::f32("nll", &[b, s])],
+        );
+
+        // --- block forward (dense / masked / capture) ------------------------
+        let mut base_in = vec![TensorSpec::f32("x", &x3)];
+        base_in.extend(weight_specs(""));
+        base_in.extend(norm_specs(""));
+        add("block_fwd", base_in.clone(), vec![TensorSpec::f32("y", &x3)]);
+        let mut masked_in = base_in.clone();
+        masked_in.extend(
+            LAYER_NAMES
+                .iter()
+                .map(|w| TensorSpec::f32(format!("mask_{w}"), &cfg.layer_shape(w))),
+        );
+        add("block_fwd_masked", masked_in, vec![TensorSpec::f32("y", &x3)]);
+        add(
+            "block_capture",
+            base_in.clone(),
+            vec![
+                TensorSpec::f32("y", &x3),
+                TensorSpec::f32("h1", &x3),
+                TensorSpec::f32("att", &x3),
+                TensorSpec::f32("h2", &x3),
+                TensorSpec::f32("act", &[b, s, f]),
+            ],
+        );
+
+        // --- BESA steps -------------------------------------------------------
+        let besa_inputs = |rowwise: bool, n_rates: usize, quant: bool| -> Vec<TensorSpec> {
+            let mut ins = theta_specs(rowwise, n_rates, "");
+            ins.push(TensorSpec::f32("x_pruned", &x3));
+            ins.push(TensorSpec::f32("y_dense", &x3));
+            ins.extend(weight_specs(""));
+            ins.extend(norm_specs(""));
+            ins.extend(rank_specs(""));
+            ins.push(TensorSpec::f32("lam", &[]));
+            ins.push(TensorSpec::f32("alpha_hat", &[]));
+            if quant {
+                ins.extend(gamma_specs());
+            }
+            ins
+        };
+        let besa_outputs = |quant: bool, rowwise: bool, n_rates: usize| -> Vec<TensorSpec> {
+            let mut outs = vec![
+                TensorSpec::f32("loss", &[]),
+                TensorSpec::f32("recon", &[]),
+                TensorSpec::f32("mean_alpha", &[]),
+            ];
+            outs.extend(LAYER_NAMES.iter().map(|w| {
+                let rows = if rowwise { cfg.layer_shape(w)[0] } else { 1 };
+                TensorSpec::f32(format!("dtheta_{w}"), &[rows, n_rates - 1])
+            }));
+            if quant {
+                outs.extend(
+                    LAYER_NAMES.iter().map(|w| TensorSpec::f32(format!("dgamma_{w}"), &[2])),
+                );
+            }
+            outs
+        };
+        add(
+            "besa_step_row",
+            besa_inputs(true, cfg.n_rates, false),
+            besa_outputs(false, true, cfg.n_rates),
+        );
+        for &alt in &cfg.alt_rates {
+            add(
+                &format!("besa_step_row_d{alt}"),
+                besa_inputs(true, alt, false),
+                besa_outputs(false, true, alt),
+            );
+        }
+        add(
+            "besa_step_layer",
+            besa_inputs(false, cfg.n_rates, false),
+            besa_outputs(false, false, cfg.n_rates),
+        );
+        add(
+            "besa_step_attnmlp",
+            besa_inputs(true, cfg.n_rates, false),
+            besa_outputs(false, true, cfg.n_rates),
+        );
+        add(
+            "besa_quant_step_row",
+            besa_inputs(true, cfg.n_rates, true),
+            besa_outputs(true, true, cfg.n_rates),
+        );
+
+        // --- two-block granularity (Table 6) ----------------------------------
+        let mut tb_in = theta_specs(true, cfg.n_rates, "b0_");
+        tb_in.extend(theta_specs(true, cfg.n_rates, "b1_"));
+        tb_in.push(TensorSpec::f32("x_pruned", &x3));
+        tb_in.push(TensorSpec::f32("y_dense", &x3));
+        tb_in.extend(weight_specs("b0_"));
+        tb_in.extend(weight_specs("b1_"));
+        tb_in.extend(norm_specs("b0_"));
+        tb_in.extend(norm_specs("b1_"));
+        tb_in.extend(rank_specs("b0_"));
+        tb_in.extend(rank_specs("b1_"));
+        tb_in.push(TensorSpec::f32("lam", &[]));
+        tb_in.push(TensorSpec::f32("alpha_hat", &[]));
+        let mut tb_out = vec![
+            TensorSpec::f32("loss", &[]),
+            TensorSpec::f32("recon", &[]),
+            TensorSpec::f32("mean_alpha", &[]),
+        ];
+        for prefix in ["b0_", "b1_"] {
+            tb_out.extend(LAYER_NAMES.iter().map(|w| {
+                TensorSpec::f32(
+                    format!("{prefix}dtheta_{w}"),
+                    &[cfg.layer_shape(w)[0], cfg.n_rates - 1],
+                )
+            }));
+        }
+        add("two_block_step", tb_in, tb_out);
+
+        // --- mask decode + quant apply per distinct layer shape ----------------
+        let mut distinct: Vec<[usize; 2]> = Vec::new();
+        for w in LAYER_NAMES {
+            let sh = cfg.layer_shape(w);
+            if !distinct.contains(&sh) {
+                distinct.push(sh);
+            }
+        }
+        for sh in distinct {
+            let [r, c] = sh;
+            add(
+                &format!("mask_decode_{r}x{c}"),
+                vec![
+                    TensorSpec::f32("theta", &[r, cfg.n_rates - 1]),
+                    TensorSpec::i32("rank", &[r, c]),
+                ],
+                vec![TensorSpec::f32("mask", &[r, c]), TensorSpec::f32("alpha", &[r])],
+            );
+            add(
+                &format!("quant_apply_{r}x{c}"),
+                vec![TensorSpec::f32("w", &[r, c]), TensorSpec::f32("gamma", &[2])],
+                vec![TensorSpec::f32("wq", &[r, c])],
+            );
+        }
+
+        // --- whole-model pretraining step --------------------------------------
+        let mut train_in: Vec<TensorSpec> = cfg
+            .param_order
+            .iter()
+            .map(|n| TensorSpec::f32(n.clone(), &cfg.param_shape(n)))
+            .collect();
+        train_in.push(TensorSpec::i32("tokens", &[b, s]));
+        let mut train_out = vec![TensorSpec::f32("loss", &[])];
+        train_out.extend(
+            cfg.param_order
+                .iter()
+                .map(|n| TensorSpec::f32(format!("d_{n}"), &cfg.param_shape(n))),
+        );
+        add("lm_train_step", train_in, train_out);
+
+        Manifest { dir: PathBuf::new(), config, artifacts }
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -97,13 +339,46 @@ impl Manifest {
 mod tests {
     use super::*;
 
-    fn artifacts_root() -> PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    #[test]
+    fn synthesized_manifest_matches_aot_contract() {
+        let cfg = ModelConfig::builtin("test").unwrap();
+        let m = Manifest::synthesize(cfg);
+        // same counts python/tests/test_aot_manifest.py pins for the real one
+        let b = m.artifact("besa_step_row").unwrap();
+        assert_eq!(b.inputs.len(), 27);
+        assert_eq!(b.outputs.len(), 10);
+        assert_eq!(b.inputs[0].dtype, "float32");
+        assert_eq!(b.inputs[0].shape, vec![32, 15]);
+        let q = m.artifact("besa_quant_step_row").unwrap();
+        assert_eq!(q.inputs.len(), 34);
+        assert_eq!(q.outputs.len(), 17);
+        let tb = m.artifact("two_block_step").unwrap();
+        // 14 thetas + x + y + 14 weights + 4 norms + 14 ranks + lam + alpha_hat
+        assert_eq!(tb.inputs.len(), 50);
+        assert_eq!(tb.outputs.len(), 17);
+        let t = m.artifact("lm_train_step").unwrap();
+        assert_eq!(t.inputs.len(), m.config.param_order.len() + 1);
+        assert_eq!(t.outputs.len(), m.config.param_order.len() + 1);
+        // the three distinct layer shapes of the test config
+        for tag in ["32x32", "88x32", "32x88"] {
+            assert!(m.artifact(&format!("mask_decode_{tag}")).is_ok(), "{tag}");
+            assert!(m.artifact(&format!("quant_apply_{tag}")).is_ok(), "{tag}");
+        }
+        assert!(m.artifact("nonexistent").is_err());
     }
 
     #[test]
-    fn loads_test_manifest() {
-        let root = artifacts_root();
+    fn alt_rates_synthesize_step_variants() {
+        let cfg = ModelConfig::builtin("sm").unwrap();
+        let m = Manifest::synthesize(cfg);
+        let alt = m.artifact("besa_step_row_d8").unwrap();
+        assert_eq!(alt.inputs[0].shape, vec![64, 7]);
+        assert!(m.artifact("besa_step_row_d64").is_ok());
+    }
+
+    #[test]
+    fn loads_test_manifest_when_built() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !root.join("test").exists() {
             eprintln!("skipping: artifacts/test not built");
             return;
@@ -113,7 +388,5 @@ mod tests {
         let b = m.artifact("besa_step_row").unwrap();
         assert_eq!(b.inputs.len(), 27);
         assert_eq!(b.outputs.len(), 10);
-        assert_eq!(b.inputs[0].dtype, "float32");
-        assert!(m.artifact("nonexistent").is_err());
     }
 }

@@ -1,64 +1,146 @@
-//! Execution engine: one PJRT CPU client + a lazily-populated cache of
-//! compiled executables (compile once, execute many — the pruning loop
-//! calls `besa_step` thousands of times).
+//! The execution facade: a [`Backend`] trait with pluggable
+//! implementations, wrapped by [`Engine`] — the single choke point every
+//! consumer (coordinator, pruners, eval, CLI, benches) executes through.
+//!
+//! Backends:
+//! * `native` ([`super::native::NativeBackend`]) — pure-rust interpreter of
+//!   the full artifact op set. Hermetic: specs are synthesized from the
+//!   built-in config table, nothing is read from disk. `Sync`, so the
+//!   coordinator fans minibatches out across threads.
+//! * `pjrt` ([`super::pjrt::PjrtBackend`], behind the `pjrt` cargo
+//!   feature) — compiles AOT HLO-text artifacts once per process and
+//!   executes them through the PJRT C API.
+//!
+//! Selection: `Engine::from_args`-style callers pass a [`BackendKind`];
+//! [`BackendKind::from_env`] reads `BESA_BACKEND=native|pjrt` with native
+//! as the default.
 
-use std::cell::RefCell;
-use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use crate::model::config::ModelConfig;
 use crate::tensor::Tensor;
-use crate::util::Stopwatch;
 
 use super::{ArtifactSpec, Manifest};
 
+/// A pluggable execution backend: everything the pipeline needs to run a
+/// named artifact over host tensors. Implementations must be `Send + Sync`
+/// — the coordinator dispatches calibration minibatches from scoped
+/// threads against one shared backend.
+pub trait Backend: Send + Sync {
+    /// Short stable identifier ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Artifact specs + model config this backend executes against.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute an artifact; inputs are pre-validated against the manifest
+    /// spec by the [`Engine`] facade. Returns outputs in spec order.
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Cumulative (compile_secs, execute_secs, execute_calls).
+    fn stats(&self) -> (f64, f64, u64) {
+        (0.0, 0.0, 0)
+    }
+}
+
+/// Which backend implementation to construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn from_name(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "interp" | "cpu" => Some(BackendKind::Native),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// `BESA_BACKEND` env var, defaulting to the hermetic native backend.
+    pub fn from_env() -> BackendKind {
+        match std::env::var("BESA_BACKEND") {
+            Ok(v) if !v.is_empty() => BackendKind::from_name(&v).unwrap_or_else(|| {
+                crate::warnlog!("unknown BESA_BACKEND '{v}', using native");
+                BackendKind::Native
+            }),
+            _ => BackendKind::Native,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Thin facade over a boxed [`Backend`]: input validation + dispatch.
+/// `Engine` is `Sync`; share it freely across scoped threads.
 pub struct Engine {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
-    /// cumulative (compile_secs, execute_secs, execute_calls) metrics
-    stats: RefCell<(f64, f64, u64)>,
+    backend: Box<dyn Backend>,
 }
 
 impl Engine {
+    /// Construct with an explicit backend kind. `artifacts_root` is
+    /// consulted by the PJRT backend, and by native only as a fallback
+    /// config source for names outside the built-in table (built-in
+    /// names always resolve from the table).
+    pub fn with_backend(
+        kind: BackendKind,
+        artifacts_root: &Path,
+        config: &str,
+    ) -> Result<Engine> {
+        let backend: Box<dyn Backend> = match kind {
+            BackendKind::Native => {
+                Box::new(super::native::NativeBackend::for_config(artifacts_root, config)?)
+            }
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => Box::new(super::pjrt::PjrtBackend::new(artifacts_root, config)?),
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => bail!(
+                "backend 'pjrt' requires building with `--features pjrt` \
+                 (and real xla bindings in place of vendor/xla)"
+            ),
+        };
+        Ok(Engine { backend })
+    }
+
+    /// Backend from the `BESA_BACKEND` env var (default: native).
     pub fn new(artifacts_root: &Path, config: &str) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_root, config)?;
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine {
-            client,
-            manifest,
-            executables: RefCell::new(BTreeMap::new()),
-            stats: RefCell::new((0.0, 0.0, 0)),
-        })
+        Engine::with_backend(BackendKind::from_env(), artifacts_root, config)
     }
 
-    pub fn config(&self) -> &crate::model::config::ModelConfig {
-        &self.manifest.config
+    /// Hermetic native engine for a built-in config — what tests and
+    /// benches use; touches no files.
+    pub fn native(config: &str) -> Result<Engine> {
+        let cfg = ModelConfig::builtin(config)?;
+        Ok(Engine { backend: Box::new(super::native::NativeBackend::new(cfg)) })
     }
 
-    /// Compile (or fetch from cache) an artifact by name.
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.executables.borrow().contains_key(name) {
-            return Ok(());
-        }
-        let spec = self.manifest.artifact(name)?;
-        let sw = Stopwatch::start();
-        let proto = xla::HloModuleProto::from_text_file(&spec.file)
-            .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
-        self.stats.borrow_mut().0 += sw.secs();
-        crate::debuglog!("compiled artifact '{name}' in {:.2}s", sw.secs());
-        self.executables.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
+    /// Wrap an already-constructed backend (custom implementations).
+    pub fn from_backend(backend: Box<dyn Backend>) -> Engine {
+        Engine { backend }
     }
 
-    /// Validate inputs against the manifest spec (shape + dtype).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.backend.manifest().config
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.backend.manifest()
+    }
+
+    /// Validate inputs against the manifest spec (arity + shape + dtype).
     fn validate(&self, spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
         if inputs.len() != spec.inputs.len() {
             bail!(
@@ -93,66 +175,44 @@ impl Engine {
 
     /// Execute an artifact; returns output tensors in manifest order.
     pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        self.ensure_compiled(name)?;
-        let spec = self.manifest.artifact(name)?;
+        let spec = self.backend.manifest().artifact(name)?;
         self.validate(spec, inputs)?;
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let refs: Vec<&xla::Literal> = literals.iter().collect();
-        self.run_literals(name, &refs)
-    }
-
-    /// Execute with pre-converted literals — the hot-loop entry point.
-    /// Callers (e.g. the BESA β-loop) convert loop-invariant tensors once
-    /// per block and pay only the per-step θ conversion (§Perf, L3).
-    pub fn run_literals(&self, name: &str, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
-        self.ensure_compiled(name)?;
-        let spec = self.manifest.artifact(name)?;
-        if literals.len() != spec.inputs.len() {
-            bail!(
-                "artifact '{}' expects {} inputs, got {}",
-                spec.name,
-                spec.inputs.len(),
-                literals.len()
-            );
-        }
-        let sw = Stopwatch::start();
-        let exes = self.executables.borrow();
-        let exe = exes.get(name).unwrap();
-        let result = exe
-            .execute::<&xla::Literal>(literals)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result of {name}: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: output is always a tuple.
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling result of {name}: {e:?}"))?;
-        if parts.len() != spec.outputs.len() {
+        let out = self.backend.run(name, inputs)?;
+        if out.len() != spec.outputs.len() {
             bail!(
                 "artifact '{}' returned {} outputs, manifest says {}",
                 name,
-                parts.len(),
+                out.len(),
                 spec.outputs.len()
             );
-        }
-        let out: Vec<Tensor> =
-            parts.iter().map(Tensor::from_literal).collect::<Result<_>>()?;
-        {
-            let mut st = self.stats.borrow_mut();
-            st.1 += sw.secs();
-            st.2 += 1;
         }
         Ok(out)
     }
 
     /// (compile_secs, execute_secs, execute_calls)
     pub fn stats(&self) -> (f64, f64, u64) {
-        *self.stats.borrow()
+        self.backend.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_names() {
+        assert_eq!(BackendKind::from_name("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::from_name("PJRT"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::from_name("xla"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::from_name("gpu"), None);
+        assert_eq!(BackendKind::Native.name(), "native");
     }
 
-    pub fn compiled_count(&self) -> usize {
-        self.executables.borrow().len()
+    #[test]
+    fn engine_is_sync() {
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<Engine>();
     }
+    // input-validation behavior (arity / shape / dtype / unknown artifact)
+    // is covered end-to-end by tests/integration.rs::engine_rejects_bad_inputs
 }

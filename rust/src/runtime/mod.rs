@@ -1,8 +1,22 @@
-//! PJRT runtime: loads AOT HLO-text artifacts, compiles them once per
-//! process, executes them from the (python-free) hot path.
+//! Pluggable execution runtime.
+//!
+//! Everything above this layer — coordinator, pruners, eval, CLI — talks
+//! to [`Engine`], a thin facade over the [`Backend`] trait:
+//!
+//! * [`native`] — pure-rust interpreter of the full artifact op set, specs
+//!   synthesized from [`crate::model::ModelConfig`]. Default; hermetic.
+//! * [`pjrt`] (cargo feature `pjrt`) — compiles AOT HLO-text artifacts
+//!   once per process and executes them via the PJRT C API.
+//!
+//! Select with `--backend native|pjrt` on the CLI or `BESA_BACKEND` in the
+//! environment.
 
 pub mod artifact;
 pub mod engine;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
-pub use engine::Engine;
+pub use engine::{Backend, BackendKind, Engine};
+pub use native::NativeBackend;

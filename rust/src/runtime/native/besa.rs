@@ -1,0 +1,490 @@
+//! Native implementation of the BESA training-step ops: `besa_step_row`,
+//! `besa_step_layer`, `besa_step_attnmlp`, `besa_step_row_d<N>`,
+//! `besa_quant_step_row`, `two_block_step`, plus the standalone
+//! `mask_decode_*` / `quant_apply_*` helpers.
+//!
+//! Mirrors `python/compile/besa.py` + `kernels/{besa_mask,fake_quant}.py`:
+//! theta -> softmax beta (beta_D pinned to 0) -> exclusive-cumsum keep
+//! probabilities -> hard STE mask -> masked block forward -> blockwise
+//! reconstruction + per-group sparsity penalty -> gradients w.r.t. theta
+//! (and gamma). The straight-through backward routes mask cotangents into
+//! cumbeta buckets (Eqn. 6); alpha only receives gradient through the
+//! differentiable sparsity penalty.
+
+use anyhow::{bail, Result};
+
+use crate::model::config::{ModelConfig, LAYER_NAMES};
+use crate::tensor::Tensor;
+
+use super::{block, ops};
+
+/// Which layers share one sparsity constraint (paper Table 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Grouping {
+    Block,
+    AttnMlp,
+}
+
+const ATTN: [usize; 4] = [0, 1, 2, 3]; // wq wk wv wo
+const MLP: [usize; 3] = [4, 5, 6]; // wg wu wd
+
+// ---------------------------------------------------------------------------
+// theta chain: softmax -> (beta, cumbeta, alpha)
+// ---------------------------------------------------------------------------
+
+/// Per-layer theta state after the forward chain. `rows` is the broadcast
+/// row count R (theta itself may have 1 row, layer-wise).
+pub struct ThetaChain {
+    pub theta_rows: usize,
+    pub rows: usize,
+    pub n_rates: usize,
+    /// softmax(theta) with beta_D = 0 appended — `[theta_rows, D]`
+    pub beta: Vec<f64>,
+    /// exclusive cumsum of beta — `[theta_rows, D]`
+    pub cumb: Vec<f64>,
+    /// per-row expected sparsity `sum_d beta_d p_d` — `[theta_rows]`
+    pub alpha: Vec<f64>,
+}
+
+impl ThetaChain {
+    pub fn cumb_row(&self, r: usize) -> &[f64] {
+        let tr = if self.theta_rows == 1 { 0 } else { r };
+        &self.cumb[tr * self.n_rates..(tr + 1) * self.n_rates]
+    }
+
+    pub fn alpha_row(&self, r: usize) -> f64 {
+        self.alpha[if self.theta_rows == 1 { 0 } else { r }]
+    }
+
+    /// Sum of alpha over the broadcast rows.
+    pub fn alpha_sum(&self) -> f64 {
+        if self.theta_rows == 1 {
+            self.alpha[0] * self.rows as f64
+        } else {
+            self.alpha.iter().sum()
+        }
+    }
+}
+
+/// Forward the theta chain (f64 internally, mirroring decode_mask).
+pub fn theta_chain(theta: &Tensor, rows: usize, n_rates: usize) -> ThetaChain {
+    let theta_rows = theta.shape[0];
+    let dm1 = theta.shape[1];
+    debug_assert_eq!(dm1 + 1, n_rates);
+    let mut beta = vec![0.0f64; theta_rows * n_rates];
+    let mut cumb = vec![0.0f64; theta_rows * n_rates];
+    let mut alpha = vec![0.0f64; theta_rows];
+    for r in 0..theta_rows {
+        let logits = &theta.f32s()[r * dm1..(r + 1) * dm1];
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let brow = &mut beta[r * n_rates..(r + 1) * n_rates];
+        let mut z = 0.0f64;
+        for (d, l) in logits.iter().enumerate() {
+            brow[d] = ((*l as f64) - mx).exp();
+            z += brow[d];
+        }
+        for b in brow[..dm1].iter_mut() {
+            *b /= z;
+        }
+        brow[n_rates - 1] = 0.0;
+        let crow = &mut cumb[r * n_rates..(r + 1) * n_rates];
+        crow[0] = 0.0;
+        for d in 1..n_rates {
+            crow[d] = crow[d - 1] + beta[r * n_rates + d - 1];
+        }
+        let mut a = 0.0f64;
+        for (d, b) in beta[r * n_rates..(r + 1) * n_rates].iter().enumerate() {
+            a += b * (d + 1) as f64 / n_rates as f64;
+        }
+        alpha[r] = a;
+    }
+    ThetaChain { theta_rows, rows, n_rates, beta, cumb, alpha }
+}
+
+/// Backward of the theta chain: given cotangents for cumb (`[rows, D]`)
+/// and alpha (`[rows]`), return dtheta (`[theta_rows, D-1]`).
+///
+/// gbeta_d = sum_{k > d} gcumb_k + galpha * p_d, then softmax backward
+/// over the first D-1 entries (beta_D is the pinned zero). Broadcast
+/// (theta_rows == 1) sums the per-row gradients first.
+pub fn theta_chain_bwd(
+    tc: &ThetaChain,
+    gcumb: &[f64],
+    galpha: &[f64],
+) -> Vec<f32> {
+    let (rows, nr) = (tc.rows, tc.n_rates);
+    debug_assert_eq!(gcumb.len(), rows * nr);
+    debug_assert_eq!(galpha.len(), rows);
+    // accumulate gbeta per broadcast-source row
+    let mut gbeta = vec![0.0f64; tc.theta_rows * nr];
+    for r in 0..rows {
+        let tr = if tc.theta_rows == 1 { 0 } else { r };
+        let gc = &gcumb[r * nr..(r + 1) * nr];
+        let gb = &mut gbeta[tr * nr..(tr + 1) * nr];
+        // suffix sums: gbeta[d] += sum_{k>d} gc[k]
+        let mut suf = 0.0f64;
+        for d in (0..nr).rev() {
+            gb[d] += suf + galpha[r] * (d + 1) as f64 / nr as f64;
+            suf += gc[d];
+        }
+    }
+    // softmax backward per theta row over the first D-1 entries
+    let dm1 = nr - 1;
+    let mut dtheta = vec![0.0f32; tc.theta_rows * dm1];
+    for r in 0..tc.theta_rows {
+        let b = &tc.beta[r * nr..r * nr + dm1];
+        let gb = &gbeta[r * nr..r * nr + dm1];
+        let dot: f64 = b.iter().zip(gb).map(|(x, y)| x * y).sum();
+        for d in 0..dm1 {
+            dtheta[r * dm1 + d] = (b[d] * (gb[d] - dot)) as f32;
+        }
+    }
+    dtheta
+}
+
+// ---------------------------------------------------------------------------
+// STE mask
+// ---------------------------------------------------------------------------
+
+/// Bucket index k(r) = min(floor(rank * D / C), D-1).
+#[inline]
+pub fn bucket(rank: i32, cols: usize, n_rates: usize) -> usize {
+    ((rank as usize * n_rates) / cols).min(n_rates - 1)
+}
+
+/// Hard mask + per-row alpha from a theta chain and ranks (`[R, C]` i32).
+/// mask_ij = 1 iff (1 - cumb[k(rank_ij)]) < alpha_i.
+pub fn hard_mask(tc: &ThetaChain, ranks: &Tensor) -> Vec<f32> {
+    let (r, c) = (ranks.shape[0], ranks.shape[1]);
+    debug_assert_eq!(r, tc.rows);
+    let mut mask = vec![0.0f32; r * c];
+    for i in 0..r {
+        let crow = tc.cumb_row(i);
+        let alpha = tc.alpha_row(i);
+        for j in 0..c {
+            let k = bucket(ranks.i32s()[i * c + j], c, tc.n_rates);
+            let prune_prob = 1.0 - crow[k];
+            mask[i * c + j] = if prune_prob < alpha { 1.0 } else { 0.0 };
+        }
+    }
+    mask
+}
+
+/// STE backward: route the mask cotangent into cumbeta buckets.
+/// gcumb[i, d] = sum_j gmask[i, j] * 1[k(rank_ij) == d]
+pub fn mask_bwd_to_cumb(ranks: &Tensor, gmask: &[f32], n_rates: usize) -> Vec<f64> {
+    let (r, c) = (ranks.shape[0], ranks.shape[1]);
+    let mut gcumb = vec![0.0f64; r * n_rates];
+    for i in 0..r {
+        let row = &mut gcumb[i * n_rates..(i + 1) * n_rates];
+        for j in 0..c {
+            let k = bucket(ranks.i32s()[i * c + j], c, n_rates);
+            row[k] += gmask[i * c + j] as f64;
+        }
+    }
+    gcumb
+}
+
+// ---------------------------------------------------------------------------
+// fake quantization (Eqn. 7) + clipping-strength gradients
+// ---------------------------------------------------------------------------
+
+/// Forward min-max fake quantization — identical to `quant::fake_quant`
+/// and `kernels/ref.py::fake_quant_ref` with bits=4 by default.
+pub fn fake_quant_fwd(w: &[f32], gamma0: f32, gamma1: f32, bits: u32) -> Vec<f32> {
+    let qmax = (2f64.powi(bits as i32) - 1.0) as f32;
+    let mw = w.iter().cloned().fold(f32::INFINITY, f32::min);
+    let mxw = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let wmin = gamma0 * mw;
+    let wmax = gamma1 * mxw;
+    let h = ((wmax - wmin) / qmax).max(1e-8);
+    let z = (-wmin / h).round();
+    w.iter()
+        .map(|v| {
+            let q = ((v / h).round() + z).clamp(0.0, qmax);
+            (q - z) * h
+        })
+        .collect()
+}
+
+/// d(STE surrogate)/d(gamma0, gamma1): the round ops are treated as
+/// identity, matching `kernels/fake_quant.py::_soft_fake_quant`'s vjp.
+pub fn fake_quant_gamma_bwd(
+    w: &[f32],
+    gamma0: f32,
+    gamma1: f32,
+    gout: &[f32],
+    bits: u32,
+) -> (f32, f32) {
+    let qmax = 2f64.powi(bits as i32) - 1.0;
+    let mw = w.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let mxw = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let a0 = gamma0 as f64 * mw;
+    let a1 = gamma1 as f64 * mxw;
+    let raw_h = (a1 - a0) / qmax;
+    let floored = raw_h <= 1e-8;
+    let h = raw_h.max(1e-8);
+    let z = -a0 / h;
+    let (dh0, dh1) = if floored { (0.0, 0.0) } else { (-1.0 / qmax, 1.0 / qmax) };
+    let dz0 = -1.0 / h + a0 / (h * h) * dh0;
+    let dz1 = a0 / (h * h) * dh1;
+    let (mut da0, mut da1) = (0.0f64, 0.0f64);
+    for (v, g) in w.iter().zip(gout) {
+        let wv = *v as f64;
+        let gv = *g as f64;
+        let u = wv / h + z;
+        let inside = (0.0..=qmax).contains(&u);
+        let c = u.clamp(0.0, qmax);
+        for (dh, dz, acc) in [(dh0, dz0, &mut da0), (dh1, dz1, &mut da1)] {
+            let du = -wv / (h * h) * dh + dz;
+            let dc = if inside { du } else { 0.0 };
+            let dout = (dc - dz) * h + (c - z) * dh;
+            *acc += gv * dout;
+        }
+    }
+    ((da0 * mw) as f32, (da1 * mxw) as f32)
+}
+
+// ---------------------------------------------------------------------------
+// besa_step / two_block_step drivers
+// ---------------------------------------------------------------------------
+
+struct LayerCtx {
+    chain: ThetaChain,
+    mask: Vec<f32>,
+    cols: usize,
+    rows: usize,
+}
+
+fn layer_contexts(
+    cfg: &ModelConfig,
+    thetas: &[&Tensor],
+    ranks: &[&Tensor],
+    n_rates: usize,
+) -> Vec<LayerCtx> {
+    LAYER_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let [r, c] = cfg.layer_shape(w);
+            let chain = theta_chain(thetas[i], r, n_rates);
+            let mask = hard_mask(&chain, ranks[i]);
+            LayerCtx { chain, mask, cols: c, rows: r }
+        })
+        .collect()
+}
+
+/// One `besa_step` execution: returns
+/// `[loss, recon, mean_alpha, dtheta x7, (dgamma x7)]`.
+#[allow(clippy::too_many_arguments)]
+pub fn besa_step(
+    cfg: &ModelConfig,
+    inputs: &[&Tensor],
+    n_rates: usize,
+    grouping: Grouping,
+    quant: bool,
+) -> Result<Vec<Tensor>> {
+    // positional layout (aot.py besa_inputs): theta7, x, y, w7, norms2,
+    // rank7, lam, alpha_hat, [gamma7]
+    let thetas = &inputs[0..7];
+    let x = inputs[7];
+    let y_dense = inputs[8];
+    let weights = &inputs[9..16];
+    let norms = [inputs[16].f32s().to_vec(), inputs[17].f32s().to_vec()];
+    let ranks = &inputs[18..25];
+    let lam = inputs[25].scalar_value() as f64;
+    let alpha_hat = inputs[26].scalar_value() as f64;
+    let gammas: Option<&[&Tensor]> = if quant { Some(&inputs[27..34]) } else { None };
+
+    let layers = layer_contexts(cfg, thetas, ranks, n_rates);
+
+    // effective weights: (fake-quantized) W ∘ hard mask
+    let qweights: Vec<Vec<f32>> = LAYER_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, _)| match gammas {
+            Some(gm) => fake_quant_fwd(
+                weights[i].f32s(),
+                gm[i].f32s()[0],
+                gm[i].f32s()[1],
+                4,
+            ),
+            None => weights[i].f32s().to_vec(),
+        })
+        .collect();
+    let mut eff: [Vec<f32>; 7] = Default::default();
+    for i in 0..7 {
+        eff[i] = ops::hadamard(&qweights[i], &layers[i].mask);
+    }
+
+    let (y, saved, _) = block::forward(cfg, x.f32s(), eff, norms, true, false);
+    let saved = saved.unwrap();
+
+    // recon = sum((y - y_dense)^2) / max(sum(y_dense^2), 1e-9)
+    let denom = ops::sq_sum(y_dense.f32s()).max(1e-9);
+    let recon = ops::sq_diff_sum(&y, y_dense.f32s()) / denom;
+
+    // sparsity penalty per group + mean alpha
+    let group_term = |idx: &[usize]| -> (f64, f64, f64) {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for &i in idx {
+            num += layers[i].chain.alpha_sum() * layers[i].cols as f64;
+            den += (layers[i].rows * layers[i].cols) as f64;
+        }
+        (num / den - alpha_hat, num, den)
+    };
+    let groups: Vec<Vec<usize>> = match grouping {
+        Grouping::Block => vec![(0..7).collect()],
+        Grouping::AttnMlp => vec![ATTN.to_vec(), MLP.to_vec()],
+    };
+    let mut sparse = 0.0f64;
+    for g in &groups {
+        let (dev, _, _) = group_term(g);
+        sparse += dev * dev;
+    }
+    let (_, mean_num, mean_den) = group_term(&(0..7).collect::<Vec<_>>());
+    let mean_alpha = mean_num / mean_den;
+    let loss = recon + lam * sparse;
+
+    // ---- backward -------------------------------------------------------
+    // d recon / d y
+    let gy: Vec<f32> = y
+        .iter()
+        .zip(y_dense.f32s())
+        .map(|(a, b)| ((2.0 * ((*a as f64) - (*b as f64))) / denom) as f32)
+        .collect();
+    let grads = block::backward(cfg, &saved, &gy);
+
+    // per-group alpha cotangent coefficient: 2 lam (ag - alpha_hat) / den_g
+    let mut galpha_coef = [0.0f64; 7];
+    for g in &groups {
+        let (dev, _, den) = group_term(g);
+        for &i in g {
+            galpha_coef[i] = 2.0 * lam * dev * layers[i].cols as f64 / den;
+        }
+    }
+
+    let mut out = vec![
+        Tensor::scalar(loss as f32),
+        Tensor::scalar(recon as f32),
+        Tensor::scalar(mean_alpha as f32),
+    ];
+    let mut dgammas: Vec<Tensor> = Vec::new();
+    for i in 0..7 {
+        let lc = &layers[i];
+        // dL/dmask = gw_eff ∘ (quantized) W ; STE -> cumbeta buckets
+        let gmask = ops::hadamard(&grads.gw_eff[i], &qweights[i]);
+        let gcumb = mask_bwd_to_cumb(ranks[i], &gmask, n_rates);
+        let galpha = vec![galpha_coef[i]; lc.rows];
+        let dtheta = theta_chain_bwd(&lc.chain, &gcumb, &galpha);
+        out.push(Tensor::from_f32(&[lc.chain.theta_rows, n_rates - 1], dtheta));
+        if let Some(gm) = gammas {
+            // dL/d(quantized W) = gw_eff ∘ mask, then through fake_quant
+            let gqw = ops::hadamard(&grads.gw_eff[i], &lc.mask);
+            let (d0, d1) = fake_quant_gamma_bwd(
+                weights[i].f32s(),
+                gm[i].f32s()[0],
+                gm[i].f32s()[1],
+                &gqw,
+                4,
+            );
+            dgammas.push(Tensor::from_f32(&[2], vec![d0, d1]));
+        }
+    }
+    out.extend(dgammas);
+    Ok(out)
+}
+
+/// `two_block_step`: two chained blocks, one sparsity constraint over all
+/// 14 layers. Returns `[loss, recon, mean_alpha, b0_dtheta x7, b1_dtheta x7]`.
+pub fn two_block_step(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let nr = cfg.n_rates;
+    // layout: b0_theta7, b1_theta7, x, y, b0_w7, b1_w7, b0_norms2,
+    // b1_norms2, b0_rank7, b1_rank7, lam, alpha_hat
+    let thetas = [&inputs[0..7], &inputs[7..14]];
+    let x = inputs[14];
+    let y_dense = inputs[15];
+    let weights = [&inputs[16..23], &inputs[23..30]];
+    let norms = [&inputs[30..32], &inputs[32..34]];
+    let ranks = [&inputs[34..41], &inputs[41..48]];
+    let lam = inputs[48].scalar_value() as f64;
+    let alpha_hat = inputs[49].scalar_value() as f64;
+
+    let mut layer_ctx: Vec<Vec<LayerCtx>> = Vec::with_capacity(2);
+    let mut saves = Vec::with_capacity(2);
+    let mut cur = x.f32s().to_vec();
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for b in 0..2 {
+        let layers = layer_contexts(cfg, thetas[b], ranks[b], nr);
+        let mut eff: [Vec<f32>; 7] = Default::default();
+        for i in 0..7 {
+            eff[i] = ops::hadamard(weights[b][i].f32s(), &layers[i].mask);
+            num += layers[i].chain.alpha_sum() * layers[i].cols as f64;
+            den += (layers[i].rows * layers[i].cols) as f64;
+        }
+        let nb = [norms[b][0].f32s().to_vec(), norms[b][1].f32s().to_vec()];
+        let (y, sv, _) = block::forward(cfg, &cur, eff, nb, true, false);
+        cur = y;
+        saves.push(sv.unwrap());
+        layer_ctx.push(layers);
+    }
+    let denom = ops::sq_sum(y_dense.f32s()).max(1e-9);
+    let recon = ops::sq_diff_sum(&cur, y_dense.f32s()) / denom;
+    let mean_alpha = num / den;
+    let loss = recon + lam * (mean_alpha - alpha_hat) * (mean_alpha - alpha_hat);
+
+    // backward through both blocks
+    let mut gy: Vec<f32> = cur
+        .iter()
+        .zip(y_dense.f32s())
+        .map(|(a, b)| ((2.0 * ((*a as f64) - (*b as f64))) / denom) as f32)
+        .collect();
+    let galpha_scale = 2.0 * lam * (mean_alpha - alpha_hat) / den;
+    let mut dthetas: [Vec<Tensor>; 2] = Default::default();
+    for b in (0..2).rev() {
+        let grads = block::backward(cfg, &saves[b], &gy);
+        for i in 0..7 {
+            let lc = &layer_ctx[b][i];
+            let gmask = ops::hadamard(&grads.gw_eff[i], weights[b][i].f32s());
+            let gcumb = mask_bwd_to_cumb(ranks[b][i], &gmask, nr);
+            let galpha = vec![galpha_scale * lc.cols as f64; lc.rows];
+            let dtheta = theta_chain_bwd(&lc.chain, &gcumb, &galpha);
+            dthetas[b].push(Tensor::from_f32(&[lc.rows, nr - 1], dtheta));
+        }
+        gy = grads.gx;
+    }
+
+    let mut out = vec![
+        Tensor::scalar(loss as f32),
+        Tensor::scalar(recon as f32),
+        Tensor::scalar(mean_alpha as f32),
+    ];
+    let [d0, d1] = dthetas;
+    out.extend(d0);
+    out.extend(d1);
+    Ok(out)
+}
+
+/// `mask_decode_<RxC>`: (theta, rank) -> (hard mask, per-row alpha).
+pub fn mask_decode(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let theta = inputs[0];
+    let ranks = inputs[1];
+    let (r, c) = (ranks.shape[0], ranks.shape[1]);
+    let chain = theta_chain(theta, r, cfg.n_rates);
+    let mask = hard_mask(&chain, ranks);
+    let alpha: Vec<f32> = (0..r).map(|i| chain.alpha_row(i) as f32).collect();
+    Ok(vec![Tensor::from_f32(&[r, c], mask), Tensor::from_f32(&[r], alpha)])
+}
+
+/// `quant_apply_<RxC>`: (w, gamma[2]) -> 4-bit fake-quantized w.
+pub fn quant_apply(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let w = inputs[0];
+    let gamma = inputs[1].f32s();
+    if gamma.len() != 2 {
+        bail!("quant_apply expects gamma of shape [2]");
+    }
+    let q = fake_quant_fwd(w.f32s(), gamma[0], gamma[1], 4);
+    Ok(vec![Tensor::from_f32(&w.shape, q)])
+}

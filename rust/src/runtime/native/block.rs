@@ -1,0 +1,202 @@
+//! One transformer block of the native interpreter — forward (dense,
+//! masked, capture) and the hand-derived backward used by `besa_step*`,
+//! `two_block_step` and `lm_train_step`.
+//!
+//! Mirrors `python/compile/model.py::block_forward`: pre-norm attention
+//! with RoPE, SwiGLU MLP, residuals, `W[out, in]` weights applied as
+//! `x @ (W ∘ M)^T`.
+
+use anyhow::Result;
+
+use crate::model::config::ModelConfig;
+use crate::tensor::Tensor;
+
+use super::ops;
+
+/// Forward state kept for the backward pass. All activations are flat
+/// row-major `[B*S, ·]` slices; `eff` holds the effective (masked,
+/// possibly quantized) weights actually used by the linears.
+pub struct BlockSaved {
+    pub x: Vec<f32>,
+    pub h1: Vec<f32>,
+    pub attout: Vec<f32>,
+    pub x2: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub gate: Vec<f32>,
+    pub up: Vec<f32>,
+    pub act: Vec<f32>,
+    pub attn: ops::AttnSaved,
+    /// effective weights in LAYER_NAMES order
+    pub eff: [Vec<f32>; 7],
+    pub norms: [Vec<f32>; 2],
+}
+
+/// Gradients produced by [`backward`]. `gw_eff[l]` is the gradient w.r.t.
+/// the *effective* weight of layer `l` (callers turn it into a mask
+/// gradient via `∘ W` or a weight gradient via `∘ M`).
+pub struct BlockGrads {
+    pub gx: Vec<f32>,
+    pub gw_eff: [Vec<f32>; 7],
+    pub gnorm1: Vec<f32>,
+    pub gnorm2: Vec<f32>,
+}
+
+/// Captured linear-layer inputs (h1, att, h2, act) for Wanda/SparseGPT.
+pub struct Capture {
+    pub h1: Vec<f32>,
+    pub att: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub act: Vec<f32>,
+}
+
+/// Effective weights: `W ∘ M` when masks are given, else a copy of `W`.
+pub fn effective_weights(weights: &[&Tensor], masks: Option<&[Vec<f32>]>) -> [Vec<f32>; 7] {
+    let mut out: [Vec<f32>; 7] = Default::default();
+    for i in 0..7 {
+        out[i] = match masks {
+            Some(ms) => ops::hadamard(weights[i].f32s(), &ms[i]),
+            None => weights[i].f32s().to_vec(),
+        };
+    }
+    out
+}
+
+/// Run one block. `eff` are the effective weights (LAYER_NAMES order),
+/// `norms` the two RMSNorm gains. Returns `y` plus optional saved state
+/// and optional capture tensors.
+pub fn forward(
+    cfg: &ModelConfig,
+    x: &[f32],
+    eff: [Vec<f32>; 7],
+    norms: [Vec<f32>; 2],
+    save: bool,
+    capture: bool,
+) -> (Vec<f32>, Option<BlockSaved>, Option<Capture>) {
+    let (d, f) = (cfg.d_model, cfg.d_ffn);
+    let n = cfg.batch * cfg.seq_len; // token rows
+    let eps = cfg.norm_eps;
+    let [wq, wk, wv, wo, wg, wu, wd] = &eff;
+
+    let h1 = ops::rmsnorm(x, &norms[0], d, eps);
+    let q = ops::mm_nt(&h1, wq, n, d, d);
+    let k = ops::mm_nt(&h1, wk, n, d, d);
+    let v = ops::mm_nt(&h1, wv, n, d, d);
+    let (attout, attn_saved) = ops::attention(&q, &k, &v, cfg, save);
+    let o = ops::mm_nt(&attout, wo, n, d, d);
+    let x2: Vec<f32> = x.iter().zip(&o).map(|(a, b)| a + b).collect();
+    let h2 = ops::rmsnorm(&x2, &norms[1], d, eps);
+    let gate = ops::mm_nt(&h2, wg, n, d, f);
+    let up = ops::mm_nt(&h2, wu, n, d, f);
+    let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| ops::silu(*g) * u).collect();
+    let down = ops::mm_nt(&act, wd, n, f, d);
+    let y: Vec<f32> = x2.iter().zip(&down).map(|(a, b)| a + b).collect();
+
+    let cap = capture.then(|| Capture {
+        h1: h1.clone(),
+        att: attout.clone(),
+        h2: h2.clone(),
+        act: act.clone(),
+    });
+    let saved = if save {
+        Some(BlockSaved {
+            x: x.to_vec(),
+            h1,
+            attout,
+            x2,
+            h2,
+            gate,
+            up,
+            act,
+            attn: attn_saved.unwrap(),
+            eff,
+            norms,
+        })
+    } else {
+        None
+    };
+    (y, saved, cap)
+}
+
+/// Backward through one block given `gy = dL/dy`.
+pub fn backward(cfg: &ModelConfig, sv: &BlockSaved, gy: &[f32]) -> BlockGrads {
+    let (d, f) = (cfg.d_model, cfg.d_ffn);
+    let n = cfg.batch * cfg.seq_len;
+    let eps = cfg.norm_eps;
+    let [wq, wk, wv, wo, wg, wu, wd] = &sv.eff;
+
+    // y = x2 + down
+    let g_down = gy;
+    let gwd = ops::mm_tn(g_down, &sv.act, n, d, f);
+    let g_act = ops::mm_nn(g_down, wd, n, d, f);
+    // act = silu(gate) * up
+    let mut g_gate = vec![0.0f32; n * f];
+    let mut g_up = vec![0.0f32; n * f];
+    for i in 0..n * f {
+        g_gate[i] = g_act[i] * sv.up[i] * ops::silu_grad(sv.gate[i]);
+        g_up[i] = g_act[i] * ops::silu(sv.gate[i]);
+    }
+    let gwg = ops::mm_tn(&g_gate, &sv.h2, n, f, d);
+    let gwu = ops::mm_tn(&g_up, &sv.h2, n, f, d);
+    let mut g_h2 = ops::mm_nn(&g_gate, wg, n, f, d);
+    for (a, b) in g_h2.iter_mut().zip(ops::mm_nn(&g_up, wu, n, f, d)) {
+        *a += b;
+    }
+    let (gx2_rms, gnorm2) = ops::rmsnorm_bwd(&sv.x2, &sv.norms[1], &g_h2, d, eps);
+    // total gradient at x2: direct residual (gy) + through h2
+    let g_x2: Vec<f32> = gy.iter().zip(&gx2_rms).map(|(a, b)| a + b).collect();
+
+    // x2 = x + o
+    let g_o = &g_x2;
+    let gwo = ops::mm_tn(g_o, &sv.attout, n, d, d);
+    let g_attout = ops::mm_nn(g_o, wo, n, d, d);
+    let (gq, gk, gv) = ops::attention_bwd(&sv.attn, &g_attout, cfg);
+    let gwq = ops::mm_tn(&gq, &sv.h1, n, d, d);
+    let gwk = ops::mm_tn(&gk, &sv.h1, n, d, d);
+    let gwv = ops::mm_tn(&gv, &sv.h1, n, d, d);
+    let mut g_h1 = ops::mm_nn(&gq, wq, n, d, d);
+    for (a, b) in g_h1.iter_mut().zip(ops::mm_nn(&gk, wk, n, d, d)) {
+        *a += b;
+    }
+    for (a, b) in g_h1.iter_mut().zip(ops::mm_nn(&gv, wv, n, d, d)) {
+        *a += b;
+    }
+    let (gx1_rms, gnorm1) = ops::rmsnorm_bwd(&sv.x, &sv.norms[0], &g_h1, d, eps);
+    let gx: Vec<f32> = g_x2.iter().zip(&gx1_rms).map(|(a, b)| a + b).collect();
+
+    BlockGrads {
+        gx,
+        gw_eff: [gwq, gwk, gwv, gwo, gwg, gwu, gwd],
+        gnorm1,
+        gnorm2,
+    }
+}
+
+/// Convenience used by the `block_fwd*` / `block_capture` dispatch:
+/// assemble inputs from positional tensors.
+pub fn run_block_op(
+    cfg: &ModelConfig,
+    inputs: &[&Tensor],
+    masked: bool,
+    capture: bool,
+) -> Result<Vec<Tensor>> {
+    let x = inputs[0].f32s();
+    let weights = &inputs[1..8];
+    let norms = [inputs[8].f32s().to_vec(), inputs[9].f32s().to_vec()];
+    let eff = if masked {
+        let masks: Vec<Vec<f32>> = inputs[10..17].iter().map(|m| m.f32s().to_vec()).collect();
+        effective_weights(weights, Some(&masks))
+    } else {
+        effective_weights(weights, None)
+    };
+    let (y, _, cap) = forward(cfg, x, eff, norms, false, capture);
+    let x3 = [cfg.batch, cfg.seq_len, cfg.d_model];
+    let mut out = vec![Tensor::from_f32(&x3, y)];
+    if capture {
+        let c = cap.unwrap();
+        out.push(Tensor::from_f32(&x3, c.h1));
+        out.push(Tensor::from_f32(&x3, c.att));
+        out.push(Tensor::from_f32(&x3, c.h2));
+        out.push(Tensor::from_f32(&[cfg.batch, cfg.seq_len, cfg.d_ffn], c.act));
+    }
+    Ok(out)
+}

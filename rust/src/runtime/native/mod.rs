@@ -1,0 +1,136 @@
+//! The pure-rust native execution backend: interprets the full artifact op
+//! set (`embed`, `block_fwd*`, `block_capture`, `besa_step*`,
+//! `two_block_step`, `lm_train_step`, `head_nll`, `mask_decode_*`,
+//! `quant_apply_*`) directly on the [`crate::tensor`] substrate, with
+//! specs synthesized from the built-in config table — no `manifest.json`,
+//! no HLO artifacts, no XLA shared library.
+//!
+//! The backend is stateless apart from cumulative timing metrics, hence
+//! `Sync`: the coordinator shares one instance across scoped threads for
+//! batch-parallel minibatch dispatch.
+
+pub mod besa;
+pub mod block;
+pub mod ops;
+pub mod train;
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::model::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::Stopwatch;
+
+use super::engine::Backend;
+use super::Manifest;
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    /// cumulative (execute_secs, execute_calls)
+    stats: Mutex<(f64, u64)>,
+}
+
+impl NativeBackend {
+    /// Build from an in-memory config (specs are synthesized).
+    pub fn new(cfg: ModelConfig) -> NativeBackend {
+        NativeBackend { manifest: Manifest::synthesize(cfg), stats: Mutex::new((0.0, 0)) }
+    }
+
+    /// Resolve `config` by name: the built-in table first; if unknown,
+    /// fall back to reading the config section of an artifact manifest
+    /// under `artifacts_root` (custom configs lowered by aot.py).
+    pub fn for_config(artifacts_root: &Path, config: &str) -> Result<NativeBackend> {
+        let cfg = match ModelConfig::builtin(config) {
+            Ok(c) => c,
+            Err(builtin_err) => match Manifest::load(artifacts_root, config) {
+                Ok(m) => m.config,
+                Err(_) => return Err(builtin_err),
+            },
+        };
+        Ok(NativeBackend::new(cfg))
+    }
+
+    fn dispatch(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let cfg = &self.manifest.config;
+        match name {
+            "embed" => train::embed(cfg, inputs),
+            "head_nll" => train::head_nll(cfg, inputs),
+            "block_fwd" => block::run_block_op(cfg, inputs, false, false),
+            "block_fwd_masked" => block::run_block_op(cfg, inputs, true, false),
+            "block_capture" => block::run_block_op(cfg, inputs, false, true),
+            "lm_train_step" => train::lm_train_step(cfg, inputs),
+            "two_block_step" => besa::two_block_step(cfg, inputs),
+            "besa_step_row" => {
+                besa::besa_step(cfg, inputs, cfg.n_rates, besa::Grouping::Block, false)
+            }
+            "besa_step_layer" => {
+                besa::besa_step(cfg, inputs, cfg.n_rates, besa::Grouping::Block, false)
+            }
+            "besa_step_attnmlp" => {
+                besa::besa_step(cfg, inputs, cfg.n_rates, besa::Grouping::AttnMlp, false)
+            }
+            "besa_quant_step_row" => {
+                besa::besa_step(cfg, inputs, cfg.n_rates, besa::Grouping::Block, true)
+            }
+            other => {
+                if let Some(dstr) = other.strip_prefix("besa_step_row_d") {
+                    let d: usize = dstr
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad rate-count suffix in '{other}'"))?;
+                    return besa::besa_step(cfg, inputs, d, besa::Grouping::Block, false);
+                }
+                if other.starts_with("mask_decode_") {
+                    return besa::mask_decode(cfg, inputs);
+                }
+                if other.starts_with("quant_apply_") {
+                    return besa::quant_apply(inputs);
+                }
+                bail!("native backend: unimplemented artifact '{other}'")
+            }
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let sw = Stopwatch::start();
+        let out = self.dispatch(name, inputs)?;
+        let mut st = self.stats.lock().unwrap();
+        st.0 += sw.secs();
+        st.1 += 1;
+        Ok(out)
+    }
+
+    fn stats(&self) -> (f64, f64, u64) {
+        let st = self.stats.lock().unwrap();
+        (0.0, st.0, st.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NativeBackend>();
+    }
+
+    #[test]
+    fn resolves_builtin_configs() {
+        let b = NativeBackend::for_config(Path::new("artifacts"), "test").unwrap();
+        assert_eq!(b.manifest().config.name, "test");
+        assert!(NativeBackend::for_config(Path::new("artifacts"), "zz").is_err());
+    }
+}

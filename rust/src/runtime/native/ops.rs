@@ -1,0 +1,373 @@
+//! Math primitives of the native interpreter: (masked) matmul, RMSNorm,
+//! RoPE, causal attention, SiLU — forward *and* hand-derived backward.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` and
+//! `python/compile/model.py` (f32 arithmetic, f32 accumulation, Wanda
+//! `W[out, in]` weight convention applied as `x @ W.T`). Every backward
+//! here was validated against central finite differences before being
+//! transliterated (see tests in `tests/native_parity.rs`).
+
+use crate::model::config::ModelConfig;
+
+// ---------------------------------------------------------------------------
+// matmul family (row-major slices)
+// ---------------------------------------------------------------------------
+
+/// `y[M,N] = x[M,K] @ w[N,K]^T` — the linear layer (both operands
+/// K-contiguous, the cache-friendly orientation).
+pub fn mm_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    let mut y = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xi = &x[i * k..(i + 1) * k];
+        let yi = &mut y[i * n..(i + 1) * n];
+        for (j, yj) in yi.iter_mut().enumerate() {
+            let wj = &w[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (a, b) in xi.iter().zip(wj) {
+                acc += a * b;
+            }
+            *yj = acc;
+        }
+    }
+    y
+}
+
+/// `dx[M,K] = g[M,N] @ w[N,K]` — input gradient of the linear layer.
+pub fn mm_nn(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), n * k);
+    let mut dx = vec![0.0f32; m * k];
+    for i in 0..m {
+        let gi = &g[i * n..(i + 1) * n];
+        let di = &mut dx[i * k..(i + 1) * k];
+        for (j, gj) in gi.iter().enumerate() {
+            if *gj == 0.0 {
+                continue;
+            }
+            let wj = &w[j * k..(j + 1) * k];
+            for (d, wv) in di.iter_mut().zip(wj) {
+                *d += gj * wv;
+            }
+        }
+    }
+    dx
+}
+
+/// `gw[N,K] = g[M,N]^T @ x[M,K]` — weight gradient of the linear layer.
+pub fn mm_tn(g: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(x.len(), m * k);
+    let mut gw = vec![0.0f32; n * k];
+    for i in 0..m {
+        let gi = &g[i * n..(i + 1) * n];
+        let xi = &x[i * k..(i + 1) * k];
+        for (j, gj) in gi.iter().enumerate() {
+            if *gj == 0.0 {
+                continue;
+            }
+            let row = &mut gw[j * k..(j + 1) * k];
+            for (d, xv) in row.iter_mut().zip(xi) {
+                *d += gj * xv;
+            }
+        }
+    }
+    gw
+}
+
+/// Elementwise product (masked weight `W ∘ M`).
+pub fn hadamard(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).collect()
+}
+
+// ---------------------------------------------------------------------------
+// RMSNorm
+// ---------------------------------------------------------------------------
+
+/// `y = x / sqrt(mean(x^2) + eps) * gain`, rows of length `d`.
+pub fn rmsnorm(x: &[f32], gain: &[f32], d: usize, eps: f64) -> Vec<f32> {
+    let mut y = vec![0.0f32; x.len()];
+    for (xr, yr) in x.chunks_exact(d).zip(y.chunks_exact_mut(d)) {
+        let var: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (var + eps as f32).sqrt();
+        for ((yv, xv), gv) in yr.iter_mut().zip(xr).zip(gain) {
+            *yv = xv * r * gv;
+        }
+    }
+    y
+}
+
+/// Backward of [`rmsnorm`]: returns (gx, ggain).
+///
+/// With `r = (mean_j x_j^2 + eps)^{-1/2}`:
+///   `gx_i = gy_i * g_i * r - (r^3 / d) * x_i * sum_j gy_j g_j x_j`
+///   `ggain_i = sum_rows gy_i * x_i * r`
+pub fn rmsnorm_bwd(
+    x: &[f32],
+    gain: &[f32],
+    gy: &[f32],
+    d: usize,
+    eps: f64,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut gx = vec![0.0f32; x.len()];
+    let mut ggain = vec![0.0f32; d];
+    for ((xr, gyr), gxr) in
+        x.chunks_exact(d).zip(gy.chunks_exact(d)).zip(gx.chunks_exact_mut(d))
+    {
+        let var: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (var + eps as f32).sqrt();
+        let mut s = 0.0f32; // sum_j gy_j g_j x_j
+        for ((gyv, gv), xv) in gyr.iter().zip(gain).zip(xr) {
+            s += gyv * gv * xv;
+        }
+        let coef = r * r * r / d as f32 * s;
+        for i in 0..d {
+            gxr[i] = gyr[i] * gain[i] * r - coef * xr[i];
+            ggain[i] += gyr[i] * xr[i] * r;
+        }
+    }
+    (gx, ggain)
+}
+
+// ---------------------------------------------------------------------------
+// SiLU
+// ---------------------------------------------------------------------------
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// d silu / dx = sigmoid(x) * (1 + x * (1 - sigmoid(x)))
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+// ---------------------------------------------------------------------------
+// RoPE + causal attention
+// ---------------------------------------------------------------------------
+
+/// (cos, sin) tables, each `[S, dh/2]` row-major.
+pub fn rope_tables(cfg: &ModelConfig) -> (Vec<f32>, Vec<f32>) {
+    let dh = cfg.d_head();
+    let half = dh / 2;
+    let s = cfg.seq_len;
+    let mut cos = vec![0.0f32; s * half];
+    let mut sin = vec![0.0f32; s * half];
+    for pos in 0..s {
+        for t in 0..half {
+            let inv = 1.0 / (cfg.rope_base as f32).powf((2 * t) as f32 / dh as f32);
+            let ang = pos as f32 * inv;
+            cos[pos * half + t] = ang.cos();
+            sin[pos * half + t] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Rotate one `[S, dh]` head in place (interleaved even/odd pairing, the
+/// `q[0::2]/q[1::2] -> stack(-1)` layout of model.py).
+fn rope_head(q: &mut [f32], cos: &[f32], sin: &[f32], s: usize, dh: usize, inverse: bool) {
+    let half = dh / 2;
+    for pos in 0..s {
+        let row = &mut q[pos * dh..(pos + 1) * dh];
+        for t in 0..half {
+            let (c, n) = (cos[pos * half + t], sin[pos * half + t]);
+            let n = if inverse { -n } else { n };
+            let (a, b) = (row[2 * t], row[2 * t + 1]);
+            row[2 * t] = a * c - b * n;
+            row[2 * t + 1] = a * n + b * c;
+        }
+    }
+}
+
+/// Saved forward state of one attention call (for the backward pass).
+pub struct AttnSaved {
+    /// roped q, k and raw v in `[B,H,S,dh]` layout
+    pub qr: Vec<f32>,
+    pub kr: Vec<f32>,
+    pub vh: Vec<f32>,
+    /// softmax probabilities `[B,H,S,S]`
+    pub probs: Vec<f32>,
+}
+
+/// `[B,S,D] -> [B,H,S,dh]`
+fn split_heads(x: &[f32], b: usize, s: usize, h: usize, dh: usize) -> Vec<f32> {
+    let d = h * dh;
+    let mut out = vec![0.0f32; x.len()];
+    for bi in 0..b {
+        for si in 0..s {
+            for hi in 0..h {
+                let src = bi * s * d + si * d + hi * dh;
+                let dst = bi * h * s * dh + hi * s * dh + si * dh;
+                out[dst..dst + dh].copy_from_slice(&x[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+/// `[B,H,S,dh] -> [B,S,D]`
+fn merge_heads(x: &[f32], b: usize, s: usize, h: usize, dh: usize) -> Vec<f32> {
+    let d = h * dh;
+    let mut out = vec![0.0f32; x.len()];
+    for bi in 0..b {
+        for hi in 0..h {
+            for si in 0..s {
+                let src = bi * h * s * dh + hi * s * dh + si * dh;
+                let dst = bi * s * d + si * d + hi * dh;
+                out[dst..dst + dh].copy_from_slice(&x[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+/// Causal RoPE attention over `[B,S,D]` activations; returns the merged
+/// output and (optionally) the state the backward pass needs.
+pub fn attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    cfg: &ModelConfig,
+    save: bool,
+) -> (Vec<f32>, Option<AttnSaved>) {
+    let (b, s, h, dh) = (cfg.batch, cfg.seq_len, cfg.n_heads, cfg.d_head());
+    let (cos, sin) = rope_tables(cfg);
+    let mut qr = split_heads(q, b, s, h, dh);
+    let mut kr = split_heads(k, b, s, h, dh);
+    let vh = split_heads(v, b, s, h, dh);
+    for head in 0..b * h {
+        rope_head(&mut qr[head * s * dh..(head + 1) * s * dh], &cos, &sin, s, dh, false);
+        rope_head(&mut kr[head * s * dh..(head + 1) * s * dh], &cos, &sin, s, dh, false);
+    }
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut probs = vec![0.0f32; b * h * s * s];
+    let mut out_h = vec![0.0f32; b * h * s * dh];
+    for head in 0..b * h {
+        let qh = &qr[head * s * dh..(head + 1) * s * dh];
+        let kh = &kr[head * s * dh..(head + 1) * s * dh];
+        let vv = &vh[head * s * dh..(head + 1) * s * dh];
+        let ph = &mut probs[head * s * s..(head + 1) * s * s];
+        let oh = &mut out_h[head * s * dh..(head + 1) * s * dh];
+        for qi in 0..s {
+            // causal row: keys 0..=qi
+            let row = &mut ph[qi * s..(qi + 1) * s];
+            let mut mx = f32::NEG_INFINITY;
+            for ki in 0..=qi {
+                let mut dot = 0.0f32;
+                for t in 0..dh {
+                    dot += qh[qi * dh + t] * kh[ki * dh + t];
+                }
+                row[ki] = dot * scale;
+                mx = mx.max(row[ki]);
+            }
+            let mut z = 0.0f32;
+            for item in row.iter_mut().take(qi + 1) {
+                *item = (*item - mx).exp();
+                z += *item;
+            }
+            for item in row.iter_mut().take(qi + 1) {
+                *item /= z;
+            }
+            // masked tail stays exactly 0.0
+            for item in row.iter_mut().skip(qi + 1) {
+                *item = 0.0;
+            }
+            let orow = &mut oh[qi * dh..(qi + 1) * dh];
+            for ki in 0..=qi {
+                let p = row[ki];
+                for (ov, vv2) in orow.iter_mut().zip(&vv[ki * dh..(ki + 1) * dh]) {
+                    *ov += p * vv2;
+                }
+            }
+        }
+    }
+    let y = merge_heads(&out_h, b, s, h, dh);
+    let saved = save.then_some(AttnSaved { qr, kr, vh, probs });
+    (y, saved)
+}
+
+/// Backward of [`attention`]: returns (gq, gk, gv) in `[B,S,D]` layout.
+pub fn attention_bwd(saved: &AttnSaved, gy: &[f32], cfg: &ModelConfig) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (b, s, h, dh) = (cfg.batch, cfg.seq_len, cfg.n_heads, cfg.d_head());
+    let (cos, sin) = rope_tables(cfg);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let go = split_heads(gy, b, s, h, dh);
+    let mut gqr = vec![0.0f32; b * h * s * dh];
+    let mut gkr = vec![0.0f32; b * h * s * dh];
+    let mut gvh = vec![0.0f32; b * h * s * dh];
+    let mut ga = vec![0.0f32; s]; // one attention row at a time
+    for head in 0..b * h {
+        let qh = &saved.qr[head * s * dh..(head + 1) * s * dh];
+        let kh = &saved.kr[head * s * dh..(head + 1) * s * dh];
+        let vv = &saved.vh[head * s * dh..(head + 1) * s * dh];
+        let ph = &saved.probs[head * s * s..(head + 1) * s * s];
+        let goh = &go[head * s * dh..(head + 1) * s * dh];
+        let gq = &mut gqr[head * s * dh..(head + 1) * s * dh];
+        let gk = &mut gkr[head * s * dh..(head + 1) * s * dh];
+        let gv = &mut gvh[head * s * dh..(head + 1) * s * dh];
+        for qi in 0..s {
+            let prow = &ph[qi * s..(qi + 1) * s];
+            let grow = &goh[qi * dh..(qi + 1) * dh];
+            // gp[ki] = go . v_ki ; softmax bwd: ga = p * (gp - sum(gp*p))
+            let mut dot_sum = 0.0f32;
+            for ki in 0..=qi {
+                let mut gp = 0.0f32;
+                for t in 0..dh {
+                    gp += grow[t] * vv[ki * dh + t];
+                }
+                ga[ki] = gp;
+                dot_sum += gp * prow[ki];
+            }
+            for ki in 0..=qi {
+                ga[ki] = prow[ki] * (ga[ki] - dot_sum);
+                // gv += p * go
+                let p = prow[ki];
+                if p != 0.0 {
+                    for t in 0..dh {
+                        gv[ki * dh + t] += p * grow[t];
+                    }
+                }
+                // gq_row += ga * k_ki * scale ; gk_ki += ga * q_row * scale
+                let a = ga[ki] * scale;
+                if a != 0.0 {
+                    for t in 0..dh {
+                        gq[qi * dh + t] += a * kh[ki * dh + t];
+                        gk[ki * dh + t] += a * qh[qi * dh + t];
+                    }
+                }
+            }
+        }
+        // inverse rotation (transpose of the RoPE rotation)
+        rope_head(&mut gq[..], &cos, &sin, s, dh, true);
+        rope_head(&mut gk[..], &cos, &sin, s, dh, true);
+    }
+    (
+        merge_heads(&gqr, b, s, h, dh),
+        merge_heads(&gkr, b, s, h, dh),
+        merge_heads(&gvh, b, s, h, dh),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// small reductions
+// ---------------------------------------------------------------------------
+
+/// `sum((a - b)^2)` in f64.
+pub fn sq_diff_sum(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// `sum(x^2)` in f64.
+pub fn sq_sum(x: &[f32]) -> f64 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum()
+}

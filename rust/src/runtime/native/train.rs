@@ -1,0 +1,190 @@
+//! Native whole-model ops: `embed`, `head_nll` and the full pretraining
+//! step `lm_train_step` (forward through every block + tied-embedding
+//! head, analytic backward over all parameters).
+//!
+//! Mirrors `python/compile/model.py::{embed, head_nll, lm_train_step}`:
+//! the head is tied to the embedding (`logits = rmsnorm(x) @ emb.T`), the
+//! target is `roll(tokens, -1)` with the last position zeroed, and the
+//! loss is `sum(nll) / count_nonzero(nll)`.
+
+use anyhow::Result;
+
+use crate::model::config::{ModelConfig, LAYER_NAMES};
+use crate::tensor::Tensor;
+
+use super::{block, ops};
+
+/// `embed`: gather rows of the embedding table. tokens `[B,S]` i32,
+/// emb `[V,D]` -> x `[B,S,D]`.
+pub fn embed(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let tokens = inputs[0].i32s();
+    let emb = inputs[1].f32s();
+    let d = cfg.d_model;
+    let mut x = vec![0.0f32; tokens.len() * d];
+    for (i, t) in tokens.iter().enumerate() {
+        let t = (*t).clamp(0, cfg.vocab as i32 - 1) as usize;
+        x[i * d..(i + 1) * d].copy_from_slice(&emb[t * d..(t + 1) * d]);
+    }
+    Ok(vec![Tensor::from_f32(&[cfg.batch, cfg.seq_len, cfg.d_model], x)])
+}
+
+/// Per-position NLL with the tied head. Returns (nll `[B*S]`, and when
+/// `save_bwd` the log-probs `[B*S, V]` + normalized h `[B*S, D]` needed
+/// by the backward pass).
+struct HeadFwd {
+    nll: Vec<f32>,
+    /// log softmax of logits, `[B*S, V]` (only when saving)
+    logp: Option<Vec<f32>>,
+    /// rmsnorm(x, norm_f), `[B*S, D]` (only when saving)
+    h: Option<Vec<f32>>,
+    /// rolled targets per position, `[B*S]`
+    tgt: Vec<usize>,
+}
+
+fn head_forward(
+    cfg: &ModelConfig,
+    x: &[f32],
+    norm_f: &[f32],
+    emb: &[f32],
+    tokens: &[i32],
+    save: bool,
+) -> HeadFwd {
+    let (b, s, d, v) = (cfg.batch, cfg.seq_len, cfg.d_model, cfg.vocab);
+    let n = b * s;
+    let h = ops::rmsnorm(x, norm_f, d, cfg.norm_eps);
+    let logits = ops::mm_nt(&h, emb, n, d, v);
+    let mut logp = vec![0.0f32; n * v];
+    let mut nll = vec![0.0f32; n];
+    let mut tgt = vec![0usize; n];
+    for bi in 0..b {
+        for si in 0..s {
+            let i = bi * s + si;
+            // tgt = roll(tokens, -1, axis=1)
+            let tj = if si + 1 < s { si + 1 } else { 0 };
+            let t = tokens[bi * s + tj].clamp(0, v as i32 - 1) as usize;
+            tgt[i] = t;
+            let row = &logits[i * v..(i + 1) * v];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = row.iter().map(|l| (l - mx).exp()).sum();
+            let lse = mx + z.ln();
+            let lrow = &mut logp[i * v..(i + 1) * v];
+            for (o, l) in lrow.iter_mut().zip(row) {
+                *o = l - lse;
+            }
+            // last position zeroed (no next token inside the window)
+            nll[i] = if si + 1 < s { -lrow[t] } else { 0.0 };
+        }
+    }
+    HeadFwd {
+        nll,
+        logp: save.then_some(logp),
+        h: save.then_some(h),
+        tgt,
+    }
+}
+
+/// `head_nll` artifact: x, norm_f, emb, tokens -> nll `[B,S]`.
+pub fn head_nll(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let hf = head_forward(
+        cfg,
+        inputs[0].f32s(),
+        inputs[1].f32s(),
+        inputs[2].f32s(),
+        inputs[3].i32s(),
+        false,
+    );
+    Ok(vec![Tensor::from_f32(&[cfg.batch, cfg.seq_len], hf.nll)])
+}
+
+/// `lm_train_step`: params in canonical order + tokens -> loss + gradient
+/// per parameter (same order).
+pub fn lm_train_step(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let (b, s, d, v) = (cfg.batch, cfg.seq_len, cfg.d_model, cfg.vocab);
+    let n = b * s;
+    let n_params = cfg.param_order.len();
+    let tokens = inputs[n_params].i32s();
+    // index params by name position: embed = 0, per block 7 weights + 2
+    // norms, norm_f last (canonical_param_order layout)
+    let emb = inputs[0].f32s();
+    let norm_f = inputs[n_params - 1].f32s();
+    let block_param = |l: usize, j: usize| inputs[1 + l * 9 + j];
+
+    // ---- forward ---------------------------------------------------------
+    let mut x = vec![0.0f32; n * d];
+    for (i, t) in tokens.iter().enumerate() {
+        let t = (*t).clamp(0, v as i32 - 1) as usize;
+        x[i * d..(i + 1) * d].copy_from_slice(&emb[t * d..(t + 1) * d]);
+    }
+    let mut saves = Vec::with_capacity(cfg.n_blocks);
+    for l in 0..cfg.n_blocks {
+        let weights: Vec<&Tensor> = (0..7).map(|j| block_param(l, j)).collect();
+        let eff = block::effective_weights(&weights, None);
+        let norms = [
+            block_param(l, 7).f32s().to_vec(),
+            block_param(l, 8).f32s().to_vec(),
+        ];
+        let (y, sv, _) = block::forward(cfg, &x, eff, norms, true, false);
+        x = y;
+        saves.push(sv.unwrap());
+    }
+    let hf = head_forward(cfg, &x, norm_f, emb, tokens, true);
+    let logp = hf.logp.unwrap();
+    let h = hf.h.unwrap();
+    let count = hf.nll.iter().filter(|x| **x != 0.0).count().max(1);
+    let loss: f64 = hf.nll.iter().map(|x| *x as f64).sum::<f64>() / count as f64;
+
+    // ---- backward --------------------------------------------------------
+    // d loss / d logits = gnll * (softmax - onehot(tgt)); gnll = 1/count at
+    // contributing positions.
+    let mut glogits = vec![0.0f32; n * v];
+    let inv = 1.0 / count as f32;
+    for i in 0..n {
+        if hf.nll[i] == 0.0 {
+            continue;
+        }
+        let lrow = &logp[i * v..(i + 1) * v];
+        let grow = &mut glogits[i * v..(i + 1) * v];
+        for (g, lp) in grow.iter_mut().zip(lrow) {
+            *g = inv * lp.exp();
+        }
+        grow[hf.tgt[i]] -= inv;
+    }
+    // logits = h @ emb^T: gh = glogits @ emb ; gemb(head) = glogits^T @ h
+    let gh = ops::mm_nn(&glogits, emb, n, v, d);
+    let mut gemb = ops::mm_tn(&glogits, &h, n, v, d);
+    let (mut gx, gnorm_f) = ops::rmsnorm_bwd(&x, norm_f, &gh, d, cfg.norm_eps);
+
+    // through the blocks, collecting gradients in reverse
+    let mut per_block: Vec<([Vec<f32>; 7], Vec<f32>, Vec<f32>)> =
+        Vec::with_capacity(cfg.n_blocks);
+    for sv in saves.iter().rev() {
+        let grads = block::backward(cfg, sv, &gx);
+        gx = grads.gx;
+        per_block.push((grads.gw_eff, grads.gnorm1, grads.gnorm2));
+    }
+    per_block.reverse();
+
+    // embed gather backward (tied head already accumulated)
+    for (i, t) in tokens.iter().enumerate() {
+        let t = (*t).clamp(0, v as i32 - 1) as usize;
+        let row = &mut gemb[t * d..(t + 1) * d];
+        for (g, gv) in row.iter_mut().zip(&gx[i * d..(i + 1) * d]) {
+            *g += gv;
+        }
+    }
+
+    // ---- outputs in param_order ------------------------------------------
+    let mut out = Vec::with_capacity(1 + n_params);
+    out.push(Tensor::scalar(loss as f32));
+    out.push(Tensor::from_f32(&[v, d], gemb));
+    for (gw, gn1, gn2) in per_block {
+        for (j, g) in gw.into_iter().enumerate() {
+            let sh = cfg.layer_shape(LAYER_NAMES[j]);
+            out.push(Tensor::from_f32(&sh, g));
+        }
+        out.push(Tensor::from_f32(&[d], gn1));
+        out.push(Tensor::from_f32(&[d], gn2));
+    }
+    out.push(Tensor::from_f32(&[d], gnorm_f));
+    Ok(out)
+}

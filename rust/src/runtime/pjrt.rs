@@ -1,0 +1,130 @@
+//! PJRT execution backend (behind the `pjrt` cargo feature): loads AOT
+//! HLO-text artifacts, compiles each once per process, executes them
+//! through the PJRT C API. This is the original concrete `Engine`
+//! refactored onto the [`Backend`] trait.
+//!
+//! Note: the workspace vendors an API *stub* of the `xla` crate so this
+//! module always typechecks offline; executing for real requires pointing
+//! the `xla` path dependency at the actual bindings.
+//!
+//! Known tradeoff: the trait-level `run(name, &[&Tensor])` interface
+//! re-converts every input tensor to a PJRT literal per call. The old
+//! concrete engine let the BESA loop pre-convert loop-invariant inputs
+//! once per block (§Perf in EXPERIMENTS.md); restoring that under the
+//! trait needs a prepared-input handle on `Backend` — tracked in
+//! ROADMAP "Open items".
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::Stopwatch;
+
+use super::engine::Backend;
+use super::{ArtifactSpec, Manifest};
+
+struct Inner {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// cumulative (compile_secs, execute_secs, execute_calls)
+    stats: (f64, f64, u64),
+}
+
+pub struct PjrtBackend {
+    manifest: Manifest,
+    inner: Mutex<Inner>,
+}
+
+// SAFETY: every access to the PJRT client and executables goes through the
+// `inner` mutex, so the non-Sync xla handles are only ever touched by one
+// thread at a time. The PJRT CPU client tolerates serialized cross-thread
+// use (single logical stream).
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn new(artifacts_root: &Path, config: &str) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_root, config)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtBackend {
+            manifest,
+            inner: Mutex::new(Inner {
+                client,
+                executables: BTreeMap::new(),
+                stats: (0.0, 0.0, 0),
+            }),
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact; must hold the lock.
+    fn ensure_compiled(inner: &mut Inner, spec: &ArtifactSpec) -> Result<()> {
+        if inner.executables.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let sw = Stopwatch::start();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", spec.name))?;
+        inner.stats.0 += sw.secs();
+        crate::debuglog!("compiled artifact '{}' in {:.2}s", spec.name, sw.secs());
+        inner.executables.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+
+        let mut inner = self.inner.lock().unwrap();
+        Self::ensure_compiled(&mut inner, spec)?;
+        let sw = Stopwatch::start();
+        let exe = inner.executables.get(name).unwrap();
+        let result = exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                name,
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let out: Vec<Tensor> =
+            parts.iter().map(Tensor::from_literal).collect::<Result<_>>()?;
+        inner.stats.1 += sw.secs();
+        inner.stats.2 += 1;
+        Ok(out)
+    }
+
+    fn stats(&self) -> (f64, f64, u64) {
+        self.inner.lock().unwrap().stats
+    }
+}

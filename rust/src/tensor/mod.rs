@@ -1,9 +1,11 @@
-//! Host tensor substrate: a minimal dense tensor (f32 / i32), PJRT literal
-//! conversion, and the `.bst` binary checkpoint format.
+//! Host tensor substrate: a minimal dense tensor (f32 / i32), the `.bst`
+//! binary checkpoint format, and (behind the `pjrt` feature) PJRT literal
+//! conversion.
 
 pub mod io;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Data {
@@ -107,6 +109,7 @@ impl Tensor {
     }
 
     /// Convert to a PJRT literal (copies).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<usize> = self.shape.clone();
         match &self.data {
@@ -134,6 +137,7 @@ impl Tensor {
     }
 
     /// Convert back from a PJRT literal.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.shape().map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
         let (dims, ty) = match shape {

@@ -11,6 +11,7 @@ pub mod args;
 pub mod bench;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod proptest;
 pub mod rng;
 pub mod toml;

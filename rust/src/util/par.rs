@@ -1,0 +1,110 @@
+//! Scoped-thread fan-out for the coordinator's per-minibatch loops.
+//!
+//! No external threadpool crate (offline build): a work-stealing index
+//! over `std::thread::scope`. Results keep input order; the first error
+//! wins and the rest of the batch is abandoned cooperatively.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+/// Number of worker threads for `n` items: capped by available
+/// parallelism and by the item count; at least 1.
+pub fn workers_for(n: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    hw.min(n).max(1)
+}
+
+/// Apply `f` to every item on a scoped thread pool, preserving order.
+/// Falls back to a plain sequential loop when only one worker is useful
+/// (zero thread overhead for tiny batches).
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> Result<R> + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers_for(n);
+    if workers == 1 {
+        return items.iter().map(&f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n || failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let r = f(&items[i]);
+                if r.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    let mut out = Vec::with_capacity(n);
+    let mut first_err = None;
+    let mut abandoned = false;
+    for slot in slots {
+        match slot.into_inner().unwrap() {
+            Some(Ok(v)) => out.push(v),
+            // keep the earliest recorded root-cause error
+            Some(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            // claimed after the failure and abandoned unprocessed
+            None => abandoned = true,
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if abandoned {
+        return Err(anyhow!("parallel batch abandoned after an earlier failure"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let out = par_map(&items, |x| Ok(x * 2)).unwrap();
+        assert_eq!(out, (0..37).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn propagates_errors() {
+        let items: Vec<usize> = (0..16).collect();
+        let r = par_map(&items, |x| {
+            if *x == 7 {
+                anyhow::bail!("boom at {x}")
+            } else {
+                Ok(*x)
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn empty_ok() {
+        let items: Vec<u8> = vec![];
+        assert!(par_map(&items, |x| Ok(*x)).unwrap().is_empty());
+    }
+}

@@ -1,28 +1,24 @@
-//! Integration tests over the PJRT runtime + AOT artifacts (config `test`).
-//! These exercise the python->HLO->rust contract end to end and are the
-//! rust-side mirror of python/tests: same math, different engine.
+//! Integration tests over the Engine facade + native backend (config
+//! `test`). Fully hermetic: no artifacts, no XLA — `cargo test -q` passes
+//! on a bare machine. The python->HLO->rust contract is exercised by the
+//! same suite when built with `--features pjrt` and `BESA_BACKEND=pjrt`
+//! after `make artifacts`.
 
-use std::path::{Path, PathBuf};
-
+use besa::coordinator::{BlockCtx, BlockPruner, Pipeline};
 use besa::data::batcher::CalibrationSet;
 use besa::data::Domain;
 use besa::model::{ParamStore, LAYER_NAMES};
-use besa::prune::besa::{BesaConfig, BesaPruner};
-use besa::prune::importance::decode_mask;
+use besa::prune::besa::{two_block_prune, BesaConfig, BesaPruner, Granularity};
+use besa::prune::magnitude::MagnitudePruner;
+use besa::prune::sparsegpt::SparseGptPruner;
 use besa::prune::wanda::WandaPruner;
+use besa::prune::{BlockMasks, BlockReport, Method};
 use besa::runtime::Engine;
 use besa::tensor::Tensor;
 use besa::util::rng::Rng;
 
-fn artifacts_root() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-/// Engine is intentionally !Sync (single-threaded PJRT hot loop with
-/// interior caching), so each test owns one.
 fn engine() -> Engine {
-    Engine::new(&artifacts_root(), "test")
-        .expect("artifacts/test missing — run `make artifacts` before `cargo test`")
+    Engine::native("test").expect("built-in test config")
 }
 
 fn random_x(rng: &mut Rng, cfg: &besa::model::ModelConfig) -> Tensor {
@@ -89,52 +85,6 @@ fn masked_fwd_with_ones_equals_dense() {
     }
 }
 
-/// The rust-side mask decoder must agree bit-for-bit with the Pallas
-/// kernel lowered into the `mask_decode` artifact — the cross-language
-/// consistency check for the paper's core operator.
-#[test]
-fn rust_decode_matches_pallas_artifact() {
-    let e = &engine();
-    let cfg = e.config().clone();
-    let d = cfg.d_model;
-    let mut rng = Rng::seed(3);
-    let n_rates = cfg.n_rates;
-    let theta = Tensor::from_f32(
-        &[d, n_rates - 1],
-        (0..d * (n_rates - 1)).map(|_| rng.normal_f32()).collect(),
-    );
-    let rank_rows: Vec<i32> = (0..d)
-        .flat_map(|_| rng.permutation(d).into_iter().map(|v| v as i32))
-        .collect();
-    let ranks = Tensor::from_i32(&[d, d], rank_rows);
-
-    let out = e.run(&format!("mask_decode_{d}x{d}"), &[&theta, &ranks]).unwrap();
-    let (mask_rs, alphas_rs) = decode_mask(&theta, &ranks, n_rates);
-
-    assert_eq!(out[0].f32s(), mask_rs.f32s(), "mask mismatch rust vs pallas");
-    for (a, b) in out[1].f32s().iter().zip(&alphas_rs) {
-        assert!((*a as f64 - b).abs() < 1e-5, "alpha {a} vs {b}");
-    }
-}
-
-#[test]
-fn rust_quant_matches_artifact() {
-    let e = &engine();
-    let cfg = e.config().clone();
-    let d = cfg.d_model;
-    let mut rng = Rng::seed(4);
-    let w = Tensor::from_f32(&[d, d], (0..d * d).map(|_| rng.normal_f32()).collect());
-    let gamma = Tensor::from_f32(&[2], vec![0.9, 0.85]);
-    let out = e.run(&format!("quant_apply_{d}x{d}"), &[&w, &gamma]).unwrap();
-    let rs = besa::quant::fake_quant(
-        &w,
-        besa::quant::QuantSpec { bits: 4, gamma0: 0.9, gamma1: 0.85 },
-    );
-    for (a, b) in out[0].f32s().iter().zip(rs.f32s()) {
-        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
-    }
-}
-
 #[test]
 fn pretraining_reduces_loss() {
     let e = &engine();
@@ -149,10 +99,7 @@ fn pretraining_reduces_loss() {
     let stats = besa::coordinator::trainer::pretrain(e, &mut params, &tc).unwrap();
     let first = besa::util::mean(&stats.losses[..5]);
     let last = besa::util::mean(&stats.losses[stats.losses.len() - 5..]);
-    assert!(
-        last < first - 0.1,
-        "loss should drop: {first:.3} -> {last:.3}"
-    );
+    assert!(last < first - 0.1, "loss should drop: {first:.3} -> {last:.3}");
 }
 
 #[test]
@@ -161,7 +108,7 @@ fn wanda_pipeline_hits_target_sparsity() {
     let cfg = e.config().clone();
     let mut params = ParamStore::init(&cfg, 13);
     let calib = CalibrationSet::sample(&cfg, 2 * cfg.batch, 17);
-    let pipeline = besa::coordinator::Pipeline::new(e, calib.batches);
+    let pipeline = Pipeline::new(e, calib.batches);
     let mut pruner = WandaPruner { sparsity: 0.5 };
     let run = pipeline.run(&mut params, &mut pruner).unwrap();
     let s = params.prunable_sparsity(cfg.n_blocks);
@@ -177,7 +124,7 @@ fn besa_pipeline_allocates_nonuniform_sparsity_near_target() {
     let cfg = e.config().clone();
     let mut params = ParamStore::init(&cfg, 19);
     let calib = CalibrationSet::sample(&cfg, 2 * cfg.batch, 23);
-    let pipeline = besa::coordinator::Pipeline::new(e, calib.batches);
+    let pipeline = Pipeline::new(e, calib.batches);
     let mut pruner = BesaPruner::new(BesaConfig {
         sparsity: 0.5,
         epochs: 12,
@@ -193,13 +140,113 @@ fn besa_pipeline_allocates_nonuniform_sparsity_near_target() {
     assert!(max - min > 1e-3, "expected non-uniform allocation, got {spread:?}");
 }
 
+/// Dense "pruner": all-ones masks, exercising Method::Dense through the
+/// same Pipeline::run path as the real pruners.
+struct DensePruner;
+
+impl BlockPruner for DensePruner {
+    fn name(&self) -> &str {
+        "dense"
+    }
+    fn prune_block(&mut self, ctx: &mut BlockCtx) -> Result<(BlockMasks, BlockReport), anyhow::Error> {
+        let mut masks = BlockMasks::new();
+        let mut report = BlockReport::default();
+        for w in LAYER_NAMES {
+            let s = ctx.cfg.layer_shape(w);
+            masks.insert(w.to_string(), Tensor::ones(&[s[0], s[1]]));
+            report.layer_sparsity.insert(w.to_string(), 0.0);
+        }
+        Ok((masks, report))
+    }
+}
+
+/// End-to-end: every Method through Pipeline::run on the native backend,
+/// then perplexity on the pruned model — the hermetic Table-1 loop.
+#[test]
+fn all_five_methods_end_to_end() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let dense = ParamStore::init(&cfg, 29);
+    let calib = CalibrationSet::sample(&cfg, cfg.batch, 31);
+    for method in [
+        Method::Dense,
+        Method::Magnitude,
+        Method::Wanda,
+        Method::SparseGpt,
+        Method::Besa,
+    ] {
+        let mut pruner: Box<dyn BlockPruner> = match method {
+            Method::Dense => Box::new(DensePruner),
+            Method::Magnitude => Box::new(MagnitudePruner { sparsity: 0.5 }),
+            Method::Wanda => Box::new(WandaPruner { sparsity: 0.5 }),
+            Method::SparseGpt => Box::new(SparseGptPruner { sparsity: 0.5, ..Default::default() }),
+            Method::Besa => {
+                Box::new(BesaPruner::new(BesaConfig { epochs: 4, ..Default::default() }))
+            }
+        };
+        let mut p = dense.clone();
+        let run = Pipeline::new(e, calib.batches.clone()).run(&mut p, pruner.as_mut()).unwrap();
+        assert_eq!(run.reports.len(), cfg.n_blocks, "{}", method.name());
+        let s = p.prunable_sparsity(cfg.n_blocks);
+        match method {
+            Method::Dense => assert_eq!(
+                run.reports[0].mean_sparsity(&cfg),
+                0.0,
+                "dense must not prune"
+            ),
+            Method::Besa => assert!((s - 0.5).abs() < 0.12, "besa sparsity {s}"),
+            _ => assert!((s - 0.5).abs() < 0.02, "{} sparsity {s}", method.name()),
+        }
+        let ppl = besa::eval::perplexity(e, &p, Domain::WikiSyn, 1, 7).unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0, "{}: ppl {ppl}", method.name());
+    }
+}
+
+#[test]
+fn besa_granularity_variants_run() {
+    let e = &engine();
+    let cfg = e.config().clone();
+    let dense = ParamStore::init(&cfg, 43);
+    let calib = CalibrationSet::sample(&cfg, cfg.batch, 47);
+
+    // attn-mlp grouping
+    let mut p = dense.clone();
+    let mut pruner = BesaPruner::new(BesaConfig {
+        epochs: 3,
+        granularity: Granularity::AttnMlp,
+        ..Default::default()
+    });
+    Pipeline::new(e, calib.batches.clone()).run(&mut p, &mut pruner).unwrap();
+    assert!(p.prunable_sparsity(cfg.n_blocks) > 0.2);
+
+    // layer-wise thetas
+    let mut p = dense.clone();
+    let mut pruner = BesaPruner::new(BesaConfig { epochs: 3, row_wise: false, ..Default::default() });
+    Pipeline::new(e, calib.batches.clone()).run(&mut p, &mut pruner).unwrap();
+    assert!(p.prunable_sparsity(cfg.n_blocks) > 0.2);
+
+    // joint quantization
+    let mut p = dense.clone();
+    let mut pruner = BesaPruner::new(BesaConfig { epochs: 3, quant: true, ..Default::default() });
+    Pipeline::new(e, calib.batches.clone()).run(&mut p, &mut pruner).unwrap();
+    assert!(p.prunable_sparsity(cfg.n_blocks) > 0.2);
+
+    // two-block granularity (standalone driver)
+    let mut p = dense.clone();
+    let bc = BesaConfig { epochs: 3, ..Default::default() };
+    let (reports, errs) = two_block_prune(e, &mut p, &calib.batches, &bc).unwrap();
+    assert_eq!(reports.len(), cfg.n_blocks);
+    assert_eq!(errs.len(), cfg.n_blocks / 2);
+    assert!(p.prunable_sparsity(cfg.n_blocks) > 0.2);
+}
+
 #[test]
 fn eval_and_probes_run_on_pruned_model() {
     let e = &engine();
     let cfg = e.config().clone();
     let mut params = ParamStore::init(&cfg, 29);
     let calib = CalibrationSet::sample(&cfg, cfg.batch, 31);
-    let pipeline = besa::coordinator::Pipeline::new(e, calib.batches);
+    let pipeline = Pipeline::new(e, calib.batches);
     let mut pruner = WandaPruner { sparsity: 0.5 };
     pipeline.run(&mut params, &mut pruner).unwrap();
     let ppl = besa::eval::perplexity(e, &params, Domain::WikiSyn, 2, 7).unwrap();
@@ -246,7 +293,7 @@ fn engine_rejects_bad_inputs() {
 
 #[test]
 fn besa_step_sparsity_converges_toward_target() {
-    // drive the raw artifact directly: mean_alpha must move toward 0.7
+    // drive the raw artifact op directly: mean_alpha must move toward 0.7
     let e = &engine();
     let cfg = e.config().clone();
     let params = ParamStore::init(&cfg, 37);
@@ -288,16 +335,18 @@ fn besa_step_sparsity_converges_toward_target() {
     let mut first_alpha = None;
     let mut alpha = 0.0;
     for _ in 0..20 {
-        let mut ins: Vec<&Tensor> = thetas.iter().collect();
-        ins.push(&x);
-        ins.push(&y);
-        ins.extend(weights.iter());
-        ins.push(&n1);
-        ins.push(&n2);
-        ins.extend(ranks.iter());
-        ins.push(&lam);
-        ins.push(&ah);
-        let out = e.run("besa_step_row", &ins).unwrap();
+        let out = {
+            let mut ins: Vec<&Tensor> = thetas.iter().collect();
+            ins.push(&x);
+            ins.push(&y);
+            ins.extend(weights.iter());
+            ins.push(&n1);
+            ins.push(&n2);
+            ins.extend(ranks.iter());
+            ins.push(&lam);
+            ins.push(&ah);
+            e.run("besa_step_row", &ins).unwrap()
+        };
         alpha = out[2].scalar_value() as f64;
         first_alpha.get_or_insert(alpha);
         let grads: Vec<&Tensor> = out[3..10].iter().collect();

@@ -1,0 +1,165 @@
+//! Minimal, dependency-free subset of the `anyhow` crate, vendored so the
+//! workspace builds fully offline (no crates.io access at compile time).
+//!
+//! Implements the surface this repo actually uses: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] macros and the [`Context`] extension trait
+//! for `Result` and `Option`. Context frames accumulate outermost-first;
+//! `{:#}` (and `{:?}`) formatting prints the whole chain separated by
+//! `": "`, matching upstream anyhow's rendering closely enough for logs
+//! and test assertions.
+
+use std::fmt;
+
+/// An error type holding a message plus a chain of context frames.
+pub struct Error {
+    /// Outermost message first; the root cause is the last entry.
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { frames: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context frame (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.frames.insert(0, c.to_string());
+        self
+    }
+
+    /// Iterate the chain outermost-first (upstream: `Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow: any std error converts into `Error`. (No overlap
+// with the reflexive `From<Error> for Error` because `Error` itself does
+// not implement `std::error::Error` — same trick as upstream.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error if a condition is false (upstream `ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let r = std::fs::read_to_string("/definitely/not/a/real/path/xyz");
+        r.with_context(|| "reading config".to_string())
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = fails_io().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").starts_with("reading config: "));
+        assert!(e.chain().count() >= 2);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn bail_and_anyhow() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+        let e: Error = anyhow!("ad-hoc {}", 7);
+        assert_eq!(e.root_cause(), "ad-hoc 7");
+    }
+}

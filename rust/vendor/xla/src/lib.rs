@@ -1,0 +1,129 @@
+//! Offline stub of the `xla` PJRT binding crate (v0.1.6 API surface used
+//! by this repo). The container build has no network and no XLA shared
+//! library, so the `pjrt` cargo feature links this stub instead: the
+//! `runtime::pjrt` backend compiles and typechecks, and every runtime
+//! entry point fails with a clear error telling the operator to swap in
+//! the real bindings (replace the `vendor/xla` path dependency).
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn stub_err<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what}: built against the vendored xla *stub* — point the `xla` \
+         path dependency in rust/Cargo.toml at the real PJRT bindings \
+         (or run with --backend native)"
+    )))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+#[derive(Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+pub struct Literal(());
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        stub_err("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        stub_err("Literal::shape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub_err("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub_err("Literal::to_tuple")
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        stub_err("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err("PjRtClient::compile")
+    }
+}
