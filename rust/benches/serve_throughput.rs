@@ -1,0 +1,133 @@
+//! Bench: the serving hot paths — packed linear kernels (dense vs CSR vs
+//! fused-dequant CSR), prefill and batched decode per weight format, the
+//! `block_fwd_cached` runtime op, and a full continuous-batching trace
+//! replay per mode (the `besa serve-bench` inner loop, minus the report).
+
+use besa::model::{ModelConfig, ParamStore};
+use besa::quant::QuantSpec;
+use besa::runtime::Engine;
+use besa::serve::bench::magnitude_prune_in_place;
+use besa::serve::engine::{block_tensors, decode_step, decode_step_backend, prefill, ServeContext};
+use besa::serve::model::{PackedModel, WeightFormat};
+use besa::serve::scheduler::SchedulerConfig;
+use besa::serve::trace::{poisson_trace, TraceConfig};
+use besa::serve::{run_trace, ServeBenchConfig, ServeMode};
+use besa::util::bench::Bench;
+use besa::util::rng::Rng;
+
+fn main() {
+    let config = std::env::var("BESA_BENCH_CONFIG").unwrap_or_else(|_| "sm".to_string());
+    let engine = Engine::native(&config).expect("built-in config");
+    let cfg: ModelConfig = engine.config().clone();
+    let mut params = ParamStore::init(&cfg, 1);
+    magnitude_prune_in_place(&mut params, &cfg, 0.5).unwrap();
+
+    let mut b = Bench::new("serve_throughput").budget_secs(1.5);
+
+    // ---- packed linear kernels on the widest layer shape -----------------
+    let (rows, cols) = (cfg.d_ffn, cfg.d_model);
+    let n = 64usize;
+    let mut rng = Rng::seed(2);
+    let x: Vec<f32> = (0..n * cols).map(|_| rng.normal_f32()).collect();
+    let w = params.get("blocks.0.wg").unwrap();
+    let dense = PackedModel::materialize(&params, &cfg, WeightFormat::Dense).unwrap();
+    let csr = PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap();
+    let quant =
+        PackedModel::materialize(&params, &cfg, WeightFormat::Quant(QuantSpec::default())).unwrap();
+    let macs = (n * rows * cols) as f64;
+    assert_eq!(w.shape, vec![rows, cols]);
+    b.run_throughput(&format!("linear dense {rows}x{cols} n={n}"), macs, "mac/s", || {
+        dense.blocks[0].lin[4].forward(&x, n)
+    });
+    b.run_throughput(&format!("linear csr   {rows}x{cols} n={n}"), macs, "mac/s", || {
+        csr.blocks[0].lin[4].forward(&x, n)
+    });
+    b.run_throughput(&format!("linear quant {rows}x{cols} n={n}"), macs, "mac/s", || {
+        quant.blocks[0].lin[4].forward(&x, n)
+    });
+
+    // ---- prefill + decode per format -------------------------------------
+    let max_pos = cfg.seq_len;
+    let prompt: Vec<i32> = (0..cfg.seq_len / 2).map(|i| (i * 7 % 256) as i32).collect();
+    let nb = 8usize;
+    for format in [
+        WeightFormat::Dense,
+        WeightFormat::Csr,
+        WeightFormat::Quant(QuantSpec::default()),
+    ] {
+        let ctx =
+            ServeContext::new(PackedModel::materialize(&params, &cfg, format).unwrap(), max_pos);
+        let name = format.name();
+        b.run_throughput(&format!("prefill {name} s={}", prompt.len()), prompt.len() as f64, "tok/s", || {
+            let mut cache = ctx.new_cache();
+            prefill(&ctx, &prompt, &mut cache)
+        });
+        // decode over a batch of nb requests with half-full caches
+        let mut caches: Vec<_> = (0..nb)
+            .map(|_| {
+                let mut c = ctx.new_cache();
+                prefill(&ctx, &prompt, &mut c);
+                c
+            })
+            .collect();
+        let last: Vec<i32> = (0..nb as i32).collect();
+        b.run_throughput(&format!("decode {name} nb={nb}"), nb as f64, "tok/s", || {
+            // rewind so the cache never exhausts capacity mid-bench
+            for c in caches.iter_mut() {
+                c.set_len(prompt.len());
+            }
+            let mut refs: Vec<&mut _> = caches.iter_mut().collect();
+            decode_step(&ctx, &last, &mut refs)
+        });
+    }
+
+    // ---- decode through the runtime's block_fwd_cached artifact ----------
+    let ctx =
+        ServeContext::new(PackedModel::materialize(&params, &cfg, WeightFormat::Dense).unwrap(), max_pos);
+    let blocks = block_tensors(&params, &cfg).unwrap();
+    let mut caches: Vec<_> = (0..nb)
+        .map(|_| {
+            let mut c = ctx.new_cache();
+            prefill(&ctx, &prompt, &mut c);
+            c
+        })
+        .collect();
+    let last: Vec<i32> = (0..nb as i32).collect();
+    b.run_throughput(&format!("decode dense-backend nb={nb}"), nb as f64, "tok/s", || {
+        for c in caches.iter_mut() {
+            c.set_len(prompt.len());
+        }
+        let mut refs: Vec<&mut _> = caches.iter_mut().collect();
+        decode_step_backend(&ctx, &engine, &blocks, &last, &mut refs).unwrap()
+    });
+
+    // ---- full trace replay per mode --------------------------------------
+    let bcfg = ServeBenchConfig::default();
+    let trace_cfg = TraceConfig {
+        n_requests: 16,
+        prompt_max: cfg.seq_len.max(17) - 1,
+        ..bcfg.trace
+    };
+    let sched = SchedulerConfig { token_budget: 512, max_batch: 8 };
+    for mode in [ServeMode::Dense, ServeMode::Sparse, ServeMode::Quant] {
+        let format = match mode {
+            ServeMode::Sparse => WeightFormat::Csr,
+            ServeMode::Quant => WeightFormat::Quant(QuantSpec::default()),
+            _ => WeightFormat::Dense,
+        };
+        let ctx = ServeContext::new(
+            PackedModel::materialize(&params, &cfg, format).unwrap(),
+            trace_cfg.max_request_tokens(),
+        );
+        let requests = poisson_trace(&trace_cfg);
+        let total_tokens: usize = requests.iter().map(|r| r.cost()).sum();
+        b.run_throughput(
+            &format!("trace x{} {}", trace_cfg.n_requests, mode.name()),
+            total_tokens as f64,
+            "tok/s",
+            || run_trace(&ctx, None, requests.clone(), &sched).unwrap(),
+        );
+    }
+
+    b.report();
+}

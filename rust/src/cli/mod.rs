@@ -6,6 +6,7 @@
 //! besa eval      --config md --ckpt runs/md-besa.bst
 //! besa probe     --config md --ckpt runs/md-besa.bst
 //! besa simulate  --config md --ckpt runs/md-besa.bst
+//! besa serve-bench --config sm --ckpt runs/sm-besa.bst --modes dense,sparse,quant
 //! besa exp       table1|table2|table3|table4|table5|table6|fig1a|fig1b|fig3|fig4  [--configs sm,md]
 //! ```
 
@@ -29,6 +30,7 @@ pub fn main(argv: Vec<String>) -> Result<()> {
         "eval" => runs::cmd_eval(&args),
         "probe" => runs::cmd_probe(&args),
         "simulate" => runs::cmd_simulate(&args),
+        "serve-bench" => runs::cmd_serve_bench(&args),
         "exp" => exp::dispatch(&args),
         "help" | _ => {
             print_help();
@@ -52,6 +54,10 @@ fn print_help() {
          \x20 eval       perplexity on wiki-syn / c4-syn / ptb-syn\n\
          \x20 probe      zero-shot probe accuracy (6 tasks)\n\
          \x20 simulate   ViTCoD accelerator cycles for a pruned checkpoint\n\
+         \x20 serve-bench  batch-serve a pruned checkpoint: Poisson trace, continuous\n\
+         \x20            batching, dense/sparse/quant kernels, throughput + latency\n\
+         \x20            (--smoke: tiny hermetic run on a synthetic pruned model;\n\
+         \x20             --modes dense,sparse,quant,dense-backend; --json <path>)\n\
          \x20 exp        regenerate a paper table/figure (table1..table6, fig1a, fig1b, fig3, fig4)\n\
          \n\
          COMMON OPTIONS\n\

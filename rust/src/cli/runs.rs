@@ -237,6 +237,74 @@ pub fn cmd_probe(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `besa serve-bench`: replay a Poisson request trace through the sparse
+/// serving engine in each weight format and report throughput / latency /
+/// speedup (+ `BENCH_serve.json`). `--smoke`/`--synthetic` build a
+/// magnitude-pruned checkpoint in process so the run is hermetic.
+pub fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use crate::serve::bench::{magnitude_prune_in_place, ServeMode};
+    use crate::serve::{ServeBenchConfig, SchedulerConfig, TraceConfig};
+
+    let smoke = args.has("smoke");
+    let config = args.str_or("config", if smoke { "test" } else { "sm" });
+    let engine = engine_for(args, &config)?;
+    let cfg = engine.config().clone();
+
+    let params = if smoke || args.has("synthetic") {
+        let mut p = ParamStore::init(&cfg, args.u64_or("seed", 1234)?);
+        magnitude_prune_in_place(&mut p, &cfg, args.f64_or("sparsity", 0.5)?)?;
+        p
+    } else {
+        load_params(args, &engine)?
+    };
+
+    let modes: Vec<ServeMode> = args
+        .list_or("modes", &["dense", "sparse", "quant", "dense-backend"])
+        .iter()
+        .map(|m| {
+            ServeMode::from_name(m)
+                .with_context(|| format!("--modes: unknown mode '{m}' (dense|sparse|quant|dense-backend)"))
+        })
+        .collect::<Result<_>>()?;
+
+    // trace scale: full defaults sized for the sm config; --smoke only
+    // shrinks the *defaults* to a few seconds of CI work — explicit
+    // flags always win in both branches
+    let (d_req, d_rate, d_pmin, d_pmax, d_gmin, d_gmax) = if smoke {
+        (8, 64.0, 8, 16, 4, 8)
+    } else {
+        (48, 24.0, 16, cfg.seq_len.max(17) - 1, 8, 24)
+    };
+    let trace = TraceConfig {
+        n_requests: args.usize_or("requests", d_req)?,
+        rate: args.f64_or("rate", d_rate)?,
+        prompt_min: args.usize_or("prompt-min", d_pmin)?,
+        prompt_max: args.usize_or("prompt-max", d_pmax)?,
+        gen_min: args.usize_or("gen-min", d_gmin)?,
+        gen_max: args.usize_or("gen-max", d_gmax)?,
+        score_fraction: args.f64_or("score-fraction", 0.25)?,
+        seed: args.u64_or("trace-seed", 0x7ACE)?,
+    };
+    let sched = SchedulerConfig {
+        token_budget: args.usize_or("token-budget", if smoke { 256 } else { 1024 })?,
+        max_batch: args.usize_or("max-batch", 8)?,
+    };
+    let bcfg = ServeBenchConfig {
+        modes,
+        trace,
+        sched,
+        quant: crate::quant::QuantSpec::default(),
+        parity_decode_tokens: args.usize_or("parity-tokens", if smoke { 4 } else { 8 })?,
+        json_path: match args.get("json") {
+            Some("none") => None,
+            Some(p) => Some(PathBuf::from(p)),
+            None => Some(PathBuf::from("BENCH_serve.json")),
+        },
+    };
+    crate::serve::bench::run_serve_bench(&engine, &params, &bcfg)?;
+    Ok(())
+}
+
 pub fn cmd_simulate(args: &Args) -> Result<()> {
     let config = args.str_or("config", "sm");
     let engine = engine_for(args, &config)?;

@@ -70,6 +70,43 @@ pub fn perplexity_all(
         .collect()
 }
 
+/// Serving-style batch scoring through the execution backend: assemble
+/// heterogeneous-length prompts into the model's static `[B, S]` shape by
+/// right-padding, forward once through the shape-static block artifacts,
+/// and mask each prompt's NLL beyond its true length. Right-padding is
+/// *exact* under causal attention — position `i` only attends to `<= i`,
+/// so activations at real positions are unaffected by the padding tail —
+/// which is what lets the fixed-shape backend serve variable-length
+/// requests (parity vs the `serve` engine is pinned in
+/// `tests/serve_parity.rs`). Returns the summed prompt NLL per request.
+pub fn score_prompts_padded(
+    engine: &Engine,
+    params: &ParamStore,
+    prompts: &[Vec<i32>],
+) -> Result<Vec<f64>> {
+    let cfg = engine.config().clone();
+    let (b, s) = (cfg.batch, cfg.seq_len);
+    let mut out = Vec::with_capacity(prompts.len());
+    for chunk in prompts.chunks(b) {
+        let mut data = vec![0i32; b * s];
+        for (i, p) in chunk.iter().enumerate() {
+            anyhow::ensure!(p.len() <= s, "prompt of {} tokens exceeds seq_len {s}", p.len());
+            data[i * s..i * s + p.len()].copy_from_slice(p);
+        }
+        let tokens = Tensor::from_i32(&[b, s], data);
+        let nll = forward_nll(engine, params, &tokens)?;
+        for (i, p) in chunk.iter().enumerate() {
+            // positions 0..len-1 score tokens 1..len-1; everything past the
+            // prompt (incl. the first padding target) is masked out
+            let row = &nll.f32s()[i * s..(i + 1) * s];
+            let total: f64 =
+                row[..p.len().saturating_sub(1)].iter().map(|v| *v as f64).sum();
+            out.push(total);
+        }
+    }
+    Ok(out)
+}
+
 /// Sum of NLL over a token span `[lo, hi)` of sequence `b` — scoring a
 /// continuation: NLL of token t is stored at position t-1.
 pub fn span_nll(nll: &Tensor, cfg: &ModelConfig, b: usize, lo: usize, hi: usize) -> f64 {

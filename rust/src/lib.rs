@@ -30,6 +30,11 @@
 //!   [`eval`] for perplexity + zero-shot probes; [`data`] for the
 //!   synthetic corpus; [`sim`] for the ViTCoD accelerator cycle model
 //!   (paper §4.5 + Appendix B).
+//! * **[`sparse`] + [`serve`]** — where the sparsity pays off: packed
+//!   CSR / quantized-CSR weights with row-blocked SpMM kernels, and a
+//!   batch inference engine (continuous-batching scheduler, per-request
+//!   KV caches, O(1)-per-token decode via the native `block_fwd_cached`
+//!   op) behind `besa serve-bench`.
 //!
 //! Cross-backend correctness is pinned by `tests/native_parity.rs`:
 //! golden vectors generated from a float64 reference transliteration of
@@ -53,7 +58,9 @@ pub mod model;
 pub mod prune;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
+pub mod sparse;
 pub mod tensor;
 pub mod util;
 

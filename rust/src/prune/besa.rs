@@ -13,6 +13,7 @@ use crate::model::LAYER_NAMES;
 use crate::prune::adam::{Adam, AdamConfig};
 use crate::prune::importance::{decode_mask, Metric};
 use crate::prune::{BlockMasks, BlockReport};
+use crate::runtime::{Arg, Prepared};
 use crate::tensor::Tensor;
 
 /// Sparsity-allocation granularity (paper Table 6). `Layer` is Wanda and
@@ -134,24 +135,69 @@ impl BlockPruner for BesaPruner {
         let artifact = self.artifact_name();
         let weights: Vec<&Tensor> = LAYER_NAMES.iter().map(|w| &ctx.weights[*w]).collect();
 
+        // Everything except the theta/gamma optimizer state is invariant
+        // across the whole epoch loop. On backends with a host/device
+        // boundary (PJRT), prepare those inputs once per block so every
+        // besa_step reuses the cached device literal — restoring the
+        // once-per-block conversion the trait refactor had regressed
+        // (ROADMAP "Open items"). On the native interpreter, preparation
+        // would only deep-copy host tensors, so the loop borrows instead.
+        struct PreparedInvariants {
+            x: Vec<Prepared>,
+            y: Vec<Prepared>,
+            w: Vec<Prepared>,
+            norms: [Prepared; 2],
+            ranks: Vec<Prepared>,
+            lam: Prepared,
+            alpha_hat: Prepared,
+        }
+        let prepared: Option<PreparedInvariants> = if ctx.engine.caches_prepared() {
+            Some(PreparedInvariants {
+                x: ctx.x_pruned.iter().map(|t| ctx.engine.prepare(t)).collect::<Result<_>>()?,
+                y: ctx.y_dense.iter().map(|t| ctx.engine.prepare(t)).collect::<Result<_>>()?,
+                w: weights.iter().map(|t| ctx.engine.prepare(t)).collect::<Result<_>>()?,
+                norms: [ctx.engine.prepare(&ctx.norms[0])?, ctx.engine.prepare(&ctx.norms[1])?],
+                ranks: ranks.iter().map(|t| ctx.engine.prepare(t)).collect::<Result<_>>()?,
+                lam: ctx.engine.prepare(&lam)?,
+                alpha_hat: ctx.engine.prepare(&alpha_hat)?,
+            })
+        } else {
+            None
+        };
+
+        let n_batches = ctx.x_pruned.len();
         let mut curve = Vec::new();
         let mut last = (0.0, 0.0, 0.0);
         for _epoch in 0..self.cfg.epochs {
-            for (x, y) in ctx.x_pruned.iter().zip(ctx.y_dense) {
+            for bi in 0..n_batches {
                 let out = {
-                    let mut ins: Vec<&Tensor> = thetas.iter().collect();
-                    ins.push(x);
-                    ins.push(y);
-                    ins.extend(weights.iter().copied());
-                    ins.push(&ctx.norms[0]);
-                    ins.push(&ctx.norms[1]);
-                    ins.extend(ranks.iter());
-                    ins.push(&lam);
-                    ins.push(&alpha_hat);
-                    if self.cfg.quant {
-                        ins.extend(gammas.iter());
+                    let mut ins: Vec<Arg> = thetas.iter().map(Arg::Host).collect();
+                    match &prepared {
+                        Some(p) => {
+                            ins.push(Arg::Prep(&p.x[bi]));
+                            ins.push(Arg::Prep(&p.y[bi]));
+                            ins.extend(p.w.iter().map(Arg::Prep));
+                            ins.push(Arg::Prep(&p.norms[0]));
+                            ins.push(Arg::Prep(&p.norms[1]));
+                            ins.extend(p.ranks.iter().map(Arg::Prep));
+                            ins.push(Arg::Prep(&p.lam));
+                            ins.push(Arg::Prep(&p.alpha_hat));
+                        }
+                        None => {
+                            ins.push(Arg::Host(&ctx.x_pruned[bi]));
+                            ins.push(Arg::Host(&ctx.y_dense[bi]));
+                            ins.extend(weights.iter().copied().map(Arg::Host));
+                            ins.push(Arg::Host(&ctx.norms[0]));
+                            ins.push(Arg::Host(&ctx.norms[1]));
+                            ins.extend(ranks.iter().map(Arg::Host));
+                            ins.push(Arg::Host(&lam));
+                            ins.push(Arg::Host(&alpha_hat));
+                        }
                     }
-                    ctx.engine.run(&artifact, &ins)?
+                    if self.cfg.quant {
+                        ins.extend(gammas.iter().map(Arg::Host));
+                    }
+                    ctx.engine.run_args(&artifact, &ins)?
                 };
                 last = (
                     out[0].scalar_value() as f64,

@@ -10,7 +10,7 @@
 
 use crate::tensor::Tensor;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantSpec {
     pub bits: u32,
     pub gamma0: f32,

@@ -16,6 +16,11 @@ use anyhow::{bail, Context, Result};
 use crate::model::config::{ModelConfig, LAYER_NAMES};
 use crate::util::json::Json;
 
+/// A dimension of 0 in `shape` is *dynamic*: the engine accepts any
+/// extent there (rank and the remaining dims still must match). Static
+/// specs — everything AOT-lowered — never contain 0-sized dims, so the
+/// wildcard is unambiguous; it exists for serving-style ops
+/// (`block_fwd_cached`) whose batch and cache length vary per call.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
     pub name: String,
@@ -182,6 +187,29 @@ impl Manifest {
                 .map(|w| TensorSpec::f32(format!("mask_{w}"), &cfg.layer_shape(w))),
         );
         add("block_fwd_masked", masked_in, vec![TensorSpec::f32("y", &x3)]);
+
+        // KV-cached single-token decode (native-only, serving hot path):
+        // dynamic dims (0) for the request batch and cache capacity. The
+        // caller passes roped key / raw value caches holding `pos[i]`
+        // entries per sequence and appends the returned k_new/v_new.
+        let mut cached_in = vec![
+            TensorSpec::f32("x", &[0, 1, d]),
+            TensorSpec::f32("k_cache", &[0, 0, d]),
+            TensorSpec::f32("v_cache", &[0, 0, d]),
+            TensorSpec::i32("pos", &[0]),
+        ];
+        cached_in.extend(weight_specs(""));
+        cached_in.extend(norm_specs(""));
+        add(
+            "block_fwd_cached",
+            cached_in,
+            vec![
+                TensorSpec::f32("y", &[0, 1, d]),
+                TensorSpec::f32("k_new", &[0, 1, d]),
+                TensorSpec::f32("v_new", &[0, 1, d]),
+            ],
+        );
+
         add(
             "block_capture",
             base_in.clone(),
@@ -359,6 +387,13 @@ mod tests {
         let t = m.artifact("lm_train_step").unwrap();
         assert_eq!(t.inputs.len(), m.config.param_order.len() + 1);
         assert_eq!(t.outputs.len(), m.config.param_order.len() + 1);
+        // serving decode op: x + 2 caches + pos + 7 weights + 2 norms,
+        // dynamic (0) batch/capacity dims
+        let cfwd = m.artifact("block_fwd_cached").unwrap();
+        assert_eq!(cfwd.inputs.len(), 13);
+        assert_eq!(cfwd.outputs.len(), 3);
+        assert_eq!(cfwd.inputs[1].shape, vec![0, 0, 32]);
+        assert_eq!(cfwd.inputs[3].dtype, "int32");
         // the three distinct layer shapes of the test config
         for tag in ["32x32", "88x32", "32x88"] {
             assert!(m.artifact(&format!("mask_decode_{tag}")).is_ok(), "{tag}");

@@ -24,6 +24,56 @@ use crate::tensor::Tensor;
 
 use super::{ArtifactSpec, Manifest};
 
+/// A backend-resident prepared input: the host tensor plus (for backends
+/// with a device boundary) a cached device-side form. Create one via
+/// [`Engine::prepare`] for inputs that stay constant across a hot loop —
+/// the PJRT backend then skips its per-call host→literal conversion;
+/// the native backend executes on host tensors directly, so preparation
+/// is a free wrapper.
+///
+/// Memory tradeoff: the handle owns a host copy (needed so the default
+/// host-executing `run_args` stays correct for any backend), so device
+/// backends hold prepared data twice. Acceptable while prepared inputs
+/// are per-block calibration slices; a metadata-only host (shape + dtype
+/// for validation) is the known follow-up if that ever dominates.
+pub struct Prepared {
+    pub(crate) host: Tensor,
+    /// cached device literal (pjrt backend only)
+    #[cfg(feature = "pjrt")]
+    pub(crate) literal: Option<xla::Literal>,
+}
+
+impl Prepared {
+    pub(crate) fn host_only(host: Tensor) -> Prepared {
+        Prepared {
+            host,
+            #[cfg(feature = "pjrt")]
+            literal: None,
+        }
+    }
+
+    pub fn host(&self) -> &Tensor {
+        &self.host
+    }
+}
+
+/// One positional artifact input: a plain host tensor (converted per call
+/// as the backend requires) or a [`Prepared`] handle (converted once).
+#[derive(Clone, Copy)]
+pub enum Arg<'a> {
+    Host(&'a Tensor),
+    Prep(&'a Prepared),
+}
+
+impl<'a> Arg<'a> {
+    pub fn host(&self) -> &'a Tensor {
+        match *self {
+            Arg::Host(t) => t,
+            Arg::Prep(p) => &p.host,
+        }
+    }
+}
+
 /// A pluggable execution backend: everything the pipeline needs to run a
 /// named artifact over host tensors. Implementations must be `Send + Sync`
 /// — the coordinator dispatches calibration minibatches from scoped
@@ -38,6 +88,30 @@ pub trait Backend: Send + Sync {
     /// Execute an artifact; inputs are pre-validated against the manifest
     /// spec by the [`Engine`] facade. Returns outputs in spec order.
     fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Whether [`Backend::prepare`] produces a backend-resident form that
+    /// makes repeated `run_args` calls cheaper. When false (the default —
+    /// true for the native interpreter, which executes host tensors
+    /// directly), callers should skip preparation: it would only deep-copy
+    /// the host tensor for zero benefit.
+    fn caches_prepared(&self) -> bool {
+        false
+    }
+
+    /// Prepare a loop-invariant input once. Backends with a host/device
+    /// boundary cache the device form here; the default is a host-copy
+    /// wrapper (correct, but pointless — see [`Backend::caches_prepared`]).
+    fn prepare(&self, t: &Tensor) -> Result<Prepared> {
+        Ok(Prepared::host_only(t.clone()))
+    }
+
+    /// Execute with a mix of host tensors and prepared handles. The
+    /// default degrades to [`Backend::run`] on the host views, which is
+    /// exactly right for backends whose `prepare` is a no-op.
+    fn run_args(&self, name: &str, inputs: &[Arg]) -> Result<Vec<Tensor>> {
+        let hosts: Vec<&Tensor> = inputs.iter().map(|a| a.host()).collect();
+        self.run(name, &hosts)
+    }
 
     /// Cumulative (compile_secs, execute_secs, execute_calls).
     fn stats(&self) -> (f64, f64, u64) {
@@ -141,6 +215,8 @@ impl Engine {
     }
 
     /// Validate inputs against the manifest spec (arity + shape + dtype).
+    /// Spec dims of 0 are dynamic and match any extent (see
+    /// [`super::artifact::TensorSpec`]).
     fn validate(&self, spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
         if inputs.len() != spec.inputs.len() {
             bail!(
@@ -151,7 +227,9 @@ impl Engine {
             );
         }
         for (t, s) in inputs.iter().zip(&spec.inputs) {
-            if t.shape != s.shape {
+            let shape_ok = t.shape.len() == s.shape.len()
+                && t.shape.iter().zip(&s.shape).all(|(td, sd)| *sd == 0 || td == sd);
+            if !shape_ok {
                 bail!(
                     "artifact '{}' input '{}': shape {:?} != manifest {:?}",
                     spec.name,
@@ -173,11 +251,7 @@ impl Engine {
         Ok(())
     }
 
-    /// Execute an artifact; returns output tensors in manifest order.
-    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let spec = self.backend.manifest().artifact(name)?;
-        self.validate(spec, inputs)?;
-        let out = self.backend.run(name, inputs)?;
+    fn check_outputs(name: &str, spec: &ArtifactSpec, out: &[Tensor]) -> Result<()> {
         if out.len() != spec.outputs.len() {
             bail!(
                 "artifact '{}' returned {} outputs, manifest says {}",
@@ -186,6 +260,40 @@ impl Engine {
                 spec.outputs.len()
             );
         }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns output tensors in manifest order.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.backend.manifest().artifact(name)?;
+        self.validate(spec, inputs)?;
+        let out = self.backend.run(name, inputs)?;
+        Self::check_outputs(name, spec, &out)?;
+        Ok(out)
+    }
+
+    /// Whether preparing inputs buys anything on this backend (false for
+    /// native — hot loops should pass plain [`Arg::Host`] there).
+    pub fn caches_prepared(&self) -> bool {
+        self.backend.caches_prepared()
+    }
+
+    /// Prepare a loop-invariant input once for repeated [`Engine::run_args`]
+    /// calls (host-copy wrapper for native, cached device literal for pjrt).
+    pub fn prepare(&self, t: &Tensor) -> Result<Prepared> {
+        self.backend.prepare(t)
+    }
+
+    /// Execute an artifact over a mix of host tensors and [`Prepared`]
+    /// handles — the hot-loop variant of [`Engine::run`]. Validation runs
+    /// against the host views, so prepared inputs get the same arity /
+    /// shape / dtype checking.
+    pub fn run_args(&self, name: &str, inputs: &[Arg]) -> Result<Vec<Tensor>> {
+        let spec = self.backend.manifest().artifact(name)?;
+        let hosts: Vec<&Tensor> = inputs.iter().map(|a| a.host()).collect();
+        self.validate(spec, &hosts)?;
+        let out = self.backend.run_args(name, inputs)?;
+        Self::check_outputs(name, spec, &out)?;
         Ok(out)
     }
 
@@ -212,6 +320,23 @@ mod tests {
     fn engine_is_sync() {
         fn assert_sync<T: Sync + Send>() {}
         assert_sync::<Engine>();
+    }
+
+    #[test]
+    fn run_args_matches_run_on_native() {
+        let e = Engine::native("test").unwrap();
+        let cfg = e.config().clone();
+        let toks = Tensor::from_i32(&[cfg.batch, cfg.seq_len], vec![1; cfg.batch * cfg.seq_len]);
+        let emb = Tensor::ones(&[cfg.vocab, cfg.d_model]);
+        let direct = e.run("embed", &[&toks, &emb]).unwrap();
+        let p_toks = e.prepare(&toks).unwrap();
+        let p_emb = e.prepare(&emb).unwrap();
+        let prepped = e.run_args("embed", &[Arg::Prep(&p_toks), Arg::Prep(&p_emb)]).unwrap();
+        assert_eq!(direct[0], prepped[0]);
+        // prepared inputs still go through shape validation
+        let bad = Tensor::ones(&[1]);
+        let p_bad = e.prepare(&bad).unwrap();
+        assert!(e.run_args("embed", &[Arg::Prep(&p_toks), Arg::Prep(&p_bad)]).is_err());
     }
     // input-validation behavior (arity / shape / dtype / unknown artifact)
     // is covered end-to-end by tests/integration.rs::engine_rejects_bad_inputs

@@ -18,5 +18,5 @@ pub mod native;
 pub mod pjrt;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
-pub use engine::{Backend, BackendKind, Engine};
+pub use engine::{Arg, Backend, BackendKind, Engine, Prepared};
 pub use native::NativeBackend;

@@ -171,6 +171,136 @@ pub fn backward(cfg: &ModelConfig, sv: &BlockSaved, gy: &[f32]) -> BlockGrads {
     }
 }
 
+/// `block_fwd_cached`: one transformer block over a batch of single new
+/// tokens with per-sequence KV caches — the serving decode hot path.
+/// O(1) block work per token (7 matvecs) plus O(prefix) attention,
+/// instead of re-running the whole prefix through the block.
+///
+/// Inputs: `x [nb,1,d]` (new-token activations), `k_cache`/`v_cache`
+/// `[nb,cap,d]` (roped keys / raw values for positions `0..pos[i]`),
+/// `pos [nb]` i32, then the 7 weights + 2 norms. Outputs: `y [nb,1,d]`
+/// plus `k_new`/`v_new` `[nb,1,d]` for the caller to append — the op
+/// itself stays stateless, like every other native artifact.
+///
+/// Numerics deliberately mirror [`forward`] row-for-row (same RoPE
+/// tables, same accumulation order), so incremental decode reproduces a
+/// full-prefix recompute bitwise; `tests/serve_parity.rs` pins this.
+pub fn block_fwd_cached(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let (x_t, kc_t, vc_t) = (inputs[0], inputs[1], inputs[2]);
+    let pos = inputs[3].i32s();
+    let nb = x_t.shape[0];
+    let cap = kc_t.shape[1];
+    let (d, f) = (cfg.d_model, cfg.d_ffn);
+    let (nh, dh) = (cfg.n_heads, cfg.d_head());
+    let half = dh / 2;
+    if kc_t.shape[0] != nb || vc_t.shape != kc_t.shape || pos.len() != nb {
+        anyhow::bail!(
+            "block_fwd_cached: inconsistent batch dims x={:?} k={:?} v={:?} pos={}",
+            x_t.shape,
+            kc_t.shape,
+            vc_t.shape,
+            pos.len()
+        );
+    }
+    let max_p = pos.iter().map(|p| *p as usize).max().unwrap_or(0);
+    if max_p > cap {
+        anyhow::bail!("block_fwd_cached: cache capacity {cap} < position {max_p}");
+    }
+    let xs = x_t.f32s();
+    let kcs = kc_t.f32s();
+    let vcs = vc_t.f32s();
+    let weights: Vec<&[f32]> = inputs[4..11].iter().map(|t| t.f32s()).collect();
+    let norm1 = inputs[11].f32s();
+    let norm2 = inputs[12].f32s();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let eps = cfg.norm_eps;
+
+    let mut y = vec![0.0f32; nb * d];
+    let mut k_new = vec![0.0f32; nb * d];
+    let mut v_new = vec![0.0f32; nb * d];
+    let mut scores = vec![0.0f32; cap + 1];
+    let mut cos_p = vec![0.0f32; half];
+    let mut sin_p = vec![0.0f32; half];
+    for i in 0..nb {
+        let p = pos[i] as usize;
+        let xi = &xs[i * d..(i + 1) * d];
+        let h1 = ops::rmsnorm(xi, norm1, d, eps);
+        let mut q = ops::mm_nt(&h1, weights[0], 1, d, d);
+        let mut k = ops::mm_nt(&h1, weights[1], 1, d, d);
+        let v = ops::mm_nt(&h1, weights[2], 1, d, d);
+        // RoPE angles for this position only — O(dh) per sequence, not a
+        // full O(prefix·dh) table per call. Same expression as
+        // ops::rope_tables_for, so the rotation is bit-identical.
+        for t in 0..half {
+            let inv = 1.0 / (cfg.rope_base as f32).powf((2 * t) as f32 / dh as f32);
+            let ang = p as f32 * inv;
+            cos_p[t] = ang.cos();
+            sin_p[t] = ang.sin();
+        }
+        // interleaved even/odd pairing (ops::rope_head)
+        for h in 0..nh {
+            for t in 0..half {
+                let (c, n) = (cos_p[t], sin_p[t]);
+                let (iq, jq) = (h * dh + 2 * t, h * dh + 2 * t + 1);
+                let (a, b) = (q[iq], q[jq]);
+                q[iq] = a * c - b * n;
+                q[jq] = a * n + b * c;
+                let (a, b) = (k[iq], k[jq]);
+                k[iq] = a * c - b * n;
+                k[jq] = a * n + b * c;
+            }
+        }
+        // attention over cached keys 0..p plus the new key at p
+        let kci = &kcs[i * cap * d..(i + 1) * cap * d];
+        let vci = &vcs[i * cap * d..(i + 1) * cap * d];
+        let mut att = vec![0.0f32; d];
+        for h in 0..nh {
+            let off = h * dh;
+            let qh = &q[off..off + dh];
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..=p {
+                let kj = if j < p { &kci[j * d + off..j * d + off + dh] } else { &k[off..off + dh] };
+                let mut dot = 0.0f32;
+                for (a, b) in qh.iter().zip(kj) {
+                    dot += a * b;
+                }
+                scores[j] = dot * scale;
+                mx = mx.max(scores[j]);
+            }
+            let mut z = 0.0f32;
+            for item in scores.iter_mut().take(p + 1) {
+                *item = (*item - mx).exp();
+                z += *item;
+            }
+            let ah = &mut att[off..off + dh];
+            for j in 0..=p {
+                let pr = scores[j] / z;
+                let vj = if j < p { &vci[j * d + off..j * d + off + dh] } else { &v[off..off + dh] };
+                for (av, vv) in ah.iter_mut().zip(vj) {
+                    *av += pr * vv;
+                }
+            }
+        }
+        let o = ops::mm_nt(&att, weights[3], 1, d, d);
+        let x2: Vec<f32> = xi.iter().zip(&o).map(|(a, b)| a + b).collect();
+        let h2 = ops::rmsnorm(&x2, norm2, d, eps);
+        let gate = ops::mm_nt(&h2, weights[4], 1, d, f);
+        let up = ops::mm_nt(&h2, weights[5], 1, d, f);
+        let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| ops::silu(*g) * u).collect();
+        let down = ops::mm_nt(&act, weights[6], 1, f, d);
+        for (t, yv) in y[i * d..(i + 1) * d].iter_mut().enumerate() {
+            *yv = x2[t] + down[t];
+        }
+        k_new[i * d..(i + 1) * d].copy_from_slice(&k);
+        v_new[i * d..(i + 1) * d].copy_from_slice(&v);
+    }
+    Ok(vec![
+        Tensor::from_f32(&[nb, 1, d], y),
+        Tensor::from_f32(&[nb, 1, d], k_new),
+        Tensor::from_f32(&[nb, 1, d], v_new),
+    ])
+}
+
 /// Convenience used by the `block_fwd*` / `block_capture` dispatch:
 /// assemble inputs from positional tensors.
 pub fn run_block_op(

@@ -59,6 +59,7 @@ impl NativeBackend {
             "head_nll" => train::head_nll(cfg, inputs),
             "block_fwd" => block::run_block_op(cfg, inputs, false, false),
             "block_fwd_masked" => block::run_block_op(cfg, inputs, true, false),
+            "block_fwd_cached" => block::block_fwd_cached(cfg, inputs),
             "block_capture" => block::run_block_op(cfg, inputs, false, true),
             "lm_train_step" => train::lm_train_step(cfg, inputs),
             "two_block_step" => besa::two_block_step(cfg, inputs),

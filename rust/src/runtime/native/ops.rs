@@ -149,22 +149,29 @@ pub fn silu_grad(x: f32) -> f32 {
 // RoPE + causal attention
 // ---------------------------------------------------------------------------
 
-/// (cos, sin) tables, each `[S, dh/2]` row-major.
-pub fn rope_tables(cfg: &ModelConfig) -> (Vec<f32>, Vec<f32>) {
-    let dh = cfg.d_head();
+/// (cos, sin) tables for positions `0..s`, each `[s, dh/2]` row-major.
+/// Shared by the fixed-shape block ops (via [`rope_tables`]) and the
+/// variable-length serving path (`serve::ServeContext`); `block_fwd_cached`
+/// evaluates the same expression inline for its single position. All
+/// three must rotate with bit-identical angles for cache parity to hold.
+pub fn rope_tables_for(s: usize, dh: usize, rope_base: f64) -> (Vec<f32>, Vec<f32>) {
     let half = dh / 2;
-    let s = cfg.seq_len;
     let mut cos = vec![0.0f32; s * half];
     let mut sin = vec![0.0f32; s * half];
     for pos in 0..s {
         for t in 0..half {
-            let inv = 1.0 / (cfg.rope_base as f32).powf((2 * t) as f32 / dh as f32);
+            let inv = 1.0 / (rope_base as f32).powf((2 * t) as f32 / dh as f32);
             let ang = pos as f32 * inv;
             cos[pos * half + t] = ang.cos();
             sin[pos * half + t] = ang.sin();
         }
     }
     (cos, sin)
+}
+
+/// (cos, sin) tables, each `[S, dh/2]` row-major.
+pub fn rope_tables(cfg: &ModelConfig) -> (Vec<f32>, Vec<f32>) {
+    rope_tables_for(cfg.seq_len, cfg.d_head(), cfg.rope_base)
 }
 
 /// Rotate one `[S, dh]` head in place (interleaved even/odd pairing, the

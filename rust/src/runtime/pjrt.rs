@@ -7,12 +7,13 @@
 //! module always typechecks offline; executing for real requires pointing
 //! the `xla` path dependency at the actual bindings.
 //!
-//! Known tradeoff: the trait-level `run(name, &[&Tensor])` interface
-//! re-converts every input tensor to a PJRT literal per call. The old
-//! concrete engine let the BESA loop pre-convert loop-invariant inputs
-//! once per block (§Perf in EXPERIMENTS.md); restoring that under the
-//! trait needs a prepared-input handle on `Backend` — tracked in
-//! ROADMAP "Open items".
+//! Hot-loop inputs: the trait-level `run(name, &[&Tensor])` interface
+//! re-converts every input tensor to a PJRT literal per call. For
+//! loop-invariant inputs, callers go through [`Backend::prepare`] /
+//! [`Backend::run_args`] instead — this backend caches the literal inside
+//! the [`Prepared`] handle at prepare time and reuses it on every call,
+//! restoring the once-per-block conversion the old concrete engine had
+//! (§Perf in EXPERIMENTS.md).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -23,7 +24,7 @@ use anyhow::{bail, Result};
 use crate::tensor::Tensor;
 use crate::util::Stopwatch;
 
-use super::engine::Backend;
+use super::engine::{Arg, Backend, Prepared};
 use super::{ArtifactSpec, Manifest};
 
 struct Inner {
@@ -78,29 +79,21 @@ impl PjrtBackend {
         inner.executables.insert(spec.name.clone(), exe);
         Ok(())
     }
-}
 
-impl Backend for PjrtBackend {
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
-
-    fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let spec = self.manifest.artifact(name)?;
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let refs: Vec<&xla::Literal> = literals.iter().collect();
-
+    /// Shared execute path for `run` / `run_args`: compile-once, execute,
+    /// untuple, convert outputs back to host tensors.
+    fn execute_literals(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        refs: &[&xla::Literal],
+    ) -> Result<Vec<Tensor>> {
         let mut inner = self.inner.lock().unwrap();
         Self::ensure_compiled(&mut inner, spec)?;
         let sw = Stopwatch::start();
         let exe = inner.executables.get(name).unwrap();
         let result = exe
-            .execute::<&xla::Literal>(&refs)
+            .execute::<&xla::Literal>(refs)
             .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
         let lit = result[0][0]
             .to_literal_sync()
@@ -122,6 +115,60 @@ impl Backend for PjrtBackend {
         inner.stats.1 += sw.secs();
         inner.stats.2 += 1;
         Ok(out)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.execute_literals(name, spec, &refs)
+    }
+
+    /// Prepared inputs carry a device literal here — worth the host copy.
+    fn caches_prepared(&self) -> bool {
+        true
+    }
+
+    /// Cache the device literal at prepare time; `run_args` then skips the
+    /// per-call host→literal conversion for this input entirely.
+    fn prepare(&self, t: &Tensor) -> Result<Prepared> {
+        let literal = t.to_literal()?;
+        Ok(Prepared { host: t.clone(), literal: Some(literal) })
+    }
+
+    fn run_args(&self, name: &str, inputs: &[Arg]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?;
+        // Convert only the plain-host args; prepared args reuse their
+        // cached literal. `owned` is fully populated before any ref is
+        // taken, so the borrows below are stable.
+        let mut owned: Vec<xla::Literal> = Vec::new();
+        let mut cached: Vec<Option<&xla::Literal>> = Vec::with_capacity(inputs.len());
+        for a in inputs {
+            match a {
+                Arg::Prep(p) if p.literal.is_some() => cached.push(p.literal.as_ref()),
+                other => {
+                    owned.push(other.host().to_literal()?);
+                    cached.push(None);
+                }
+            }
+        }
+        let mut next_owned = owned.iter();
+        let refs: Vec<&xla::Literal> = cached
+            .into_iter()
+            .map(|slot| slot.unwrap_or_else(|| next_owned.next().unwrap()))
+            .collect();
+        self.execute_literals(name, spec, &refs)
     }
 
     fn stats(&self) -> (f64, f64, u64) {

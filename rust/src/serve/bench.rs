@@ -1,0 +1,586 @@
+//! Offline serving driver: replay a Poisson trace through the
+//! continuous-batching loop in each requested weight format, measure
+//! throughput + latency percentiles, parity-check the fast paths against
+//! dense full-prefix recompute, and emit a machine-readable
+//! `BENCH_serve.json` record for the perf trajectory.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::model::{ModelConfig, ParamStore, LAYER_NAMES};
+use crate::quant::QuantSpec;
+use crate::runtime::Engine;
+use crate::util::json::{self, Json};
+use crate::util::par::par_map;
+use crate::util::{mean, percentile, Stopwatch};
+
+use super::engine::{
+    argmax, block_tensors, decode_step, decode_step_backend, greedy_backend, greedy_cached,
+    greedy_recompute, last_logits, prefill, score_nll, BlockTensors, ServeContext,
+};
+use super::kv::KvCache;
+use super::model::{PackedModel, WeightFormat};
+use super::scheduler::{ReqKind, Request, Scheduler, SchedulerConfig};
+use super::trace::{poisson_trace, TraceConfig};
+
+/// Which execution path serves the trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServeMode {
+    /// f32 weights through the native `mm_nt` kernel — the baseline.
+    Dense,
+    /// CSR weights through the row-blocked SpMM kernels.
+    Sparse,
+    /// quantized CSR with fused dequant.
+    Quant,
+    /// dense weights with decode routed through the runtime backend's
+    /// `block_fwd_cached` artifact (serving through the `Engine` facade).
+    DenseBackend,
+}
+
+impl ServeMode {
+    pub fn from_name(s: &str) -> Option<ServeMode> {
+        match s {
+            "dense" => Some(ServeMode::Dense),
+            "sparse" | "csr" => Some(ServeMode::Sparse),
+            "quant" => Some(ServeMode::Quant),
+            "dense-backend" | "backend" => Some(ServeMode::DenseBackend),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeMode::Dense => "dense",
+            ServeMode::Sparse => "sparse",
+            ServeMode::Quant => "quant",
+            ServeMode::DenseBackend => "dense-backend",
+        }
+    }
+}
+
+/// One retired request.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: usize,
+    /// finish time minus arrival on the trace clock
+    pub latency_s: f64,
+    pub out_tokens: usize,
+    /// total prompt NLL (scoring requests only)
+    pub nll: Option<f64>,
+}
+
+/// Raw counters of one trace replay.
+pub struct TraceStats {
+    pub finished: Vec<FinishedRequest>,
+    pub wall_s: f64,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    pub peak_active: usize,
+}
+
+/// Replay `requests` through the continuous-batching loop: admit by token
+/// budget, prefill new admissions (parallel across prompts), then one
+/// batched decode step per iteration for everything active.
+pub fn run_trace(
+    ctx: &ServeContext,
+    backend: Option<(&Engine, &[BlockTensors])>,
+    requests: Vec<Request>,
+    scfg: &SchedulerConfig,
+) -> Result<TraceStats> {
+    struct Active {
+        req: Request,
+        cache: KvCache,
+        last: i32,
+        produced: usize,
+    }
+    let total = requests.len();
+    for r in &requests {
+        if r.cost() > ctx.max_pos() {
+            bail!(
+                "request {} needs {} positions but the context allows {}",
+                r.id,
+                r.cost(),
+                ctx.max_pos()
+            );
+        }
+    }
+    let d = ctx.model.cfg.d_model;
+    let mut sched = Scheduler::new(scfg.clone(), requests)?;
+    let mut active: Vec<Active> = Vec::new();
+    let mut finished: Vec<FinishedRequest> = Vec::with_capacity(total);
+    let sw = Stopwatch::start();
+    // Work-conserving replay: when the system drains before the next
+    // arrival, the trace clock jumps forward instead of busy-waiting, so
+    // latencies keep their Poisson waits but the bench never idles.
+    let mut clock_offset = 0.0f64;
+    let mut prompt_tokens = 0usize;
+    let mut gen_tokens = 0usize;
+    let mut peak_active = 0usize;
+    while finished.len() < total {
+        let mut now = sw.secs() + clock_offset;
+        if active.is_empty() {
+            if let Some(na) = sched.next_arrival() {
+                if na > now {
+                    clock_offset += na - now;
+                    now = na;
+                }
+            }
+        }
+        let admitted = sched.admit(now, active.len());
+        if !admitted.is_empty() {
+            let prefilled = par_map(&admitted, |req| {
+                let mut cache = ctx.new_cache();
+                let hidden = prefill(ctx, &req.tokens, &mut cache);
+                Ok((cache, hidden))
+            })?;
+            for (req, (cache, hidden)) in admitted.into_iter().zip(prefilled) {
+                prompt_tokens += req.tokens.len();
+                let s = req.tokens.len();
+                match req.kind {
+                    ReqKind::Score => {
+                        let nll = score_nll(ctx, &hidden, &req.tokens);
+                        let cost = req.cost();
+                        finished.push(FinishedRequest {
+                            id: req.id,
+                            latency_s: (sw.secs() + clock_offset - req.arrival).max(0.0),
+                            out_tokens: 0,
+                            nll: Some(nll.iter().map(|v| *v as f64).sum()),
+                        });
+                        sched.release(cost);
+                    }
+                    ReqKind::Generate { max_new } => {
+                        let first =
+                            argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32;
+                        gen_tokens += 1;
+                        if max_new <= 1 {
+                            let cost = req.cost();
+                            finished.push(FinishedRequest {
+                                id: req.id,
+                                latency_s: (sw.secs() + clock_offset - req.arrival).max(0.0),
+                                out_tokens: 1,
+                                nll: None,
+                            });
+                            sched.release(cost);
+                        } else {
+                            active.push(Active { req, cache, last: first, produced: 1 });
+                        }
+                    }
+                }
+            }
+        }
+        peak_active = peak_active.max(active.len());
+        if !active.is_empty() {
+            let last: Vec<i32> = active.iter().map(|a| a.last).collect();
+            let next = {
+                let mut caches: Vec<&mut KvCache> =
+                    active.iter_mut().map(|a| &mut a.cache).collect();
+                match backend {
+                    Some((engine, blocks)) => {
+                        decode_step_backend(ctx, engine, blocks, &last, &mut caches)?
+                    }
+                    None => decode_step(ctx, &last, &mut caches),
+                }
+            };
+            gen_tokens += next.len();
+            for (a, t) in active.iter_mut().zip(&next) {
+                a.last = *t;
+                a.produced += 1;
+            }
+            let done_now = sw.secs() + clock_offset;
+            let mut i = 0;
+            while i < active.len() {
+                let max_new = match active[i].req.kind {
+                    ReqKind::Generate { max_new } => max_new,
+                    ReqKind::Score => 0,
+                };
+                if active[i].produced >= max_new {
+                    let a = active.swap_remove(i);
+                    sched.release(a.req.cost());
+                    finished.push(FinishedRequest {
+                        id: a.req.id,
+                        latency_s: (done_now - a.req.arrival).max(0.0),
+                        out_tokens: a.produced,
+                        nll: None,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    Ok(TraceStats {
+        finished,
+        wall_s: sw.secs(),
+        prompt_tokens,
+        gen_tokens,
+        peak_active,
+    })
+}
+
+/// Aggregated metrics of one mode's replay.
+pub struct ModeReport {
+    pub mode: String,
+    pub requests: usize,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub peak_active: usize,
+    pub weight_mbytes: f64,
+}
+
+fn mode_report(mode: ServeMode, weight_bytes: usize, stats: &TraceStats) -> ModeReport {
+    let lat_ms: Vec<f64> = stats.finished.iter().map(|f| f.latency_s * 1e3).collect();
+    let tokens = stats.prompt_tokens + stats.gen_tokens;
+    ModeReport {
+        mode: mode.name().to_string(),
+        requests: stats.finished.len(),
+        prompt_tokens: stats.prompt_tokens,
+        gen_tokens: stats.gen_tokens,
+        wall_s: stats.wall_s,
+        tokens_per_s: tokens as f64 / stats.wall_s.max(1e-9),
+        mean_ms: mean(&lat_ms),
+        p50_ms: percentile(&lat_ms, 50.0),
+        p95_ms: percentile(&lat_ms, 95.0),
+        peak_active: stats.peak_active,
+        weight_mbytes: weight_bytes as f64 / (1024.0 * 1024.0),
+    }
+}
+
+/// Everything `besa serve-bench` needs.
+pub struct ServeBenchConfig {
+    pub modes: Vec<ServeMode>,
+    pub trace: TraceConfig,
+    pub sched: SchedulerConfig,
+    pub quant: QuantSpec,
+    /// tokens generated in the KV-vs-recompute parity check
+    pub parity_decode_tokens: usize,
+    /// where to write the machine-readable record; None skips the file
+    pub json_path: Option<PathBuf>,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        ServeBenchConfig {
+            modes: vec![
+                ServeMode::Dense,
+                ServeMode::Sparse,
+                ServeMode::Quant,
+                ServeMode::DenseBackend,
+            ],
+            trace: TraceConfig::default(),
+            sched: SchedulerConfig::default(),
+            quant: QuantSpec::default(),
+            parity_decode_tokens: 8,
+            json_path: Some(PathBuf::from("BENCH_serve.json")),
+        }
+    }
+}
+
+/// Parity of the fast paths against dense full-prefix recompute.
+pub struct ParityReport {
+    /// max |NLL| gap, sparse scoring vs dense scoring, over one prompt
+    pub max_score_nll_diff: f64,
+    /// sparse KV-cached greedy tokens == dense full-recompute tokens
+    pub sparse_decode_matches: bool,
+    /// backend-routed (`block_fwd_cached`) tokens == dense full-recompute
+    pub backend_decode_matches: bool,
+    /// fused-dequant path vs dense serving of the fake-quantized
+    /// checkpoint (its exact reference — quant legitimately differs from
+    /// the raw dense model): (max NLL gap, decode tokens match).
+    /// None when the quant mode was not requested.
+    pub quant: Option<(f64, bool)>,
+}
+
+fn parity_check(
+    engine: &Engine,
+    params: &ParamStore,
+    cfg: &ModelConfig,
+    bcfg: &ServeBenchConfig,
+    prompt: &[i32],
+) -> Result<ParityReport> {
+    let n = bcfg.parity_decode_tokens.max(1);
+    let max_pos = prompt.len() + n + 1;
+    let dense_ctx =
+        ServeContext::new(PackedModel::materialize(params, cfg, WeightFormat::Dense)?, max_pos);
+    let sparse_ctx =
+        ServeContext::new(PackedModel::materialize(params, cfg, WeightFormat::Csr)?, max_pos);
+
+    // scoring parity on the prompt
+    let mut c1 = dense_ctx.new_cache();
+    let h_dense = prefill(&dense_ctx, prompt, &mut c1);
+    let mut c2 = sparse_ctx.new_cache();
+    let h_sparse = prefill(&sparse_ctx, prompt, &mut c2);
+    let nll_dense = score_nll(&dense_ctx, &h_dense, prompt);
+    let nll_sparse = score_nll(&sparse_ctx, &h_sparse, prompt);
+    let max_score_nll_diff = nll_dense
+        .iter()
+        .zip(&nll_sparse)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+
+    // decode parity: cached fast paths vs dense full-prefix recompute
+    let reference = greedy_recompute(&dense_ctx, prompt, n);
+    let sparse_decode_matches = greedy_cached(&sparse_ctx, prompt, n) == reference;
+    let backend_decode_matches = if bcfg.modes.contains(&ServeMode::DenseBackend) {
+        let blocks = block_tensors(params, cfg)?;
+        greedy_backend(&dense_ctx, engine, &blocks, prompt, n)? == reference
+    } else {
+        true
+    };
+
+    // quant parity against its exact reference: dense serving of the
+    // fake-quantized checkpoint (the fused dequant must reproduce it)
+    let quant = if bcfg.modes.contains(&ServeMode::Quant) {
+        let mut params_q = params.clone();
+        crate::quant::quantize_model(&mut params_q, cfg, bcfg.quant)?;
+        let dense_q_ctx = ServeContext::new(
+            PackedModel::materialize(&params_q, cfg, WeightFormat::Dense)?,
+            max_pos,
+        );
+        let quant_ctx = ServeContext::new(
+            PackedModel::materialize(params, cfg, WeightFormat::Quant(bcfg.quant))?,
+            max_pos,
+        );
+        let mut cq = quant_ctx.new_cache();
+        let nll_q = score_nll(&quant_ctx, &prefill(&quant_ctx, prompt, &mut cq), prompt);
+        let mut cd = dense_q_ctx.new_cache();
+        let nll_d = score_nll(&dense_q_ctx, &prefill(&dense_q_ctx, prompt, &mut cd), prompt);
+        let diff = nll_q
+            .iter()
+            .zip(&nll_d)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0f64, f64::max);
+        let decode_ok =
+            greedy_cached(&quant_ctx, prompt, n) == greedy_recompute(&dense_q_ctx, prompt, n);
+        Some((diff, decode_ok))
+    } else {
+        None
+    };
+    Ok(ParityReport { max_score_nll_diff, sparse_decode_matches, backend_decode_matches, quant })
+}
+
+/// Zero the smallest-magnitude fraction of every prunable weight — the
+/// hermetic stand-in checkpoint for `--smoke` / `--synthetic` runs (the
+/// real flow serves a `besa prune` checkpoint via `--ckpt`).
+pub fn magnitude_prune_in_place(
+    params: &mut ParamStore,
+    cfg: &ModelConfig,
+    sparsity: f64,
+) -> Result<()> {
+    for l in 0..cfg.n_blocks {
+        for w in LAYER_NAMES {
+            let t = params.get_mut(&ParamStore::layer_name(l, w))?;
+            let data = t.f32s_mut();
+            let n_zero = (data.len() as f64 * sparsity).round() as usize;
+            let mut idx: Vec<usize> = (0..data.len()).collect();
+            // O(n) NaN-safe partial selection, same pattern as
+            // prune::topk_row_mask
+            if n_zero > 0 && n_zero < data.len() {
+                idx.select_nth_unstable_by(n_zero - 1, |a, b| {
+                    data[*a].abs().total_cmp(&data[*b].abs())
+                });
+            }
+            for k in idx.into_iter().take(n_zero) {
+                data[k] = 0.0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run the full serve benchmark: every requested mode over the same
+/// trace, plus the parity section. Prints the human table and returns
+/// (and optionally writes) the machine-readable record.
+pub fn run_serve_bench(
+    engine: &Engine,
+    params: &ParamStore,
+    bcfg: &ServeBenchConfig,
+) -> Result<Json> {
+    let cfg = engine.config().clone();
+    let requests = poisson_trace(&bcfg.trace);
+    if requests.is_empty() {
+        bail!("trace produced no requests");
+    }
+    let max_pos = bcfg.trace.max_request_tokens();
+    let n_score = requests.iter().filter(|r| r.kind == ReqKind::Score).count();
+    let sparsity = params.prunable_sparsity(cfg.n_blocks);
+    println!(
+        "\n== serve-bench: config {}, backend {}, sparsity {:.2}, {} requests ({} gen / {} score) ==",
+        cfg.name,
+        engine.backend_name(),
+        sparsity,
+        requests.len(),
+        requests.len() - n_score,
+        n_score
+    );
+    let mut reports: Vec<ModeReport> = Vec::new();
+    for mode in &bcfg.modes {
+        let format = match mode {
+            ServeMode::Dense | ServeMode::DenseBackend => WeightFormat::Dense,
+            ServeMode::Sparse => WeightFormat::Csr,
+            ServeMode::Quant => WeightFormat::Quant(bcfg.quant),
+        };
+        let model = PackedModel::materialize(params, &cfg, format)?;
+        let weight_bytes = model.weight_bytes();
+        let ctx = ServeContext::new(model, max_pos);
+        let blocks;
+        let backend = match mode {
+            ServeMode::DenseBackend => {
+                blocks = block_tensors(params, &cfg)?;
+                Some((engine, blocks.as_slice()))
+            }
+            _ => None,
+        };
+        let stats = run_trace(&ctx, backend, requests.clone(), &bcfg.sched)?;
+        reports.push(mode_report(*mode, weight_bytes, &stats));
+    }
+
+    // report after all modes ran so speedups don't depend on mode order;
+    // no dense baseline in the run -> no speedup column/record at all
+    let dense_tps = reports
+        .iter()
+        .find(|r| r.mode == "dense")
+        .map(|r| r.tokens_per_s)
+        .filter(|tps| *tps > 0.0);
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "mode", "tok/s", "p50 ms", "p95 ms", "wall s", "weights", "speedup"
+    );
+    for report in &reports {
+        let speedup = match dense_tps {
+            Some(base) => format!("{:.2}x", report.tokens_per_s / base),
+            None => "-".to_string(),
+        };
+        println!(
+            "{:<14} {:>10.0} {:>10.2} {:>10.2} {:>10.2} {:>8.2}MB {:>8}",
+            report.mode,
+            report.tokens_per_s,
+            report.p50_ms,
+            report.p95_ms,
+            report.wall_s,
+            report.weight_mbytes,
+            speedup
+        );
+    }
+
+    // parity section only when a fast path is in the run — scoring +
+    // decode parity of sparse/backend against dense full-prefix recompute
+    // on the longest generation prompt of the trace
+    let wants_parity = bcfg
+        .modes
+        .iter()
+        .any(|m| matches!(m, ServeMode::Sparse | ServeMode::Quant | ServeMode::DenseBackend));
+    let parity = if wants_parity {
+        let parity_prompt = requests
+            .iter()
+            .filter(|r| matches!(r.kind, ReqKind::Generate { .. }))
+            .max_by_key(|r| r.tokens.len())
+            .map(|r| r.tokens.clone())
+            .unwrap_or_else(|| requests[0].tokens.clone());
+        let parity = parity_check(engine, params, &cfg, bcfg, &parity_prompt)?;
+        println!(
+            "parity: score nll diff {:.2e} (sparse vs dense), cached decode vs dense recompute: sparse {}, backend {}",
+            parity.max_score_nll_diff,
+            if parity.sparse_decode_matches { "match" } else { "MISMATCH" },
+            if parity.backend_decode_matches { "match" } else { "MISMATCH" },
+        );
+        if let Some((diff, ok)) = parity.quant {
+            println!(
+                "parity: quant vs fake-quantized dense: nll diff {:.2e}, decode {}",
+                diff,
+                if ok { "match" } else { "MISMATCH" }
+            );
+        }
+        if parity.max_score_nll_diff > 1e-5 {
+            crate::warnlog!(
+                "sparse scoring drifted {:.3e} from dense (tolerance 1e-5)",
+                parity.max_score_nll_diff
+            );
+        }
+        Some(parity)
+    } else {
+        None
+    };
+
+    // machine-readable record
+    let mode_rows: Vec<Json> = reports
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("mode", json::s(&r.mode)),
+                ("requests", json::num(r.requests as f64)),
+                ("prompt_tokens", json::num(r.prompt_tokens as f64)),
+                ("gen_tokens", json::num(r.gen_tokens as f64)),
+                ("wall_s", json::num(r.wall_s)),
+                ("tokens_per_s", json::num(r.tokens_per_s)),
+                ("mean_ms", json::num(r.mean_ms)),
+                ("p50_ms", json::num(r.p50_ms)),
+                ("p95_ms", json::num(r.p95_ms)),
+                ("peak_active", json::num(r.peak_active as f64)),
+                ("weight_mbytes", json::num(r.weight_mbytes)),
+            ])
+        })
+        .collect();
+    // speedups only exist relative to a measured dense baseline
+    let speedups: Vec<(&str, Json)> = match dense_tps {
+        Some(base) => reports
+            .iter()
+            .filter(|r| r.mode != "dense")
+            .map(|r| (r.mode.as_str(), json::num(r.tokens_per_s / base)))
+            .collect(),
+        None => Vec::new(),
+    };
+    let mut payload_fields = vec![
+        ("bench", json::s("serve_throughput")),
+        ("config", json::s(&cfg.name)),
+        ("backend", json::s(engine.backend_name())),
+        ("sparsity", json::num(sparsity)),
+        (
+            "trace",
+            json::obj(vec![
+                ("n_requests", json::num(bcfg.trace.n_requests as f64)),
+                ("rate", json::num(bcfg.trace.rate)),
+                ("prompt_min", json::num(bcfg.trace.prompt_min as f64)),
+                ("prompt_max", json::num(bcfg.trace.prompt_max as f64)),
+                ("gen_min", json::num(bcfg.trace.gen_min as f64)),
+                ("gen_max", json::num(bcfg.trace.gen_max as f64)),
+                ("score_fraction", json::num(bcfg.trace.score_fraction)),
+                ("seed", json::num(bcfg.trace.seed as f64)),
+            ]),
+        ),
+        (
+            "scheduler",
+            json::obj(vec![
+                ("token_budget", json::num(bcfg.sched.token_budget as f64)),
+                ("max_batch", json::num(bcfg.sched.max_batch as f64)),
+            ]),
+        ),
+        ("modes", Json::Arr(mode_rows)),
+    ];
+    if !speedups.is_empty() {
+        payload_fields.push(("speedup_vs_dense", json::obj(speedups)));
+    }
+    if let Some(p) = &parity {
+        let mut parity_fields = vec![
+            ("max_score_nll_diff", json::num(p.max_score_nll_diff)),
+            ("sparse_decode_matches", Json::Bool(p.sparse_decode_matches)),
+            ("backend_decode_matches", Json::Bool(p.backend_decode_matches)),
+        ];
+        if let Some((diff, ok)) = p.quant {
+            parity_fields.push(("quant_score_nll_diff", json::num(diff)));
+            parity_fields.push(("quant_decode_matches", Json::Bool(ok)));
+        }
+        payload_fields.push(("parity", json::obj(parity_fields)));
+    }
+    let payload = json::obj(payload_fields);
+    if let Some(path) = &bcfg.json_path {
+        std::fs::write(path, payload.to_string_pretty())?;
+        println!("[results -> {}]", path.display());
+    }
+    Ok(payload)
+}

@@ -1,0 +1,488 @@
+//! Serving forward passes over a [`PackedModel`]: variable-length prefill
+//! (which fills the per-request KV cache), batched single-token decode,
+//! and prompt scoring.
+//!
+//! Numerics mirror the native backend's block math operation for
+//! operation (same RMSNorm, RoPE tables, causal softmax and
+//! accumulation order), so:
+//! * dense-format serving reproduces `block_fwd` / `head_nll` bitwise,
+//! * CSR serving reproduces dense bitwise (exact zeros drop out of the
+//!   accumulation without rounding),
+//! * KV-cached decode reproduces a full-prefix recompute token-for-token.
+//!
+//! `tests/serve_parity.rs` pins all three.
+
+use anyhow::Result;
+
+use crate::model::{ModelConfig, ParamStore, LAYER_NAMES};
+use crate::runtime::native::ops;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+use super::kv::KvCache;
+use super::model::PackedModel;
+
+/// A packed model plus the RoPE tables for every position it may serve.
+pub struct ServeContext {
+    pub model: PackedModel,
+    /// cos/sin tables `[max_pos, dh/2]`
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    max_pos: usize,
+}
+
+impl ServeContext {
+    /// `max_pos` bounds prompt length + generated tokens per request.
+    pub fn new(model: PackedModel, max_pos: usize) -> ServeContext {
+        let (cos, sin) =
+            ops::rope_tables_for(max_pos, model.cfg.d_head(), model.cfg.rope_base);
+        ServeContext { model, cos, sin, max_pos }
+    }
+
+    pub fn max_pos(&self) -> usize {
+        self.max_pos
+    }
+
+    /// Fresh KV cache sized for this context.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.model.cfg.n_blocks, self.model.cfg.d_model, self.max_pos)
+    }
+}
+
+/// Gather embedding rows: tokens `[n]` -> `[n, d]`.
+pub fn embed_rows(embed: &[f32], tokens: &[i32], d: usize, vocab: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; tokens.len() * d];
+    for (i, t) in tokens.iter().enumerate() {
+        let t = (*t).clamp(0, vocab as i32 - 1) as usize;
+        x[i * d..(i + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+    }
+    x
+}
+
+/// Rotate every head of one `[d]` row at `pos` (interleaved even/odd
+/// pairing — the `ops::rope_head` layout).
+fn rope_row(row: &mut [f32], pos: usize, cos: &[f32], sin: &[f32], n_heads: usize, dh: usize) {
+    let half = dh / 2;
+    for h in 0..n_heads {
+        let base = h * dh;
+        for t in 0..half {
+            let (c, n) = (cos[pos * half + t], sin[pos * half + t]);
+            let (a, b) = (row[base + 2 * t], row[base + 2 * t + 1]);
+            row[base + 2 * t] = a * c - b * n;
+            row[base + 2 * t + 1] = a * n + b * c;
+        }
+    }
+}
+
+/// Causal attention over one sequence: roped `q`/`k` and raw `v`, all
+/// `[s, d]` with heads side by side in the feature dim. Returns `[s, d]`.
+fn attention_causal(q: &[f32], k: &[f32], v: &[f32], s: usize, n_heads: usize, dh: usize) -> Vec<f32> {
+    let d = n_heads * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; s * d];
+    let mut row = vec![0.0f32; s];
+    for h in 0..n_heads {
+        let off = h * dh;
+        for qi in 0..s {
+            let qrow = &q[qi * d + off..qi * d + off + dh];
+            let mut mx = f32::NEG_INFINITY;
+            for ki in 0..=qi {
+                let krow = &k[ki * d + off..ki * d + off + dh];
+                let mut dot = 0.0f32;
+                for (a, b) in qrow.iter().zip(krow) {
+                    dot += a * b;
+                }
+                row[ki] = dot * scale;
+                mx = mx.max(row[ki]);
+            }
+            let mut z = 0.0f32;
+            for item in row.iter_mut().take(qi + 1) {
+                *item = (*item - mx).exp();
+                z += *item;
+            }
+            let orow = &mut out[qi * d + off..qi * d + off + dh];
+            for ki in 0..=qi {
+                let p = row[ki] / z;
+                let vrow = &v[ki * d + off..ki * d + off + dh];
+                for (ov, vv) in orow.iter_mut().zip(vrow) {
+                    *ov += p * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Attention of one new roped query over `len` cached positions plus the
+/// new key/value (logical position `len`). All row args are `[d]`; the
+/// caches are `[len, d]`. Returns `[d]`.
+fn attention_cached(
+    q: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    len: usize,
+    n_heads: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let d = n_heads * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    let mut row = vec![0.0f32; len + 1];
+    for h in 0..n_heads {
+        let off = h * dh;
+        let qh = &q[off..off + dh];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=len {
+            let kj = if j < len { &k_cache[j * d + off..j * d + off + dh] } else { &k_new[off..off + dh] };
+            let mut dot = 0.0f32;
+            for (a, b) in qh.iter().zip(kj) {
+                dot += a * b;
+            }
+            row[j] = dot * scale;
+            mx = mx.max(row[j]);
+        }
+        let mut z = 0.0f32;
+        for item in row.iter_mut() {
+            *item = (*item - mx).exp();
+            z += *item;
+        }
+        let oh = &mut out[off..off + dh];
+        for j in 0..=len {
+            let p = row[j] / z;
+            let vj = if j < len { &v_cache[j * d + off..j * d + off + dh] } else { &v_new[off..off + dh] };
+            for (ov, vv) in oh.iter_mut().zip(vj) {
+                *ov += p * vv;
+            }
+        }
+    }
+    out
+}
+
+/// Run the whole prompt through the model, filling `cache` with roped
+/// keys / raw values for every block and position. Returns the final
+/// hidden states `[s, d]` (pre-`norm_f`).
+pub fn prefill(ctx: &ServeContext, tokens: &[i32], cache: &mut KvCache) -> Vec<f32> {
+    let cfg = &ctx.model.cfg;
+    let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+    let s = tokens.len();
+    assert!(s > 0 && s <= ctx.max_pos, "prompt length {s} outside 1..={}", ctx.max_pos);
+    let eps = cfg.norm_eps;
+    let mut x = embed_rows(&ctx.model.embed, tokens, d, cfg.vocab);
+    for (l, blk) in ctx.model.blocks.iter().enumerate() {
+        let h1 = ops::rmsnorm(&x, &blk.norm1, d, eps);
+        let mut q = blk.lin[0].forward(&h1, s);
+        let mut k = blk.lin[1].forward(&h1, s);
+        let v = blk.lin[2].forward(&h1, s);
+        for pos in 0..s {
+            rope_row(&mut q[pos * d..(pos + 1) * d], pos, &ctx.cos, &ctx.sin, nh, dh);
+            rope_row(&mut k[pos * d..(pos + 1) * d], pos, &ctx.cos, &ctx.sin, nh, dh);
+            cache.write(l, pos, &k[pos * d..(pos + 1) * d], &v[pos * d..(pos + 1) * d]);
+        }
+        let att = attention_causal(&q, &k, &v, s, nh, dh);
+        let o = blk.lin[3].forward(&att, s);
+        let x2: Vec<f32> = x.iter().zip(&o).map(|(a, b)| a + b).collect();
+        let h2 = ops::rmsnorm(&x2, &blk.norm2, d, eps);
+        let gate = blk.lin[4].forward(&h2, s);
+        let up = blk.lin[5].forward(&h2, s);
+        let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| ops::silu(*g) * u).collect();
+        let down = blk.lin[6].forward(&act, s);
+        x = x2.iter().zip(&down).map(|(a, b)| a + b).collect();
+    }
+    cache.set_len(s);
+    x
+}
+
+/// Per-position NLL of the prompt under the model (last position zeroed),
+/// from the prefill hidden states — the scoring-request path. Matches
+/// `head_nll` on the native backend.
+pub fn score_nll(ctx: &ServeContext, hidden: &[f32], tokens: &[i32]) -> Vec<f32> {
+    let cfg = &ctx.model.cfg;
+    let (d, v) = (cfg.d_model, cfg.vocab);
+    let s = tokens.len();
+    let h = ops::rmsnorm(hidden, &ctx.model.norm_f, d, cfg.norm_eps);
+    let logits = ops::mm_nt(&h, &ctx.model.embed, s, d, v);
+    let mut nll = vec![0.0f32; s];
+    for si in 0..s.saturating_sub(1) {
+        let row = &logits[si * v..(si + 1) * v];
+        let t = tokens[si + 1].clamp(0, v as i32 - 1) as usize;
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|l| (l - mx).exp()).sum();
+        let lse = mx + z.ln();
+        nll[si] = lse - row[t];
+    }
+    nll
+}
+
+/// Tied-head logits of one hidden row `[d]`.
+pub fn last_logits(ctx: &ServeContext, hidden_row: &[f32]) -> Vec<f32> {
+    let cfg = &ctx.model.cfg;
+    let h = ops::rmsnorm(hidden_row, &ctx.model.norm_f, cfg.d_model, cfg.norm_eps);
+    ops::mm_nt(&h, &ctx.model.embed, 1, cfg.d_model, cfg.vocab)
+}
+
+/// Index of the maximum element (first on ties — deterministic greedy).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// One continuous-batching decode step: each active request contributes
+/// its last token; linears run batched over all requests, attention runs
+/// per request against its own KV cache. Appends this position to every
+/// cache and returns the next (greedy) token per request.
+pub fn decode_step(
+    ctx: &ServeContext,
+    last_tokens: &[i32],
+    caches: &mut [&mut KvCache],
+) -> Vec<i32> {
+    let cfg = &ctx.model.cfg;
+    let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+    let nb = last_tokens.len();
+    assert_eq!(nb, caches.len());
+    let eps = cfg.norm_eps;
+    let positions: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+    for (i, p) in positions.iter().enumerate() {
+        assert!(*p < ctx.max_pos, "request {i} exhausted cache capacity {}", ctx.max_pos);
+    }
+    let mut x = embed_rows(&ctx.model.embed, last_tokens, d, cfg.vocab);
+    for (l, blk) in ctx.model.blocks.iter().enumerate() {
+        let h1 = ops::rmsnorm(&x, &blk.norm1, d, eps);
+        let mut q = blk.lin[0].forward(&h1, nb);
+        let mut k = blk.lin[1].forward(&h1, nb);
+        let v = blk.lin[2].forward(&h1, nb);
+        let mut att = vec![0.0f32; nb * d];
+        for i in 0..nb {
+            let p = positions[i];
+            rope_row(&mut q[i * d..(i + 1) * d], p, &ctx.cos, &ctx.sin, nh, dh);
+            rope_row(&mut k[i * d..(i + 1) * d], p, &ctx.cos, &ctx.sin, nh, dh);
+            let out = attention_cached(
+                &q[i * d..(i + 1) * d],
+                &k[i * d..(i + 1) * d],
+                &v[i * d..(i + 1) * d],
+                caches[i].k_block(l),
+                caches[i].v_block(l),
+                p,
+                nh,
+                dh,
+            );
+            att[i * d..(i + 1) * d].copy_from_slice(&out);
+            caches[i].write(l, p, &k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+        }
+        let o = blk.lin[3].forward(&att, nb);
+        let x2: Vec<f32> = x.iter().zip(&o).map(|(a, b)| a + b).collect();
+        let h2 = ops::rmsnorm(&x2, &blk.norm2, d, eps);
+        let gate = blk.lin[4].forward(&h2, nb);
+        let up = blk.lin[5].forward(&h2, nb);
+        let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| ops::silu(*g) * u).collect();
+        let down = blk.lin[6].forward(&act, nb);
+        x = x2.iter().zip(&down).map(|(a, b)| a + b).collect();
+    }
+    for c in caches.iter_mut() {
+        let n = c.len();
+        c.set_len(n + 1);
+    }
+    let h = ops::rmsnorm(&x, &ctx.model.norm_f, d, eps);
+    let logits = ops::mm_nt(&h, &ctx.model.embed, nb, d, cfg.vocab);
+    (0..nb).map(|i| argmax(&logits[i * cfg.vocab..(i + 1) * cfg.vocab]) as i32).collect()
+}
+
+/// Per-block host tensors for routing decode through the execution
+/// backend's `block_fwd_cached` artifact.
+pub struct BlockTensors {
+    pub weights: Vec<Tensor>,
+    pub norm1: Tensor,
+    pub norm2: Tensor,
+}
+
+/// Clone the per-block tensors out of a checkpoint once, for repeated
+/// [`decode_step_backend`] calls.
+pub fn block_tensors(params: &ParamStore, cfg: &ModelConfig) -> Result<Vec<BlockTensors>> {
+    let mut out = Vec::with_capacity(cfg.n_blocks);
+    for l in 0..cfg.n_blocks {
+        let mut weights = Vec::with_capacity(7);
+        for w in LAYER_NAMES {
+            weights.push(params.get(&ParamStore::layer_name(l, w))?.clone());
+        }
+        out.push(BlockTensors {
+            weights,
+            norm1: params.get(&format!("blocks.{l}.norm1"))?.clone(),
+            norm2: params.get(&format!("blocks.{l}.norm2"))?.clone(),
+        });
+    }
+    Ok(out)
+}
+
+/// [`decode_step`] routed through the runtime's `block_fwd_cached`
+/// artifact — the "serving through the execution backend" path (dense
+/// weights; the packed model is only used for embed/norm_f/head). Same
+/// math as the in-process kernels; `tests/serve_parity.rs` pins equality.
+pub fn decode_step_backend(
+    ctx: &ServeContext,
+    engine: &Engine,
+    blocks: &[BlockTensors],
+    last_tokens: &[i32],
+    caches: &mut [&mut KvCache],
+) -> Result<Vec<i32>> {
+    let cfg = &ctx.model.cfg;
+    let d = cfg.d_model;
+    let nb = last_tokens.len();
+    assert_eq!(nb, caches.len());
+    assert_eq!(blocks.len(), cfg.n_blocks);
+    let positions: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+    let cap = positions.iter().copied().max().unwrap_or(0);
+    let pos_t = Tensor::from_i32(&[nb], positions.iter().map(|p| *p as i32).collect());
+    let mut x = embed_rows(&ctx.model.embed, last_tokens, d, cfg.vocab);
+    for (l, bt) in blocks.iter().enumerate() {
+        // pack this block's caches [nb, cap, d]; rows past a request's
+        // fill level stay zero and are never read (pos masks them)
+        let mut kc = vec![0.0f32; nb * cap * d];
+        let mut vc = vec![0.0f32; nb * cap * d];
+        for i in 0..nb {
+            let kb = caches[i].k_block(l);
+            kc[i * cap * d..i * cap * d + kb.len()].copy_from_slice(kb);
+            let vb = caches[i].v_block(l);
+            vc[i * cap * d..i * cap * d + vb.len()].copy_from_slice(vb);
+        }
+        let x_t = Tensor::from_f32(&[nb, 1, d], x);
+        let kc_t = Tensor::from_f32(&[nb, cap, d], kc);
+        let vc_t = Tensor::from_f32(&[nb, cap, d], vc);
+        let mut ins: Vec<&Tensor> = vec![&x_t, &kc_t, &vc_t, &pos_t];
+        for w in &bt.weights {
+            ins.push(w);
+        }
+        ins.push(&bt.norm1);
+        ins.push(&bt.norm2);
+        let out = engine.run("block_fwd_cached", &ins)?;
+        x = out[0].f32s().to_vec();
+        let k_new = out[1].f32s();
+        let v_new = out[2].f32s();
+        for i in 0..nb {
+            caches[i].write(l, positions[i], &k_new[i * d..(i + 1) * d], &v_new[i * d..(i + 1) * d]);
+        }
+    }
+    for c in caches.iter_mut() {
+        let n = c.len();
+        c.set_len(n + 1);
+    }
+    let h = ops::rmsnorm(&x, &ctx.model.norm_f, d, cfg.norm_eps);
+    let logits = ops::mm_nt(&h, &ctx.model.embed, nb, d, cfg.vocab);
+    Ok((0..nb).map(|i| argmax(&logits[i * cfg.vocab..(i + 1) * cfg.vocab]) as i32).collect())
+}
+
+/// Greedy-generate `n` tokens: one prefill, then KV-cached decode steps.
+/// The shared reference loop for benches and the parity suite.
+pub fn greedy_cached(ctx: &ServeContext, prompt: &[i32], n: usize) -> Vec<i32> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let d = ctx.model.cfg.d_model;
+    let mut cache = ctx.new_cache();
+    let hidden = prefill(ctx, prompt, &mut cache);
+    let s = prompt.len();
+    let mut out = vec![argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32];
+    for _ in 1..n {
+        let last = [*out.last().unwrap()];
+        let mut caches = [&mut cache];
+        out.push(decode_step(ctx, &last, &mut caches)[0]);
+    }
+    out
+}
+
+/// Greedy-generate `n` tokens by re-running the full prefix for every
+/// token — the cache-free recompute reference the cached paths are
+/// parity-checked against.
+pub fn greedy_recompute(ctx: &ServeContext, prompt: &[i32], n: usize) -> Vec<i32> {
+    let d = ctx.model.cfg.d_model;
+    let mut seq = prompt.to_vec();
+    let mut out = Vec::new();
+    for _ in 0..n {
+        let mut scratch = ctx.new_cache();
+        let h = prefill(ctx, &seq, &mut scratch);
+        let t = argmax(&last_logits(ctx, &h[(seq.len() - 1) * d..seq.len() * d])) as i32;
+        out.push(t);
+        seq.push(t);
+    }
+    out
+}
+
+/// [`greedy_cached`] with decode routed through the runtime's
+/// `block_fwd_cached` artifact.
+pub fn greedy_backend(
+    ctx: &ServeContext,
+    engine: &Engine,
+    blocks: &[BlockTensors],
+    prompt: &[i32],
+    n: usize,
+) -> Result<Vec<i32>> {
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let d = ctx.model.cfg.d_model;
+    let mut cache = ctx.new_cache();
+    let hidden = prefill(ctx, prompt, &mut cache);
+    let s = prompt.len();
+    let mut out = vec![argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32];
+    for _ in 1..n {
+        let last = [*out.last().unwrap()];
+        let mut caches = [&mut cache];
+        let next = decode_step_backend(ctx, engine, blocks, &last, &mut caches)?;
+        out.push(next[0]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+    use crate::serve::model::{PackedModel, WeightFormat};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn attention_causal_matches_native_ops() {
+        // compare against ops::attention (which ropes internally) on a
+        // single-sequence config
+        let mut cfg = test_config();
+        cfg.batch = 1;
+        cfg.seq_len = 5;
+        let (s, d, nh, dh) = (cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.d_head());
+        let mut rng = Rng::seed(21);
+        let q: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+        let k: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+        let (want, _) = ops::attention(&q, &k, &v, &cfg, false);
+
+        let (cos, sin) = ops::rope_tables_for(s, dh, cfg.rope_base);
+        let (mut qr, mut kr) = (q.clone(), k.clone());
+        for pos in 0..s {
+            rope_row(&mut qr[pos * d..(pos + 1) * d], pos, &cos, &sin, nh, dh);
+            rope_row(&mut kr[pos * d..(pos + 1) * d], pos, &cos, &sin, nh, dh);
+        }
+        let got = attention_causal(&qr, &kr, &v, s, nh, dh);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cached_decode_matches_full_recompute() {
+        let cfg = test_config();
+        let params = crate::model::ParamStore::init(&cfg, 33);
+        let model = PackedModel::materialize(&params, &cfg, WeightFormat::Dense).unwrap();
+        let ctx = ServeContext::new(model, 24);
+        let mut rng = Rng::seed(34);
+        let prompt: Vec<i32> = (0..7).map(|_| rng.below(cfg.vocab) as i32).collect();
+        assert_eq!(
+            greedy_cached(&ctx, &prompt, 7),
+            greedy_recompute(&ctx, &prompt, 7),
+            "KV-cached decode must match full-prefix recompute"
+        );
+    }
+}

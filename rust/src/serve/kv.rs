@@ -1,0 +1,110 @@
+//! Per-request KV cache: roped keys + raw values for every block, written
+//! once per position and read by every subsequent decode step.
+//!
+//! Layout is `[n_blocks, capacity, d]` row-major per tensor, one `len`
+//! shared by all blocks (a position is committed with [`KvCache::set_len`]
+//! after every block has written its row, keeping the cache consistent
+//! even if a forward pass is abandoned midway).
+
+/// KV storage for one request.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    n_blocks: usize,
+    d: usize,
+    capacity: usize,
+    len: usize,
+    /// roped keys, `[n_blocks, capacity, d]`
+    k: Vec<f32>,
+    /// raw values, `[n_blocks, capacity, d]`
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(n_blocks: usize, d: usize, capacity: usize) -> KvCache {
+        KvCache {
+            n_blocks,
+            d,
+            capacity,
+            len: 0,
+            k: vec![0.0; n_blocks * capacity * d],
+            v: vec![0.0; n_blocks * capacity * d],
+        }
+    }
+
+    /// Committed positions (same for every block).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Write the roped key / raw value rows of `block` at `pos`. Does not
+    /// change `len`; commit with [`KvCache::set_len`] once every block has
+    /// written the position.
+    pub fn write(&mut self, block: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        assert!(block < self.n_blocks && pos < self.capacity, "kv write out of range");
+        assert!(k_row.len() == self.d && v_row.len() == self.d);
+        let off = (block * self.capacity + pos) * self.d;
+        self.k[off..off + self.d].copy_from_slice(k_row);
+        self.v[off..off + self.d].copy_from_slice(v_row);
+    }
+
+    /// Commit positions `0..len` (capped by capacity). Shrinking is
+    /// allowed — benches rewind a cache to replay decode steps.
+    pub fn set_len(&mut self, len: usize) {
+        assert!(len <= self.capacity, "kv len {len} > capacity {}", self.capacity);
+        self.len = len;
+    }
+
+    /// Committed key rows of `block`: `[len, d]` row-major.
+    pub fn k_block(&self, block: usize) -> &[f32] {
+        let base = block * self.capacity * self.d;
+        &self.k[base..base + self.len * self.d]
+    }
+
+    /// Committed value rows of `block`: `[len, d]` row-major.
+    pub fn v_block(&self, block: usize) -> &[f32] {
+        let base = block * self.capacity * self.d;
+        &self.v[base..base + self.len * self.d]
+    }
+
+    /// Resident bytes of the backing buffers.
+    pub fn mem_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_commit_read() {
+        let mut c = KvCache::new(2, 3, 4);
+        assert!(c.is_empty());
+        c.write(0, 0, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        c.write(1, 0, &[7.0, 8.0, 9.0], &[1.0, 1.0, 1.0]);
+        assert!(c.k_block(0).is_empty(), "uncommitted rows stay invisible");
+        c.set_len(1);
+        assert_eq!(c.k_block(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.v_block(1), &[1.0, 1.0, 1.0]);
+        c.write(0, 1, &[0.5; 3], &[0.25; 3]);
+        c.write(1, 1, &[0.5; 3], &[0.25; 3]);
+        c.set_len(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(&c.k_block(0)[3..], &[0.5; 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn write_past_capacity_panics() {
+        let mut c = KvCache::new(1, 2, 2);
+        c.write(0, 2, &[0.0, 0.0], &[0.0, 0.0]);
+    }
+}

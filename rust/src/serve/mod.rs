@@ -1,0 +1,78 @@
+//! Batch inference engine for pruned checkpoints: the first subsystem
+//! where BESA's sparsity pays off *end to end* — pruned weights are
+//! packed into CSR / quantized-CSR form ([`crate::sparse`]) and executed,
+//! not just simulated ([`crate::sim`]) or masked ([`crate::prune`]).
+//!
+//! The pieces:
+//!
+//! * [`model`] — [`model::PackedModel`]: a [`crate::model::ParamStore`]
+//!   checkpoint materialized into dense / CSR / quantized-CSR projections.
+//! * [`kv`] — [`kv::KvCache`]: per-request roped-key/value cache, one
+//!   `[capacity, d]` plane per block.
+//! * [`engine`] — variable-length prefill (fills the KV cache), batched
+//!   O(1)-per-token decode, prompt scoring, plus a decode path routed
+//!   through the runtime backend's `block_fwd_cached` artifact.
+//! * [`scheduler`] — continuous batching: FIFO admission under a token
+//!   budget and a batch-slot cap; generation and scoring requests mix in
+//!   one batch. Heterogeneous prompt lengths are served without padding
+//!   by the variable-length kernels here; the complementary
+//!   fixed-shape route ([`crate::eval::score_prompts_padded`]) right-pads
+//!   a batch into the backend's static `[B, S]` artifacts and masks the
+//!   tail — exact under causal attention, and parity-pinned against this
+//!   engine.
+//! * [`trace`] / [`bench`] — Poisson request traces and the offline
+//!   driver behind `besa serve-bench` (throughput, p50/p95 latency,
+//!   dense-vs-sparse-vs-quant speedup, `BENCH_serve.json`).
+//!
+//! # Quickstart
+//!
+//! ```text
+//! # hermetic smoke run (synthetic magnitude-pruned checkpoint):
+//! besa serve-bench --config test --smoke
+//!
+//! # the real flow: prune, then serve the pruned checkpoint
+//! besa pretrain   --config sm --steps 200 --out runs/sm-dense.bst
+//! besa prune      --config sm --method besa --sparsity 0.5 --out runs/sm-besa.bst
+//! besa serve-bench --config sm --ckpt runs/sm-besa.bst \
+//!     --requests 64 --rate 16 --modes dense,sparse,quant
+//! ```
+//!
+//! Programmatic use:
+//!
+//! ```no_run
+//! use besa::model::{ModelConfig, ParamStore};
+//! use besa::serve::engine::{decode_step, last_logits, argmax, prefill, ServeContext};
+//! use besa::serve::model::{PackedModel, WeightFormat};
+//!
+//! let cfg = ModelConfig::builtin("test").unwrap();
+//! let params = ParamStore::init(&cfg, 1); // normally a pruned checkpoint
+//! let model = PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap();
+//! let ctx = ServeContext::new(model, 64);
+//! let mut cache = ctx.new_cache();
+//! let hidden = prefill(&ctx, &[1, 2, 3], &mut cache);
+//! let d = ctx.model.cfg.d_model;
+//! let mut tok = argmax(&last_logits(&ctx, &hidden[2 * d..3 * d])) as i32;
+//! for _ in 0..8 {
+//!     let mut caches = [&mut cache];
+//!     tok = decode_step(&ctx, &[tok], &mut caches)[0];
+//! }
+//! ```
+//!
+//! Parity guarantees (pinned by `tests/serve_parity.rs`): CSR serving
+//! reproduces the dense path bitwise, dense serving reproduces the native
+//! backend's `block_fwd`/`head_nll` math, and KV-cached decode matches a
+//! full-prefix recompute token for token.
+
+pub mod bench;
+pub mod engine;
+pub mod kv;
+pub mod model;
+pub mod scheduler;
+pub mod trace;
+
+pub use bench::{run_serve_bench, run_trace, ServeBenchConfig, ServeMode};
+pub use engine::ServeContext;
+pub use kv::KvCache;
+pub use model::{PackedModel, WeightFormat};
+pub use scheduler::{ReqKind, Request, Scheduler, SchedulerConfig};
+pub use trace::{poisson_trace, TraceConfig};

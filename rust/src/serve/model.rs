@@ -1,0 +1,212 @@
+//! Packed inference weights: a [`crate::model::ParamStore`] checkpoint
+//! materialized into the format the serving kernels execute —
+//! dense rows, CSR over the pruned zeros, or quantized CSR with fused
+//! dequant (see [`crate::sparse`]).
+
+use anyhow::Result;
+
+use crate::model::{ModelConfig, ParamStore, LAYER_NAMES};
+use crate::quant::QuantSpec;
+use crate::runtime::native::ops;
+use crate::sparse::{linear_csr, linear_quant, Csr, QuantCsr};
+
+/// How to pack the seven prunable projections of every block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WeightFormat {
+    /// f32 rows, executed with the native backend's `mm_nt` kernel — the
+    /// dense baseline every speedup is measured against.
+    Dense,
+    /// CSR over exact-zero pruned entries, row-blocked SpMM.
+    Csr,
+    /// CSR with 1-byte codes, dequant fused into the SpMM inner loop.
+    Quant(QuantSpec),
+}
+
+impl WeightFormat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightFormat::Dense => "dense",
+            WeightFormat::Csr => "sparse",
+            WeightFormat::Quant(_) => "quant",
+        }
+    }
+}
+
+/// One packed projection `W [out, in]`.
+pub enum PackedLinear {
+    Dense { w: Vec<f32>, rows: usize, cols: usize },
+    Csr(Csr),
+    Quant(QuantCsr),
+}
+
+impl PackedLinear {
+    pub fn rows(&self) -> usize {
+        match self {
+            PackedLinear::Dense { rows, .. } => *rows,
+            PackedLinear::Csr(c) => c.rows,
+            PackedLinear::Quant(q) => q.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            PackedLinear::Dense { cols, .. } => *cols,
+            PackedLinear::Csr(c) => c.cols,
+            PackedLinear::Quant(q) => q.cols,
+        }
+    }
+
+    /// `y[n, rows] = x[n, cols] @ W^T`. All three formats accumulate each
+    /// output element in ascending-column order, so a CSR packed from a
+    /// masked weight reproduces the dense result bitwise.
+    pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
+        match self {
+            PackedLinear::Dense { w, rows, cols } => ops::mm_nt(x, w, n, *cols, *rows),
+            PackedLinear::Csr(c) => linear_csr(c, x, n),
+            PackedLinear::Quant(q) => linear_quant(q, x, n),
+        }
+    }
+
+    /// Resident weight bytes in this format.
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            PackedLinear::Dense { w, .. } => w.len() * 4,
+            PackedLinear::Csr(c) => c.mem_bytes(),
+            PackedLinear::Quant(q) => q.mem_bytes(),
+        }
+    }
+}
+
+/// One packed transformer block: the seven projections in
+/// [`LAYER_NAMES`] order plus the two RMSNorm gains.
+pub struct PackedBlock {
+    pub lin: Vec<PackedLinear>,
+    pub norm1: Vec<f32>,
+    pub norm2: Vec<f32>,
+}
+
+/// A whole checkpoint packed for inference.
+pub struct PackedModel {
+    pub cfg: ModelConfig,
+    pub format: WeightFormat,
+    /// tied embedding / LM-head table `[vocab, d]`
+    pub embed: Vec<f32>,
+    pub norm_f: Vec<f32>,
+    pub blocks: Vec<PackedBlock>,
+}
+
+impl PackedModel {
+    /// Pack `params` in the given format. Pruned (exact-zero) entries are
+    /// dropped by the sparse formats; dense keeps them.
+    pub fn materialize(
+        params: &ParamStore,
+        cfg: &ModelConfig,
+        format: WeightFormat,
+    ) -> Result<PackedModel> {
+        let mut blocks = Vec::with_capacity(cfg.n_blocks);
+        for l in 0..cfg.n_blocks {
+            let mut lin = Vec::with_capacity(7);
+            for w in LAYER_NAMES {
+                let t = params.get(&ParamStore::layer_name(l, w))?;
+                lin.push(match format {
+                    WeightFormat::Dense => {
+                        let sh = cfg.layer_shape(w);
+                        PackedLinear::Dense { w: t.f32s().to_vec(), rows: sh[0], cols: sh[1] }
+                    }
+                    WeightFormat::Csr => PackedLinear::Csr(Csr::from_dense(t)),
+                    WeightFormat::Quant(spec) => {
+                        PackedLinear::Quant(QuantCsr::from_dense(t, spec))
+                    }
+                });
+            }
+            blocks.push(PackedBlock {
+                lin,
+                norm1: params.get(&format!("blocks.{l}.norm1"))?.f32s().to_vec(),
+                norm2: params.get(&format!("blocks.{l}.norm2"))?.f32s().to_vec(),
+            });
+        }
+        Ok(PackedModel {
+            cfg: cfg.clone(),
+            format,
+            embed: params.get("embed")?.f32s().to_vec(),
+            norm_f: params.get("norm_f")?.f32s().to_vec(),
+            blocks,
+        })
+    }
+
+    /// Fraction of prunable weights dropped by the packing (0 for dense).
+    pub fn sparsity(&self) -> f64 {
+        let mut kept = 0usize;
+        let mut total = 0usize;
+        for b in &self.blocks {
+            for l in &b.lin {
+                total += l.rows() * l.cols();
+                kept += match l {
+                    PackedLinear::Dense { w, .. } => w.len(),
+                    PackedLinear::Csr(c) => c.nnz(),
+                    PackedLinear::Quant(q) => q.nnz(),
+                };
+            }
+        }
+        1.0 - kept as f64 / total.max(1) as f64
+    }
+
+    /// Resident bytes of all packed projections (excl. embed/norms, which
+    /// are format-independent).
+    pub fn weight_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.lin.iter().map(|l| l.mem_bytes()).sum::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+    use crate::util::rng::Rng;
+
+    fn pruned_params(cfg: &ModelConfig, sparsity: f64) -> ParamStore {
+        let mut p = ParamStore::init(cfg, 5);
+        let mut rng = Rng::seed(6);
+        for l in 0..cfg.n_blocks {
+            for w in LAYER_NAMES {
+                let t = p.get_mut(&ParamStore::layer_name(l, w)).unwrap();
+                for v in t.f32s_mut() {
+                    if rng.f64() < sparsity {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn formats_agree_on_forward() {
+        let cfg = test_config();
+        let p = pruned_params(&cfg, 0.5);
+        let dense = PackedModel::materialize(&p, &cfg, WeightFormat::Dense).unwrap();
+        let csr = PackedModel::materialize(&p, &cfg, WeightFormat::Csr).unwrap();
+        let mut rng = Rng::seed(7);
+        let n = 6;
+        let x: Vec<f32> = (0..n * cfg.d_model).map(|_| rng.normal_f32()).collect();
+        for j in 0..7 {
+            let a = dense.blocks[0].lin[j].forward(&x, n);
+            let b = csr.blocks[0].lin[j].forward(&x, n);
+            assert_eq!(a, b, "layer {j} dense vs csr");
+        }
+        assert!((csr.sparsity() - 0.5).abs() < 0.05);
+        assert_eq!(dense.sparsity(), 0.0);
+        assert!(csr.weight_bytes() < dense.weight_bytes() * 3 / 2);
+    }
+
+    #[test]
+    fn quant_format_packs_smaller() {
+        let cfg = test_config();
+        let p = pruned_params(&cfg, 0.5);
+        let csr = PackedModel::materialize(&p, &cfg, WeightFormat::Csr).unwrap();
+        let q =
+            PackedModel::materialize(&p, &cfg, WeightFormat::Quant(QuantSpec::default())).unwrap();
+        assert!(q.weight_bytes() < csr.weight_bytes());
+        assert!((q.sparsity() - csr.sparsity()).abs() < 1e-12);
+    }
+}

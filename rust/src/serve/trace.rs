@@ -1,0 +1,117 @@
+//! Synthetic request traces: Poisson arrivals over prompts drawn from the
+//! calibration-domain corpus, mixing generation and scoring requests —
+//! the offline driver input for `besa serve-bench`.
+
+use crate::data::corpus::Corpus;
+use crate::data::Domain;
+use crate::util::rng::Rng;
+
+use super::scheduler::{ReqKind, Request};
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    /// mean arrival rate, requests/second (Poisson process)
+    pub rate: f64,
+    /// prompt length drawn uniformly from `prompt_min..=prompt_max`
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    /// generation length drawn uniformly from `gen_min..=gen_max`
+    pub gen_min: usize,
+    pub gen_max: usize,
+    /// fraction of requests that are scoring-only
+    pub score_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 32,
+            rate: 16.0,
+            prompt_min: 16,
+            prompt_max: 48,
+            gen_min: 8,
+            gen_max: 16,
+            score_fraction: 0.25,
+            seed: 0x7ACE,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Largest KV footprint any request of this trace can reach.
+    pub fn max_request_tokens(&self) -> usize {
+        self.prompt_max + self.gen_max
+    }
+}
+
+/// Sample a deterministic trace: exponential interarrival gaps at `rate`,
+/// prompt text from the C4-style synthetic corpus.
+pub fn poisson_trace(cfg: &TraceConfig) -> Vec<Request> {
+    assert!(cfg.prompt_min >= 1 && cfg.prompt_min <= cfg.prompt_max);
+    assert!(cfg.gen_min >= 1 && cfg.gen_min <= cfg.gen_max);
+    assert!(cfg.rate > 0.0);
+    let mut rng = Rng::seed(cfg.seed);
+    let mut corpus = Corpus::new(Domain::C4Syn, cfg.seed ^ 0x5EED);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for id in 0..cfg.n_requests {
+        // Exp(rate) interarrival; 1 - u keeps the log argument positive
+        t += -(1.0 - rng.f64()).ln() / cfg.rate;
+        let plen = cfg.prompt_min + rng.below(cfg.prompt_max - cfg.prompt_min + 1);
+        let kind = if rng.f64() < cfg.score_fraction {
+            ReqKind::Score
+        } else {
+            ReqKind::Generate {
+                max_new: cfg.gen_min + rng.below(cfg.gen_max - cfg.gen_min + 1),
+            }
+        };
+        out.push(Request { id, arrival: t, tokens: corpus.take(plen), kind });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_in_bounds() {
+        let cfg = TraceConfig { n_requests: 40, ..Default::default() };
+        let a = poisson_trace(&cfg);
+        let b = poisson_trace(&cfg);
+        assert_eq!(a.len(), 40);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.arrival, y.arrival);
+        }
+        let mut prev = 0.0;
+        for r in &a {
+            assert!(r.arrival > prev, "arrivals strictly increase");
+            prev = r.arrival;
+            assert!(r.tokens.len() >= cfg.prompt_min && r.tokens.len() <= cfg.prompt_max);
+            assert!(r.cost() <= cfg.max_request_tokens());
+            if let ReqKind::Generate { max_new } = r.kind {
+                assert!(max_new >= cfg.gen_min && max_new <= cfg.gen_max);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_interarrival_tracks_rate() {
+        let cfg = TraceConfig { n_requests: 2000, rate: 50.0, ..Default::default() };
+        let t = poisson_trace(&cfg);
+        let mean_gap = t.last().unwrap().arrival / t.len() as f64;
+        assert!((mean_gap - 0.02).abs() < 0.004, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn score_fraction_respected_roughly() {
+        let cfg = TraceConfig { n_requests: 1000, score_fraction: 0.3, ..Default::default() };
+        let t = poisson_trace(&cfg);
+        let scores = t.iter().filter(|r| r.kind == ReqKind::Score).count();
+        let frac = scores as f64 / t.len() as f64;
+        assert!((frac - 0.3).abs() < 0.06, "score fraction {frac}");
+    }
+}

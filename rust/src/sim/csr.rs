@@ -1,103 +1,5 @@
-//! Compressed sparse row structure for pruned weight matrices.
+//! Re-export shim: the CSR format moved to [`crate::sparse`] so the
+//! serving engine and the cycle simulator share one packed representation.
+//! Existing `sim::csr::Csr` / `sim::Csr` paths keep working.
 
-use crate::tensor::Tensor;
-
-#[derive(Debug, Clone)]
-pub struct Csr {
-    pub rows: usize,
-    pub cols: usize,
-    pub row_ptr: Vec<u32>,
-    pub col_idx: Vec<u32>,
-    pub values: Vec<f32>,
-}
-
-impl Csr {
-    /// Build from a dense tensor, treating exact zeros as pruned.
-    pub fn from_dense(t: &Tensor) -> Csr {
-        assert_eq!(t.shape.len(), 2);
-        let (rows, cols) = (t.shape[0], t.shape[1]);
-        let data = t.f32s();
-        let mut row_ptr = Vec::with_capacity(rows + 1);
-        let mut col_idx = Vec::new();
-        let mut values = Vec::new();
-        row_ptr.push(0u32);
-        for r in 0..rows {
-            for c in 0..cols {
-                let v = data[r * cols + c];
-                if v != 0.0 {
-                    col_idx.push(c as u32);
-                    values.push(v);
-                }
-            }
-            row_ptr.push(col_idx.len() as u32);
-        }
-        Csr { rows, cols, row_ptr, col_idx, values }
-    }
-
-    pub fn nnz(&self) -> usize {
-        self.values.len()
-    }
-
-    pub fn sparsity(&self) -> f64 {
-        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
-    }
-
-    pub fn row_nnz(&self, r: usize) -> usize {
-        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
-    }
-
-    /// nnz per column (used for the denser/sparser split).
-    pub fn col_counts(&self) -> Vec<usize> {
-        let mut counts = vec![0usize; self.cols];
-        for c in &self.col_idx {
-            counts[*c as usize] += 1;
-        }
-        counts
-    }
-
-    /// SpMM y = W x for a dense x [cols, t] — correctness reference used to
-    /// check the simulator handles the same nnz the math does.
-    pub fn spmm(&self, x: &[f32], t: usize) -> Vec<f32> {
-        assert_eq!(x.len(), self.cols * t);
-        let mut y = vec![0.0f32; self.rows * t];
-        for r in 0..self.rows {
-            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
-            for k in lo..hi {
-                let c = self.col_idx[k] as usize;
-                let v = self.values[k];
-                let xrow = &x[c * t..(c + 1) * t];
-                let yrow = &mut y[r * t..(r + 1) * t];
-                for j in 0..t {
-                    yrow[j] += v * xrow[j];
-                }
-            }
-        }
-        y
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn from_dense_roundtrip() {
-        let t = Tensor::from_f32(&[2, 3], vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0]);
-        let c = Csr::from_dense(&t);
-        assert_eq!(c.nnz(), 3);
-        assert_eq!(c.row_nnz(0), 2);
-        assert_eq!(c.row_nnz(1), 1);
-        assert_eq!(c.col_counts(), vec![1, 0, 2]);
-        assert!((c.sparsity() - 0.5).abs() < 1e-12);
-    }
-
-    #[test]
-    fn spmm_matches_dense() {
-        let w = Tensor::from_f32(&[2, 3], vec![1.0, 0.0, 2.0, -1.0, 0.5, 0.0]);
-        let c = Csr::from_dense(&w);
-        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3, 2]
-        let y = c.spmm(&x, 2);
-        // row0 = 1*[1,2] + 2*[5,6] = [11, 14]; row1 = -1*[1,2]+0.5*[3,4] = [0.5, 0]
-        assert_eq!(y, vec![11.0, 14.0, 0.5, 0.0]);
-    }
-}
+pub use crate::sparse::csr::{Csr, QuantCsr};

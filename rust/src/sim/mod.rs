@@ -20,6 +20,8 @@ pub mod csr;
 pub mod engine;
 pub mod report;
 
+// The packed format itself lives in `crate::sparse` (shared with the
+// `serve` engine, which executes the SpMM the cycle model only costs).
 pub use csr::Csr;
 pub use engine::{SimConfig, SimResult, simulate_spmm, dense_cycles};
 pub use report::{simulate_layer, simulate_block, LayerSim};

@@ -1,0 +1,233 @@
+//! Compressed sparse row structures for pruned weight matrices.
+//!
+//! [`Csr`] stores f32 values; [`QuantCsr`] stores 1-byte codes on the
+//! [`crate::quant::fake_quant`] min-max grid and dequantizes on the fly
+//! (bit-exact with fake-quantizing the dense tensor first).
+
+use crate::quant::QuantSpec;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a dense tensor, treating exact zeros as pruned.
+    /// Single pass to count nnz, exact reservations, no per-element
+    /// branch-and-grow in the fill loop.
+    pub fn from_dense(t: &Tensor) -> Csr {
+        assert_eq!(t.shape.len(), 2);
+        let (rows, cols) = (t.shape[0], t.shape[1]);
+        let data = t.f32s();
+        let nnz = data.iter().filter(|v| **v != 0.0).count();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            for (c, v) in row.iter().enumerate().filter(|(_, v)| **v != 0.0) {
+                col_idx.push(c as u32);
+                values.push(*v);
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr { rows, cols, row_ptr, col_idx, values }
+    }
+
+    /// Scatter back to a dense tensor (pruned entries become exact zeros).
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for k in lo..hi {
+                out[r * self.cols + self.col_idx[k] as usize] = self.values[k];
+            }
+        }
+        Tensor::from_f32(&[self.rows, self.cols], out)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+
+    /// nnz per column (used for the denser/sparser split).
+    pub fn col_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.cols];
+        for c in &self.col_idx {
+            counts[*c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Packed size in bytes (row_ptr + col_idx + values).
+    pub fn mem_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.values.len() * 4
+    }
+
+    /// SpMM `y = W x` for a dense `x [cols, t]` — delegates to the shared
+    /// row-blocked kernel in [`super::spmm`].
+    pub fn spmm(&self, x: &[f32], t: usize) -> Vec<f32> {
+        super::spmm::spmm(self, x, t)
+    }
+}
+
+/// CSR with 1-byte quantization codes instead of f32 values. The grid
+/// (scale `h`, zero-point `z`, clamp range) is computed over the *full*
+/// dense tensor — zeros included — exactly like
+/// [`crate::quant::fake_quant`], so `(code - zero) * scale` reproduces the
+/// fake-quantized weight bit-for-bit while storing 4x less value memory.
+#[derive(Debug, Clone)]
+pub struct QuantCsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    /// quantization codes in `0..=2^bits - 1`, one per stored nonzero
+    pub codes: Vec<u8>,
+    /// dequant: `value = (code - zero) * scale`
+    pub scale: f32,
+    pub zero: f32,
+    pub bits: u32,
+}
+
+impl QuantCsr {
+    /// Quantize + pack a dense tensor, treating exact zeros as pruned.
+    pub fn from_dense(t: &Tensor, spec: QuantSpec) -> QuantCsr {
+        assert_eq!(t.shape.len(), 2);
+        assert!(spec.bits >= 1 && spec.bits <= 8, "QuantCsr codes are u8 (1..=8 bits)");
+        let (rows, cols) = (t.shape[0], t.shape[1]);
+        let data = t.f32s();
+        // same grid arithmetic as quant::fake_quant, term for term
+        let qmax = (2f64.powi(spec.bits as i32) - 1.0) as f32;
+        let wmin = data.iter().cloned().fold(f32::INFINITY, f32::min) * spec.gamma0;
+        let wmax = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max) * spec.gamma1;
+        let h = ((wmax - wmin) / qmax).max(1e-8);
+        let z = (-wmin / h).round();
+        let nnz = data.iter().filter(|v| **v != 0.0).count();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut codes = Vec::with_capacity(nnz);
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            for (c, v) in row.iter().enumerate().filter(|(_, v)| **v != 0.0) {
+                let q = ((v / h).round() + z).clamp(0.0, qmax);
+                col_idx.push(c as u32);
+                codes.push(q as u8);
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        QuantCsr { rows, cols, row_ptr, col_idx, codes, scale: h, zero: z, bits: spec.bits }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Dequantized value of stored entry `k`.
+    #[inline]
+    pub fn value(&self, k: usize) -> f32 {
+        (self.codes[k] as f32 - self.zero) * self.scale
+    }
+
+    /// Packed size in bytes (row_ptr + col_idx + codes).
+    pub fn mem_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.codes.len()
+    }
+
+    /// Dequantize back to a dense tensor (diagnostics + parity tests).
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for k in lo..hi {
+                out[r * self.cols + self.col_idx[k] as usize] = self.value(k);
+            }
+        }
+        Tensor::from_f32(&[self.rows, self.cols], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fake_quant;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0]);
+        let c = Csr::from_dense(&t);
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.row_nnz(0), 2);
+        assert_eq!(c.row_nnz(1), 1);
+        assert_eq!(c.col_counts(), vec![1, 0, 2]);
+        assert!((c.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn to_dense_roundtrips_exactly() {
+        let mut rng = Rng::seed(11);
+        let data: Vec<f32> = (0..37 * 23)
+            .map(|_| if rng.f64() < 0.6 { 0.0 } else { rng.normal_f32() })
+            .collect();
+        let t = Tensor::from_f32(&[37, 23], data);
+        let back = Csr::from_dense(&t).to_dense();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let w = Tensor::from_f32(&[2, 3], vec![1.0, 0.0, 2.0, -1.0, 0.5, 0.0]);
+        let c = Csr::from_dense(&w);
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3, 2]
+        let y = c.spmm(&x, 2);
+        // row0 = 1*[1,2] + 2*[5,6] = [11, 14]; row1 = -1*[1,2]+0.5*[3,4] = [0.5, 0]
+        assert_eq!(y, vec![11.0, 14.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn quant_csr_matches_fake_quant() {
+        let mut rng = Rng::seed(7);
+        let data: Vec<f32> = (0..32 * 16)
+            .map(|_| if rng.f64() < 0.5 { 0.0 } else { rng.normal_f32() })
+            .collect();
+        let t = Tensor::from_f32(&[32, 16], data);
+        let spec = QuantSpec::default();
+        let q = QuantCsr::from_dense(&t, spec);
+        let deq = q.to_dense();
+        let fq = fake_quant(&t, spec);
+        // pruned entries stay exact zeros in the packed form
+        for (a, b) in deq.f32s().iter().zip(t.f32s()) {
+            if *b == 0.0 {
+                assert_eq!(*a, 0.0);
+            }
+        }
+        // stored entries dequantize bit-exactly to the fake-quant grid
+        for (i, (a, b)) in deq.f32s().iter().zip(fq.f32s()).enumerate() {
+            if t.f32s()[i] != 0.0 {
+                assert_eq!(a, b, "entry {i}");
+            }
+        }
+        assert!((q.sparsity() - 0.5).abs() < 0.1);
+        assert!(q.mem_bytes() < Csr::from_dense(&t).mem_bytes());
+    }
+}

@@ -1,0 +1,29 @@
+//! Shared sparse-weight substrate: packed formats + SpMM kernels.
+//!
+//! Promoted out of [`crate::sim`] (which only *models* sparse execution
+//! cycles) so that real consumers can share one format:
+//!
+//! * [`csr::Csr`] — compressed sparse row over exact-zero pruned weights.
+//!   Used by the ViTCoD cycle simulator ([`crate::sim`]) and executed for
+//!   real by the serving engine ([`crate::serve`]).
+//! * [`csr::QuantCsr`] — CSR with 1-byte quantization codes on the same
+//!   min-max grid as [`crate::quant::fake_quant`] (bit-exact dequant), so
+//!   a jointly pruned+quantized checkpoint stores ~4x less weight memory
+//!   and dequantizes inside the SpMM inner loop.
+//! * [`spmm`] — cache-friendly row-blocked SpMM kernels in the AXPY
+//!   orientation (`Y^T = W · X^T`: per stored nonzero, a contiguous
+//!   vectorizable update over all tokens), fanned out across row blocks
+//!   via [`crate::util::par`] when the workload is large enough to pay
+//!   for scoped-thread spawn.
+//!
+//! Accumulation-order contract: for one output element, kernels add the
+//! stored nonzeros in ascending-column order — the same order the dense
+//! `mm_nt` kernel scans them — so a CSR built from a masked weight
+//! reproduces the dense result *bitwise* (adding an exact 0.0 is exact).
+//! The serve parity suite (`tests/serve_parity.rs`) pins this.
+
+pub mod csr;
+pub mod spmm;
+
+pub use csr::{Csr, QuantCsr};
+pub use spmm::{linear_csr, linear_quant, spmm, spmm_quant, transpose};

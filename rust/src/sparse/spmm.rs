@@ -1,0 +1,229 @@
+//! Row-blocked SpMM kernels over [`Csr`] / [`QuantCsr`] weights.
+//!
+//! Orientation: `Y^T[rows, t] = W[rows, cols] · X^T[cols, t]`. Each stored
+//! nonzero performs one AXPY over the `t` tokens — a contiguous,
+//! reassociation-free (per output element) update the compiler can
+//! vectorize, unlike the gather a `y = x Wᵀ`-oriented sparse kernel would
+//! need. Linear-layer wrappers transpose the `[n, cols]` activations in
+//! (O(n·cols), negligible next to the O(nnz·n) multiply) and transpose the
+//! result back.
+//!
+//! Work is split into contiguous row blocks and fanned out with
+//! [`crate::util::par::par_map`] once the MAC count covers scoped-thread
+//! spawn cost; below the threshold the kernels run sequentially so tiny
+//! decode-step matrices pay zero threading overhead.
+
+use super::csr::{Csr, QuantCsr};
+use crate::util::par::{par_map, workers_for};
+
+/// Minimum multiply-accumulate count before a kernel fans out across
+/// threads; below this, scoped-thread spawn dominates the work.
+const PAR_MIN_MACS: usize = 1 << 22;
+
+/// `[rows, cols] -> [cols, rows]` dense transpose (row-major slices).
+pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        for (c, v) in row.iter().enumerate() {
+            out[c * rows + r] = *v;
+        }
+    }
+    out
+}
+
+/// Contiguous row ranges covering `rows`, one per useful worker.
+fn row_blocks(rows: usize, macs: usize) -> Vec<(usize, usize)> {
+    let workers = if macs >= PAR_MIN_MACS { workers_for(rows) } else { 1 };
+    let chunk = rows.div_ceil(workers.max(1)).max(1);
+    let mut out = Vec::new();
+    let mut lo = 0;
+    while lo < rows {
+        let hi = (lo + chunk).min(rows);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+fn spmm_rows(w: &Csr, x: &[f32], t: usize, lo_row: usize, hi_row: usize, out: &mut [f32]) {
+    for r in lo_row..hi_row {
+        let yrow = &mut out[(r - lo_row) * t..(r - lo_row + 1) * t];
+        let (lo, hi) = (w.row_ptr[r] as usize, w.row_ptr[r + 1] as usize);
+        for k in lo..hi {
+            let c = w.col_idx[k] as usize;
+            let v = w.values[k];
+            let xrow = &x[c * t..(c + 1) * t];
+            for (yv, xv) in yrow.iter_mut().zip(xrow) {
+                *yv += v * xv;
+            }
+        }
+    }
+}
+
+fn spmm_rows_quant(
+    w: &QuantCsr,
+    x: &[f32],
+    t: usize,
+    lo_row: usize,
+    hi_row: usize,
+    out: &mut [f32],
+) {
+    for r in lo_row..hi_row {
+        let yrow = &mut out[(r - lo_row) * t..(r - lo_row + 1) * t];
+        let (lo, hi) = (w.row_ptr[r] as usize, w.row_ptr[r + 1] as usize);
+        for k in lo..hi {
+            let c = w.col_idx[k] as usize;
+            // fused dequant: one sub+mul per nonzero, amortized over t
+            let v = (w.codes[k] as f32 - w.zero) * w.scale;
+            let xrow = &x[c * t..(c + 1) * t];
+            for (yv, xv) in yrow.iter_mut().zip(xrow) {
+                *yv += v * xv;
+            }
+        }
+    }
+}
+
+/// `y[rows, t] = W @ x` for dense `x [cols, t]`, row-blocked + parallel.
+pub fn spmm(w: &Csr, x: &[f32], t: usize) -> Vec<f32> {
+    assert_eq!(x.len(), w.cols * t, "x must be [cols={}, t={t}]", w.cols);
+    let blocks = row_blocks(w.rows, w.nnz() * t);
+    if blocks.len() <= 1 {
+        let mut y = vec![0.0f32; w.rows * t];
+        spmm_rows(w, x, t, 0, w.rows, &mut y);
+        return y;
+    }
+    let parts = par_map(&blocks, |&(lo, hi)| {
+        let mut part = vec![0.0f32; (hi - lo) * t];
+        spmm_rows(w, x, t, lo, hi, &mut part);
+        Ok(part)
+    })
+    .expect("spmm row-block workers are infallible");
+    let mut y = vec![0.0f32; w.rows * t];
+    for (&(lo, hi), part) in blocks.iter().zip(parts) {
+        y[lo * t..hi * t].copy_from_slice(&part);
+    }
+    y
+}
+
+/// Fused dequant-SpMM: `y[rows, t] = dequant(W) @ x` for `x [cols, t]`.
+pub fn spmm_quant(w: &QuantCsr, x: &[f32], t: usize) -> Vec<f32> {
+    assert_eq!(x.len(), w.cols * t, "x must be [cols={}, t={t}]", w.cols);
+    let blocks = row_blocks(w.rows, w.nnz() * t);
+    if blocks.len() <= 1 {
+        let mut y = vec![0.0f32; w.rows * t];
+        spmm_rows_quant(w, x, t, 0, w.rows, &mut y);
+        return y;
+    }
+    let parts = par_map(&blocks, |&(lo, hi)| {
+        let mut part = vec![0.0f32; (hi - lo) * t];
+        spmm_rows_quant(w, x, t, lo, hi, &mut part);
+        Ok(part)
+    })
+    .expect("spmm row-block workers are infallible");
+    let mut y = vec![0.0f32; w.rows * t];
+    for (&(lo, hi), part) in blocks.iter().zip(parts) {
+        y[lo * t..hi * t].copy_from_slice(&part);
+    }
+    y
+}
+
+/// Linear layer over CSR weights: `y[n, rows] = x[n, cols] @ W^T`.
+/// Same result (bitwise) as `ops::mm_nt(x, to_dense(W))` — see the
+/// accumulation-order contract in the module docs of [`crate::sparse`].
+pub fn linear_csr(w: &Csr, x: &[f32], n: usize) -> Vec<f32> {
+    let xt = transpose(x, n, w.cols);
+    let yt = spmm(w, &xt, n);
+    transpose(&yt, w.rows, n)
+}
+
+/// Linear layer over quantized CSR weights, dequant fused into the SpMM.
+pub fn linear_quant(w: &QuantCsr, x: &[f32], n: usize) -> Vec<f32> {
+    let xt = transpose(x, n, w.cols);
+    let yt = spmm_quant(w, &xt, n);
+    transpose(&yt, w.rows, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{fake_quant, QuantSpec};
+    use crate::runtime::native::ops::mm_nt;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rows: usize, cols: usize, sparsity: f64, seed: u64) -> Tensor {
+        let mut rng = Rng::seed(seed);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| if rng.f64() < sparsity { 0.0 } else { rng.normal_f32() })
+            .collect();
+        Tensor::from_f32(&[rows, cols], data)
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed(3);
+        let x: Vec<f32> = (0..5 * 7).map(|_| rng.normal_f32()).collect();
+        assert_eq!(transpose(&transpose(&x, 5, 7), 7, 5), x);
+    }
+
+    #[test]
+    fn linear_csr_bitwise_matches_dense_mm() {
+        let w = random_sparse(24, 40, 0.5, 1);
+        let csr = Csr::from_dense(&w);
+        let mut rng = Rng::seed(2);
+        let n = 9;
+        let x: Vec<f32> = (0..n * 40).map(|_| rng.normal_f32()).collect();
+        let dense = mm_nt(&x, w.f32s(), n, 40, 24);
+        let sparse = linear_csr(&csr, &x, n);
+        // skipping exact zeros must not change the accumulation: bitwise
+        assert_eq!(dense, sparse);
+    }
+
+    #[test]
+    fn linear_quant_matches_fake_quant_dense_mm() {
+        let w = random_sparse(16, 32, 0.5, 4);
+        let spec = QuantSpec::default();
+        let q = QuantCsr::from_dense(&w, spec);
+        let wq = fake_quant(&w, spec);
+        let mut rng = Rng::seed(5);
+        let n = 6;
+        let x: Vec<f32> = (0..n * 32).map(|_| rng.normal_f32()).collect();
+        let dense = mm_nt(&x, wq.f32s(), n, 32, 16);
+        let fused = linear_quant(&q, &x, n);
+        assert_eq!(dense, fused);
+    }
+
+    #[test]
+    fn spmm_row_blocking_is_exact() {
+        // force multiple row blocks by checking block assembly directly
+        let w = random_sparse(64, 48, 0.4, 6);
+        let csr = Csr::from_dense(&w);
+        let mut rng = Rng::seed(7);
+        let t = 5;
+        let x: Vec<f32> = (0..48 * t).map(|_| rng.normal_f32()).collect();
+        let whole = spmm(&csr, &x, t);
+        let mut stitched = vec![0.0f32; 64 * t];
+        for (lo, hi) in [(0usize, 20usize), (20, 41), (41, 64)] {
+            let mut part = vec![0.0f32; (hi - lo) * t];
+            spmm_rows(&csr, &x, t, lo, hi, &mut part);
+            stitched[lo * t..hi * t].copy_from_slice(&part);
+        }
+        assert_eq!(whole, stitched);
+    }
+
+    #[test]
+    fn row_blocks_cover_rows() {
+        for rows in [1usize, 7, 64, 1000] {
+            for macs in [0usize, PAR_MIN_MACS * 2] {
+                let blocks = row_blocks(rows, macs);
+                assert_eq!(blocks.first().unwrap().0, 0);
+                assert_eq!(blocks.last().unwrap().1, rows);
+                for w in blocks.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Parity suite for the serving subsystem (hermetic, `test` config):
+//!
+//! * sparse (CSR) serving reproduces the dense path, and dense serving
+//!   reproduces the native backend's `block_fwd`/`head_nll` NLL, to well
+//!   within 1e-5 on a pruned checkpoint;
+//! * KV-cached decode (in-process kernels AND the runtime's
+//!   `block_fwd_cached` artifact) matches dense full-prefix recompute
+//!   token for token;
+//! * the quantized path equals fake-quantizing the checkpoint first;
+//! * a full continuous-batching trace replay retires every request with
+//!   identical outputs across weight formats.
+
+use besa::model::{ModelConfig, ParamStore};
+use besa::quant::{quantize_model, QuantSpec};
+use besa::runtime::Engine;
+use besa::serve::bench::magnitude_prune_in_place;
+use besa::serve::engine::{
+    block_tensors, decode_step_backend, greedy_backend, greedy_cached, greedy_recompute, prefill,
+    score_nll, ServeContext,
+};
+use besa::serve::model::{PackedModel, WeightFormat};
+use besa::serve::scheduler::SchedulerConfig;
+use besa::serve::trace::TraceConfig;
+use besa::serve::{poisson_trace, run_trace, ReqKind};
+use besa::tensor::Tensor;
+
+fn pruned_setup() -> (Engine, ModelConfig, ParamStore) {
+    let engine = Engine::native("test").expect("built-in test config");
+    let cfg = engine.config().clone();
+    let mut params = ParamStore::init(&cfg, 42);
+    magnitude_prune_in_place(&mut params, &cfg, 0.5).unwrap();
+    assert!((params.prunable_sparsity(cfg.n_blocks) - 0.5).abs() < 0.01);
+    (engine, cfg, params)
+}
+
+/// Serve-side scoring (dense and sparse) must match the engine's
+/// `block_fwd` + `head_nll` NLL on the same tokens to within 1e-5.
+#[test]
+fn sparse_scoring_matches_dense_block_fwd_nll() {
+    let (engine, cfg, params) = pruned_setup();
+    let mut batcher = besa::data::Batcher::new(besa::data::Domain::WikiSyn, 9, &cfg);
+    let tokens: Tensor = batcher.next_batch();
+    let nll_ref = besa::eval::forward_nll(&engine, &params, &tokens).unwrap();
+
+    let dense_ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Dense).unwrap(),
+        cfg.seq_len,
+    );
+    let sparse_ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+        cfg.seq_len,
+    );
+    let s = cfg.seq_len;
+    for b in 0..cfg.batch {
+        let row = &tokens.i32s()[b * s..(b + 1) * s];
+        let mut c1 = dense_ctx.new_cache();
+        let nll_dense = score_nll(&dense_ctx, &prefill(&dense_ctx, row, &mut c1), row);
+        let mut c2 = sparse_ctx.new_cache();
+        let nll_sparse = score_nll(&sparse_ctx, &prefill(&sparse_ctx, row, &mut c2), row);
+        for si in 0..s {
+            let want = nll_ref.f32s()[b * s + si];
+            assert!(
+                (nll_dense[si] - want).abs() < 1e-5,
+                "dense serve vs engine NLL at ({b},{si}): {} vs {want}",
+                nll_dense[si]
+            );
+            assert!(
+                (nll_sparse[si] - want).abs() < 1e-5,
+                "sparse serve vs engine NLL at ({b},{si}): {} vs {want}",
+                nll_sparse[si]
+            );
+            // CSR drops exact zeros only: bitwise equal to dense serving
+            assert_eq!(nll_sparse[si], nll_dense[si], "sparse must be bitwise dense");
+        }
+    }
+}
+
+/// KV-cached decode — sparse kernels and the `block_fwd_cached` artifact
+/// — must match dense full-prefix recompute token for token.
+#[test]
+fn cached_decode_matches_full_prefix_recompute() {
+    let (engine, cfg, params) = pruned_setup();
+    let n = 10;
+    let prompt: Vec<i32> = (0..12).map(|i| (i * 13 % cfg.vocab) as i32).collect();
+    let max_pos = prompt.len() + n + 1;
+    let dense_ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Dense).unwrap(),
+        max_pos,
+    );
+    let sparse_ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+        max_pos,
+    );
+    let reference = greedy_recompute(&dense_ctx, &prompt, n);
+    assert_eq!(reference.len(), n);
+    assert_eq!(greedy_cached(&dense_ctx, &prompt, n), reference, "dense cached vs recompute");
+    assert_eq!(greedy_cached(&sparse_ctx, &prompt, n), reference, "sparse cached vs recompute");
+
+    // the runtime-op route (engine block_fwd_cached)
+    let blocks = block_tensors(&params, &cfg).unwrap();
+    let backend = greedy_backend(&dense_ctx, &engine, &blocks, &prompt, n).unwrap();
+    assert_eq!(backend, reference, "block_fwd_cached vs recompute");
+}
+
+/// Feeding a sequence token-by-token through the runtime's
+/// `block_fwd_cached` artifact must leave exactly the same KV state as
+/// one full prefill — position p of the cached op reproduces row p of the
+/// full forward bitwise.
+#[test]
+fn block_fwd_cached_matches_block_fwd_rows() {
+    let engine = Engine::native("test").unwrap();
+    let cfg = engine.config().clone();
+    let params = ParamStore::init(&cfg, 7);
+    let ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Dense).unwrap(),
+        cfg.seq_len,
+    );
+    let prompt: Vec<i32> = (0..cfg.seq_len).map(|i| (i * 3 % cfg.vocab) as i32).collect();
+    let mut full_cache = ctx.new_cache();
+    let full_hidden = prefill(&ctx, &prompt, &mut full_cache);
+    assert_eq!(full_hidden.len(), prompt.len() * cfg.d_model);
+
+    // incremental: position 0 via a length-1 prefill, the rest one token
+    // at a time through the engine op
+    let blocks = block_tensors(&params, &cfg).unwrap();
+    let mut cache = ctx.new_cache();
+    prefill(&ctx, &prompt[..1], &mut cache);
+    for p in 1..prompt.len() {
+        let last = [prompt[p]];
+        let mut caches = [&mut cache];
+        decode_step_backend(&ctx, &engine, &blocks, &last, &mut caches).unwrap();
+    }
+    assert_eq!(cache.len(), full_cache.len());
+    for l in 0..cfg.n_blocks {
+        assert_eq!(cache.k_block(l), full_cache.k_block(l), "block {l} keys");
+        assert_eq!(cache.v_block(l), full_cache.v_block(l), "block {l} values");
+    }
+}
+
+/// Quantized serving equals fake-quantizing the checkpoint and serving
+/// dense — the fused dequant is bit-exact.
+#[test]
+fn quant_serving_matches_fake_quant_checkpoint() {
+    let (_engine, cfg, params) = pruned_setup();
+    let spec = QuantSpec::default();
+    let mut params_q = params.clone();
+    quantize_model(&mut params_q, &cfg, spec).unwrap();
+
+    let quant_ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Quant(spec)).unwrap(),
+        cfg.seq_len,
+    );
+    let dense_q_ctx = ServeContext::new(
+        PackedModel::materialize(&params_q, &cfg, WeightFormat::Dense).unwrap(),
+        cfg.seq_len,
+    );
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 11 % cfg.vocab) as i32).collect();
+    let mut c1 = quant_ctx.new_cache();
+    let h_quant = prefill(&quant_ctx, &prompt, &mut c1);
+    let mut c2 = dense_q_ctx.new_cache();
+    let h_dense = prefill(&dense_q_ctx, &prompt, &mut c2);
+    // bit-exact up to fake_quant's handling of exact zeros (which the
+    // packed form drops and the dense form may carry as ±0 terms)
+    for (i, (a, b)) in h_quant.iter().zip(&h_dense).enumerate() {
+        assert!((a - b).abs() < 1e-6, "hidden[{i}]: {a} vs {b}");
+    }
+}
+
+/// Heterogeneous prompt lengths assembled into the backend's static
+/// `[B, S]` shape by right-padding must score identically to the serve
+/// engine's variable-length path (causality makes the padding exact).
+#[test]
+fn padded_backend_scoring_matches_serve_engine() {
+    let (engine, cfg, params) = pruned_setup();
+    let lens = [5usize, 17, 32, 9, 26];
+    let prompts: Vec<Vec<i32>> = lens
+        .iter()
+        .map(|len| (0..*len).map(|i| ((i * 7 + len) % cfg.vocab) as i32).collect())
+        .collect();
+    let padded = besa::eval::score_prompts_padded(&engine, &params, &prompts).unwrap();
+    assert_eq!(padded.len(), prompts.len());
+    let ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+        cfg.seq_len,
+    );
+    for (p, want) in prompts.iter().zip(&padded) {
+        let mut c = ctx.new_cache();
+        let h = prefill(&ctx, p, &mut c);
+        let got: f64 = score_nll(&ctx, &h, p).iter().map(|v| *v as f64).sum();
+        assert!(
+            (got - want).abs() < 1e-4,
+            "prompt len {}: serve {got} vs padded backend {want}",
+            p.len()
+        );
+    }
+}
+
+/// Full trace replay: every request retires exactly once, scoring NLLs
+/// agree bitwise between dense and sparse, and generated token counts
+/// respect the per-request budget.
+#[test]
+fn trace_replay_consistent_across_formats() {
+    let (_engine, cfg, params) = pruned_setup();
+    let tcfg = TraceConfig {
+        n_requests: 10,
+        rate: 200.0,
+        prompt_min: 4,
+        prompt_max: 12,
+        gen_min: 2,
+        gen_max: 6,
+        score_fraction: 0.3,
+        seed: 99,
+    };
+    let sched = SchedulerConfig { token_budget: 64, max_batch: 3 };
+    let requests = poisson_trace(&tcfg);
+    let max_new: std::collections::BTreeMap<usize, usize> = requests
+        .iter()
+        .map(|r| {
+            let m = match r.kind {
+                ReqKind::Generate { max_new } => max_new,
+                ReqKind::Score => 0,
+            };
+            (r.id, m)
+        })
+        .collect();
+
+    let mut nlls: Vec<std::collections::BTreeMap<usize, f64>> = Vec::new();
+    for format in [WeightFormat::Dense, WeightFormat::Csr] {
+        let ctx = ServeContext::new(
+            PackedModel::materialize(&params, &cfg, format).unwrap(),
+            tcfg.max_request_tokens(),
+        );
+        let stats = run_trace(&ctx, None, requests.clone(), &sched).unwrap();
+        assert_eq!(stats.finished.len(), tcfg.n_requests, "{}: all retire", format.name());
+        let mut seen = std::collections::BTreeSet::new();
+        for f in &stats.finished {
+            assert!(seen.insert(f.id), "request {} retired twice", f.id);
+            assert_eq!(f.out_tokens, max_new[&f.id], "request {} token budget", f.id);
+            assert!(f.latency_s >= 0.0);
+        }
+        assert!(stats.peak_active <= sched.max_batch);
+        nlls.push(
+            stats
+                .finished
+                .iter()
+                .filter_map(|f| f.nll.map(|v| (f.id, v)))
+                .collect(),
+        );
+    }
+    assert!(!nlls[0].is_empty(), "trace should include scoring requests");
+    assert_eq!(nlls[0], nlls[1], "scoring NLLs must agree dense vs sparse");
+}
