@@ -1,7 +1,9 @@
 //! Bench: the serving hot paths — packed linear kernels (dense vs CSR vs
 //! fused-dequant CSR), prefill and batched decode per weight format, the
-//! `block_fwd_cached` runtime op, and a full continuous-batching trace
-//! replay per mode (the `besa serve-bench` inner loop, minus the report).
+//! `block_fwd_cached` runtime op, a full continuous-batching trace replay
+//! per mode (the `besa serve-bench` inner loop, minus the report), and
+//! the online multi-worker engine at 1 vs N workers (the `--async` drain
+//! mode, showing the sharding scaling).
 
 use besa::model::{ModelConfig, ParamStore};
 use besa::quant::QuantSpec;
@@ -11,7 +13,7 @@ use besa::serve::engine::{block_tensors, decode_step, decode_step_backend, prefi
 use besa::serve::model::{PackedModel, WeightFormat};
 use besa::serve::scheduler::SchedulerConfig;
 use besa::serve::trace::{poisson_trace, TraceConfig};
-use besa::serve::{run_trace, ServeBenchConfig, ServeMode};
+use besa::serve::{run_trace, serve_online, OnlineConfig, Pacing, ServeBenchConfig, ServeMode};
 use besa::util::bench::Bench;
 use besa::util::rng::Rng;
 
@@ -126,6 +128,31 @@ fn main() {
             total_tokens as f64,
             "tok/s",
             || run_trace(&ctx, None, requests.clone(), &sched).unwrap(),
+        );
+    }
+
+    // ---- online multi-worker drain (sharded scaling) ----------------------
+    let requests = poisson_trace(&trace_cfg);
+    let total_tokens: usize = requests.iter().map(|r| r.cost()).sum();
+    for workers in [1usize, 4] {
+        let ctxs: Vec<ServeContext> = (0..workers)
+            .map(|_| {
+                ServeContext::new(
+                    PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+                    trace_cfg.max_request_tokens(),
+                )
+            })
+            .collect();
+        let ocfg = OnlineConfig {
+            workers,
+            sched: SchedulerConfig { token_budget: 512, max_batch: 8 },
+            pacing: Pacing::Replay { time_scale: 0.0 },
+        };
+        b.run_throughput(
+            &format!("online x{} sparse workers={workers}", trace_cfg.n_requests),
+            total_tokens as f64,
+            "tok/s",
+            || serve_online(&ctxs, requests.clone(), &ocfg).unwrap(),
         );
     }
 

@@ -7,6 +7,7 @@
 //! besa probe     --config md --ckpt runs/md-besa.bst
 //! besa simulate  --config md --ckpt runs/md-besa.bst
 //! besa serve-bench --config sm --ckpt runs/sm-besa.bst --modes dense,sparse,quant
+//! besa serve-bench --config sm --ckpt runs/sm-besa.bst --async --workers 4
 //! besa exp       table1|table2|table3|table4|table5|table6|fig1a|fig1b|fig3|fig4  [--configs sm,md]
 //! ```
 
@@ -54,10 +55,16 @@ fn print_help() {
          \x20 eval       perplexity on wiki-syn / c4-syn / ptb-syn\n\
          \x20 probe      zero-shot probe accuracy (6 tasks)\n\
          \x20 simulate   ViTCoD accelerator cycles for a pruned checkpoint\n\
-         \x20 serve-bench  batch-serve a pruned checkpoint: Poisson trace, continuous\n\
-         \x20            batching, dense/sparse/quant kernels, throughput + latency\n\
-         \x20            (--smoke: tiny hermetic run on a synthetic pruned model;\n\
-         \x20             --modes dense,sparse,quant,dense-backend; --json <path>)\n\
+         \x20 serve-bench  batch-serve a pruned checkpoint: Poisson/bursty trace,\n\
+         \x20            continuous batching, dense/sparse/quant kernels, throughput\n\
+         \x20            + latency (--smoke: tiny hermetic run on a synthetic pruned\n\
+         \x20            model; --modes dense,sparse,quant,dense-backend;\n\
+         \x20            --burst <k>; --json <path>). --async adds the online\n\
+         \x20            multi-worker mode: wall-clock ingestion into --workers <n>\n\
+         \x20            sharded workers (--time-scale <x>: 0 floods the queue;\n\
+         \x20            --closed-loop <clients>; --async-format dense|sparse|quant),\n\
+         \x20            reported at 1 and n workers with the scaling + queue-wait\n\
+         \x20            breakdown\n\
          \x20 exp        regenerate a paper table/figure (table1..table6, fig1a, fig1b, fig3, fig4)\n\
          \n\
          COMMON OPTIONS\n\

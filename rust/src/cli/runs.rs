@@ -237,13 +237,17 @@ pub fn cmd_probe(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `besa serve-bench`: replay a Poisson request trace through the sparse
-/// serving engine in each weight format and report throughput / latency /
-/// speedup (+ `BENCH_serve.json`). `--smoke`/`--synthetic` build a
-/// magnitude-pruned checkpoint in process so the run is hermetic.
+/// `besa serve-bench`: replay a Poisson/bursty request trace through the
+/// sparse serving engine in each weight format and report throughput /
+/// latency / speedup (+ `BENCH_serve.json`). `--async` adds the online
+/// multi-worker mode: wall-clock ingestion (`--time-scale`, or
+/// `--closed-loop N` clients) into `--workers` sharded workers, reported
+/// at one worker and at N for the scaling. `--smoke`/`--synthetic` build
+/// a magnitude-pruned checkpoint in process so the run is hermetic.
 pub fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use crate::serve::bench::{magnitude_prune_in_place, ServeMode};
-    use crate::serve::{ServeBenchConfig, SchedulerConfig, TraceConfig};
+    use crate::serve::bench::{magnitude_prune_in_place, OnlineBenchConfig, ServeMode};
+    use crate::serve::model::WeightFormat;
+    use crate::serve::{Pacing, SchedulerConfig, ServeBenchConfig, TraceConfig};
 
     let smoke = args.has("smoke");
     let config = args.str_or("config", if smoke { "test" } else { "sm" });
@@ -283,11 +287,35 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         gen_min: args.usize_or("gen-min", d_gmin)?,
         gen_max: args.usize_or("gen-max", d_gmax)?,
         score_fraction: args.f64_or("score-fraction", 0.25)?,
+        burst: args.usize_or("burst", 1)?,
         seed: args.u64_or("trace-seed", 0x7ACE)?,
     };
     let sched = SchedulerConfig {
         token_budget: args.usize_or("token-budget", if smoke { 256 } else { 1024 })?,
         max_batch: args.usize_or("max-batch", 8)?,
+    };
+    // `--async`: the online multi-worker section. Pacing is closed-loop
+    // when `--closed-loop N` is given, else wall-clock trace replay at
+    // `--time-scale` (smoke defaults to 0 — flood the queue and measure
+    // pure drain throughput, the deterministic-duration CI mode).
+    let online = if args.has("async") {
+        let format = match args.str_or("async-format", "sparse").as_str() {
+            "dense" => WeightFormat::Dense,
+            "sparse" | "csr" => WeightFormat::Csr,
+            "quant" => WeightFormat::Quant(crate::quant::QuantSpec::default()),
+            other => bail!("--async-format must be dense|sparse|quant, got '{other}'"),
+        };
+        let clients = args.usize_or("closed-loop", 0)?;
+        let pacing = if clients > 0 {
+            Pacing::ClosedLoop { clients }
+        } else {
+            Pacing::Replay {
+                time_scale: args.f64_or("time-scale", if smoke { 0.0 } else { 1.0 })?,
+            }
+        };
+        Some(OnlineBenchConfig { workers: args.usize_or("workers", 4)?, format, pacing })
+    } else {
+        None
     };
     let bcfg = ServeBenchConfig {
         modes,
@@ -295,6 +323,7 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         sched,
         quant: crate::quant::QuantSpec::default(),
         parity_decode_tokens: args.usize_or("parity-tokens", if smoke { 4 } else { 8 })?,
+        online,
         json_path: match args.get("json") {
             Some("none") => None,
             Some(p) => Some(PathBuf::from(p)),

@@ -31,10 +31,15 @@
 //!   synthetic corpus; [`sim`] for the ViTCoD accelerator cycle model
 //!   (paper §4.5 + Appendix B).
 //! * **[`sparse`] + [`serve`]** — where the sparsity pays off: packed
-//!   CSR / quantized-CSR weights with row-blocked SpMM kernels, and a
-//!   batch inference engine (continuous-batching scheduler, per-request
-//!   KV caches, O(1)-per-token decode via the native `block_fwd_cached`
-//!   op) behind `besa serve-bench`.
+//!   CSR / quantized-CSR weights with one row-blocked SpMM kernel
+//!   (value-accessor parameterized), and an inference engine
+//!   (continuous-batching scheduler, per-request KV caches,
+//!   O(1)-per-token decode via the native `block_fwd_cached` op) behind
+//!   `besa serve-bench` — offline trace replay per weight format, plus
+//!   the online mode (`--async`): wall-clock request ingestion
+//!   (Poisson / bursty / closed-loop) into a sharded multi-worker pool
+//!   with per-worker continuous batching and a queue-wait vs compute
+//!   metrics split.
 //!
 //! Cross-backend correctness is pinned by `tests/native_parity.rs`:
 //! golden vectors generated from a float64 reference transliteration of

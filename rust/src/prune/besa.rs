@@ -5,6 +5,15 @@
 //! runs inside the `besa_step_*` artifact op (native interpreter or PJRT,
 //! behind the [`crate::runtime::Engine`] facade); this module owns theta
 //! state, the optimizer loop, convergence control and final mask decode.
+//!
+//! Invariants pinned by `tests/native_parity.rs`: the rust-side
+//! [`crate::prune::importance::decode_mask`] reproduces the op-side
+//! `mask_decode` bit for bit (same rate grid, same tie-break), the
+//! `besa_step*` losses/gradients match the cross-language golden vectors
+//! (with FD-validated backwards), and layer-wise theta gradients are the
+//! row-wise sums. Downstream, a pruned checkpoint's exact zeros are what
+//! the serving engine's CSR packing relies on ([`crate::sparse`]:
+//! skipping them reproduces the dense result bitwise).
 
 use anyhow::{bail, Result};
 

@@ -7,9 +7,10 @@
 //!   the full artifact op set. Hermetic: specs are synthesized from the
 //!   built-in config table, nothing is read from disk. `Sync`, so the
 //!   coordinator fans minibatches out across threads.
-//! * `pjrt` ([`super::pjrt::PjrtBackend`], behind the `pjrt` cargo
-//!   feature) — compiles AOT HLO-text artifacts once per process and
-//!   executes them through the PJRT C API.
+//! * `pjrt` (`super::pjrt::PjrtBackend`, behind the `pjrt` cargo feature
+//!   and therefore absent from a default-feature doc build) — compiles
+//!   AOT HLO-text artifacts once per process and executes them through
+//!   the PJRT C API.
 //!
 //! Selection: `Engine::from_args`-style callers pass a [`BackendKind`];
 //! [`BackendKind::from_env`] reads `BESA_BACKEND=native|pjrt` with native

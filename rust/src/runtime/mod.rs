@@ -5,11 +5,30 @@
 //!
 //! * [`native`] — pure-rust interpreter of the full artifact op set, specs
 //!   synthesized from [`crate::model::ModelConfig`]. Default; hermetic.
-//! * [`pjrt`] (cargo feature `pjrt`) — compiles AOT HLO-text artifacts
-//!   once per process and executes them via the PJRT C API.
+//! * `pjrt` (cargo feature `pjrt`; absent from a default-feature doc
+//!   build) — compiles AOT HLO-text artifacts once per process and
+//!   executes them via the PJRT C API.
 //!
 //! Select with `--backend native|pjrt` on the CLI or `BESA_BACKEND` in the
 //! environment.
+//!
+//! # Invariants the parity suites pin
+//!
+//! * **Spec agreement** — [`artifact::Manifest::synthesize`] (native)
+//!   derives specs identical to what `python/compile/aot.py` writes for
+//!   PJRT; `python/tests/test_aot_manifest.py` and `tests/native_parity.rs`
+//!   assert the shared contract.
+//! * **Dynamic dims** — a `0` extent in a [`TensorSpec`] shape is a
+//!   wildcard: `Engine::validate` accepts any extent there (rank and the
+//!   remaining dims still must match). Static specs — everything
+//!   AOT-lowered — never contain 0-sized dims, so the wildcard is
+//!   unambiguous; it exists for serving-style ops (`block_fwd_cached`)
+//!   whose batch size and cache length vary per call.
+//! * **Numeric parity** — the native interpreter reproduces the golden
+//!   vectors of the float64 reference transliteration
+//!   (`python/tools/gen_golden.py` → `tests/golden/`); its backwards are
+//!   finite-difference-validated; and the `block_fwd_cached` op matches a
+//!   full-prefix `block_fwd` recompute bitwise (`tests/serve_parity.rs`).
 
 pub mod artifact;
 pub mod engine;

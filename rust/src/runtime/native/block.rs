@@ -182,9 +182,12 @@ pub fn backward(cfg: &ModelConfig, sv: &BlockSaved, gy: &[f32]) -> BlockGrads {
 /// plus `k_new`/`v_new` `[nb,1,d]` for the caller to append — the op
 /// itself stays stateless, like every other native artifact.
 ///
-/// Numerics deliberately mirror [`forward`] row-for-row (same RoPE
-/// tables, same accumulation order), so incremental decode reproduces a
-/// full-prefix recompute bitwise; `tests/serve_parity.rs` pins this.
+/// Numerics reproduce [`forward`] row-for-row: the RoPE angles/rotation
+/// and the cached attention are the hoisted [`ops::rope_angles_at`] /
+/// [`ops::rope_rotate_row`] / [`ops::attention_cached_row`] kernels — the
+/// same code the in-process serving decode runs — so incremental decode
+/// reproduces a full-prefix recompute bitwise; `tests/serve_parity.rs`
+/// pins this.
 pub fn block_fwd_cached(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     let (x_t, kc_t, vc_t) = (inputs[0], inputs[1], inputs[2]);
     let pos = inputs[3].i32s();
@@ -212,13 +215,11 @@ pub fn block_fwd_cached(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Ten
     let weights: Vec<&[f32]> = inputs[4..11].iter().map(|t| t.f32s()).collect();
     let norm1 = inputs[11].f32s();
     let norm2 = inputs[12].f32s();
-    let scale = 1.0 / (dh as f32).sqrt();
     let eps = cfg.norm_eps;
 
     let mut y = vec![0.0f32; nb * d];
     let mut k_new = vec![0.0f32; nb * d];
     let mut v_new = vec![0.0f32; nb * d];
-    let mut scores = vec![0.0f32; cap + 1];
     let mut cos_p = vec![0.0f32; half];
     let mut sin_p = vec![0.0f32; half];
     for i in 0..nb {
@@ -229,58 +230,15 @@ pub fn block_fwd_cached(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Ten
         let mut k = ops::mm_nt(&h1, weights[1], 1, d, d);
         let v = ops::mm_nt(&h1, weights[2], 1, d, d);
         // RoPE angles for this position only — O(dh) per sequence, not a
-        // full O(prefix·dh) table per call. Same expression as
-        // ops::rope_tables_for, so the rotation is bit-identical.
-        for t in 0..half {
-            let inv = 1.0 / (cfg.rope_base as f32).powf((2 * t) as f32 / dh as f32);
-            let ang = p as f32 * inv;
-            cos_p[t] = ang.cos();
-            sin_p[t] = ang.sin();
-        }
-        // interleaved even/odd pairing (ops::rope_head)
-        for h in 0..nh {
-            for t in 0..half {
-                let (c, n) = (cos_p[t], sin_p[t]);
-                let (iq, jq) = (h * dh + 2 * t, h * dh + 2 * t + 1);
-                let (a, b) = (q[iq], q[jq]);
-                q[iq] = a * c - b * n;
-                q[jq] = a * n + b * c;
-                let (a, b) = (k[iq], k[jq]);
-                k[iq] = a * c - b * n;
-                k[jq] = a * n + b * c;
-            }
-        }
-        // attention over cached keys 0..p plus the new key at p
+        // full O(prefix·dh) table per call.
+        ops::rope_angles_at(p, dh, cfg.rope_base, &mut cos_p, &mut sin_p);
+        ops::rope_rotate_row(&mut q, &cos_p, &sin_p, nh, dh, false);
+        ops::rope_rotate_row(&mut k, &cos_p, &sin_p, nh, dh, false);
+        // attention over cached keys 0..p plus the new key at p — the
+        // same hoisted kernel the in-process serving decode uses
         let kci = &kcs[i * cap * d..(i + 1) * cap * d];
         let vci = &vcs[i * cap * d..(i + 1) * cap * d];
-        let mut att = vec![0.0f32; d];
-        for h in 0..nh {
-            let off = h * dh;
-            let qh = &q[off..off + dh];
-            let mut mx = f32::NEG_INFINITY;
-            for j in 0..=p {
-                let kj = if j < p { &kci[j * d + off..j * d + off + dh] } else { &k[off..off + dh] };
-                let mut dot = 0.0f32;
-                for (a, b) in qh.iter().zip(kj) {
-                    dot += a * b;
-                }
-                scores[j] = dot * scale;
-                mx = mx.max(scores[j]);
-            }
-            let mut z = 0.0f32;
-            for item in scores.iter_mut().take(p + 1) {
-                *item = (*item - mx).exp();
-                z += *item;
-            }
-            let ah = &mut att[off..off + dh];
-            for j in 0..=p {
-                let pr = scores[j] / z;
-                let vj = if j < p { &vci[j * d + off..j * d + off + dh] } else { &v[off..off + dh] };
-                for (av, vv) in ah.iter_mut().zip(vj) {
-                    *av += pr * vv;
-                }
-            }
-        }
+        let att = ops::attention_cached_row(&q, &k, &v, &kci[..p * d], &vci[..p * d], p, nh, dh);
         let o = ops::mm_nt(&att, weights[3], 1, d, d);
         let x2: Vec<f32> = xi.iter().zip(&o).map(|(a, b)| a + b).collect();
         let h2 = ops::rmsnorm(&x2, norm2, d, eps);

@@ -149,24 +149,68 @@ pub fn silu_grad(x: f32) -> f32 {
 // RoPE + causal attention
 // ---------------------------------------------------------------------------
 
+/// cos/sin angles of one position, written into `[dh/2]` buffers. The
+/// single source of the RoPE angle expression: [`rope_tables_for`] calls
+/// it per position and `block_fwd_cached` calls it for the one position
+/// it decodes, so every path rotates with bit-identical angles — the
+/// cache-parity invariant `tests/serve_parity.rs` pins.
+pub fn rope_angles_at(pos: usize, dh: usize, rope_base: f64, cos_p: &mut [f32], sin_p: &mut [f32]) {
+    let half = dh / 2;
+    debug_assert!(cos_p.len() == half && sin_p.len() == half);
+    for t in 0..half {
+        let inv = 1.0 / (rope_base as f32).powf((2 * t) as f32 / dh as f32);
+        let ang = pos as f32 * inv;
+        cos_p[t] = ang.cos();
+        sin_p[t] = ang.sin();
+    }
+}
+
 /// (cos, sin) tables for positions `0..s`, each `[s, dh/2]` row-major.
 /// Shared by the fixed-shape block ops (via [`rope_tables`]) and the
-/// variable-length serving path (`serve::ServeContext`); `block_fwd_cached`
-/// evaluates the same expression inline for its single position. All
-/// three must rotate with bit-identical angles for cache parity to hold.
+/// variable-length serving path (`serve::ServeContext`).
 pub fn rope_tables_for(s: usize, dh: usize, rope_base: f64) -> (Vec<f32>, Vec<f32>) {
     let half = dh / 2;
     let mut cos = vec![0.0f32; s * half];
     let mut sin = vec![0.0f32; s * half];
     for pos in 0..s {
-        for t in 0..half {
-            let inv = 1.0 / (rope_base as f32).powf((2 * t) as f32 / dh as f32);
-            let ang = pos as f32 * inv;
-            cos[pos * half + t] = ang.cos();
-            sin[pos * half + t] = ang.sin();
-        }
+        rope_angles_at(
+            pos,
+            dh,
+            rope_base,
+            &mut cos[pos * half..(pos + 1) * half],
+            &mut sin[pos * half..(pos + 1) * half],
+        );
     }
     (cos, sin)
+}
+
+/// Rotate the `n_heads` heads of one `[n_heads * dh]` activation row with
+/// the single-position angle buffers `cos_p`/`sin_p` (`[dh/2]` each),
+/// interleaved even/odd pairing (the `q[0::2]/q[1::2] -> stack(-1)`
+/// layout of model.py). `inverse` applies the transpose rotation (used by
+/// the attention backward). This is the one RoPE rotation in the crate:
+/// the `[S, dh]` per-head path (`rope_head`), the serving prefill /
+/// decode rows and `block_fwd_cached` all go through it, so their
+/// rotations agree bitwise.
+pub fn rope_rotate_row(
+    row: &mut [f32],
+    cos_p: &[f32],
+    sin_p: &[f32],
+    n_heads: usize,
+    dh: usize,
+    inverse: bool,
+) {
+    let half = dh / 2;
+    for h in 0..n_heads {
+        let base = h * dh;
+        for t in 0..half {
+            let c = cos_p[t];
+            let n = if inverse { -sin_p[t] } else { sin_p[t] };
+            let (a, b) = (row[base + 2 * t], row[base + 2 * t + 1]);
+            row[base + 2 * t] = a * c - b * n;
+            row[base + 2 * t + 1] = a * n + b * c;
+        }
+    }
 }
 
 /// (cos, sin) tables, each `[S, dh/2]` row-major.
@@ -174,19 +218,19 @@ pub fn rope_tables(cfg: &ModelConfig) -> (Vec<f32>, Vec<f32>) {
     rope_tables_for(cfg.seq_len, cfg.d_head(), cfg.rope_base)
 }
 
-/// Rotate one `[S, dh]` head in place (interleaved even/odd pairing, the
-/// `q[0::2]/q[1::2] -> stack(-1)` layout of model.py).
+/// Rotate one `[S, dh]` head in place: [`rope_rotate_row`] per position
+/// with that position's row of the angle tables.
 fn rope_head(q: &mut [f32], cos: &[f32], sin: &[f32], s: usize, dh: usize, inverse: bool) {
     let half = dh / 2;
     for pos in 0..s {
-        let row = &mut q[pos * dh..(pos + 1) * dh];
-        for t in 0..half {
-            let (c, n) = (cos[pos * half + t], sin[pos * half + t]);
-            let n = if inverse { -n } else { n };
-            let (a, b) = (row[2 * t], row[2 * t + 1]);
-            row[2 * t] = a * c - b * n;
-            row[2 * t + 1] = a * n + b * c;
-        }
+        rope_rotate_row(
+            &mut q[pos * dh..(pos + 1) * dh],
+            &cos[pos * half..(pos + 1) * half],
+            &sin[pos * half..(pos + 1) * half],
+            1,
+            dh,
+            inverse,
+        );
     }
 }
 
@@ -357,6 +401,69 @@ pub fn attention_bwd(saved: &AttnSaved, gy: &[f32], cfg: &ModelConfig) -> (Vec<f
         merge_heads(&gkr, b, s, h, dh),
         merge_heads(&gvh, b, s, h, dh),
     )
+}
+
+/// Attention of one new roped query row over `len` cached positions plus
+/// the new key/value at logical position `len` — the KV-cached decode
+/// step. All row args are `[d]` with heads side by side in the feature
+/// dim; the caches are `[len, d]` row-major. Returns `[d]`.
+///
+/// The one cached-attention kernel in the crate: the serving decode path
+/// (`serve::engine::decode_step`) and the `block_fwd_cached` runtime op
+/// both call it. Per head it scans keys `0..=len` in ascending position
+/// order with the same max-subtracted softmax and accumulation order as
+/// [`attention`], so incremental decode reproduces a full-prefix
+/// recompute bitwise (`tests/serve_parity.rs` pins this).
+pub fn attention_cached_row(
+    q: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    len: usize,
+    n_heads: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let d = n_heads * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    let mut row = vec![0.0f32; len + 1];
+    for h in 0..n_heads {
+        let off = h * dh;
+        let qh = &q[off..off + dh];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=len {
+            let kj = if j < len {
+                &k_cache[j * d + off..j * d + off + dh]
+            } else {
+                &k_new[off..off + dh]
+            };
+            let mut dot = 0.0f32;
+            for (a, b) in qh.iter().zip(kj) {
+                dot += a * b;
+            }
+            row[j] = dot * scale;
+            mx = mx.max(row[j]);
+        }
+        let mut z = 0.0f32;
+        for item in row.iter_mut() {
+            *item = (*item - mx).exp();
+            z += *item;
+        }
+        let oh = &mut out[off..off + dh];
+        for j in 0..=len {
+            let p = row[j] / z;
+            let vj = if j < len {
+                &v_cache[j * d + off..j * d + off + dh]
+            } else {
+                &v_new[off..off + dh]
+            };
+            for (ov, vv) in oh.iter_mut().zip(vj) {
+                *ov += p * vv;
+            }
+        }
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------

@@ -1,9 +1,13 @@
-//! Offline serving driver: replay a Poisson trace through the
-//! continuous-batching loop in each requested weight format, measure
-//! throughput + latency percentiles, parity-check the fast paths against
-//! dense full-prefix recompute, and emit a machine-readable
-//! `BENCH_serve.json` record for the perf trajectory.
+//! The `besa serve-bench` driver: replay a Poisson/bursty trace through
+//! the continuous-batching loop in each requested weight format (offline,
+//! trace clock), optionally run the async multi-worker mode (wall-clock
+//! ingestion + sharded workers, [`super::online`]) at one and N workers
+//! to report scaling, measure throughput + latency percentiles + the
+//! queue-wait vs compute split, parity-check the fast paths against dense
+//! full-prefix recompute (and sharded against single-worker), and emit a
+//! machine-readable `BENCH_serve.json` record for the perf trajectory.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
@@ -19,8 +23,10 @@ use super::engine::{
     argmax, block_tensors, decode_step, decode_step_backend, greedy_backend, greedy_cached,
     greedy_recompute, last_logits, prefill, score_nll, BlockTensors, ServeContext,
 };
+use super::ingest::Pacing;
 use super::kv::KvCache;
 use super::model::{PackedModel, WeightFormat};
+use super::online::{serve_online, OnlineConfig, OnlineStats};
 use super::scheduler::{ReqKind, Request, Scheduler, SchedulerConfig};
 use super::trace::{poisson_trace, TraceConfig};
 
@@ -66,6 +72,9 @@ pub struct FinishedRequest {
     /// finish time minus arrival on the trace clock
     pub latency_s: f64,
     pub out_tokens: usize,
+    /// greedy tokens in generation order (empty for scoring requests) —
+    /// what the cross-format and sharded-vs-offline parity checks compare
+    pub tokens: Vec<i32>,
     /// total prompt NLL (scoring requests only)
     pub nll: Option<f64>,
 }
@@ -93,6 +102,7 @@ pub fn run_trace(
         cache: KvCache,
         last: i32,
         produced: usize,
+        tokens: Vec<i32>,
     }
     let total = requests.len();
     for r in &requests {
@@ -145,6 +155,7 @@ pub fn run_trace(
                             id: req.id,
                             latency_s: (sw.secs() + clock_offset - req.arrival).max(0.0),
                             out_tokens: 0,
+                            tokens: Vec::new(),
                             nll: Some(nll.iter().map(|v| *v as f64).sum()),
                         });
                         sched.release(cost);
@@ -159,11 +170,18 @@ pub fn run_trace(
                                 id: req.id,
                                 latency_s: (sw.secs() + clock_offset - req.arrival).max(0.0),
                                 out_tokens: 1,
+                                tokens: vec![first],
                                 nll: None,
                             });
                             sched.release(cost);
                         } else {
-                            active.push(Active { req, cache, last: first, produced: 1 });
+                            active.push(Active {
+                                req,
+                                cache,
+                                last: first,
+                                produced: 1,
+                                tokens: vec![first],
+                            });
                         }
                     }
                 }
@@ -186,6 +204,7 @@ pub fn run_trace(
             for (a, t) in active.iter_mut().zip(&next) {
                 a.last = *t;
                 a.produced += 1;
+                a.tokens.push(*t);
             }
             let done_now = sw.secs() + clock_offset;
             let mut i = 0;
@@ -201,6 +220,7 @@ pub fn run_trace(
                         id: a.req.id,
                         latency_s: (done_now - a.req.arrival).max(0.0),
                         out_tokens: a.produced,
+                        tokens: a.tokens,
                         nll: None,
                     });
                 } else {
@@ -229,6 +249,7 @@ pub struct ModeReport {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
+    pub p99_ms: f64,
     pub peak_active: usize,
     pub weight_mbytes: f64,
 }
@@ -246,8 +267,30 @@ fn mode_report(mode: ServeMode, weight_bytes: usize, stats: &TraceStats) -> Mode
         mean_ms: mean(&lat_ms),
         p50_ms: percentile(&lat_ms, 50.0),
         p95_ms: percentile(&lat_ms, 95.0),
+        p99_ms: percentile(&lat_ms, 99.0),
         peak_active: stats.peak_active,
         weight_mbytes: weight_bytes as f64 / (1024.0 * 1024.0),
+    }
+}
+
+/// The async multi-worker section (`besa serve-bench --async`): replay
+/// the trace through the online engine at one worker and at `workers`
+/// workers, so the record shows the sharding scaling on the same trace.
+pub struct OnlineBenchConfig {
+    /// workers in the sharded run (the single-worker baseline is extra)
+    pub workers: usize,
+    /// weight format every replica packs
+    pub format: WeightFormat,
+    pub pacing: Pacing,
+}
+
+impl Default for OnlineBenchConfig {
+    fn default() -> Self {
+        OnlineBenchConfig {
+            workers: 4,
+            format: WeightFormat::Csr,
+            pacing: Pacing::Replay { time_scale: 1.0 },
+        }
     }
 }
 
@@ -259,6 +302,8 @@ pub struct ServeBenchConfig {
     pub quant: QuantSpec,
     /// tokens generated in the KV-vs-recompute parity check
     pub parity_decode_tokens: usize,
+    /// run the async multi-worker section too
+    pub online: Option<OnlineBenchConfig>,
     /// where to write the machine-readable record; None skips the file
     pub json_path: Option<PathBuf>,
 }
@@ -276,6 +321,7 @@ impl Default for ServeBenchConfig {
             sched: SchedulerConfig::default(),
             quant: QuantSpec::default(),
             parity_decode_tokens: 8,
+            online: None,
             json_path: Some(PathBuf::from("BENCH_serve.json")),
         }
     }
@@ -364,6 +410,177 @@ fn parity_check(
     Ok(ParityReport { max_score_nll_diff, sparse_decode_matches, backend_decode_matches, quant })
 }
 
+/// Aggregate numbers of one online run, plus its JSON record.
+struct OnlineRunSummary {
+    tokens_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    mean_queue_wait_ms: f64,
+    mean_service_ms: f64,
+    /// mean worker utilization: busy seconds / (workers · wall seconds)
+    utilization: f64,
+    record: Json,
+}
+
+fn online_run_summary(stats: &OnlineStats, workers: usize) -> OnlineRunSummary {
+    let lat_ms: Vec<f64> = stats.finished.iter().map(|f| f.latency_s * 1e3).collect();
+    let wait_ms: Vec<f64> = stats.finished.iter().map(|f| f.queue_wait_s * 1e3).collect();
+    let service_ms: Vec<f64> = stats
+        .finished
+        .iter()
+        .map(|f| (f.latency_s - f.queue_wait_s) * 1e3)
+        .collect();
+    let wall = stats.wall_s.max(1e-9);
+    let prompt_tokens: usize = stats.workers.iter().map(|w| w.prompt_tokens).sum();
+    let gen_tokens: usize = stats.workers.iter().map(|w| w.gen_tokens).sum();
+    let busy_s: f64 = stats.workers.iter().map(|w| w.busy_s).sum();
+    let tokens_per_s = (prompt_tokens + gen_tokens) as f64 / wall;
+    let mean_queue_wait_ms = mean(&wait_ms);
+    let mean_service_ms = mean(&service_ms);
+    let per_worker: Vec<Json> = stats
+        .workers
+        .iter()
+        .map(|w| {
+            json::obj(vec![
+                ("worker", json::num(w.worker as f64)),
+                ("requests", json::num(w.requests as f64)),
+                ("prompt_tokens", json::num(w.prompt_tokens as f64)),
+                ("gen_tokens", json::num(w.gen_tokens as f64)),
+                ("tokens_per_s", json::num((w.prompt_tokens + w.gen_tokens) as f64 / wall)),
+                ("busy_s", json::num(w.busy_s)),
+                ("utilization", json::num(w.busy_s / wall)),
+                ("peak_active", json::num(w.peak_active as f64)),
+            ])
+        })
+        .collect();
+    let record = json::obj(vec![
+        ("workers", json::num(workers as f64)),
+        ("requests", json::num(stats.finished.len() as f64)),
+        ("prompt_tokens", json::num(prompt_tokens as f64)),
+        ("gen_tokens", json::num(gen_tokens as f64)),
+        ("wall_s", json::num(stats.wall_s)),
+        ("tokens_per_s", json::num(tokens_per_s)),
+        ("p50_ms", json::num(percentile(&lat_ms, 50.0))),
+        ("p95_ms", json::num(percentile(&lat_ms, 95.0))),
+        ("p99_ms", json::num(percentile(&lat_ms, 99.0))),
+        ("mean_queue_wait_ms", json::num(mean_queue_wait_ms)),
+        ("p95_queue_wait_ms", json::num(percentile(&wait_ms, 95.0))),
+        ("mean_service_ms", json::num(mean_service_ms)),
+        (
+            "queue_wait_fraction",
+            json::num(mean_queue_wait_ms / (mean_queue_wait_ms + mean_service_ms).max(1e-12)),
+        ),
+        ("per_worker", Json::Arr(per_worker)),
+    ]);
+    OnlineRunSummary {
+        tokens_per_s,
+        p50_ms: percentile(&lat_ms, 50.0),
+        p95_ms: percentile(&lat_ms, 95.0),
+        p99_ms: percentile(&lat_ms, 99.0),
+        mean_queue_wait_ms,
+        mean_service_ms,
+        utilization: busy_s / (workers as f64 * wall),
+        record,
+    }
+}
+
+/// The async multi-worker section: run the same trace through the online
+/// engine at one worker and at `ocfg.workers` workers (fresh
+/// [`PackedModel`] replicas each), print the scaling table, check that
+/// sharded per-request outputs match the single-worker run, and return
+/// the `online` record for `BENCH_serve.json`.
+fn run_online_bench(
+    params: &ParamStore,
+    cfg: &ModelConfig,
+    bcfg: &ServeBenchConfig,
+    ocfg: &OnlineBenchConfig,
+) -> Result<Json> {
+    if ocfg.workers == 0 {
+        bail!("async serving needs at least one worker");
+    }
+    let requests = poisson_trace(&bcfg.trace);
+    if requests.is_empty() {
+        bail!("trace produced no requests");
+    }
+    let max_pos = bcfg.trace.max_request_tokens();
+    let counts: Vec<usize> = if ocfg.workers > 1 { vec![1, ocfg.workers] } else { vec![1] };
+    println!(
+        "\n== serve-bench async: format {}, pacing {}, up to {} workers ==",
+        ocfg.format.name(),
+        ocfg.pacing.name(),
+        ocfg.workers
+    );
+    println!(
+        "{:<8} {:>10} {:>9} {:>9} {:>9} {:>10} {:>11} {:>6}",
+        "workers", "tok/s", "p50 ms", "p95 ms", "p99 ms", "q-wait ms", "service ms", "util"
+    );
+    let mut runs: Vec<Json> = Vec::new();
+    let mut tps: Vec<f64> = Vec::new();
+    // id -> (greedy tokens, scoring NLL): the sharded parity signature
+    let mut outputs: Vec<BTreeMap<usize, (Vec<i32>, Option<f64>)>> = Vec::new();
+    for &w in &counts {
+        let ctxs = (0..w)
+            .map(|_| {
+                Ok(ServeContext::new(
+                    PackedModel::materialize(params, cfg, ocfg.format)?,
+                    max_pos,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let stats = serve_online(
+            &ctxs,
+            requests.clone(),
+            &OnlineConfig { workers: w, sched: bcfg.sched.clone(), pacing: ocfg.pacing },
+        )?;
+        let summary = online_run_summary(&stats, w);
+        println!(
+            "{:<8} {:>10.0} {:>9.2} {:>9.2} {:>9.2} {:>10.2} {:>11.2} {:>5.0}%",
+            w,
+            summary.tokens_per_s,
+            summary.p50_ms,
+            summary.p95_ms,
+            summary.p99_ms,
+            summary.mean_queue_wait_ms,
+            summary.mean_service_ms,
+            summary.utilization * 100.0
+        );
+        outputs.push(
+            stats.finished.iter().map(|f| (f.id, (f.tokens.clone(), f.nll))).collect(),
+        );
+        tps.push(summary.tokens_per_s);
+        runs.push(summary.record);
+    }
+    let sharded_matches = outputs.windows(2).all(|w| w[0] == w[1]);
+    let scaling = tps.last().unwrap() / tps.first().unwrap().max(1e-9);
+    if counts.len() > 1 {
+        println!(
+            "async scaling: {:.2}x tok/s at {} workers vs 1; sharded outputs {} single-worker",
+            scaling,
+            ocfg.workers,
+            if sharded_matches { "match" } else { "MISMATCH" }
+        );
+        if !sharded_matches {
+            crate::warnlog!("sharded serving changed per-request outputs vs a single worker");
+        }
+    }
+    let mut fields = vec![
+        ("format", json::s(ocfg.format.name())),
+        ("pacing", json::s(ocfg.pacing.name())),
+    ];
+    match ocfg.pacing {
+        Pacing::Replay { time_scale } => fields.push(("time_scale", json::num(time_scale))),
+        Pacing::ClosedLoop { clients } => fields.push(("clients", json::num(clients as f64))),
+    }
+    fields.push(("workers", json::num(ocfg.workers as f64)));
+    fields.push(("runs", Json::Arr(runs)));
+    fields.push(("sharded_matches_single", Json::Bool(sharded_matches)));
+    if counts.len() > 1 {
+        fields.push(("scaling_vs_single_worker", json::num(scaling)));
+    }
+    Ok(json::obj(fields))
+}
+
 /// Zero the smallest-magnitude fraction of every prunable weight — the
 /// hermetic stand-in checkpoint for `--smoke` / `--synthetic` runs (the
 /// real flow serves a `besa prune` checkpoint via `--ckpt`).
@@ -448,8 +665,8 @@ pub fn run_serve_bench(
         .map(|r| r.tokens_per_s)
         .filter(|tps| *tps > 0.0);
     println!(
-        "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8}",
-        "mode", "tok/s", "p50 ms", "p95 ms", "wall s", "weights", "speedup"
+        "{:<14} {:>10} {:>9} {:>9} {:>9} {:>10} {:>10} {:>8}",
+        "mode", "tok/s", "p50 ms", "p95 ms", "p99 ms", "wall s", "weights", "speedup"
     );
     for report in &reports {
         let speedup = match dense_tps {
@@ -457,11 +674,12 @@ pub fn run_serve_bench(
             None => "-".to_string(),
         };
         println!(
-            "{:<14} {:>10.0} {:>10.2} {:>10.2} {:>10.2} {:>8.2}MB {:>8}",
+            "{:<14} {:>10.0} {:>9.2} {:>9.2} {:>9.2} {:>10.2} {:>8.2}MB {:>8}",
             report.mode,
             report.tokens_per_s,
             report.p50_ms,
             report.p95_ms,
+            report.p99_ms,
             report.wall_s,
             report.weight_mbytes,
             speedup
@@ -507,6 +725,12 @@ pub fn run_serve_bench(
         None
     };
 
+    // async multi-worker section
+    let online = match &bcfg.online {
+        Some(ocfg) => Some(run_online_bench(params, &cfg, bcfg, ocfg)?),
+        None => None,
+    };
+
     // machine-readable record
     let mode_rows: Vec<Json> = reports
         .iter()
@@ -521,6 +745,7 @@ pub fn run_serve_bench(
                 ("mean_ms", json::num(r.mean_ms)),
                 ("p50_ms", json::num(r.p50_ms)),
                 ("p95_ms", json::num(r.p95_ms)),
+                ("p99_ms", json::num(r.p99_ms)),
                 ("peak_active", json::num(r.peak_active as f64)),
                 ("weight_mbytes", json::num(r.weight_mbytes)),
             ])
@@ -550,6 +775,7 @@ pub fn run_serve_bench(
                 ("gen_min", json::num(bcfg.trace.gen_min as f64)),
                 ("gen_max", json::num(bcfg.trace.gen_max as f64)),
                 ("score_fraction", json::num(bcfg.trace.score_fraction)),
+                ("burst", json::num(bcfg.trace.burst as f64)),
                 ("seed", json::num(bcfg.trace.seed as f64)),
             ]),
         ),
@@ -576,6 +802,9 @@ pub fn run_serve_bench(
             parity_fields.push(("quant_decode_matches", Json::Bool(ok)));
         }
         payload_fields.push(("parity", json::obj(parity_fields)));
+    }
+    if let Some(o) = online {
+        payload_fields.push(("online", o));
     }
     let payload = json::obj(payload_fields);
     if let Some(path) = &bcfg.json_path {

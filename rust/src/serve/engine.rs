@@ -2,15 +2,17 @@
 //! (which fills the per-request KV cache), batched single-token decode,
 //! and prompt scoring.
 //!
-//! Numerics mirror the native backend's block math operation for
-//! operation (same RMSNorm, RoPE tables, causal softmax and
-//! accumulation order), so:
+//! Numerics are the native backend's block math: RMSNorm/SiLU/matmul come
+//! straight from [`ops`], and the RoPE rotation and cached attention are
+//! the *same* hoisted kernels ([`ops::rope_rotate_row`],
+//! [`ops::attention_cached_row`]) the `block_fwd_cached` runtime op
+//! executes — shared code, not mirrored copies. Invariants pinned by
+//! `tests/serve_parity.rs`:
 //! * dense-format serving reproduces `block_fwd` / `head_nll` bitwise,
 //! * CSR serving reproduces dense bitwise (exact zeros drop out of the
-//!   accumulation without rounding),
+//!   ascending-column accumulation without rounding — see
+//!   [`crate::sparse`]),
 //! * KV-cached decode reproduces a full-prefix recompute token-for-token.
-//!
-//! `tests/serve_parity.rs` pins all three.
 
 use anyhow::Result;
 
@@ -59,19 +61,18 @@ pub fn embed_rows(embed: &[f32], tokens: &[i32], d: usize, vocab: usize) -> Vec<
     x
 }
 
-/// Rotate every head of one `[d]` row at `pos` (interleaved even/odd
-/// pairing — the `ops::rope_head` layout).
+/// Rotate every head of one `[d]` row at `pos`: [`ops::rope_rotate_row`]
+/// with this position's slice of the context's angle tables.
 fn rope_row(row: &mut [f32], pos: usize, cos: &[f32], sin: &[f32], n_heads: usize, dh: usize) {
     let half = dh / 2;
-    for h in 0..n_heads {
-        let base = h * dh;
-        for t in 0..half {
-            let (c, n) = (cos[pos * half + t], sin[pos * half + t]);
-            let (a, b) = (row[base + 2 * t], row[base + 2 * t + 1]);
-            row[base + 2 * t] = a * c - b * n;
-            row[base + 2 * t + 1] = a * n + b * c;
-        }
-    }
+    ops::rope_rotate_row(
+        row,
+        &cos[pos * half..(pos + 1) * half],
+        &sin[pos * half..(pos + 1) * half],
+        n_heads,
+        dh,
+        false,
+    );
 }
 
 /// Causal attention over one sequence: roped `q`/`k` and raw `v`, all
@@ -107,53 +108,6 @@ fn attention_causal(q: &[f32], k: &[f32], v: &[f32], s: usize, n_heads: usize, d
                 for (ov, vv) in orow.iter_mut().zip(vrow) {
                     *ov += p * vv;
                 }
-            }
-        }
-    }
-    out
-}
-
-/// Attention of one new roped query over `len` cached positions plus the
-/// new key/value (logical position `len`). All row args are `[d]`; the
-/// caches are `[len, d]`. Returns `[d]`.
-fn attention_cached(
-    q: &[f32],
-    k_new: &[f32],
-    v_new: &[f32],
-    k_cache: &[f32],
-    v_cache: &[f32],
-    len: usize,
-    n_heads: usize,
-    dh: usize,
-) -> Vec<f32> {
-    let d = n_heads * dh;
-    let scale = 1.0 / (dh as f32).sqrt();
-    let mut out = vec![0.0f32; d];
-    let mut row = vec![0.0f32; len + 1];
-    for h in 0..n_heads {
-        let off = h * dh;
-        let qh = &q[off..off + dh];
-        let mut mx = f32::NEG_INFINITY;
-        for j in 0..=len {
-            let kj = if j < len { &k_cache[j * d + off..j * d + off + dh] } else { &k_new[off..off + dh] };
-            let mut dot = 0.0f32;
-            for (a, b) in qh.iter().zip(kj) {
-                dot += a * b;
-            }
-            row[j] = dot * scale;
-            mx = mx.max(row[j]);
-        }
-        let mut z = 0.0f32;
-        for item in row.iter_mut() {
-            *item = (*item - mx).exp();
-            z += *item;
-        }
-        let oh = &mut out[off..off + dh];
-        for j in 0..=len {
-            let p = row[j] / z;
-            let vj = if j < len { &v_cache[j * d + off..j * d + off + dh] } else { &v_new[off..off + dh] };
-            for (ov, vv) in oh.iter_mut().zip(vj) {
-                *ov += p * vv;
             }
         }
     }
@@ -262,7 +216,7 @@ pub fn decode_step(
             let p = positions[i];
             rope_row(&mut q[i * d..(i + 1) * d], p, &ctx.cos, &ctx.sin, nh, dh);
             rope_row(&mut k[i * d..(i + 1) * d], p, &ctx.cos, &ctx.sin, nh, dh);
-            let out = attention_cached(
+            let out = ops::attention_cached_row(
                 &q[i * d..(i + 1) * d],
                 &k[i * d..(i + 1) * d],
                 &v[i * d..(i + 1) * d],

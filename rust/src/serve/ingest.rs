@@ -1,0 +1,272 @@
+//! Real-time request ingestion: the front end of the online serving
+//! engine ([`super::online`]).
+//!
+//! A producer thread ([`run_producer`]) replays a trace in *wall-clock*
+//! time — sleeping until each request's arrival stamp under
+//! [`Pacing::Replay`] (a `time_scale` of 0 floods the whole trace
+//! immediately, the pure-backlog "drain" mode), or holding a fixed number
+//! of outstanding requests under [`Pacing::ClosedLoop`] (arrival stamps
+//! ignored; the next request is released as soon as a completion frees a
+//! client slot, the classic closed-loop load generator).
+//!
+//! Arrived requests land in an [`IngestQueue`]: a mutex-guarded FIFO with
+//! condvar wakeups that serving workers pop from *conditionally* — a
+//! worker only takes the front request when its own admission predicate
+//! (token budget + batch slots, see [`super::online`]) accepts it, so
+//! admission control stays with the workers while arrival order stays
+//! FIFO. The queue also tracks how many popped requests are still in
+//! flight, which is what the closed-loop producer throttles on, and
+//! stamps every request with its enqueue instant so the metrics pipeline
+//! can split latency into queue wait vs compute.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::scheduler::Request;
+
+/// One request made visible to the workers, stamped with the wall-clock
+/// instant it became visible (the online arrival time: queue wait and
+/// end-to-end latency are measured from here).
+pub struct ArrivedRequest {
+    pub req: Request,
+    pub enqueued: Instant,
+}
+
+/// How the producer paces the trace into the queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pacing {
+    /// Replay arrival stamps in wall-clock time, scaled by `time_scale`
+    /// (2.0 = half speed, 0.5 = double speed, 0.0 = flood everything
+    /// immediately and measure pure drain throughput).
+    Replay { time_scale: f64 },
+    /// Keep exactly `clients` requests outstanding (queued or in flight);
+    /// arrival stamps are ignored.
+    ClosedLoop { clients: usize },
+}
+
+impl Pacing {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pacing::Replay { .. } => "replay",
+            Pacing::ClosedLoop { .. } => "closed-loop",
+        }
+    }
+}
+
+/// Outcome of a conditional pop.
+pub enum Pop {
+    /// The front request passed the caller's admission predicate.
+    Got(ArrivedRequest),
+    /// A front request exists but the caller declined it (budget full).
+    Refused,
+    /// Nothing queued right now; the producer is still running.
+    Empty,
+    /// Queue empty and closed — no more work will ever arrive.
+    Drained,
+}
+
+struct QueueState {
+    ready: VecDeque<ArrivedRequest>,
+    closed: bool,
+    /// popped by a worker and not yet retired (closed-loop accounting)
+    in_flight: usize,
+}
+
+/// Shared arrival queue between one producer and N serving workers.
+pub struct IngestQueue {
+    state: Mutex<QueueState>,
+    /// signaled on push / close: workers waiting for work
+    arrived: Condvar,
+    /// signaled on retire: a closed-loop producer waiting for a slot
+    retired: Condvar,
+}
+
+impl Default for IngestQueue {
+    fn default() -> Self {
+        IngestQueue::new()
+    }
+}
+
+impl IngestQueue {
+    pub fn new() -> IngestQueue {
+        IngestQueue {
+            state: Mutex::new(QueueState {
+                ready: VecDeque::new(),
+                closed: false,
+                in_flight: 0,
+            }),
+            arrived: Condvar::new(),
+            retired: Condvar::new(),
+        }
+    }
+
+    /// Make one request visible to the workers (stamped now).
+    pub fn push(&self, req: Request) {
+        let mut g = self.state.lock().unwrap();
+        g.ready.push_back(ArrivedRequest { req, enqueued: Instant::now() });
+        drop(g);
+        self.arrived.notify_all();
+    }
+
+    /// No more pushes will follow; workers drain what is queued and exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.arrived.notify_all();
+    }
+
+    /// Pop the front request iff `admit` accepts it. FIFO is preserved:
+    /// a declined front request stays at the front (head-of-line blocking
+    /// is deliberate — no request can starve behind later arrivals).
+    pub fn try_pop(&self, admit: impl FnOnce(&Request) -> bool) -> Pop {
+        let mut g = self.state.lock().unwrap();
+        let decision = g.ready.front().map(|front| admit(&front.req));
+        match decision {
+            Some(true) => {
+                let a = g.ready.pop_front().unwrap();
+                g.in_flight += 1;
+                Pop::Got(a)
+            }
+            Some(false) => Pop::Refused,
+            None if g.closed => Pop::Drained,
+            None => Pop::Empty,
+        }
+    }
+
+    /// Block until something arrives or the queue closes, up to `timeout`
+    /// (bounded so callers can re-check their own state).
+    pub fn wait_arrival(&self, timeout: Duration) {
+        let g = self.state.lock().unwrap();
+        if g.ready.is_empty() && !g.closed {
+            let _ = self.arrived.wait_timeout(g, timeout).unwrap();
+        }
+    }
+
+    /// A popped request retired; frees one closed-loop client slot.
+    pub fn note_done(&self) {
+        let mut g = self.state.lock().unwrap();
+        debug_assert!(g.in_flight > 0, "note_done without a matching pop");
+        g.in_flight = g.in_flight.saturating_sub(1);
+        drop(g);
+        self.retired.notify_all();
+    }
+
+    /// Closed-loop producer throttle: block until fewer than `clients`
+    /// requests are outstanding (queued + in flight).
+    pub fn wait_capacity(&self, clients: usize) {
+        let mut g = self.state.lock().unwrap();
+        while g.ready.len() + g.in_flight >= clients {
+            g = self.retired.wait(g).unwrap();
+        }
+    }
+
+    /// True once the queue is closed and empty — in-flight work may still
+    /// be decoding, but no worker will ever pop again.
+    pub fn is_drained(&self) -> bool {
+        let g = self.state.lock().unwrap();
+        g.closed && g.ready.is_empty()
+    }
+}
+
+/// Feed `requests` (sorted by arrival for [`Pacing::Replay`]) into the
+/// queue under the given pacing, then close it. Runs on its own scoped
+/// thread next to the serving workers.
+pub fn run_producer(queue: &IngestQueue, requests: Vec<Request>, pacing: Pacing) {
+    let start = Instant::now();
+    match pacing {
+        Pacing::Replay { time_scale } => {
+            for r in requests {
+                let due = r.arrival * time_scale;
+                let elapsed = start.elapsed().as_secs_f64();
+                if due > elapsed {
+                    std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+                }
+                queue.push(r);
+            }
+        }
+        Pacing::ClosedLoop { clients } => {
+            for r in requests {
+                queue.wait_capacity(clients.max(1));
+                queue.push(r);
+            }
+        }
+    }
+    queue.close();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::ReqKind;
+
+    fn req(id: usize, cost: usize) -> Request {
+        Request { id, arrival: 0.0, tokens: vec![0; cost], kind: ReqKind::Score }
+    }
+
+    #[test]
+    fn fifo_pop_with_admission_predicate() {
+        let q = IngestQueue::new();
+        q.push(req(0, 8));
+        q.push(req(1, 2));
+        // front declined: later cheaper request must NOT jump the queue
+        assert!(matches!(q.try_pop(|r| r.cost() <= 4), Pop::Refused));
+        match q.try_pop(|r| r.cost() <= 8) {
+            Pop::Got(a) => assert_eq!(a.req.id, 0),
+            _ => panic!("front should be admitted"),
+        }
+        match q.try_pop(|_| true) {
+            Pop::Got(a) => assert_eq!(a.req.id, 1),
+            _ => panic!("second request should be admitted"),
+        }
+        assert!(matches!(q.try_pop(|_| true), Pop::Empty));
+        q.close();
+        assert!(matches!(q.try_pop(|_| true), Pop::Drained));
+        assert!(q.is_drained());
+    }
+
+    #[test]
+    fn closed_loop_throttles_outstanding() {
+        let q = IngestQueue::new();
+        let requests: Vec<Request> = (0..6).map(|i| req(i, 1)).collect();
+        let served = crate::util::par::scoped_workers(2, |i| {
+            if i == 0 {
+                run_producer(&q, requests.clone(), Pacing::ClosedLoop { clients: 2 });
+                0
+            } else {
+                // consumer: at most 2 can ever be queued+in-flight
+                let mut got = 0usize;
+                loop {
+                    match q.try_pop(|_| true) {
+                        Pop::Got(_) => {
+                            got += 1;
+                            q.note_done();
+                        }
+                        Pop::Drained => break,
+                        _ => q.wait_arrival(Duration::from_millis(1)),
+                    }
+                }
+                got
+            }
+        });
+        assert_eq!(served[1], 6, "all requests flow through the closed loop");
+    }
+
+    #[test]
+    fn replay_flood_preserves_order() {
+        let q = IngestQueue::new();
+        let requests: Vec<Request> = (0..5).map(|i| req(i, 1)).collect();
+        run_producer(&q, requests, Pacing::Replay { time_scale: 0.0 });
+        let mut ids = Vec::new();
+        loop {
+            match q.try_pop(|_| true) {
+                Pop::Got(a) => {
+                    ids.push(a.req.id);
+                    q.note_done();
+                }
+                Pop::Drained => break,
+                _ => unreachable!("flooded queue is never empty before drain"),
+            }
+        }
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -20,9 +20,18 @@
 //!   a batch into the backend's static `[B, S]` artifacts and masks the
 //!   tail — exact under causal attention, and parity-pinned against this
 //!   engine.
-//! * [`trace`] / [`bench`] — Poisson request traces and the offline
-//!   driver behind `besa serve-bench` (throughput, p50/p95 latency,
-//!   dense-vs-sparse-vs-quant speedup, `BENCH_serve.json`).
+//! * [`ingest`] / [`online`] — the *online* engine: a producer thread
+//!   replays Poisson/bursty traces in wall-clock time (or runs a
+//!   closed-loop load generator) into a shared arrival queue, and a
+//!   sharded pool of workers — one [`model::PackedModel`] replica and its
+//!   own KV caches each — pulls admissions and runs per-worker continuous
+//!   batching. Sharding preserves per-request determinism, so any worker
+//!   count produces identical outputs (pinned by `tests/serve_parity.rs`).
+//! * [`trace`] / [`bench`] — Poisson/bursty request traces and the driver
+//!   behind `besa serve-bench`: offline trace replay per weight format
+//!   plus the async multi-worker mode (`--async`), reporting throughput,
+//!   p50/p95/p99 latency, per-worker utilization and the queue-wait vs
+//!   compute split into `BENCH_serve.json`.
 //!
 //! # Quickstart
 //!
@@ -30,11 +39,14 @@
 //! # hermetic smoke run (synthetic magnitude-pruned checkpoint):
 //! besa serve-bench --config test --smoke
 //!
+//! # async multi-worker mode: wall-clock ingestion + sharded workers
+//! besa serve-bench --config test --smoke --async --workers 4
+//!
 //! # the real flow: prune, then serve the pruned checkpoint
 //! besa pretrain   --config sm --steps 200 --out runs/sm-dense.bst
 //! besa prune      --config sm --method besa --sparsity 0.5 --out runs/sm-besa.bst
 //! besa serve-bench --config sm --ckpt runs/sm-besa.bst \
-//!     --requests 64 --rate 16 --modes dense,sparse,quant
+//!     --requests 64 --rate 16 --modes dense,sparse,quant --async --workers 4
 //! ```
 //!
 //! Programmatic use:
@@ -65,14 +77,18 @@
 
 pub mod bench;
 pub mod engine;
+pub mod ingest;
 pub mod kv;
 pub mod model;
+pub mod online;
 pub mod scheduler;
 pub mod trace;
 
 pub use bench::{run_serve_bench, run_trace, ServeBenchConfig, ServeMode};
 pub use engine::ServeContext;
+pub use ingest::{IngestQueue, Pacing};
 pub use kv::KvCache;
 pub use model::{PackedModel, WeightFormat};
+pub use online::{serve_online, OnlineConfig, OnlineStats};
 pub use scheduler::{ReqKind, Request, Scheduler, SchedulerConfig};
 pub use trace::{poisson_trace, TraceConfig};

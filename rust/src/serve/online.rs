@@ -1,0 +1,462 @@
+//! Online multi-worker serving: a sharded worker pool behind the
+//! real-time ingestion front end ([`super::ingest`]).
+//!
+//! [`serve_online`] runs one producer thread plus `workers` serving
+//! workers on [`crate::util::par::scoped_workers`]. Each worker owns a
+//! full [`ServeContext`] replica (packed weights + RoPE tables) and the
+//! KV caches of the requests it admitted — nothing but the arrival queue
+//! is shared, so workers never contend on model state. Every worker runs
+//! its own continuous-batching loop: pull admissions from the shared
+//! FIFO while its token budget and batch slots allow, prefill them, then
+//! one batched decode step per iteration for everything active —
+//! the same loop as the offline [`super::bench::run_trace`], sharded.
+//!
+//! # Determinism / parity
+//!
+//! Which worker serves a request (and which other requests share its
+//! batch) is racy, but the *output* of a request is not: greedy decode
+//! depends only on the model and the request's own prompt — batched
+//! linears are row-independent and attention reads only the request's own
+//! KV cache — so any worker count produces identical per-request tokens
+//! and NLLs. `tests/serve_parity.rs` pins sharded == single-worker ==
+//! offline replay.
+//!
+//! # Metrics
+//!
+//! Per worker: requests served, prompt/generated tokens, busy (compute)
+//! seconds vs pool wall-clock, peak batch occupancy. Per request: queue
+//! wait (enqueue → admission) vs service (admission → retire) split.
+//! [`super::bench`] merges these into aggregate throughput and latency
+//! percentiles for `BENCH_serve.json`.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::util::par::scoped_workers;
+
+use super::engine::{argmax, decode_step, last_logits, prefill, score_nll, ServeContext};
+use super::ingest::{run_producer, ArrivedRequest, IngestQueue, Pacing, Pop};
+use super::kv::KvCache;
+use super::scheduler::{ReqKind, Request, SchedulerConfig};
+
+/// How long an idle worker sleeps before re-checking the queue.
+const IDLE_POLL: Duration = Duration::from_millis(1);
+
+/// Configuration of one online run.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// serving workers (the producer thread is extra)
+    pub workers: usize,
+    /// per-worker admission caps (token budget + batch slots)
+    pub sched: SchedulerConfig,
+    pub pacing: Pacing,
+}
+
+/// One retired request, with the queue-wait vs compute split.
+#[derive(Debug, Clone)]
+pub struct OnlineFinished {
+    pub id: usize,
+    /// worker that served it
+    pub worker: usize,
+    /// enqueue → admission, seconds (wall clock)
+    pub queue_wait_s: f64,
+    /// enqueue → retire, seconds (wall clock); service time is
+    /// `latency_s - queue_wait_s`
+    pub latency_s: f64,
+    pub out_tokens: usize,
+    /// greedy tokens in generation order (empty for scoring requests)
+    pub tokens: Vec<i32>,
+    /// total prompt NLL (scoring requests only)
+    pub nll: Option<f64>,
+}
+
+/// Counters of one worker's whole run.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub requests: usize,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    /// seconds spent in prefill/decode compute (vs idle polling)
+    pub busy_s: f64,
+    pub peak_active: usize,
+}
+
+/// Merged result of one online run.
+pub struct OnlineStats {
+    pub finished: Vec<OnlineFinished>,
+    pub workers: Vec<WorkerStats>,
+    /// wall-clock seconds from pool start to last worker exit
+    pub wall_s: f64,
+}
+
+impl OnlineStats {
+    /// prompt + generated tokens across all workers.
+    pub fn total_tokens(&self) -> usize {
+        self.workers.iter().map(|w| w.prompt_tokens + w.gen_tokens).sum()
+    }
+}
+
+/// A request being decoded by one worker.
+struct Active {
+    req: Request,
+    enqueued: Instant,
+    queue_wait_s: f64,
+    cache: KvCache,
+    last: i32,
+    produced: usize,
+    tokens: Vec<i32>,
+}
+
+/// Serve `requests` through `ocfg.workers` sharded workers, one
+/// [`ServeContext`] replica each (`ctxs.len() == ocfg.workers`). Returns
+/// after the producer finished, the queue drained and every in-flight
+/// request retired (drain-on-shutdown: closing the queue never drops
+/// admitted work).
+pub fn serve_online(
+    ctxs: &[ServeContext],
+    requests: Vec<Request>,
+    ocfg: &OnlineConfig,
+) -> Result<OnlineStats> {
+    if ocfg.workers == 0 {
+        bail!("online serving needs at least one worker");
+    }
+    if ctxs.len() != ocfg.workers {
+        bail!("got {} model replicas for {} workers", ctxs.len(), ocfg.workers);
+    }
+    if ocfg.sched.max_batch == 0 {
+        bail!("scheduler max_batch must be >= 1");
+    }
+    if let Pacing::ClosedLoop { clients } = ocfg.pacing {
+        if clients == 0 {
+            bail!("closed-loop pacing needs at least one client");
+        }
+    }
+    // reject up front anything that could never be admitted — with a
+    // per-worker budget (or replica capacity: any worker may admit any
+    // request, so the smallest bounds all) below a request's cost every
+    // worker would refuse it forever and the queue would starve behind it
+    let min_pos = ctxs.iter().map(|c| c.max_pos()).min().unwrap();
+    for r in &requests {
+        if r.cost() > ocfg.sched.token_budget {
+            bail!(
+                "request {} cost {} exceeds the per-worker token budget {}",
+                r.id,
+                r.cost(),
+                ocfg.sched.token_budget
+            );
+        }
+        if r.cost() > min_pos {
+            bail!(
+                "request {} needs {} positions but a replica allows only {}",
+                r.id,
+                r.cost(),
+                min_pos
+            );
+        }
+    }
+    let total = requests.len();
+    let queue = IngestQueue::new();
+    // hand the owned request vec to the producer without cloning the
+    // token buffers (scoped_workers takes Fn, so no direct move)
+    let pending = Mutex::new(Some(requests));
+    let start = Instant::now();
+    // index 0 is the producer; 1..=workers are serving workers
+    let results = scoped_workers(ocfg.workers + 1, |i| {
+        if i == 0 {
+            let reqs = pending.lock().unwrap().take().expect("producer runs once");
+            run_producer(&queue, reqs, ocfg.pacing);
+            None
+        } else {
+            Some(worker_loop(i - 1, &ctxs[i - 1], &queue, &ocfg.sched))
+        }
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+    let mut finished = Vec::with_capacity(total);
+    let mut workers = Vec::with_capacity(ocfg.workers);
+    for (stats, fin) in results.into_iter().flatten() {
+        workers.push(stats);
+        finished.extend(fin);
+    }
+    finished.sort_by_key(|f| f.id);
+    debug_assert_eq!(finished.len(), total, "every request retires exactly once");
+    Ok(OnlineStats { finished, workers, wall_s })
+}
+
+/// One worker's continuous-batching loop: admit from the shared queue
+/// while budget and slots allow, prefill admissions, one batched decode
+/// step per iteration, retire at each request's token budget. Exits when
+/// the queue is drained and nothing is left in flight.
+fn worker_loop(
+    wid: usize,
+    ctx: &ServeContext,
+    queue: &IngestQueue,
+    scfg: &SchedulerConfig,
+) -> (WorkerStats, Vec<OnlineFinished>) {
+    let d = ctx.model.cfg.d_model;
+    let mut active: Vec<Active> = Vec::new();
+    let mut in_flight_tokens = 0usize;
+    let mut finished: Vec<OnlineFinished> = Vec::new();
+    let mut stats = WorkerStats {
+        worker: wid,
+        requests: 0,
+        prompt_tokens: 0,
+        gen_tokens: 0,
+        busy_s: 0.0,
+        peak_active: 0,
+    };
+    loop {
+        // admit while the per-worker budget and batch slots allow; the
+        // queue wait ends here, at the pop
+        let mut admitted: Vec<(ArrivedRequest, f64)> = Vec::new();
+        while active.len() + admitted.len() < scfg.max_batch {
+            match queue.try_pop(|r| in_flight_tokens + r.cost() <= scfg.token_budget) {
+                Pop::Got(a) => {
+                    in_flight_tokens += a.req.cost();
+                    let waited = a.enqueued.elapsed().as_secs_f64();
+                    admitted.push((a, waited));
+                }
+                Pop::Refused | Pop::Empty | Pop::Drained => break,
+            }
+        }
+        if admitted.is_empty() && active.is_empty() {
+            if queue.is_drained() {
+                break;
+            }
+            queue.wait_arrival(IDLE_POLL);
+            continue;
+        }
+        let work = Instant::now();
+        for (a, queue_wait_s) in admitted {
+            let ArrivedRequest { req, enqueued } = a;
+            stats.prompt_tokens += req.tokens.len();
+            let s = req.tokens.len();
+            let mut cache = ctx.new_cache();
+            let hidden = prefill(ctx, &req.tokens, &mut cache);
+            match req.kind {
+                ReqKind::Score => {
+                    let nll = score_nll(ctx, &hidden, &req.tokens);
+                    in_flight_tokens -= req.cost();
+                    stats.requests += 1;
+                    finished.push(OnlineFinished {
+                        id: req.id,
+                        worker: wid,
+                        queue_wait_s,
+                        latency_s: enqueued.elapsed().as_secs_f64(),
+                        out_tokens: 0,
+                        tokens: Vec::new(),
+                        nll: Some(nll.iter().map(|v| *v as f64).sum()),
+                    });
+                    queue.note_done();
+                }
+                ReqKind::Generate { max_new } => {
+                    let first = argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32;
+                    stats.gen_tokens += 1;
+                    if max_new <= 1 {
+                        in_flight_tokens -= req.cost();
+                        stats.requests += 1;
+                        finished.push(OnlineFinished {
+                            id: req.id,
+                            worker: wid,
+                            queue_wait_s,
+                            latency_s: enqueued.elapsed().as_secs_f64(),
+                            out_tokens: 1,
+                            tokens: vec![first],
+                            nll: None,
+                        });
+                        queue.note_done();
+                    } else {
+                        active.push(Active {
+                            req,
+                            enqueued,
+                            queue_wait_s,
+                            cache,
+                            last: first,
+                            produced: 1,
+                            tokens: vec![first],
+                        });
+                    }
+                }
+            }
+        }
+        stats.peak_active = stats.peak_active.max(active.len());
+        if !active.is_empty() {
+            let last: Vec<i32> = active.iter().map(|x| x.last).collect();
+            let next = {
+                let mut caches: Vec<&mut KvCache> =
+                    active.iter_mut().map(|x| &mut x.cache).collect();
+                decode_step(ctx, &last, &mut caches)
+            };
+            stats.gen_tokens += next.len();
+            for (x, t) in active.iter_mut().zip(&next) {
+                x.last = *t;
+                x.produced += 1;
+                x.tokens.push(*t);
+            }
+            let mut i = 0;
+            while i < active.len() {
+                let max_new = match active[i].req.kind {
+                    ReqKind::Generate { max_new } => max_new,
+                    ReqKind::Score => 0,
+                };
+                if active[i].produced >= max_new {
+                    let x = active.swap_remove(i);
+                    in_flight_tokens -= x.req.cost();
+                    stats.requests += 1;
+                    finished.push(OnlineFinished {
+                        id: x.req.id,
+                        worker: wid,
+                        queue_wait_s: x.queue_wait_s,
+                        latency_s: x.enqueued.elapsed().as_secs_f64(),
+                        out_tokens: x.produced,
+                        tokens: x.tokens,
+                        nll: None,
+                    });
+                    queue.note_done();
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        stats.busy_s += work.elapsed().as_secs_f64();
+    }
+    (stats, finished)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+    use crate::model::ParamStore;
+    use crate::serve::bench::magnitude_prune_in_place;
+    use crate::serve::model::{PackedModel, WeightFormat};
+    use crate::serve::trace::{poisson_trace, TraceConfig};
+
+    fn small_trace(n: usize, seed: u64) -> (TraceConfig, Vec<Request>) {
+        let tcfg = TraceConfig {
+            n_requests: n,
+            rate: 1000.0,
+            prompt_min: 3,
+            prompt_max: 8,
+            gen_min: 2,
+            gen_max: 5,
+            score_fraction: 0.3,
+            burst: 1,
+            seed,
+        };
+        let reqs = poisson_trace(&tcfg);
+        (tcfg, reqs)
+    }
+
+    fn contexts(n: usize, max_pos: usize) -> Vec<ServeContext> {
+        let cfg = test_config();
+        let mut params = ParamStore::init(&cfg, 42);
+        magnitude_prune_in_place(&mut params, &cfg, 0.5).unwrap();
+        (0..n)
+            .map(|_| {
+                ServeContext::new(
+                    PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+                    max_pos,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let (tcfg, reqs) = small_trace(3, 1);
+        let ctxs = contexts(1, tcfg.max_request_tokens());
+        let sched = SchedulerConfig { token_budget: 64, max_batch: 2 };
+        // zero workers can never serve: queued requests would starve
+        let ocfg = OnlineConfig {
+            workers: 0,
+            sched: sched.clone(),
+            pacing: Pacing::Replay { time_scale: 0.0 },
+        };
+        assert!(serve_online(&[], reqs.clone(), &ocfg).is_err());
+        // zero batch slots is the same starvation with workers alive
+        let ocfg = OnlineConfig {
+            workers: 1,
+            sched: SchedulerConfig { token_budget: 64, max_batch: 0 },
+            pacing: Pacing::Replay { time_scale: 0.0 },
+        };
+        assert!(serve_online(&ctxs, reqs.clone(), &ocfg).is_err());
+        // a request that exceeds the per-worker budget would starve the
+        // whole FIFO behind it — rejected up front (every request costs
+        // at least prompt_min = 3 tokens)
+        let ocfg = OnlineConfig {
+            workers: 1,
+            sched: SchedulerConfig { token_budget: 2, max_batch: 2 },
+            pacing: Pacing::Replay { time_scale: 0.0 },
+        };
+        assert!(serve_online(&ctxs, reqs.clone(), &ocfg).is_err());
+        // zero closed-loop clients would deadlock the producer
+        let ocfg = OnlineConfig {
+            workers: 1,
+            sched,
+            pacing: Pacing::ClosedLoop { clients: 0 },
+        };
+        assert!(serve_online(&ctxs, reqs, &ocfg).is_err());
+    }
+
+    #[test]
+    fn drain_on_shutdown_retires_in_flight_decodes() {
+        // time_scale 0 floods + closes the queue while every generation
+        // request is still decoding: the pool must drain them all
+        let (tcfg, reqs) = small_trace(8, 2);
+        let n = reqs.len();
+        let gens: usize = reqs
+            .iter()
+            .filter(|r| matches!(r.kind, ReqKind::Generate { .. }))
+            .count();
+        let ctxs = contexts(2, tcfg.max_request_tokens());
+        let ocfg = OnlineConfig {
+            workers: 2,
+            sched: SchedulerConfig { token_budget: 64, max_batch: 2 },
+            pacing: Pacing::Replay { time_scale: 0.0 },
+        };
+        let stats = serve_online(&ctxs, reqs.clone(), &ocfg).unwrap();
+        assert_eq!(stats.finished.len(), n);
+        let mut seen = std::collections::BTreeSet::new();
+        for f in &stats.finished {
+            assert!(seen.insert(f.id), "request {} retired twice", f.id);
+            assert!(f.latency_s >= f.queue_wait_s && f.queue_wait_s >= 0.0);
+        }
+        // every generation request produced its full token budget
+        for (f, r) in stats.finished.iter().zip(&reqs) {
+            assert_eq!(f.id, r.id);
+            match r.kind {
+                ReqKind::Generate { max_new } => {
+                    assert_eq!(f.out_tokens, max_new);
+                    assert_eq!(f.tokens.len(), max_new);
+                }
+                ReqKind::Score => {
+                    assert!(f.nll.is_some());
+                    assert!(f.tokens.is_empty());
+                }
+            }
+        }
+        assert!(gens > 0, "trace should include generation requests");
+        let served: usize = stats.workers.iter().map(|w| w.requests).sum();
+        assert_eq!(served, n);
+    }
+
+    #[test]
+    fn closed_loop_serves_every_request() {
+        let (tcfg, reqs) = small_trace(10, 3);
+        let n = reqs.len();
+        let ctxs = contexts(2, tcfg.max_request_tokens());
+        let ocfg = OnlineConfig {
+            workers: 2,
+            sched: SchedulerConfig { token_budget: 64, max_batch: 2 },
+            pacing: Pacing::ClosedLoop { clients: 3 },
+        };
+        let stats = serve_online(&ctxs, reqs, &ocfg).unwrap();
+        assert_eq!(stats.finished.len(), n);
+        // at most `clients` could ever be in flight pool-wide
+        let peak: usize = stats.workers.iter().map(|w| w.peak_active).sum();
+        assert!(peak <= 2 * 3, "peak occupancy {peak} vs 3 clients");
+    }
+}

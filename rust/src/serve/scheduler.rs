@@ -187,4 +187,51 @@ mod tests {
         let cfg = SchedulerConfig { token_budget: 100, max_batch: 0 };
         assert!(Scheduler::new(cfg, vec![req(0, 0.0, 4, 4)]).is_err());
     }
+
+    /// A request whose cost exceeds the *remaining* (not total) budget
+    /// stalls at the head of the queue — and, FIFO being deliberate,
+    /// blocks cheaper requests behind it — until enough cost is released.
+    #[test]
+    fn oversized_for_remaining_budget_waits_and_blocks_fifo() {
+        let cfg = SchedulerConfig { token_budget: 40, max_batch: 8 };
+        // 30 in flight after the first; the 25-cost request must wait
+        // even though the 5-cost request behind it would fit
+        let reqs = vec![req(0, 0.0, 20, 10), req(1, 0.0, 15, 10), req(2, 0.0, 3, 2)];
+        let mut s = Scheduler::new(cfg, reqs).unwrap();
+        let a = s.admit(0.0, 0);
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(s.in_flight_tokens(), 30);
+        assert!(s.admit(0.0, 1).is_empty(), "head-of-line request must not be skipped");
+        assert_eq!(s.pending_len(), 2);
+        // releasing the first request frees the whole line
+        s.release(30);
+        let b = s.admit(0.0, 0);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(s.pending_len(), 0);
+    }
+
+    /// Draining: releases may interleave with admissions in any order and
+    /// the accounting must return to zero once everything retires.
+    #[test]
+    fn budget_accounting_returns_to_zero_on_drain() {
+        let cfg = SchedulerConfig { token_budget: 64, max_batch: 4 };
+        let reqs = (0..6).map(|i| req(i, i as f64 * 0.1, 5, 5)).collect();
+        let mut s = Scheduler::new(cfg, reqs).unwrap();
+        let mut done = 0;
+        let mut active = 0usize;
+        let mut t = 0.0;
+        while done < 6 {
+            let admitted = s.admit(t, active);
+            active += admitted.len();
+            if active > 0 {
+                // retire one per tick, releasing its cost
+                s.release(10);
+                active -= 1;
+                done += 1;
+            }
+            t += 0.1;
+        }
+        assert_eq!(s.in_flight_tokens(), 0, "all cost returned after drain");
+        assert_eq!(s.pending_len(), 0);
+    }
 }

@@ -1,6 +1,10 @@
-//! Synthetic request traces: Poisson arrivals over prompts drawn from the
-//! calibration-domain corpus, mixing generation and scoring requests —
-//! the offline driver input for `besa serve-bench`.
+//! Synthetic request traces: Poisson or bursty arrivals over prompts
+//! drawn from the calibration-domain corpus, mixing generation and
+//! scoring requests. Consumed two ways: replayed on the trace clock by
+//! the offline driver ([`super::bench::run_trace`]) or fed through a
+//! wall-clock producer thread into the online multi-worker engine
+//! ([`super::online::serve_online`], where a closed-loop pacing mode
+//! ignores the arrival stamps entirely).
 
 use crate::data::corpus::Corpus;
 use crate::data::Domain;
@@ -21,6 +25,10 @@ pub struct TraceConfig {
     pub gen_max: usize,
     /// fraction of requests that are scoring-only
     pub score_fraction: f64,
+    /// arrival burst size: 1 is a plain Poisson process; `b > 1` makes
+    /// requests arrive in simultaneous groups of `b`, with Exp(rate/b)
+    /// gaps between groups so the mean rate stays `rate`
+    pub burst: usize,
     pub seed: u64,
 }
 
@@ -34,6 +42,7 @@ impl Default for TraceConfig {
             gen_min: 8,
             gen_max: 16,
             score_fraction: 0.25,
+            burst: 1,
             seed: 0x7ACE,
         }
     }
@@ -46,19 +55,24 @@ impl TraceConfig {
     }
 }
 
-/// Sample a deterministic trace: exponential interarrival gaps at `rate`,
+/// Sample a deterministic trace: exponential interarrival gaps at `rate`
+/// (between bursts of `cfg.burst` simultaneous requests when `burst > 1`),
 /// prompt text from the C4-style synthetic corpus.
 pub fn poisson_trace(cfg: &TraceConfig) -> Vec<Request> {
     assert!(cfg.prompt_min >= 1 && cfg.prompt_min <= cfg.prompt_max);
     assert!(cfg.gen_min >= 1 && cfg.gen_min <= cfg.gen_max);
     assert!(cfg.rate > 0.0);
+    assert!(cfg.burst >= 1, "burst size must be >= 1");
     let mut rng = Rng::seed(cfg.seed);
     let mut corpus = Corpus::new(Domain::C4Syn, cfg.seed ^ 0x5EED);
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(cfg.n_requests);
     for id in 0..cfg.n_requests {
-        // Exp(rate) interarrival; 1 - u keeps the log argument positive
-        t += -(1.0 - rng.f64()).ln() / cfg.rate;
+        // Exp(rate) interarrival; 1 - u keeps the log argument positive.
+        // With bursts, one Exp(rate / burst) gap per group of `burst`.
+        if id % cfg.burst == 0 {
+            t += -(1.0 - rng.f64()).ln() / (cfg.rate / cfg.burst as f64);
+        }
         let plen = cfg.prompt_min + rng.below(cfg.prompt_max - cfg.prompt_min + 1);
         let kind = if rng.f64() < cfg.score_fraction {
             ReqKind::Score
@@ -104,6 +118,24 @@ mod tests {
         let t = poisson_trace(&cfg);
         let mean_gap = t.last().unwrap().arrival / t.len() as f64;
         assert!((mean_gap - 0.02).abs() < 0.004, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn bursty_arrivals_group_and_keep_mean_rate() {
+        let cfg = TraceConfig { n_requests: 2000, rate: 50.0, burst: 4, ..Default::default() };
+        let t = poisson_trace(&cfg);
+        // arrivals come in simultaneous groups of `burst`
+        for group in t.chunks(4) {
+            for r in group {
+                assert_eq!(r.arrival, group[0].arrival, "burst members arrive together");
+            }
+        }
+        // non-decreasing overall, and the mean rate is preserved
+        for w in t.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let mean_gap = t.last().unwrap().arrival / t.len() as f64;
+        assert!((mean_gap - 0.02).abs() < 0.006, "mean gap {mean_gap}");
     }
 
     #[test]

@@ -47,23 +47,18 @@ fn row_blocks(rows: usize, macs: usize) -> Vec<(usize, usize)> {
     out
 }
 
-fn spmm_rows(w: &Csr, x: &[f32], t: usize, lo_row: usize, hi_row: usize, out: &mut [f32]) {
-    for r in lo_row..hi_row {
-        let yrow = &mut out[(r - lo_row) * t..(r - lo_row + 1) * t];
-        let (lo, hi) = (w.row_ptr[r] as usize, w.row_ptr[r + 1] as usize);
-        for k in lo..hi {
-            let c = w.col_idx[k] as usize;
-            let v = w.values[k];
-            let xrow = &x[c * t..(c + 1) * t];
-            for (yv, xv) in yrow.iter_mut().zip(xrow) {
-                *yv += v * xv;
-            }
-        }
-    }
-}
-
-fn spmm_rows_quant(
-    w: &QuantCsr,
+/// One row block of `Y^T = W · X^T` over shared CSR structure
+/// (`row_ptr`/`col_idx`): per stored nonzero `k`, one AXPY of
+/// `value(k) * x_row` into the output row. The `value` accessor is the
+/// *only* difference between the plain and fused-dequant kernels —
+/// monomorphized and inlined away, so merging them costs nothing in the
+/// inner loop and both paths share one accumulation order (the
+/// bitwise-parity contract of [`crate::sparse`]).
+#[inline]
+fn spmm_rows_with<V: Fn(usize) -> f32>(
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    value: V,
     x: &[f32],
     t: usize,
     lo_row: usize,
@@ -72,11 +67,10 @@ fn spmm_rows_quant(
 ) {
     for r in lo_row..hi_row {
         let yrow = &mut out[(r - lo_row) * t..(r - lo_row + 1) * t];
-        let (lo, hi) = (w.row_ptr[r] as usize, w.row_ptr[r + 1] as usize);
+        let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
         for k in lo..hi {
-            let c = w.col_idx[k] as usize;
-            // fused dequant: one sub+mul per nonzero, amortized over t
-            let v = (w.codes[k] as f32 - w.zero) * w.scale;
+            let c = col_idx[k] as usize;
+            let v = value(k);
             let xrow = &x[c * t..(c + 1) * t];
             for (yv, xv) in yrow.iter_mut().zip(xrow) {
                 *yv += v * xv;
@@ -85,48 +79,50 @@ fn spmm_rows_quant(
     }
 }
 
-/// `y[rows, t] = W @ x` for dense `x [cols, t]`, row-blocked + parallel.
-pub fn spmm(w: &Csr, x: &[f32], t: usize) -> Vec<f32> {
-    assert_eq!(x.len(), w.cols * t, "x must be [cols={}, t={t}]", w.cols);
-    let blocks = row_blocks(w.rows, w.nnz() * t);
+/// Row-blocked, optionally parallel driver shared by [`spmm`] and
+/// [`spmm_quant`]: split `rows` into contiguous blocks, run
+/// [`spmm_rows_with`] per block (fanning out when `macs` covers thread
+/// spawn cost), stitch the parts back in row order.
+fn spmm_with<V: Fn(usize) -> f32 + Sync>(
+    rows: usize,
+    cols: usize,
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    value: V,
+    x: &[f32],
+    t: usize,
+    macs: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), cols * t, "x must be [cols={cols}, t={t}]");
+    let blocks = row_blocks(rows, macs);
     if blocks.len() <= 1 {
-        let mut y = vec![0.0f32; w.rows * t];
-        spmm_rows(w, x, t, 0, w.rows, &mut y);
+        let mut y = vec![0.0f32; rows * t];
+        spmm_rows_with(row_ptr, col_idx, &value, x, t, 0, rows, &mut y);
         return y;
     }
     let parts = par_map(&blocks, |&(lo, hi)| {
         let mut part = vec![0.0f32; (hi - lo) * t];
-        spmm_rows(w, x, t, lo, hi, &mut part);
+        spmm_rows_with(row_ptr, col_idx, &value, x, t, lo, hi, &mut part);
         Ok(part)
     })
     .expect("spmm row-block workers are infallible");
-    let mut y = vec![0.0f32; w.rows * t];
+    let mut y = vec![0.0f32; rows * t];
     for (&(lo, hi), part) in blocks.iter().zip(parts) {
         y[lo * t..hi * t].copy_from_slice(&part);
     }
     y
 }
 
+/// `y[rows, t] = W @ x` for dense `x [cols, t]`, row-blocked + parallel.
+pub fn spmm(w: &Csr, x: &[f32], t: usize) -> Vec<f32> {
+    spmm_with(w.rows, w.cols, &w.row_ptr, &w.col_idx, |k| w.values[k], x, t, w.nnz() * t)
+}
+
 /// Fused dequant-SpMM: `y[rows, t] = dequant(W) @ x` for `x [cols, t]`.
+/// Same kernel as [`spmm`] with the dequantizing accessor
+/// ([`QuantCsr::value`]: one sub+mul per nonzero, amortized over `t`).
 pub fn spmm_quant(w: &QuantCsr, x: &[f32], t: usize) -> Vec<f32> {
-    assert_eq!(x.len(), w.cols * t, "x must be [cols={}, t={t}]", w.cols);
-    let blocks = row_blocks(w.rows, w.nnz() * t);
-    if blocks.len() <= 1 {
-        let mut y = vec![0.0f32; w.rows * t];
-        spmm_rows_quant(w, x, t, 0, w.rows, &mut y);
-        return y;
-    }
-    let parts = par_map(&blocks, |&(lo, hi)| {
-        let mut part = vec![0.0f32; (hi - lo) * t];
-        spmm_rows_quant(w, x, t, lo, hi, &mut part);
-        Ok(part)
-    })
-    .expect("spmm row-block workers are infallible");
-    let mut y = vec![0.0f32; w.rows * t];
-    for (&(lo, hi), part) in blocks.iter().zip(parts) {
-        y[lo * t..hi * t].copy_from_slice(&part);
-    }
-    y
+    spmm_with(w.rows, w.cols, &w.row_ptr, &w.col_idx, |k| w.value(k), x, t, w.nnz() * t)
 }
 
 /// Linear layer over CSR weights: `y[n, rows] = x[n, cols] @ W^T`.
@@ -207,10 +203,35 @@ mod tests {
         let mut stitched = vec![0.0f32; 64 * t];
         for (lo, hi) in [(0usize, 20usize), (20, 41), (41, 64)] {
             let mut part = vec![0.0f32; (hi - lo) * t];
-            spmm_rows(&csr, &x, t, lo, hi, &mut part);
+            spmm_rows_with(&csr.row_ptr, &csr.col_idx, |k| csr.values[k], &x, t, lo, hi, &mut part);
             stitched[lo * t..hi * t].copy_from_slice(&part);
         }
         assert_eq!(whole, stitched);
+    }
+
+    /// The merged kernel serves both accessors: the plain path must equal
+    /// the dense matmul of the raw weight bitwise, and the fused-dequant
+    /// path must equal the dense matmul of the fake-quantized weight
+    /// bitwise — i.e. parameterizing the value accessor changed nothing.
+    #[test]
+    fn merged_kernel_paths_bit_exact_with_dense_references() {
+        let w = random_sparse(48, 36, 0.5, 8);
+        let spec = QuantSpec::default();
+        let csr = Csr::from_dense(&w);
+        let qcsr = QuantCsr::from_dense(&w, spec);
+        let wq = fake_quant(&w, spec);
+        let mut rng = Rng::seed(9);
+        let t = 7;
+        // x is [cols, t] for the SpMM orientation
+        let x: Vec<f32> = (0..36 * t).map(|_| rng.normal_f32()).collect();
+
+        // dense references in the same orientation: y^T = W · x
+        let xt = transpose(&x, 36, t); // [t, cols] rows for mm_nt
+        let plain_ref = transpose(&mm_nt(&xt, w.f32s(), t, 36, 48), t, 48);
+        let quant_ref = transpose(&mm_nt(&xt, wq.f32s(), t, 36, 48), t, 48);
+
+        assert_eq!(spmm(&csr, &x, t), plain_ref, "plain accessor vs dense W");
+        assert_eq!(spmm_quant(&qcsr, &x, t), quant_ref, "dequant accessor vs dense fake_quant(W)");
     }
 
     #[test]

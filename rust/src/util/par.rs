@@ -1,4 +1,6 @@
-//! Scoped-thread fan-out for the coordinator's per-minibatch loops.
+//! Scoped-thread fan-out: [`par_map`] for the coordinator's per-minibatch
+//! loops and the sparse kernels' row blocks, [`scoped_workers`] for
+//! long-lived indexed worker pools (the online serving engine).
 //!
 //! No external threadpool crate (offline build): a work-stealing index
 //! over `std::thread::scope`. Results keep input order; the first error
@@ -78,6 +80,30 @@ where
     Ok(out)
 }
 
+/// Run `n` long-lived indexed workers (`f(0)..f(n-1)`) on scoped threads
+/// and collect their results in index order. Unlike [`par_map`] — which
+/// steals small uniform items — each call here *is* one worker for its
+/// whole lifetime: the online serving engine passes a closure that runs a
+/// producer or a continuous-batching worker loop until the request queue
+/// drains. A panicking worker propagates the panic to the caller.
+pub fn scoped_workers<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![f(0)];
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..n).map(|i| scope.spawn(move || f(i))).collect();
+        handles.into_iter().map(|h| h.join().expect("scoped worker panicked")).collect()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +132,23 @@ mod tests {
     fn empty_ok() {
         let items: Vec<u8> = vec![];
         assert!(par_map(&items, |x| Ok(*x)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn scoped_workers_index_order() {
+        assert!(scoped_workers(0, |i| i).is_empty());
+        assert_eq!(scoped_workers(1, |i| i * 3), vec![0]);
+        assert_eq!(scoped_workers(5, |i| i * 3), vec![0, 3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn scoped_workers_run_concurrently() {
+        // a barrier only passes if all workers are alive at once
+        let barrier = std::sync::Barrier::new(4);
+        let out = scoped_workers(4, |i| {
+            barrier.wait();
+            i
+        });
+        assert_eq!(out, vec![0, 1, 2, 3]);
     }
 }

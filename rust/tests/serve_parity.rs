@@ -8,7 +8,12 @@
 //!   token for token;
 //! * the quantized path equals fake-quantizing the checkpoint first;
 //! * a full continuous-batching trace replay retires every request with
-//!   identical outputs across weight formats.
+//!   identical outputs across weight formats;
+//! * the online multi-worker engine retires every request with identical
+//!   per-request outputs at any worker count, equal to the offline
+//!   single-threaded replay (sharding preserves per-request determinism).
+
+use std::collections::BTreeMap;
 
 use besa::model::{ModelConfig, ParamStore};
 use besa::quant::{quantize_model, QuantSpec};
@@ -21,7 +26,7 @@ use besa::serve::engine::{
 use besa::serve::model::{PackedModel, WeightFormat};
 use besa::serve::scheduler::SchedulerConfig;
 use besa::serve::trace::TraceConfig;
-use besa::serve::{poisson_trace, run_trace, ReqKind};
+use besa::serve::{poisson_trace, run_trace, serve_online, OnlineConfig, Pacing, ReqKind};
 use besa::tensor::Tensor;
 
 fn pruned_setup() -> (Engine, ModelConfig, ParamStore) {
@@ -209,6 +214,7 @@ fn trace_replay_consistent_across_formats() {
         gen_min: 2,
         gen_max: 6,
         score_fraction: 0.3,
+        burst: 1,
         seed: 99,
     };
     let sched = SchedulerConfig { token_budget: 64, max_batch: 3 };
@@ -224,7 +230,7 @@ fn trace_replay_consistent_across_formats() {
         })
         .collect();
 
-    let mut nlls: Vec<std::collections::BTreeMap<usize, f64>> = Vec::new();
+    let mut outputs: Vec<BTreeMap<usize, (Vec<i32>, Option<f64>)>> = Vec::new();
     for format in [WeightFormat::Dense, WeightFormat::Csr] {
         let ctx = ServeContext::new(
             PackedModel::materialize(&params, &cfg, format).unwrap(),
@@ -236,17 +242,88 @@ fn trace_replay_consistent_across_formats() {
         for f in &stats.finished {
             assert!(seen.insert(f.id), "request {} retired twice", f.id);
             assert_eq!(f.out_tokens, max_new[&f.id], "request {} token budget", f.id);
+            assert_eq!(f.tokens.len(), max_new[&f.id], "request {} token record", f.id);
             assert!(f.latency_s >= 0.0);
         }
         assert!(stats.peak_active <= sched.max_batch);
-        nlls.push(
+        outputs.push(
             stats
                 .finished
                 .iter()
-                .filter_map(|f| f.nll.map(|v| (f.id, v)))
+                .map(|f| (f.id, (f.tokens.clone(), f.nll)))
                 .collect(),
         );
     }
-    assert!(!nlls[0].is_empty(), "trace should include scoring requests");
-    assert_eq!(nlls[0], nlls[1], "scoring NLLs must agree dense vs sparse");
+    assert!(
+        outputs[0].values().any(|(_, nll)| nll.is_some()),
+        "trace should include scoring requests"
+    );
+    assert_eq!(outputs[0], outputs[1], "tokens + NLLs must agree dense vs sparse");
+}
+
+/// The online multi-worker engine must retire every request exactly once
+/// with per-request outputs identical to the offline single-threaded
+/// replay, at any worker count: which worker (and which batch) serves a
+/// request is racy, but greedy decode depends only on the model and the
+/// request's own prompt/KV cache, so sharding cannot change outputs.
+#[test]
+fn sharded_online_matches_single_worker_and_offline_replay() {
+    let (_engine, cfg, params) = pruned_setup();
+    let tcfg = TraceConfig {
+        n_requests: 12,
+        rate: 500.0,
+        prompt_min: 4,
+        prompt_max: 12,
+        gen_min: 2,
+        gen_max: 6,
+        score_fraction: 0.25,
+        burst: 3,
+        seed: 123,
+    };
+    let sched = SchedulerConfig { token_budget: 64, max_batch: 3 };
+    let requests = poisson_trace(&tcfg);
+    let max_pos = tcfg.max_request_tokens();
+
+    // offline single-threaded replay is the reference
+    let ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+        max_pos,
+    );
+    let offline = run_trace(&ctx, None, requests.clone(), &sched).unwrap();
+    let reference: BTreeMap<usize, (Vec<i32>, Option<f64>)> = offline
+        .finished
+        .iter()
+        .map(|f| (f.id, (f.tokens.clone(), f.nll)))
+        .collect();
+    assert_eq!(reference.len(), tcfg.n_requests);
+
+    for workers in [1usize, 3] {
+        let ctxs: Vec<ServeContext> = (0..workers)
+            .map(|_| {
+                ServeContext::new(
+                    PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+                    max_pos,
+                )
+            })
+            .collect();
+        let ocfg = OnlineConfig {
+            workers,
+            sched: sched.clone(),
+            pacing: Pacing::Replay { time_scale: 0.0 },
+        };
+        let stats = serve_online(&ctxs, requests.clone(), &ocfg).unwrap();
+        assert_eq!(stats.finished.len(), tcfg.n_requests, "{workers} workers: all retire");
+        let mut seen = std::collections::BTreeSet::new();
+        for f in &stats.finished {
+            assert!(seen.insert(f.id), "request {} retired twice", f.id);
+            assert!(f.worker < workers);
+            assert!(f.latency_s >= f.queue_wait_s && f.queue_wait_s >= 0.0);
+        }
+        let got: BTreeMap<usize, (Vec<i32>, Option<f64>)> = stats
+            .finished
+            .iter()
+            .map(|f| (f.id, (f.tokens.clone(), f.nll)))
+            .collect();
+        assert_eq!(got, reference, "{workers} workers vs offline replay: bitwise identical");
+    }
 }
