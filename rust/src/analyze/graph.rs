@@ -1,0 +1,578 @@
+//! Pillar (a): the artifact-graph checker — an abstract interpreter over
+//! [`TensorSpec`] op sequences that verifies whole pipelines *statically*,
+//! before any tensor is allocated.
+//!
+//! The runtime's [`crate::runtime::Engine`] validates each call in
+//! isolation (arity / shape / dtype against the manifest). What it cannot
+//! see is *composition*: whether `embed`'s output actually feeds
+//! `block_fwd`'s input, whether `block_fwd_cached`'s `k_new` can be
+//! appended to the `k_cache` it will be fed back into, whether every
+//! `theta_*` input of a BESA step has a matching `dtheta_*` gradient
+//! output. [`verify_manifest`] walks those pipelines symbolically —
+//! propagating shapes through shape *unification* where a dim of 0 is a
+//! wildcard binding any extent (the dynamic batch / cache-capacity dims
+//! of the serving decode op) — and reports every mismatch as a structured
+//! [`Diagnostic`] at load time instead of a mid-run error.
+//!
+//! [`check_dynamic_call`] is the per-call companion: for ops with
+//! wildcard dims it enforces *cross-input* consistency (all leading
+//! dynamic axes bind one request batch; inputs with identical specs, like
+//! the two KV caches, must agree on every dynamic dim), which per-input
+//! validation alone cannot express.
+
+use crate::model::config::LAYER_NAMES;
+use crate::runtime::{ArtifactSpec, Manifest, TensorSpec};
+use crate::tensor::Tensor;
+
+use super::report::Diagnostic;
+
+use anyhow::{bail, Result};
+
+/// Unify two dims where 0 is a wildcard: `0∪x = x`, `x∪x = x`, else fail.
+pub fn unify_dims(a: usize, b: usize) -> Option<usize> {
+    if a == 0 {
+        Some(b)
+    } else if b == 0 || a == b {
+        Some(a)
+    } else {
+        None
+    }
+}
+
+/// Dimension-wise unification of two shapes; ranks must match exactly
+/// (wildcards never absorb a rank difference).
+pub fn unify_shapes(a: &[usize], b: &[usize]) -> std::result::Result<Vec<usize>, String> {
+    if a.len() != b.len() {
+        return Err(format!("rank mismatch: {} vs {}", a.len(), b.len()));
+    }
+    let mut out = Vec::with_capacity(a.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        match unify_dims(x, y) {
+            Some(d) => out.push(d),
+            None => return Err(format!("dim {i}: {x} vs {y}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Cross-input consistency for a call with dynamic (0) spec dims, run
+/// after per-input validation (so ranks already match the spec):
+///
+/// 1. every wildcard on axis 0 binds the same extent — one request batch
+///    per call (`x`, `k_cache`, `v_cache`, `pos` of `block_fwd_cached`);
+/// 2. inputs with *identical* spec shapes containing wildcards must agree
+///    on every wildcard dim (the two KV caches share one capacity).
+pub fn check_dynamic_call(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
+    let mut batch: Option<(usize, &str)> = None;
+    for (t, s) in inputs.iter().zip(&spec.inputs) {
+        if s.shape.first() == Some(&0) && !t.shape.is_empty() {
+            let actual = t.shape[0];
+            match &batch {
+                None => batch = Some((actual, &s.name)),
+                Some((b, first)) => {
+                    if *b != actual {
+                        bail!(
+                            "artifact '{}': dynamic batch mismatch — input '{}' has {} rows but \
+                             '{}' has {}",
+                            spec.name,
+                            s.name,
+                            actual,
+                            first,
+                            b
+                        );
+                    }
+                }
+            }
+        }
+    }
+    for i in 0..inputs.len() {
+        for j in i + 1..inputs.len() {
+            let (si, sj) = (&spec.inputs[i], &spec.inputs[j]);
+            if si.shape != sj.shape || !si.shape.contains(&0) {
+                continue;
+            }
+            for (d, sd) in si.shape.iter().enumerate() {
+                if *sd == 0 && inputs[i].shape[d] != inputs[j].shape[d] {
+                    bail!(
+                        "artifact '{}': inputs '{}' and '{}' share spec {:?} but disagree on \
+                         dynamic dim {} ({} vs {})",
+                        spec.name,
+                        si.name,
+                        sj.name,
+                        si.shape,
+                        d,
+                        inputs[i].shape[d],
+                        inputs[j].shape[d]
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Statically verify every pipeline the repo composes from `m`'s op set.
+/// Returns one diagnostic per mismatch (empty = the manifest is
+/// composable). Findings use file `manifest:<config>` and line 0.
+pub fn verify_manifest(m: &Manifest) -> Vec<Diagnostic> {
+    let mut c = Checker { m, file: format!("manifest:{}", m.config.name), diags: Vec::new() };
+    c.prefill_pipeline();
+    c.decode_pipeline();
+    c.besa_steps();
+    c.mask_and_quant();
+    c.train_step();
+    c.diags
+}
+
+struct Checker<'a> {
+    m: &'a Manifest,
+    file: String,
+    diags: Vec<Diagnostic>,
+}
+
+impl Checker<'_> {
+    fn push(&mut self, rule: &str, msg: String) {
+        self.diags.push(Diagnostic::new(rule, &self.file, 0, msg));
+    }
+
+    fn art(&mut self, name: &str) -> Option<ArtifactSpec> {
+        match self.m.artifacts.get(name) {
+            Some(a) => Some(a.clone()),
+            None => {
+                self.push("graph-missing", format!("required artifact '{name}' is absent"));
+                None
+            }
+        }
+    }
+
+    fn io<'s>(
+        &mut self,
+        spec: &'s ArtifactSpec,
+        list: &'s [TensorSpec],
+        which: &str,
+        name: &str,
+    ) -> Option<&'s TensorSpec> {
+        let found = list.iter().find(|t| t.name == name);
+        if found.is_none() {
+            self.push(
+                "graph-missing",
+                format!("artifact '{}' has no {which} named '{name}'", spec.name),
+            );
+        }
+        found
+    }
+
+    fn input(&mut self, spec: &ArtifactSpec, name: &str) -> Option<TensorSpec> {
+        self.io(spec, &spec.inputs, "input", name).cloned()
+    }
+
+    fn output(&mut self, spec: &ArtifactSpec, name: &str) -> Option<TensorSpec> {
+        self.io(spec, &spec.outputs, "output", name).cloned()
+    }
+
+    /// "`producer` feeds `consumer`": dtypes equal, shapes unify.
+    fn feed(&mut self, ctx: &str, producer: &TensorSpec, consumer: &TensorSpec) {
+        if producer.dtype != consumer.dtype {
+            self.push(
+                "graph-dtype",
+                format!(
+                    "{ctx}: '{}' ({}) cannot feed '{}' ({})",
+                    producer.name, producer.dtype, consumer.name, consumer.dtype
+                ),
+            );
+        }
+        if let Err(why) = unify_shapes(&producer.shape, &consumer.shape) {
+            self.push(
+                "graph-shape",
+                format!(
+                    "{ctx}: '{}' {:?} cannot feed '{}' {:?} — {why}",
+                    producer.name, producer.shape, consumer.name, consumer.shape
+                ),
+            );
+        }
+    }
+
+    /// embed → block_fwd* chain → head_nll (the prefill / eval pipeline),
+    /// plus the masked and capture block variants that must stay
+    /// chain-compatible with the dense block.
+    fn prefill_pipeline(&mut self) {
+        let embed = match self.art("embed") {
+            Some(a) => a,
+            None => return,
+        };
+        let block = match self.art("block_fwd") {
+            Some(a) => a,
+            None => return,
+        };
+        let head = match self.art("head_nll") {
+            Some(a) => a,
+            None => return,
+        };
+        let x_in = match self.input(&block, "x") {
+            Some(t) => t,
+            None => return,
+        };
+        if let Some(x) = self.output(&embed, "x") {
+            self.feed("embed → block_fwd", &x, &x_in);
+        }
+        if let Some(y) = self.output(&block, "y") {
+            self.feed("block_fwd → block_fwd (layer chain)", &y, &x_in);
+            if let Some(hx) = self.input(&head, "x") {
+                self.feed("block_fwd → head_nll", &y, &hx);
+            }
+        }
+        if let (Some(et), Some(ht)) = (self.input(&embed, "tokens"), self.input(&head, "tokens")) {
+            self.feed("embed/head_nll token agreement", &et, &ht);
+        }
+        if let (Some(nll), Some(toks)) = (self.output(&head, "nll"), self.input(&head, "tokens")) {
+            if let Err(why) = unify_shapes(&nll.shape, &toks.shape) {
+                self.push(
+                    "graph-shape",
+                    format!(
+                        "head_nll: per-token loss {:?} vs tokens {:?} — {why}",
+                        nll.shape, toks.shape
+                    ),
+                );
+            }
+        }
+        for variant in ["block_fwd_masked", "block_capture"] {
+            if let Some(v) = self.art(variant) {
+                if let Some(y) = self.output(&v, "y") {
+                    self.feed(&format!("{variant} → block_fwd"), &y, &x_in);
+                }
+            }
+        }
+    }
+
+    /// The serving decode loop: `block_fwd_cached`'s outputs must chain
+    /// back into its own inputs (y → x, k_new appended to k_cache, v_new
+    /// to v_cache), and its per-token x must carry the same model dim as
+    /// the prefill block.
+    fn decode_pipeline(&mut self) {
+        let cached = match self.art("block_fwd_cached") {
+            Some(a) => a,
+            None => return,
+        };
+        let x = match self.input(&cached, "x") {
+            Some(t) => t,
+            None => return,
+        };
+        if let Some(y) = self.output(&cached, "y") {
+            self.feed("block_fwd_cached decode chain (y → x)", &y, &x);
+        }
+        for (new_name, cache_name) in [("k_new", "k_cache"), ("v_new", "v_cache")] {
+            let newt = match self.output(&cached, new_name) {
+                Some(t) => t,
+                None => continue,
+            };
+            let cache = match self.input(&cached, cache_name) {
+                Some(t) => t,
+                None => continue,
+            };
+            // append compatibility: same rank, same batch (dim 0) and
+            // feature (trailing) dims; the capacity dim (1) grows
+            if newt.shape.len() != cache.shape.len() {
+                self.push(
+                    "graph-shape",
+                    format!(
+                        "block_fwd_cached: '{new_name}' rank {} cannot append to '{cache_name}' \
+                         rank {}",
+                        newt.shape.len(),
+                        cache.shape.len()
+                    ),
+                );
+                continue;
+            }
+            for d in [0usize, 2] {
+                if d < newt.shape.len() && unify_dims(newt.shape[d], cache.shape[d]).is_none() {
+                    self.push(
+                        "graph-shape",
+                        format!(
+                            "block_fwd_cached: '{new_name}' dim {d} ({}) cannot append to \
+                             '{cache_name}' ({})",
+                            newt.shape[d], cache.shape[d]
+                        ),
+                    );
+                }
+            }
+        }
+        if let Some(pos) = self.input(&cached, "pos") {
+            if pos.dtype != "int32" || pos.shape.len() != 1 {
+                self.push(
+                    "graph-dtype",
+                    format!(
+                        "block_fwd_cached: 'pos' must be rank-1 int32, got {} {:?}",
+                        pos.dtype, pos.shape
+                    ),
+                );
+            }
+        }
+        // prefill → decode handoff: same model dim on the hidden axis
+        if let Some(block) = self.m.artifacts.get("block_fwd") {
+            if let Some(bx) = block.inputs.iter().find(|t| t.name == "x") {
+                if bx.shape.len() == 3
+                    && x.shape.len() == 3
+                    && unify_dims(bx.shape[2], x.shape[2]).is_none()
+                {
+                    self.push(
+                        "graph-shape",
+                        format!(
+                            "prefill → decode handoff: block_fwd d_model {} != block_fwd_cached \
+                             d_model {}",
+                            bx.shape[2], x.shape[2]
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Every BESA step (`besa_step_*`, `besa_quant_step_row`,
+    /// `two_block_step`): its calibration activations must match the dense
+    /// block's output, and every `theta_*` / `gamma_*` input must have a
+    /// matching `dtheta_*` / `dgamma_*` gradient output of identical spec.
+    fn besa_steps(&mut self) {
+        let block_y = self
+            .m
+            .artifacts
+            .get("block_fwd")
+            .and_then(|b| b.outputs.iter().find(|t| t.name == "y").cloned());
+        let names: Vec<String> = self
+            .m
+            .artifacts
+            .keys()
+            .filter(|k| k.starts_with("besa_") || *k == "two_block_step")
+            .cloned()
+            .collect();
+        for name in names {
+            let step = match self.art(&name) {
+                Some(a) => a,
+                None => continue,
+            };
+            for act in ["x_pruned", "y_dense"] {
+                if let (Some(y), Some(a)) = (block_y.as_ref(), self.input(&step, act)) {
+                    let y = y.clone();
+                    self.feed(&format!("block_fwd → {name}"), &y, &a);
+                }
+            }
+            self.grad_pairing(&step, "theta_", "dtheta_");
+            self.grad_pairing(&step, "gamma_", "dgamma_");
+            for scalar in ["loss", "recon", "mean_alpha"] {
+                if let Some(t) = self.output(&step, scalar) {
+                    if !t.shape.is_empty() {
+                        self.push(
+                            "graph-shape",
+                            format!("{name}: '{scalar}' must be scalar, got {:?}", t.shape),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// For every input whose name contains `pat` (e.g. `theta_`), the op
+    /// must emit a gradient output with `grad_pat` in its place and the
+    /// identical shape/dtype — otherwise the optimizer would apply an
+    /// update of the wrong shape.
+    fn grad_pairing(&mut self, spec: &ArtifactSpec, pat: &str, grad_pat: &str) {
+        let pairs: Vec<(TensorSpec, String)> = spec
+            .inputs
+            .iter()
+            .filter(|t| t.name.contains(pat))
+            .map(|t| (t.clone(), t.name.replacen(pat, grad_pat, 1)))
+            .collect();
+        for (input, grad_name) in pairs {
+            match spec.outputs.iter().find(|t| t.name == grad_name) {
+                None => self.push(
+                    "graph-missing",
+                    format!(
+                        "artifact '{}': no gradient output '{grad_name}' for input '{}'",
+                        spec.name, input.name
+                    ),
+                ),
+                Some(g) => {
+                    let g = g.clone();
+                    self.feed(&format!("{} gradient pairing", spec.name), &g, &input);
+                }
+            }
+        }
+    }
+
+    /// One `mask_decode_{r}x{c}` / `quant_apply_{r}x{c}` per distinct
+    /// layer shape, internally consistent and agreeing with the per-layer
+    /// theta specs of `besa_step_row`.
+    fn mask_and_quant(&mut self) {
+        let row_step = self.m.artifacts.get("besa_step_row").cloned();
+        for w in LAYER_NAMES {
+            let [r, c] = self.m.config.layer_shape(w);
+            let md = match self.art(&format!("mask_decode_{r}x{c}")) {
+                Some(a) => a,
+                None => continue,
+            };
+            if let (Some(mask), Some(rank)) = (self.output(&md, "mask"), self.input(&md, "rank")) {
+                if let Err(why) = unify_shapes(&mask.shape, &rank.shape) {
+                    self.push(
+                        "graph-shape",
+                        format!(
+                            "{}: mask {:?} vs rank {:?} — {why}",
+                            md.name, mask.shape, rank.shape
+                        ),
+                    );
+                }
+                if rank.dtype != "int32" {
+                    self.push(
+                        "graph-dtype",
+                        format!("{}: rank must be int32, got {}", md.name, rank.dtype),
+                    );
+                }
+            }
+            if let Some(alpha) = self.output(&md, "alpha") {
+                if alpha.shape != [r] {
+                    self.push(
+                        "graph-shape",
+                        format!("{}: alpha {:?}, expected [{r}]", md.name, alpha.shape),
+                    );
+                }
+            }
+            if let Some(step) = row_step.as_ref() {
+                let theta_name = format!("theta_{w}");
+                if let Some(st) = step.inputs.iter().find(|t| t.name == theta_name) {
+                    let st = st.clone();
+                    if let Some(mt) = self.input(&md, "theta") {
+                        self.feed(&format!("besa_step_row → {}", md.name), &st, &mt);
+                    }
+                }
+            }
+            let qa = match self.art(&format!("quant_apply_{r}x{c}")) {
+                Some(a) => a,
+                None => continue,
+            };
+            if let (Some(wq), Some(win)) = (self.output(&qa, "wq"), self.input(&qa, "w")) {
+                self.feed(&format!("{} (in-place weight update)", qa.name), &wq, &win);
+            }
+            if let Some(g) = self.input(&qa, "gamma") {
+                if g.shape != [2] {
+                    self.push(
+                        "graph-shape",
+                        format!("{}: gamma {:?}, expected [2]", qa.name, g.shape),
+                    );
+                }
+            }
+        }
+    }
+
+    /// `lm_train_step`: a `d_<param>` output of identical spec for every
+    /// parameter input, and token agreement with `embed`.
+    fn train_step(&mut self) {
+        let step = match self.art("lm_train_step") {
+            Some(a) => a,
+            None => return,
+        };
+        let params: Vec<TensorSpec> =
+            step.inputs.iter().filter(|t| t.name != "tokens").cloned().collect();
+        for p in params {
+            let grad_name = format!("d_{}", p.name);
+            match step.outputs.iter().find(|t| t.name == grad_name) {
+                None => self.push(
+                    "graph-missing",
+                    format!("lm_train_step: no gradient output '{grad_name}' for '{}'", p.name),
+                ),
+                Some(g) => {
+                    let g = g.clone();
+                    self.feed("lm_train_step gradient pairing", &g, &p);
+                }
+            }
+        }
+        if let (Some(t), Some(embed)) =
+            (self.input(&step, "tokens"), self.m.artifacts.get("embed").cloned())
+        {
+            if let Some(et) = self.input(&embed, "tokens") {
+                self.feed("lm_train_step/embed token agreement", &t, &et);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn unify_wildcards_and_conflicts() {
+        assert_eq!(unify_dims(0, 0), Some(0));
+        assert_eq!(unify_dims(0, 5), Some(5));
+        assert_eq!(unify_dims(5, 0), Some(5));
+        assert_eq!(unify_dims(5, 5), Some(5));
+        assert_eq!(unify_dims(5, 6), None);
+        assert_eq!(unify_shapes(&[0, 1, 32], &[4, 1, 32]), Ok(vec![4, 1, 32]));
+        assert_eq!(unify_shapes(&[0, 0], &[0, 7]), Ok(vec![0, 7]));
+        assert!(unify_shapes(&[2, 3], &[2, 3, 1]).is_err(), "rank mismatch");
+        assert!(unify_shapes(&[2, 3], &[2, 4]).is_err(), "conflicting concrete dims");
+    }
+
+    #[test]
+    fn builtin_manifests_verify_clean() {
+        for name in ["test", "sm"] {
+            let m = Manifest::synthesize(ModelConfig::builtin(name).unwrap());
+            let diags = verify_manifest(&m);
+            assert!(diags.is_empty(), "{name}: {:?}", diags);
+        }
+    }
+
+    #[test]
+    fn mutated_manifest_is_rejected() {
+        let mut m = Manifest::synthesize(ModelConfig::builtin("test").unwrap());
+        // widen the dense block's output hidden dim: breaks the layer
+        // chain, the head feed and the BESA calibration feeds at once
+        let block = m.artifacts.get_mut("block_fwd").unwrap();
+        block.outputs[0].shape[2] += 1;
+        let diags = verify_manifest(&m);
+        assert!(!diags.is_empty());
+        assert!(diags.iter().all(|d| d.file == "manifest:test" && d.line == 0));
+        assert!(diags.iter().any(|d| d.rule == "graph-shape"));
+    }
+
+    #[test]
+    fn missing_gradient_output_is_reported() {
+        let mut m = Manifest::synthesize(ModelConfig::builtin("test").unwrap());
+        let step = m.artifacts.get_mut("besa_step_row").unwrap();
+        let dropped = step.outputs.iter().position(|t| t.name.starts_with("dtheta_")).unwrap();
+        step.outputs.remove(dropped);
+        let diags = verify_manifest(&m);
+        assert!(diags.iter().any(|d| d.rule == "graph-missing"), "{diags:?}");
+    }
+
+    #[test]
+    fn dynamic_call_binds_one_batch_and_one_capacity() {
+        let m = Manifest::synthesize(ModelConfig::builtin("test").unwrap());
+        let spec = m.artifact("block_fwd_cached").unwrap();
+        let d = m.config.d_model;
+        let x = Tensor::from_f32(&[2, 1, d], vec![0.0; 2 * d]);
+        let k = Tensor::from_f32(&[2, 4, d], vec![0.0; 2 * 4 * d]);
+        let v = Tensor::from_f32(&[2, 4, d], vec![0.0; 2 * 4 * d]);
+        let pos = Tensor::from_i32(&[2], vec![4, 4]);
+        let mut inputs: Vec<&Tensor> = vec![&x, &k, &v, &pos];
+        // weights/norms are static; any placeholder works for this check
+        let extras: Vec<Tensor> = spec.inputs[4..]
+            .iter()
+            .map(|s| Tensor::from_f32(&s.shape, vec![0.0; s.shape.iter().product()]))
+            .collect();
+        inputs.extend(extras.iter());
+        assert!(check_dynamic_call(spec, &inputs).is_ok());
+
+        // batch mismatch: pos says 3 requests, x says 2
+        let bad_pos = Tensor::from_i32(&[3], vec![4, 4, 4]);
+        let mut bad: Vec<&Tensor> = vec![&x, &k, &v, &bad_pos];
+        bad.extend(extras.iter());
+        let err = check_dynamic_call(spec, &bad).unwrap_err().to_string();
+        assert!(err.contains("dynamic batch mismatch"), "{err}");
+
+        // capacity mismatch between the two same-spec caches
+        let v5 = Tensor::from_f32(&[2, 5, d], vec![0.0; 2 * 5 * d]);
+        let mut bad2: Vec<&Tensor> = vec![&x, &k, &v5, &pos];
+        bad2.extend(extras.iter());
+        let err2 = check_dynamic_call(spec, &bad2).unwrap_err().to_string();
+        assert!(err2.contains("dynamic dim"), "{err2}");
+    }
+}

@@ -1,0 +1,408 @@
+//! A lightweight Rust tokenizer for the repo-specific lint pass — enough
+//! lexical structure to reason about panics, lock acquisitions and
+//! iteration order without pulling in `syn` (the build is hermetic:
+//! vendored path deps only).
+//!
+//! Comment- and string-aware: `//` / `/* */` (nested) comments, plain and
+//! raw strings (`r"…"`, `r#"…"#`, byte variants), char literals vs
+//! lifetimes, and numeric literals that stop before `..` range operators.
+//! Comments are kept as tokens — the lints read `// besa-lint: allow(…)`
+//! escape hatches and `//!` parity declarations out of them.
+
+/// Token classes. Punctuation is emitted one character at a time
+/// (`>>` is two `Punct('>')` tokens), which is all the lints need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// identifier or keyword
+    Ident,
+    /// string / char / numeric literal (one token, escapes resolved away)
+    Literal,
+    /// single punctuation character
+    Punct,
+    /// `// …` including `///` and `//!` doc comments (text kept)
+    LineComment,
+    /// `/* … */`, nested (text kept)
+    BlockComment,
+    /// `'a` in `<'a>` position (NOT a char literal)
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line of the token's first character
+    pub line: usize,
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs are consumed to
+/// end of input (the lints then simply see fewer tokens — the real
+/// compiler is the authority on well-formedness).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let is_ident_start = |c: char| c.is_ascii_alphabetic() || c == '_';
+    let is_ident_cont = |c: char| c.is_ascii_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---- comments -------------------------------------------------
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::LineComment,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::BlockComment,
+                text: chars[start..i].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // ---- raw / byte strings --------------------------------------
+        // r"…", r#"…"#, b"…", br#"…"# — detect before the ident path.
+        if is_ident_start(c) {
+            let mut j = i;
+            if chars[j] == 'b' && j + 1 < n && (chars[j + 1] == 'r' || chars[j + 1] == '"') {
+                j += 1;
+            }
+            if chars[j] == 'r' || chars[j] == '"' {
+                let mut k = j;
+                if chars[k] == 'r' {
+                    k += 1;
+                }
+                let mut hashes = 0usize;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                let raw = j < n && chars[j] == 'r';
+                if k < n && chars[k] == '"' && (raw || k == j) {
+                    // a raw (or byte) string starts at i
+                    let start = i;
+                    let start_line = line;
+                    i = k + 1;
+                    if raw {
+                        // ends at `"` + `hashes` `#`s, no escapes
+                        loop {
+                            if i >= n {
+                                break;
+                            }
+                            if chars[i] == '\n' {
+                                line += 1;
+                                i += 1;
+                                continue;
+                            }
+                            if chars[i] == '"' {
+                                let mut h = 0usize;
+                                while i + 1 + h < n && h < hashes && chars[i + 1 + h] == '#' {
+                                    h += 1;
+                                }
+                                if h == hashes {
+                                    i += 1 + hashes;
+                                    break;
+                                }
+                            }
+                            i += 1;
+                        }
+                    } else {
+                        consume_string_body(&chars, &mut i, &mut line);
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Literal,
+                        text: chars[start..i.min(n)].iter().collect(),
+                        line: start_line,
+                    });
+                    continue;
+                }
+            }
+            // plain identifier / keyword
+            let start = i;
+            i += 1;
+            while i < n && is_ident_cont(chars[i]) {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: chars[start..i].iter().collect(), line });
+            continue;
+        }
+        // ---- plain strings -------------------------------------------
+        if c == '"' {
+            let start = i;
+            let start_line = line;
+            i += 1;
+            consume_string_body(&chars, &mut i, &mut line);
+            toks.push(Tok {
+                kind: TokKind::Literal,
+                text: chars[start..i.min(n)].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // ---- char literal vs lifetime --------------------------------
+        if c == '\'' {
+            // char literal: '\…' or 'x' (any single scalar then ');
+            // otherwise a lifetime: 'ident
+            let is_char = if i + 1 < n && chars[i + 1] == '\\' {
+                true
+            } else {
+                i + 2 < n && chars[i + 2] == '\''
+            };
+            if is_char {
+                let start = i;
+                i += 1; // opening '
+                if i < n && chars[i] == '\\' {
+                    i += 1; // backslash
+                    if i < n {
+                        i += 1; // escaped char (enough for \n \' \\ \0; \x.. \u{..}
+                                // fall through to the closing-quote scan below)
+                    }
+                    while i < n && chars[i] != '\'' {
+                        i += 1;
+                    }
+                } else if i < n {
+                    i += 1; // the char itself
+                }
+                if i < n && chars[i] == '\'' {
+                    i += 1; // closing '
+                }
+                toks.push(Tok {
+                    kind: TokKind::Literal,
+                    text: chars[start..i.min(n)].iter().collect(),
+                    line,
+                });
+            } else {
+                let start = i;
+                i += 1;
+                while i < n && is_ident_cont(chars[i]) {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: chars[start..i].iter().collect(),
+                    line,
+                });
+            }
+            continue;
+        }
+        // ---- numbers --------------------------------------------------
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let d = chars[i];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.' {
+                    // consume a decimal point, but not a `..` range
+                    if i + 1 < n && chars[i + 1] == '.' {
+                        break;
+                    }
+                    i += 1;
+                } else if (d == '+' || d == '-')
+                    && matches!(chars[i - 1], 'e' | 'E')
+                    && chars[start..i].iter().any(|x| x.is_ascii_digit())
+                {
+                    // exponent sign: 1e-9, 2.5E+3
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Literal,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // ---- single punctuation --------------------------------------
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Consume a double-quoted string body with `\` escapes; `*i` points just
+/// past the opening quote on entry and just past the closing quote on
+/// exit (or end of input for unterminated strings).
+fn consume_string_body(chars: &[char], i: &mut usize, line: &mut usize) {
+    let n = chars.len();
+    while *i < n {
+        match chars[*i] {
+            '\\' => {
+                *i += 1;
+                if *i < n {
+                    if chars[*i] == '\n' {
+                        *line += 1;
+                    }
+                    *i += 1;
+                }
+            }
+            '"' => {
+                *i += 1;
+                return;
+            }
+            '\n' => {
+                *line += 1;
+                *i += 1;
+            }
+            _ => *i += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let t = kinds("let x = a.unwrap();");
+        let idents: Vec<&str> = t
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "x", "a", "unwrap"]);
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Punct && s == "."));
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        // an `unwrap(` inside a string must not become tokens
+        let t = kinds(r#"let s = "call .unwrap() maybe \" or { ";"#);
+        assert!(!t.iter().any(|(k, s)| *k == TokKind::Ident && s == "unwrap"));
+        assert!(!t.iter().any(|(k, s)| *k == TokKind::Punct && s == "{"));
+        assert_eq!(t.iter().filter(|(k, _)| *k == TokKind::Literal).count(), 1);
+    }
+
+    #[test]
+    fn comments_are_single_tokens() {
+        let t = lex("a // trailing .unwrap()\n/* block\n with .lock() */ b");
+        assert_eq!(t[0].text, "a");
+        assert_eq!(t[1].kind, TokKind::LineComment);
+        assert!(t[1].text.contains("unwrap"));
+        assert_eq!(t[2].kind, TokKind::BlockComment);
+        assert_eq!(t[3].text, "b");
+        assert_eq!(t[3].line, 3, "block comment newlines advance the line counter");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let t = lex("/* outer /* inner */ still comment */ x");
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].kind, TokKind::BlockComment);
+        assert_eq!(t[1].text, "x");
+    }
+
+    #[test]
+    fn raw_strings() {
+        let t = kinds(r##"let re = r#"quote " and // slash"#; y"##);
+        let lit: Vec<&str> = t
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Literal)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(lit.len(), 1);
+        assert!(lit[0].contains("slash"));
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Ident && s == "y"));
+        // r without a quote is a plain identifier path
+        let t2 = kinds("rows r#raw_ident");
+        let ids: Vec<&str> = t2
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(ids, vec!["rows", "r", "raw_ident"]);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let t = kinds("let c = 'x'; fn f<'a>(v: &'a str) { let nl = '\\n'; }");
+        let lifetimes: Vec<&str> = t
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Lifetime)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        let chars: Vec<&str> = t
+            .iter()
+            .filter(|(k, s)| *k == TokKind::Literal && s.starts_with('\''))
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(chars, vec!["'x'", "'\\n'"]);
+    }
+
+    #[test]
+    fn nested_generics_and_ranges() {
+        let t = kinds("Vec<Vec<f32>> x; for i in 0..n {}");
+        // >> lexes as two separate puncts
+        assert_eq!(t.iter().filter(|(k, s)| *k == TokKind::Punct && s == ">").count(), 2);
+        // 0..n keeps `0` and `n` apart with two dot puncts between
+        let zero = t.iter().position(|(k, s)| *k == TokKind::Literal && s == "0").unwrap();
+        assert_eq!(t[zero + 1], (TokKind::Punct, ".".to_string()));
+        assert_eq!(t[zero + 2], (TokKind::Punct, ".".to_string()));
+        assert_eq!(t[zero + 3], (TokKind::Ident, "n".to_string()));
+    }
+
+    #[test]
+    fn float_literals_and_exponents() {
+        let t = kinds("1.5 + 2e-9 - 0.5f32");
+        let lits: Vec<&str> = t
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Literal)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(lits, vec!["1.5", "2e-9", "0.5f32"]);
+    }
+
+    #[test]
+    fn line_numbers() {
+        let t = lex("a\nb\n\nc");
+        let lines: Vec<usize> = t.iter().map(|x| x.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+}

@@ -1,0 +1,766 @@
+//! The repo-specific lint pass: five lexical rules over [`super::lexer`]
+//! token streams that mechanically enforce the parity invariants the
+//! rustdoc promises.
+//!
+//! * `hot-path-panic` — no `.unwrap()` / `.expect()` / `panic!`-family
+//!   macros in `serve/`, `sparse/`, `runtime/native/`: request-serving and
+//!   kernel code must propagate errors, not abort mid-batch.
+//! * `nondeterministic-iter` — no `HashMap` / `HashSet` in the same
+//!   parity-pinned modules: iteration order would silently break the
+//!   sparse==dense and sharded==single-worker bit-exactness guarantees.
+//! * `lock-order` — extract the mutex acquisition graph (both
+//!   `<recv>.lock()` and the `util::par::locked(&…)` helper count as
+//!   acquisitions) and flag nested-acquisition cycles and re-acquisition
+//!   of a mutex already held.
+//! * `float-reduction-order` — in files whose comments declare bitwise /
+//!   bit-exact / parity guarantees, flag compound assignments to captured
+//!   variables inside `par_map(…)` / `scoped_workers(…)` regions: an
+//!   unordered parallel float reduction is not reproducible.
+//! * `wallclock-in-replay` — no `Instant` / `SystemTime` in deterministic
+//!   replay paths (`serve/` outside the wall-clock-by-design ingest /
+//!   online / bench modules, plus `sparse/` and `runtime/native/`).
+//!
+//! `#[cfg(test)]` items are skipped entirely, and any finding can be
+//! silenced with an inline `// besa-lint: allow(<rule>)` comment on the
+//! same or the preceding line (a one-line safety justification is
+//! expected after the closing paren).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, Tok, TokKind};
+use super::report::Diagnostic;
+
+/// Every rule the pass implements, in the order they run.
+pub const RULES: [&str; 5] = [
+    "hot-path-panic",
+    "nondeterministic-iter",
+    "lock-order",
+    "float-reduction-order",
+    "wallclock-in-replay",
+];
+
+/// One tokenized source file. `path` is relative to the scanned source
+/// root and uses forward slashes — the rules scope themselves by prefix
+/// (`serve/`, `sparse/`, `runtime/native/`).
+pub struct SourceFile {
+    pub path: String,
+    pub toks: Vec<Tok>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        SourceFile { path: path.to_string(), toks: lex(src) }
+    }
+}
+
+/// Run every rule over `files`; returns the unsuppressed findings plus
+/// the count of findings silenced by inline allows. The lock-order graph
+/// is global (edges from all files merge before cycle detection).
+pub fn run_lints(files: &[SourceFile]) -> (Vec<Diagnostic>, usize) {
+    let mut sink = Sink::default();
+    let mut edges: BTreeMap<(String, String), Edge> = BTreeMap::new();
+    for f in files {
+        let mask = test_mask(&f.toks);
+        let allows = allow_map(&f.toks);
+        lint_hot_path_panic(f, &mask, &allows, &mut sink);
+        lint_nondeterministic_iter(f, &mask, &allows, &mut sink);
+        lint_wallclock(f, &mask, &allows, &mut sink);
+        lint_float_reduction(f, &mask, &allows, &mut sink);
+        collect_lock_edges(f, &mask, &allows, &mut sink, &mut edges);
+    }
+    lock_cycles(&edges, &mut sink);
+    (sink.findings, sink.suppressed)
+}
+
+#[derive(Default)]
+struct Sink {
+    findings: Vec<Diagnostic>,
+    suppressed: usize,
+}
+
+impl Sink {
+    fn emit(
+        &mut self,
+        allows: &BTreeSet<(String, usize)>,
+        rule: &str,
+        file: &str,
+        line: usize,
+        message: String,
+    ) {
+        if allowed(allows, rule, line) {
+            self.suppressed += 1;
+        } else {
+            self.findings.push(Diagnostic::new(rule, file, line, message));
+        }
+    }
+}
+
+/// A finding at `line` is silenced by an allow comment on the same line
+/// (trailing comment) or the line directly above.
+fn allowed(allows: &BTreeSet<(String, usize)>, rule: &str, line: usize) -> bool {
+    allows.contains(&(rule.to_string(), line))
+        || (line > 1 && allows.contains(&(rule.to_string(), line - 1)))
+}
+
+/// `(rule, comment line)` pairs from `// besa-lint: allow(a, b)` comments.
+fn allow_map(toks: &[Tok]) -> BTreeSet<(String, usize)> {
+    let mut out = BTreeSet::new();
+    for t in toks {
+        if t.kind != TokKind::LineComment || !t.text.contains("besa-lint:") {
+            continue;
+        }
+        if let Some(p) = t.text.find("allow(") {
+            let rest = &t.text[p + "allow(".len()..];
+            if let Some(q) = rest.find(')') {
+                for rule in rest[..q].split(',') {
+                    out.insert((rule.trim().to_string(), t.line));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Mark every token inside a `#[cfg(test)]`-attributed item. The item
+/// extends to its first balanced `{…}` block (or a bare `;` for
+/// declarations that have no body).
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_attr = is_p(toks, i, "#")
+            && is_p(toks, i + 1, "[")
+            && is_id(toks, i + 2, "cfg")
+            && is_p(toks, i + 3, "(")
+            && is_id(toks, i + 4, "test")
+            && is_p(toks, i + 5, ")")
+            && is_p(toks, i + 6, "]");
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 7;
+        let mut depth = 0i32;
+        let mut saw_brace = false;
+        while j < toks.len() {
+            if toks[j].kind == TokKind::Punct {
+                match toks[j].text.as_str() {
+                    "{" => {
+                        depth += 1;
+                        saw_brace = true;
+                    }
+                    "}" => {
+                        depth -= 1;
+                        if saw_brace && depth == 0 {
+                            break;
+                        }
+                    }
+                    ";" if !saw_brace => break,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        let end = j.min(toks.len().saturating_sub(1));
+        for k in i..=end {
+            mask[k] = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+fn is_p(toks: &[Tok], i: usize, ch: &str) -> bool {
+    i < toks.len() && toks[i].kind == TokKind::Punct && toks[i].text == ch
+}
+
+fn is_id(toks: &[Tok], i: usize, s: &str) -> bool {
+    i < toks.len() && toks[i].kind == TokKind::Ident && toks[i].text == s
+}
+
+// ---- scoping ---------------------------------------------------------
+
+/// Modules whose runtime paths must not panic and must iterate
+/// deterministically.
+fn hot_path_scope(path: &str) -> bool {
+    path.starts_with("serve/") || path.starts_with("sparse/") || path.starts_with("runtime/native/")
+}
+
+/// Deterministic-replay paths: the hot-path modules minus the three serve
+/// modules that measure wall-clock time by design (arrival pacing,
+/// latency metrics, throughput benchmarks).
+fn replay_scope(path: &str) -> bool {
+    const WALLCLOCK_BY_DESIGN: [&str; 3] = ["serve/ingest.rs", "serve/online.rs", "serve/bench.rs"];
+    hot_path_scope(path) && !WALLCLOCK_BY_DESIGN.contains(&path)
+}
+
+// ---- simple per-token rules ------------------------------------------
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+fn lint_hot_path_panic(
+    f: &SourceFile,
+    mask: &[bool],
+    allows: &BTreeSet<(String, usize)>,
+    sink: &mut Sink,
+) {
+    if !hot_path_scope(&f.path) {
+        return;
+    }
+    let toks = &f.toks;
+    for i in 0..toks.len() {
+        if mask[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let s = toks[i].text.as_str();
+        if (s == "unwrap" || s == "expect")
+            && i >= 1
+            && is_p(toks, i - 1, ".")
+            && is_p(toks, i + 1, "(")
+        {
+            sink.emit(
+                allows,
+                "hot-path-panic",
+                &f.path,
+                toks[i].line,
+                format!("`.{s}()` on a hot path — propagate an error or add a justified allow"),
+            );
+        } else if PANIC_MACROS.contains(&s) && is_p(toks, i + 1, "!") {
+            sink.emit(
+                allows,
+                "hot-path-panic",
+                &f.path,
+                toks[i].line,
+                format!("`{s}!` on a hot path — propagate an error or add a justified allow"),
+            );
+        }
+    }
+}
+
+fn lint_nondeterministic_iter(
+    f: &SourceFile,
+    mask: &[bool],
+    allows: &BTreeSet<(String, usize)>,
+    sink: &mut Sink,
+) {
+    if !hot_path_scope(&f.path) {
+        return;
+    }
+    let toks = &f.toks;
+    for i in 0..toks.len() {
+        if mask[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let s = toks[i].text.as_str();
+        if s == "HashMap" || s == "HashSet" {
+            sink.emit(
+                allows,
+                "nondeterministic-iter",
+                &f.path,
+                toks[i].line,
+                format!("`{s}` in a parity-pinned module — use BTreeMap/BTreeSet so iteration order is deterministic"),
+            );
+        }
+    }
+}
+
+fn lint_wallclock(
+    f: &SourceFile,
+    mask: &[bool],
+    allows: &BTreeSet<(String, usize)>,
+    sink: &mut Sink,
+) {
+    if !replay_scope(&f.path) {
+        return;
+    }
+    let toks = &f.toks;
+    for i in 0..toks.len() {
+        if mask[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let s = toks[i].text.as_str();
+        if s == "Instant" || s == "SystemTime" {
+            sink.emit(
+                allows,
+                "wallclock-in-replay",
+                &f.path,
+                toks[i].line,
+                format!("`{s}` in a deterministic replay path — time must come from the recorded trace, not the wall clock"),
+            );
+        }
+    }
+}
+
+// ---- float-reduction-order -------------------------------------------
+
+fn lint_float_reduction(
+    f: &SourceFile,
+    mask: &[bool],
+    allows: &BTreeSet<(String, usize)>,
+    sink: &mut Sink,
+) {
+    let toks = &f.toks;
+    let declares_parity = toks.iter().any(|t| {
+        matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)
+            && (t.text.contains("bitwise")
+                || t.text.contains("bit-exact")
+                || t.text.contains("parity"))
+    });
+    if !declares_parity {
+        return;
+    }
+    let mut i = 0usize;
+    while i < toks.len() {
+        let head = !mask[i]
+            && toks[i].kind == TokKind::Ident
+            && (toks[i].text == "par_map" || toks[i].text == "scoped_workers")
+            && is_p(toks, i + 1, "(");
+        if !head {
+            i += 1;
+            continue;
+        }
+        // the balanced (…) argument region of the parallel call
+        let mut depth = 1i32;
+        let mut j = i + 2;
+        while j < toks.len() {
+            if toks[j].kind == TokKind::Punct {
+                match toks[j].text.as_str() {
+                    "(" => depth += 1,
+                    ")" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        check_reduction_region(f, mask, allows, sink, i + 2, j);
+        i = j + 1;
+    }
+}
+
+/// Idents bound inside the region (`let` bindings and closure parameter
+/// lists) — compound assignment to these is a private per-item
+/// accumulator, which is fine.
+fn region_locals(toks: &[Tok], lo: usize, hi: usize) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut k = lo;
+    while k < hi {
+        if is_id(toks, k, "let") {
+            let mut m = k + 1;
+            if is_id(toks, m, "mut") {
+                m += 1;
+            }
+            if m < hi && toks[m].kind == TokKind::Ident {
+                out.insert(toks[m].text.clone());
+            }
+        }
+        if is_p(toks, k, "|") {
+            // closure head: collect idents until the closing `|`; bail if
+            // a `{` or `;` shows up first (then it was a bit-or, not a
+            // parameter list)
+            let mut m = k + 1;
+            while m < hi {
+                if is_p(toks, m, "|") {
+                    k = m;
+                    break;
+                }
+                if is_p(toks, m, "{") || is_p(toks, m, ";") {
+                    break;
+                }
+                if toks[m].kind == TokKind::Ident {
+                    out.insert(toks[m].text.clone());
+                }
+                m += 1;
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
+fn check_reduction_region(
+    f: &SourceFile,
+    mask: &[bool],
+    allows: &BTreeSet<(String, usize)>,
+    sink: &mut Sink,
+    lo: usize,
+    hi: usize,
+) {
+    let toks = &f.toks;
+    let locals = region_locals(toks, lo, hi);
+    for k in lo..hi {
+        if mask[k] || k + 1 >= hi {
+            continue;
+        }
+        let op_ok = toks[k].kind == TokKind::Punct
+            && matches!(toks[k].text.as_str(), "+" | "-" | "*")
+            && is_p(toks, k + 1, "=");
+        if !op_ok || k == 0 {
+            continue;
+        }
+        if let Some(name) = recv_name(toks, k as isize - 1) {
+            if !locals.contains(&name) {
+                sink.emit(
+                    allows,
+                    "float-reduction-order",
+                    &f.path,
+                    toks[k].line,
+                    format!("compound assignment to captured '{name}' inside an unordered parallel region of a parity-declared kernel — reduction order is nondeterministic"),
+                );
+            }
+        }
+    }
+}
+
+// ---- lock-order -------------------------------------------------------
+
+/// A representative site for a "second acquired while first held" edge.
+struct Edge {
+    file: String,
+    line: usize,
+    allowed: bool,
+}
+
+/// A mutex guard currently live during the linear scan.
+struct Held {
+    lock: String,
+    /// the `let`-bound guard variable, if any (released by `drop(var)`)
+    var: Option<String>,
+    /// brace depth at acquisition; the guard dies when the enclosing
+    /// block closes (or, for temporaries, at the next statement `;`)
+    depth: i32,
+}
+
+/// Walk backwards from `j` to the identifier that names the receiver /
+/// argument, skipping one balanced `[…]` or `(…)` group (indexing or a
+/// call on the path).
+fn recv_name(toks: &[Tok], mut j: isize) -> Option<String> {
+    while j >= 0 {
+        let t = &toks[j as usize];
+        match t.kind {
+            TokKind::LineComment | TokKind::BlockComment => j -= 1,
+            TokKind::Ident => return Some(t.text.clone()),
+            TokKind::Punct if t.text == "]" || t.text == ")" => {
+                let (open, close) = if t.text == "]" { ("[", "]") } else { ("(", ")") };
+                let mut depth = 1i32;
+                j -= 1;
+                while j >= 0 && depth > 0 {
+                    let u = &toks[j as usize];
+                    if u.kind == TokKind::Punct && u.text == close {
+                        depth += 1;
+                    } else if u.kind == TokKind::Punct && u.text == open {
+                        depth -= 1;
+                    }
+                    j -= 1;
+                }
+            }
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Last identifier inside the balanced parens opening at `open` — the
+/// lock field in `locked(&self.state)`.
+fn last_ident_in_parens(toks: &[Tok], open: usize) -> Option<String> {
+    let mut depth = 1i32;
+    let mut j = open + 1;
+    let mut last = None;
+    while j < toks.len() && depth > 0 {
+        match toks[j].kind {
+            TokKind::Punct if toks[j].text == "(" => depth += 1,
+            TokKind::Punct if toks[j].text == ")" => depth -= 1,
+            TokKind::Ident => last = Some(toks[j].text.clone()),
+            _ => {}
+        }
+        j += 1;
+    }
+    last
+}
+
+/// If the statement containing token `from` is a `let` binding, return
+/// the bound name (`let mut g = …` → `g`).
+fn stmt_let_binding(toks: &[Tok], from: usize) -> Option<String> {
+    let mut j = from as isize - 1;
+    while j >= 0 {
+        let t = &toks[j as usize];
+        if t.kind == TokKind::Punct && matches!(t.text.as_str(), ";" | "{" | "}") {
+            break;
+        }
+        j -= 1;
+    }
+    let mut k = (j + 1) as usize;
+    while k < toks.len() && matches!(toks[k].kind, TokKind::LineComment | TokKind::BlockComment) {
+        k += 1;
+    }
+    if !is_id(toks, k, "let") {
+        return None;
+    }
+    k += 1;
+    if is_id(toks, k, "mut") {
+        k += 1;
+    }
+    if k < toks.len() && toks[k].kind == TokKind::Ident {
+        return Some(toks[k].text.clone());
+    }
+    None
+}
+
+/// Linear scan of one file: track live guards through brace depth,
+/// statement ends and `drop(…)` calls; record an edge for every lock
+/// acquired while another is held; flag re-acquisition of a held lock
+/// immediately.
+fn collect_lock_edges(
+    f: &SourceFile,
+    mask: &[bool],
+    allows: &BTreeSet<(String, usize)>,
+    sink: &mut Sink,
+    edges: &mut BTreeMap<(String, String), Edge>,
+) {
+    let toks = &f.toks;
+    let mut depth: i32 = 0;
+    let mut held: Vec<Held> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if mask[i] {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    held.retain(|h| h.depth <= depth);
+                }
+                // a statement end drops un-bound (temporary) guards
+                ";" => held.retain(|h| h.var.is_some() || h.depth < depth),
+                _ => {}
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind == TokKind::Ident {
+            if t.text == "drop"
+                && is_p(toks, i + 1, "(")
+                && i + 3 < toks.len()
+                && toks[i + 2].kind == TokKind::Ident
+                && is_p(toks, i + 3, ")")
+            {
+                let name = toks[i + 2].text.clone();
+                held.retain(|h| h.var.as_deref() != Some(name.as_str()));
+                i += 4;
+                continue;
+            }
+            let acquired = if t.text == "lock"
+                && i >= 2
+                && is_p(toks, i - 1, ".")
+                && is_p(toks, i + 1, "(")
+            {
+                recv_name(toks, i as isize - 2)
+            } else if t.text == "locked" && is_p(toks, i + 1, "(") {
+                last_ident_in_parens(toks, i + 1)
+            } else {
+                None
+            };
+            if let Some(lock) = acquired {
+                for h in &held {
+                    if h.lock == lock {
+                        sink.emit(
+                            allows,
+                            "lock-order",
+                            &f.path,
+                            t.line,
+                            format!("mutex '{lock}' acquired while already held — self-deadlock"),
+                        );
+                    } else {
+                        edges.entry((h.lock.clone(), lock.clone())).or_insert(Edge {
+                            file: f.path.clone(),
+                            line: t.line,
+                            allowed: allowed(allows, "lock-order", t.line),
+                        });
+                    }
+                }
+                let var = stmt_let_binding(toks, i);
+                held.push(Held { lock, var, depth });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// An edge `u → v` ("v acquired while u held") is part of a deadlock
+/// cycle iff `u` is reachable from `v` through the edge graph.
+fn lock_cycles(edges: &BTreeMap<(String, String), Edge>, sink: &mut Sink) {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (u, v) in edges.keys() {
+        adj.entry(u.as_str()).or_default().push(v.as_str());
+    }
+    for ((u, v), e) in edges {
+        if reaches(&adj, v.as_str(), u.as_str()) {
+            if e.allowed {
+                sink.suppressed += 1;
+            } else {
+                sink.findings.push(Diagnostic::new(
+                    "lock-order",
+                    &e.file,
+                    e.line,
+                    format!(
+                        "lock-order inversion: '{v}' acquired while holding '{u}', but '{u}' is \
+                         also acquired while '{v}' is held elsewhere — deadlock cycle"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn reaches(adj: &BTreeMap<&str, Vec<&str>>, from: &str, to: &str) -> bool {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut stack = vec![from];
+    while let Some(x) = stack.pop() {
+        if x == to {
+            return true;
+        }
+        if !seen.insert(x) {
+            continue;
+        }
+        if let Some(next) = adj.get(x) {
+            stack.extend(next.iter().copied());
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_one(path: &str, src: &str) -> (Vec<Diagnostic>, usize) {
+        run_lints(&[SourceFile::parse(path, src)])
+    }
+
+    fn rules(findings: &[Diagnostic]) -> Vec<&str> {
+        findings.iter().map(|d| d.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn hot_path_unwrap_flagged_only_in_scope() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }";
+        let (f, _) = run_one("serve/a.rs", src);
+        assert_eq!(rules(&f), vec!["hot-path-panic"]);
+        assert_eq!(f[0].line, 1);
+        let (f2, _) = run_one("util/a.rs", src);
+        assert!(f2.is_empty(), "util/ is outside the hot-path scope");
+    }
+
+    #[test]
+    fn panic_macros_flagged() {
+        let (f, _) = run_one("sparse/k.rs", "fn f() { panic!(\"boom\") }");
+        assert_eq!(rules(&f), vec!["hot-path-panic"]);
+        let (f2, _) = run_one("runtime/native/k.rs", "fn f() { unreachable!() }");
+        assert_eq!(rules(&f2), vec!["hot-path-panic"]);
+    }
+
+    #[test]
+    fn allow_comment_suppresses_same_and_next_line() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    // besa-lint: allow(hot-path-panic) — checked by caller\n    x.unwrap()\n}";
+        let (f, suppressed) = run_one("serve/a.rs", src);
+        assert!(f.is_empty());
+        assert_eq!(suppressed, 1);
+        let trailing =
+            "fn f(x: Option<u8>) -> u8 { x.unwrap() } // besa-lint: allow(hot-path-panic) — ok";
+        let (f2, s2) = run_one("serve/a.rs", trailing);
+        assert!(f2.is_empty());
+        assert_eq!(s2, 1);
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn g() { None::<u8>.unwrap(); panic!(\"x\"); }\n}\nfn h(v: Option<u8>) -> u8 { v.unwrap() }";
+        let (f, _) = run_one("serve/a.rs", src);
+        assert_eq!(rules(&f), vec!["hot-path-panic"]);
+        assert_eq!(f[0].line, 5, "only the non-test unwrap is flagged");
+    }
+
+    #[test]
+    fn nondeterministic_collections_flagged() {
+        let src = "use std::collections::HashMap;\nfn f() {}";
+        let (f, _) = run_one("runtime/native/x.rs", src);
+        assert_eq!(rules(&f), vec!["nondeterministic-iter"]);
+        let (f2, _) = run_one("runtime/native/x.rs", "use std::collections::BTreeMap;\n");
+        assert!(f2.is_empty());
+    }
+
+    #[test]
+    fn wallclock_scope_excludes_by_design_modules() {
+        let src = "fn f() { let _t = Instant::now(); }";
+        let (f, _) = run_one("serve/engine.rs", src);
+        assert_eq!(rules(&f), vec!["wallclock-in-replay"]);
+        let (f2, _) = run_one("serve/bench.rs", src);
+        assert!(f2.is_empty(), "bench measures wall-clock by design");
+    }
+
+    #[test]
+    fn lock_order_inversion_is_flagged() {
+        let src = "fn one(s: &S) {\n    let g = s.state.lock().unwrap();\n    let h = s.queue.lock().unwrap();\n    drop(h);\n    drop(g);\n}\nfn two(s: &S) {\n    let h = s.queue.lock().unwrap();\n    let g = s.state.lock().unwrap();\n    drop(g);\n    drop(h);\n}";
+        let (f, _) = run_one("util/fixture.rs", src);
+        assert_eq!(rules(&f), vec!["lock-order", "lock-order"], "both edges of the cycle");
+    }
+
+    #[test]
+    fn lock_order_clean_when_never_nested() {
+        let src = "fn one(s: &S) {\n    let g = s.state.lock().unwrap();\n    drop(g);\n    let h = s.queue.lock().unwrap();\n    drop(h);\n}\nfn two(s: &S) {\n    let h = s.queue.lock().unwrap();\n    let g = s.state.lock().unwrap();\n    drop(g);\n    drop(h);\n}";
+        let (f, _) = run_one("util/fixture.rs", src);
+        assert!(f.is_empty(), "consistent nesting direction has no cycle: {f:?}");
+    }
+
+    #[test]
+    fn locked_helper_counts_as_acquisition() {
+        let src = "fn one(s: &S) {\n    let g = locked(&s.state);\n    let h = locked(&s.queue);\n    drop(h);\n    drop(g);\n}\nfn two(s: &S) {\n    let h = locked(&s.queue);\n    let g = locked(&s.state);\n    drop(g);\n    drop(h);\n}";
+        let (f, _) = run_one("util/fixture.rs", src);
+        assert_eq!(rules(&f), vec!["lock-order", "lock-order"]);
+    }
+
+    #[test]
+    fn self_deadlock_is_flagged() {
+        let src = "fn f(s: &S) {\n    let a = s.state.lock().unwrap();\n    let b = s.state.lock().unwrap();\n    drop(b);\n    drop(a);\n}";
+        let (f, _) = run_one("util/fixture.rs", src);
+        assert_eq!(rules(&f), vec!["lock-order"]);
+        assert!(f[0].message.contains("self-deadlock"));
+    }
+
+    #[test]
+    fn block_scoped_guard_releases_at_brace() {
+        let src = "fn f(s: &S) {\n    {\n        let g = s.state.lock().unwrap();\n    }\n    let h = s.queue.lock().unwrap();\n    drop(h);\n}\nfn g2(s: &S) {\n    let h = s.queue.lock().unwrap();\n    let g = s.state.lock().unwrap();\n}";
+        let (f, _) = run_one("util/fixture.rs", src);
+        assert!(f.is_empty(), "guard scoped to an inner block creates no edge: {f:?}");
+    }
+
+    #[test]
+    fn float_reduction_on_captured_accumulator() {
+        let src = "//! Kernel with bitwise parity guarantee.\nfn k(xs: &[f32]) -> f32 {\n    let mut total = 0.0;\n    par_map(xs, |x| {\n        total += x;\n        Ok(())\n    });\n    total\n}";
+        let (f, _) = run_one("sparse/k.rs", src);
+        assert_eq!(rules(&f), vec!["float-reduction-order"]);
+        assert!(f[0].message.contains("total"));
+    }
+
+    #[test]
+    fn float_reduction_local_accumulator_is_clean() {
+        let src = "//! bit-exact row kernel\nfn k(xs: &[Vec<f32>]) {\n    par_map(xs, |row| {\n        let mut part = 0.0;\n        for v in row {\n            part += v;\n        }\n        Ok(part)\n    });\n}";
+        let (f, _) = run_one("sparse/k.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn float_reduction_needs_parity_declaration() {
+        let src = "fn k(xs: &[f32]) -> f32 {\n    let mut total = 0.0;\n    par_map(xs, |x| {\n        total += x;\n        Ok(())\n    });\n    total\n}";
+        let (f, _) = run_one("sparse/k.rs", src);
+        assert!(f.is_empty(), "no parity promise in comments → rule is silent");
+    }
+}

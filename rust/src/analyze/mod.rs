@@ -1,0 +1,109 @@
+//! `besa analyze` — static analysis for the repo's parity discipline.
+//!
+//! Blockwise reconstruction (PAPER.md §3) is only meaningful under three
+//! bit-exactness invariants: sparse==dense, cached==recompute, and
+//! sharded==single-worker. Every one of them is enforced *dynamically* by
+//! the parity test suites — after a panic-prone runtime path already
+//! executed. This subsystem catches the same bug classes *before*
+//! execution, on every CI run, with two pillars:
+//!
+//! * [`graph`] — an abstract interpreter over [`crate::runtime::TensorSpec`]
+//!   op sequences. It verifies whole pipelines (embed → block chain →
+//!   head, the `block_fwd_cached` decode loop, BESA step gradient
+//!   pairings, `two_block_step`, mask-decode / quant-apply) by unifying
+//!   shapes where a dim of 0 is a dynamic wildcard. `Engine` construction
+//!   runs it, so a corrupt or hand-edited manifest is rejected at load
+//!   time with structured diagnostics instead of panicking mid-run.
+//! * [`lints`] — five repo-specific source lints over a `syn`-free lexer
+//!   ([`lexer`]), each guarding a named invariant: `hot-path-panic` and
+//!   `lock-order` keep the serve/sparse/native paths abort- and
+//!   deadlock-free, `nondeterministic-iter` and `float-reduction-order`
+//!   guard bit-exact reproducibility, `wallclock-in-replay` guards
+//!   deterministic replay. `// besa-lint: allow(<rule>)` is the audited
+//!   escape hatch.
+//!
+//! [`analyze_repo`] is the CLI/CI entry point: scan a source tree, graph-
+//! check the built-in configs, and merge everything into one
+//! [`report::AnalysisReport`] (JSON-emittable for machines).
+
+pub mod graph;
+pub mod lexer;
+pub mod lints;
+pub mod report;
+
+pub use report::{AnalysisReport, Diagnostic};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::config::ModelConfig;
+use crate::runtime::Manifest;
+
+use lints::SourceFile;
+
+/// Run the full analysis: every `.rs` file under `src_root` through the
+/// lint pass, plus a graph verification of each named built-in config's
+/// synthesized manifest. Deterministic: files are scanned in sorted path
+/// order.
+pub fn analyze_repo(src_root: &Path, configs: &[String]) -> Result<AnalysisReport> {
+    let mut paths = Vec::new();
+    collect_rs(src_root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let src = std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        let rel = p.strip_prefix(src_root).unwrap_or(p).to_string_lossy().replace('\\', "/");
+        files.push(SourceFile::parse(&rel, &src));
+    }
+    let (mut findings, suppressed) = lints::run_lints(&files);
+    let mut report = AnalysisReport {
+        findings: Vec::new(),
+        suppressed,
+        files_scanned: files.len(),
+        configs_checked: Vec::new(),
+    };
+    for name in configs {
+        let cfg = ModelConfig::builtin(name)?;
+        let m = Manifest::synthesize(cfg);
+        findings.extend(graph::verify_manifest(&m));
+        report.configs_checked.push(name.clone());
+    }
+    report.findings = findings;
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("scanning {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analyze_repo_walks_and_merges() {
+        let dir = std::env::temp_dir().join("besa_analyze_mod_test");
+        let sub = dir.join("serve");
+        std::fs::create_dir_all(&sub).unwrap();
+        std::fs::write(sub.join("bad.rs"), "fn f(x: Option<u8>) -> u8 { x.unwrap() }").unwrap();
+        std::fs::write(dir.join("ok.rs"), "fn g() {}").unwrap();
+        let report = analyze_repo(&dir, &["test".to_string()]).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(report.files_scanned, 2);
+        assert_eq!(report.configs_checked, vec!["test"]);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, "hot-path-panic");
+        assert_eq!(report.findings[0].file, "serve/bad.rs");
+    }
+}

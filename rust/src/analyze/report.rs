@@ -1,0 +1,101 @@
+//! Structured diagnostics: what every analyzer pillar (graph checker,
+//! source lints) emits, and the machine-readable report `besa analyze
+//! --json` writes for CI.
+
+use crate::util::json::{self, Json};
+
+/// One finding. `file` is a source path relative to the scanned root for
+/// lint findings, or `manifest:<config>` for graph-checker findings
+/// (whose `line` is 0 — specs have no source location).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// rule identifier, e.g. `hot-path-panic` or `graph-shape`
+    pub rule: String,
+    pub file: String,
+    /// 1-based source line (0 for graph findings)
+    pub line: usize,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(rule: &str, file: &str, line: usize, message: String) -> Diagnostic {
+        Diagnostic { rule: rule.to_string(), file: file.to_string(), line, message }
+    }
+
+    /// `file:line: [rule] message` — the text form printed to stderr.
+    pub fn render(&self) -> String {
+        if self.line == 0 {
+            format!("{}: [{}] {}", self.file, self.rule, self.message)
+        } else {
+            format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+        }
+    }
+}
+
+/// The merged result of one `besa analyze` run.
+#[derive(Debug, Default)]
+pub struct AnalysisReport {
+    /// unsuppressed findings — any entry here fails the run
+    pub findings: Vec<Diagnostic>,
+    /// findings silenced by an inline `// besa-lint: allow(<rule>)`
+    pub suppressed: usize,
+    pub files_scanned: usize,
+    /// built-in configs whose synthesized manifests were graph-checked
+    pub configs_checked: Vec<String>,
+}
+
+impl AnalysisReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("clean", Json::Bool(self.clean())),
+            ("files_scanned", json::num(self.files_scanned as f64)),
+            ("suppressed", json::num(self.suppressed as f64)),
+            (
+                "configs_checked",
+                json::arr(self.configs_checked.iter().map(|c| json::s(c))),
+            ),
+            (
+                "findings",
+                json::arr(self.findings.iter().map(|d| {
+                    json::obj(vec![
+                        ("rule", json::s(&d.rule)),
+                        ("file", json::s(&d.file)),
+                        ("line", json::num(d.line as f64)),
+                        ("message", json::s(&d.message)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_and_without_line() {
+        let d = Diagnostic::new("hot-path-panic", "serve/x.rs", 7, "unwrap".into());
+        assert_eq!(d.render(), "serve/x.rs:7: [hot-path-panic] unwrap");
+        let g = Diagnostic::new("graph-shape", "manifest:test", 0, "mismatch".into());
+        assert_eq!(g.render(), "manifest:test: [graph-shape] mismatch");
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut r = AnalysisReport::default();
+        r.files_scanned = 3;
+        r.configs_checked.push("test".into());
+        assert!(r.clean());
+        r.findings.push(Diagnostic::new("lock-order", "a.rs", 1, "cycle".into()));
+        let j = r.to_json();
+        assert_eq!(j.at(&["clean"]), &Json::Bool(false));
+        assert_eq!(j.at(&["files_scanned"]).as_usize(), Some(3));
+        let txt = j.to_string_pretty();
+        assert_eq!(Json::parse(&txt).unwrap(), j);
+    }
+}

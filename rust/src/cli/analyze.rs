@@ -1,0 +1,54 @@
+//! `besa analyze` — run the static-analysis subsystem from the CLI.
+//!
+//! Scans a Rust source tree with the repo-specific lints, graph-checks
+//! the synthesized manifests of the requested built-in configs, prints
+//! every finding, and exits nonzero if any finding is unsuppressed —
+//! which is exactly what the CI gate keys on. `--json <path>` writes the
+//! machine-readable report for tooling.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::args::Args;
+
+pub fn cmd_analyze(args: &Args) -> Result<()> {
+    let src = match args.get("src") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            // default: run from the repo root or from rust/
+            let nested = PathBuf::from("rust/src");
+            let local = PathBuf::from("src");
+            if nested.is_dir() {
+                nested
+            } else if local.is_dir() {
+                local
+            } else {
+                bail!("no source tree found — pass --src <dir> (tried rust/src and src)")
+            }
+        }
+    };
+    let configs = args.list_or("configs", &["test", "sm", "md", "lg"]);
+    let report = crate::analyze::analyze_repo(&src, &configs)?;
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("analyze: wrote {path}");
+    }
+    println!(
+        "analyze: {} files scanned, {} config(s) graph-checked, {} finding(s) suppressed by \
+         inline allows",
+        report.files_scanned,
+        report.configs_checked.len(),
+        report.suppressed
+    );
+    if report.clean() {
+        println!("analyze: clean");
+        Ok(())
+    } else {
+        for d in &report.findings {
+            println!("{}", d.render());
+        }
+        bail!("analyze: {} unsuppressed finding(s)", report.findings.len())
+    }
+}

@@ -11,6 +11,7 @@
 //! besa exp       table1|table2|table3|table4|table5|table6|fig1a|fig1b|fig3|fig4  [--configs sm,md]
 //! ```
 
+pub mod analyze;
 pub mod exp;
 pub mod runs;
 
@@ -32,6 +33,7 @@ pub fn main(argv: Vec<String>) -> Result<()> {
         "probe" => runs::cmd_probe(&args),
         "simulate" => runs::cmd_simulate(&args),
         "serve-bench" => runs::cmd_serve_bench(&args),
+        "analyze" => analyze::cmd_analyze(&args),
         "exp" => exp::dispatch(&args),
         "help" | _ => {
             print_help();
@@ -65,6 +67,11 @@ fn print_help() {
          \x20            --closed-loop <clients>; --async-format dense|sparse|quant),\n\
          \x20            reported at 1 and n workers with the scaling + queue-wait\n\
          \x20            breakdown\n\
+         \x20 analyze    static analysis: artifact-graph shape checker over the\n\
+         \x20            synthesized manifests + repo-specific source lints\n\
+         \x20            (hot-path panics, lock-order cycles, determinism).\n\
+         \x20            Nonzero exit on any unsuppressed finding.\n\
+         \x20            (--src <dir>; --configs test,sm,md,lg; --json <path>)\n\
          \x20 exp        regenerate a paper table/figure (table1..table6, fig1a, fig1b, fig3, fig4)\n\
          \n\
          COMMON OPTIONS\n\

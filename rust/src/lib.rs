@@ -54,6 +54,7 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::type_complexity)]
 
+pub mod analyze;
 pub mod cli;
 pub mod coordinator;
 pub mod data;

@@ -183,7 +183,7 @@ impl Engine {
                  (and real xla bindings in place of vendor/xla)"
             ),
         };
-        Ok(Engine { backend })
+        Engine::verified(backend)
     }
 
     /// Backend from the `BESA_BACKEND` env var (default: native).
@@ -195,10 +195,31 @@ impl Engine {
     /// benches use; touches no files.
     pub fn native(config: &str) -> Result<Engine> {
         let cfg = ModelConfig::builtin(config)?;
-        Ok(Engine { backend: Box::new(super::native::NativeBackend::new(cfg)) })
+        Engine::verified(Box::new(super::native::NativeBackend::new(cfg)))
+    }
+
+    /// Statically verify the backend's manifest with the artifact-graph
+    /// checker before handing it out: a spec set whose pipelines don't
+    /// compose (shape/dtype mismatches across op boundaries, missing
+    /// gradient outputs) is rejected here, at load time, instead of
+    /// producing a mid-run error.
+    fn verified(backend: Box<dyn Backend>) -> Result<Engine> {
+        let diags = crate::analyze::graph::verify_manifest(backend.manifest());
+        if !diags.is_empty() {
+            let rendered: Vec<String> = diags.iter().map(|d| d.render()).collect();
+            bail!(
+                "manifest failed static graph verification ({} finding(s)):\n  {}",
+                rendered.len(),
+                rendered.join("\n  ")
+            );
+        }
+        Ok(Engine { backend })
     }
 
     /// Wrap an already-constructed backend (custom implementations).
+    /// Escape hatch: skips the static graph verification that
+    /// [`Engine::with_backend`] / [`Engine::native`] perform — callers
+    /// supplying a custom backend own its spec consistency.
     pub fn from_backend(backend: Box<dyn Backend>) -> Engine {
         Engine { backend }
     }
@@ -249,6 +270,9 @@ impl Engine {
                 );
             }
         }
+        // per-input checks passed; now the cross-input wildcard classes
+        // (one request batch per call, shared cache capacity)
+        crate::analyze::graph::check_dynamic_call(spec, inputs)?;
         Ok(())
     }
 

@@ -318,7 +318,7 @@ pub fn besa_step(
     }
 
     let (y, saved, _) = block::forward(cfg, x.f32s(), eff, norms, true, false);
-    let saved = saved.unwrap();
+    let saved = saved.unwrap(); // besa-lint: allow(hot-path-panic) — save=true always returns Some
 
     // recon = sum((y - y_dense)^2) / max(sum(y_dense^2), 1e-9)
     let denom = ops::sq_sum(y_dense.f32s()).max(1e-9);
@@ -427,7 +427,7 @@ pub fn two_block_step(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Tenso
         let nb = [norms[b][0].f32s().to_vec(), norms[b][1].f32s().to_vec()];
         let (y, sv, _) = block::forward(cfg, &cur, eff, nb, true, false);
         cur = y;
-        saves.push(sv.unwrap());
+        saves.push(sv.unwrap()); // besa-lint: allow(hot-path-panic) — save=true always returns Some
         layer_ctx.push(layers);
     }
     let denom = ops::sq_sum(y_dense.f32s()).max(1e-9);

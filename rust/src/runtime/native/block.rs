@@ -107,7 +107,7 @@ pub fn forward(
             gate,
             up,
             act,
-            attn: attn_saved.unwrap(),
+            attn: attn_saved.unwrap(), // besa-lint: allow(hot-path-panic) — save=true always captures attn
             eff,
             norms,
         })
@@ -280,7 +280,7 @@ pub fn run_block_op(
     let x3 = [cfg.batch, cfg.seq_len, cfg.d_model];
     let mut out = vec![Tensor::from_f32(&x3, y)];
     if capture {
-        let c = cap.unwrap();
+        let c = cap.unwrap(); // besa-lint: allow(hot-path-panic) — forward(capture=true) always saves
         out.push(Tensor::from_f32(&x3, c.h1));
         out.push(Tensor::from_f32(&x3, c.att));
         out.push(Tensor::from_f32(&x3, c.h2));

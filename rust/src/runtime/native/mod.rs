@@ -106,14 +106,14 @@ impl Backend for NativeBackend {
     fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let sw = Stopwatch::start();
         let out = self.dispatch(name, inputs)?;
-        let mut st = self.stats.lock().unwrap();
+        let mut st = crate::util::par::locked(&self.stats);
         st.0 += sw.secs();
         st.1 += 1;
         Ok(out)
     }
 
     fn stats(&self) -> (f64, f64, u64) {
-        let st = self.stats.lock().unwrap();
+        let st = crate::util::par::locked(&self.stats);
         (0.0, st.0, st.1)
     }
 }

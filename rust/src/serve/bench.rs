@@ -552,7 +552,10 @@ fn run_online_bench(
         runs.push(summary.record);
     }
     let sharded_matches = outputs.windows(2).all(|w| w[0] == w[1]);
-    let scaling = tps.last().unwrap() / tps.first().unwrap().max(1e-9);
+    let scaling = match (tps.first(), tps.last()) {
+        (Some(first), Some(last)) => last / first.max(1e-9),
+        _ => 1.0,
+    };
     if counts.len() > 1 {
         println!(
             "async scaling: {:.2}x tok/s at {} workers vs 1; sharded outputs {} single-worker",

@@ -340,11 +340,13 @@ pub fn greedy_cached(ctx: &ServeContext, prompt: &[i32], n: usize) -> Vec<i32> {
     let mut cache = ctx.new_cache();
     let hidden = prefill(ctx, prompt, &mut cache);
     let s = prompt.len();
-    let mut out = vec![argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32];
+    let mut prev = argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32;
+    let mut out = vec![prev];
     for _ in 1..n {
-        let last = [*out.last().unwrap()];
+        let last = [prev];
         let mut caches = [&mut cache];
-        out.push(decode_step(ctx, &last, &mut caches)[0]);
+        prev = decode_step(ctx, &last, &mut caches)[0];
+        out.push(prev);
     }
     out
 }
@@ -382,12 +384,14 @@ pub fn greedy_backend(
     let mut cache = ctx.new_cache();
     let hidden = prefill(ctx, prompt, &mut cache);
     let s = prompt.len();
-    let mut out = vec![argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32];
+    let mut prev = argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32;
+    let mut out = vec![prev];
     for _ in 1..n {
-        let last = [*out.last().unwrap()];
+        let last = [prev];
         let mut caches = [&mut cache];
         let next = decode_step_backend(ctx, engine, blocks, &last, &mut caches)?;
-        out.push(next[0]);
+        prev = next[0];
+        out.push(prev);
     }
     Ok(out)
 }

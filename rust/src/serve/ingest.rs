@@ -23,6 +23,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::par::{locked, wait_on, wait_timeout_on};
+
 use super::scheduler::Request;
 
 /// One request made visible to the workers, stamped with the wall-clock
@@ -103,7 +105,7 @@ impl IngestQueue {
 
     /// Make one request visible to the workers (stamped now).
     pub fn push(&self, req: Request) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = locked(&self.state);
         g.ready.push_back(ArrivedRequest { req, enqueued: Instant::now() });
         drop(g);
         self.arrived.notify_all();
@@ -111,7 +113,7 @@ impl IngestQueue {
 
     /// No more pushes will follow; workers drain what is queued and exit.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        locked(&self.state).closed = true;
         self.arrived.notify_all();
     }
 
@@ -119,14 +121,18 @@ impl IngestQueue {
     /// a declined front request stays at the front (head-of-line blocking
     /// is deliberate — no request can starve behind later arrivals).
     pub fn try_pop(&self, admit: impl FnOnce(&Request) -> bool) -> Pop {
-        let mut g = self.state.lock().unwrap();
+        let mut g = locked(&self.state);
         let decision = g.ready.front().map(|front| admit(&front.req));
         match decision {
-            Some(true) => {
-                let a = g.ready.pop_front().unwrap();
-                g.in_flight += 1;
-                Pop::Got(a)
-            }
+            Some(true) => match g.ready.pop_front() {
+                Some(a) => {
+                    g.in_flight += 1;
+                    Pop::Got(a)
+                }
+                // unreachable (front() just matched under this guard),
+                // but Empty is the safe answer if it ever weren't
+                None => Pop::Empty,
+            },
             Some(false) => Pop::Refused,
             None if g.closed => Pop::Drained,
             None => Pop::Empty,
@@ -136,15 +142,15 @@ impl IngestQueue {
     /// Block until something arrives or the queue closes, up to `timeout`
     /// (bounded so callers can re-check their own state).
     pub fn wait_arrival(&self, timeout: Duration) {
-        let g = self.state.lock().unwrap();
+        let g = locked(&self.state);
         if g.ready.is_empty() && !g.closed {
-            let _ = self.arrived.wait_timeout(g, timeout).unwrap();
+            let _ = wait_timeout_on(&self.arrived, g, timeout);
         }
     }
 
     /// A popped request retired; frees one closed-loop client slot.
     pub fn note_done(&self) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = locked(&self.state);
         debug_assert!(g.in_flight > 0, "note_done without a matching pop");
         g.in_flight = g.in_flight.saturating_sub(1);
         drop(g);
@@ -154,16 +160,16 @@ impl IngestQueue {
     /// Closed-loop producer throttle: block until fewer than `clients`
     /// requests are outstanding (queued + in flight).
     pub fn wait_capacity(&self, clients: usize) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = locked(&self.state);
         while g.ready.len() + g.in_flight >= clients {
-            g = self.retired.wait(g).unwrap();
+            g = wait_on(&self.retired, g);
         }
     }
 
     /// True once the queue is closed and empty — in-flight work may still
     /// be decoding, but no worker will ever pop again.
     pub fn is_drained(&self) -> bool {
-        let g = self.state.lock().unwrap();
+        let g = locked(&self.state);
         g.closed && g.ready.is_empty()
     }
 }

@@ -95,19 +95,35 @@ pub struct PackedModel {
     pub blocks: Vec<PackedBlock>,
 }
 
+/// Reject a checkpoint tensor whose shape disagrees with the config
+/// (same unification as the artifact-graph checker; no wildcards here).
+/// Without this, a mismatched checkpoint would pack silently and fail —
+/// or worse, run — deep inside a serving kernel.
+fn expect_shape(name: &str, got: &[usize], want: &[usize]) -> Result<()> {
+    if let Err(why) = crate::analyze::graph::unify_shapes(got, want) {
+        anyhow::bail!(
+            "packed weight '{name}': checkpoint shape {got:?} vs config {want:?} — {why}"
+        );
+    }
+    Ok(())
+}
+
 impl PackedModel {
     /// Pack `params` in the given format. Pruned (exact-zero) entries are
-    /// dropped by the sparse formats; dense keeps them.
+    /// dropped by the sparse formats; dense keeps them. Every tensor's
+    /// shape is verified against the config before packing.
     pub fn materialize(
         params: &ParamStore,
         cfg: &ModelConfig,
         format: WeightFormat,
     ) -> Result<PackedModel> {
+        let d = cfg.d_model;
         let mut blocks = Vec::with_capacity(cfg.n_blocks);
         for l in 0..cfg.n_blocks {
             let mut lin = Vec::with_capacity(7);
             for w in LAYER_NAMES {
                 let t = params.get(&ParamStore::layer_name(l, w))?;
+                expect_shape(&ParamStore::layer_name(l, w), &t.shape, &cfg.layer_shape(w))?;
                 lin.push(match format {
                     WeightFormat::Dense => {
                         let sh = cfg.layer_shape(w);
@@ -119,17 +135,25 @@ impl PackedModel {
                     }
                 });
             }
+            let norm1 = params.get(&format!("blocks.{l}.norm1"))?;
+            let norm2 = params.get(&format!("blocks.{l}.norm2"))?;
+            expect_shape(&format!("blocks.{l}.norm1"), &norm1.shape, &[d])?;
+            expect_shape(&format!("blocks.{l}.norm2"), &norm2.shape, &[d])?;
             blocks.push(PackedBlock {
                 lin,
-                norm1: params.get(&format!("blocks.{l}.norm1"))?.f32s().to_vec(),
-                norm2: params.get(&format!("blocks.{l}.norm2"))?.f32s().to_vec(),
+                norm1: norm1.f32s().to_vec(),
+                norm2: norm2.f32s().to_vec(),
             });
         }
+        let embed = params.get("embed")?;
+        let norm_f = params.get("norm_f")?;
+        expect_shape("embed", &embed.shape, &[cfg.vocab, d])?;
+        expect_shape("norm_f", &norm_f.shape, &[d])?;
         Ok(PackedModel {
             cfg: cfg.clone(),
             format,
-            embed: params.get("embed")?.f32s().to_vec(),
-            norm_f: params.get("norm_f")?.f32s().to_vec(),
+            embed: embed.f32s().to_vec(),
+            norm_f: norm_f.f32s().to_vec(),
             blocks,
         })
     }
@@ -197,6 +221,21 @@ mod tests {
         assert!((csr.sparsity() - 0.5).abs() < 0.05);
         assert_eq!(dense.sparsity(), 0.0);
         assert!(csr.weight_bytes() < dense.weight_bytes() * 3 / 2);
+    }
+
+    /// Materialization runs the same shape unification as the artifact
+    /// graph checker: a checkpoint whose tensors disagree with the config
+    /// is rejected up front, not deep inside a serving kernel.
+    #[test]
+    fn mismatched_checkpoint_is_rejected() {
+        let cfg = test_config();
+        let p = ParamStore::init(&cfg, 5);
+        let mut bigger = cfg.clone();
+        bigger.d_model *= 2;
+        let err = PackedModel::materialize(&p, &bigger, WeightFormat::Dense)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checkpoint shape"), "unexpected error: {err}");
     }
 
     #[test]

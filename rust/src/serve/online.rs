@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::util::par::scoped_workers;
+use crate::util::par::{locked, scoped_workers};
 
 use super::engine::{argmax, decode_step, last_logits, prefill, score_nll, ServeContext};
 use super::ingest::{run_producer, ArrivedRequest, IngestQueue, Pacing, Pop};
@@ -138,7 +138,9 @@ pub fn serve_online(
     // per-worker budget (or replica capacity: any worker may admit any
     // request, so the smallest bounds all) below a request's cost every
     // worker would refuse it forever and the queue would starve behind it
-    let min_pos = ctxs.iter().map(|c| c.max_pos()).min().unwrap();
+    // ctxs is non-empty (checked above); 0 if it somehow weren't, which
+    // rejects any nonzero-cost request instead of panicking
+    let min_pos = ctxs.iter().map(|c| c.max_pos()).min().unwrap_or(0);
     for r in &requests {
         if r.cost() > ocfg.sched.token_budget {
             bail!(
@@ -166,8 +168,13 @@ pub fn serve_online(
     // index 0 is the producer; 1..=workers are serving workers
     let results = scoped_workers(ocfg.workers + 1, |i| {
         if i == 0 {
-            let reqs = pending.lock().unwrap().take().expect("producer runs once");
-            run_producer(&queue, reqs, ocfg.pacing);
+            match locked(&pending).take() {
+                // the producer runs exactly once (index 0); if the vec
+                // were somehow gone, closing the queue lets the workers
+                // drain and exit instead of panicking the pool
+                Some(reqs) => run_producer(&queue, reqs, ocfg.pacing),
+                None => queue.close(),
+            }
             None
         } else {
             Some(worker_loop(i - 1, &ctxs[i - 1], &queue, &ocfg.sched))

@@ -71,7 +71,7 @@ impl Scheduler {
         if cfg.max_batch == 0 {
             bail!("scheduler max_batch must be >= 1");
         }
-        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         for r in &requests {
             if r.cost() > cfg.token_budget {
                 bail!(
@@ -102,19 +102,25 @@ impl Scheduler {
     /// allow. `active` is the number of requests currently decoding.
     pub fn admit(&mut self, now: f64, active: usize) -> Vec<Request> {
         let mut out = Vec::new();
-        while let Some(front) = self.pending.front() {
-            if front.arrival > now {
+        loop {
+            let fits = match self.pending.front() {
+                Some(front) => {
+                    front.arrival <= now
+                        && active + out.len() < self.cfg.max_batch
+                        && self.in_flight_tokens + front.cost() <= self.cfg.token_budget
+                }
+                None => false,
+            };
+            if !fits {
                 break;
             }
-            if active + out.len() >= self.cfg.max_batch {
-                break;
+            match self.pending.pop_front() {
+                Some(r) => {
+                    self.in_flight_tokens += r.cost();
+                    out.push(r);
+                }
+                None => break,
             }
-            if self.in_flight_tokens + front.cost() > self.cfg.token_budget {
-                break;
-            }
-            let r = self.pending.pop_front().unwrap();
-            self.in_flight_tokens += r.cost();
-            out.push(r);
         }
         out
     }

@@ -105,6 +105,7 @@ fn spmm_with<V: Fn(usize) -> f32 + Sync>(
         spmm_rows_with(row_ptr, col_idx, &value, x, t, lo, hi, &mut part);
         Ok(part)
     })
+    // besa-lint: allow(hot-path-panic) — closure is infallible; par_map errs only on worker panic
     .expect("spmm row-block workers are infallible");
     let mut y = vec![0.0f32; rows * t];
     for (&(lo, hi), part) in blocks.iter().zip(parts) {

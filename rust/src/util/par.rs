@@ -7,9 +7,38 @@
 //! wins and the rest of the batch is abandoned cooperatively.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
+
+/// Acquire a mutex, recovering the guard from a poisoned lock. Poisoning
+/// only means some other thread panicked while holding the guard; our
+/// shared states stay structurally valid across panics (queues, counters),
+/// so continuing is strictly better than cascading the panic through the
+/// serving hot path.
+pub fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`locked`].
+pub fn wait_on<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait_timeout`] with the same poison recovery as [`locked`].
+/// The timed-out flag is dropped: every caller re-checks its predicate
+/// under the returned guard anyway.
+pub fn wait_timeout_on<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(g, timeout) {
+        Ok((g, _)) => g,
+        Err(e) => e.into_inner().0,
+    }
+}
 
 /// Number of worker threads for `n` items: capped by available
 /// parallelism and by the item count; at least 1.

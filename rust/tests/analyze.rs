@@ -1,0 +1,75 @@
+//! Static-analysis suite: the shipped source tree must pass its own
+//! lint pass, and the engine must reject dynamically mis-shaped
+//! pipelines at call time (the load-time manifest check is exercised by
+//! unit tests in `src/analyze/graph.rs`).
+
+use besa::analyze::analyze_repo;
+use besa::model::{ModelConfig, LAYER_NAMES};
+use besa::runtime::Engine;
+use besa::tensor::Tensor;
+
+/// `besa analyze` on this repository's own sources reports nothing:
+/// every hot-path panic is either converted to `Result` or carries a
+/// justified `besa-lint: allow`, no deterministic module uses wall-clock
+/// or hash-order iteration, and no lock pair is ever acquired in both
+/// orders.
+#[test]
+fn repo_sources_pass_all_lints_and_graph_checks() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let configs = ["test".to_string(), "sm".to_string()];
+    let report = analyze_repo(&src, &configs).unwrap();
+    assert!(report.files_scanned > 20, "walked only {} files", report.files_scanned);
+    let rendered: Vec<String> = report.findings.iter().map(|d| d.render()).collect();
+    assert!(report.clean(), "analyze found issues:\n{}", rendered.join("\n"));
+}
+
+fn zeros(shape: &[usize]) -> Tensor {
+    Tensor::from_f32(shape, vec![0.0; shape.iter().product()])
+}
+
+/// Build a full `block_fwd_cached` input list for batch `nb`, cache
+/// capacity `cap`, and a given `pos` vector; returns owned tensors.
+fn cached_inputs(cfg: &ModelConfig, nb: usize, cap: usize, pos: Vec<i32>) -> Vec<Tensor> {
+    let d = cfg.d_model;
+    let mut ins = vec![
+        zeros(&[nb, 1, d]),
+        zeros(&[nb, cap, d]),
+        zeros(&[nb, cap, d]),
+        Tensor::from_i32(&[pos.len()], pos),
+    ];
+    for w in LAYER_NAMES.iter() {
+        ins.push(zeros(&cfg.layer_shape(w)));
+    }
+    ins.push(zeros(&[d])); // norm1
+    ins.push(zeros(&[d])); // norm2
+    ins
+}
+
+/// The runtime's call-time validation binds every axis-0 wildcard to one
+/// request batch and unifies wildcard dims across same-spec inputs, so a
+/// decode call whose `pos` batch disagrees with `x` — or whose k/v cache
+/// capacities disagree with each other — is rejected before dispatch.
+#[test]
+fn engine_rejects_dynamic_batch_and_capacity_mismatches() {
+    let engine = Engine::native("test").unwrap();
+    let cfg = engine.config().clone();
+
+    // well-formed: batch 2, capacity 4, positions 0
+    let good = cached_inputs(&cfg, 2, 4, vec![0, 0]);
+    let refs: Vec<&Tensor> = good.iter().collect();
+    let out = engine.run("block_fwd_cached", &refs).unwrap();
+    assert_eq!(out.len(), 3);
+
+    // pos carries 3 entries while x carries batch 2
+    let bad_batch = cached_inputs(&cfg, 2, 4, vec![0, 0, 0]);
+    let refs: Vec<&Tensor> = bad_batch.iter().collect();
+    let err = engine.run("block_fwd_cached", &refs).unwrap_err().to_string();
+    assert!(err.contains("dynamic"), "unexpected error: {err}");
+
+    // k_cache capacity 4 vs v_cache capacity 5 (same wildcard spec)
+    let mut bad_cap = cached_inputs(&cfg, 2, 4, vec![0, 0]);
+    bad_cap[2] = zeros(&[2, 5, cfg.d_model]);
+    let refs: Vec<&Tensor> = bad_cap.iter().collect();
+    let err = engine.run("block_fwd_cached", &refs).unwrap_err().to_string();
+    assert!(err.contains("dynamic"), "unexpected error: {err}");
+}
