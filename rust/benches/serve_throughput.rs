@@ -9,7 +9,9 @@ use besa::model::{ModelConfig, ParamStore};
 use besa::quant::QuantSpec;
 use besa::runtime::Engine;
 use besa::serve::bench::magnitude_prune_in_place;
-use besa::serve::engine::{block_tensors, decode_step, decode_step_backend, prefill, ServeContext};
+use besa::serve::engine::{
+    block_tensors, decode_step, decode_step_backend, prefill, DecodeScratch, ServeContext,
+};
 use besa::serve::model::{PackedModel, WeightFormat};
 use besa::serve::scheduler::SchedulerConfig;
 use besa::serve::trace::{poisson_trace, TraceConfig};
@@ -73,13 +75,14 @@ fn main() {
             })
             .collect();
         let last: Vec<i32> = (0..nb as i32).collect();
+        let mut scratch = DecodeScratch::new();
         b.run_throughput(&format!("decode {name} nb={nb}"), nb as f64, "tok/s", || {
             // rewind so the cache never exhausts capacity mid-bench
             for c in caches.iter_mut() {
                 c.set_len(prompt.len());
             }
             let mut refs: Vec<&mut _> = caches.iter_mut().collect();
-            decode_step(&ctx, &last, &mut refs)
+            decode_step(&ctx, &last, &mut refs, &mut scratch)
         });
     }
 

@@ -3,8 +3,9 @@
 //! rustdoc promises.
 //!
 //! * `hot-path-panic` — no `.unwrap()` / `.expect()` / `panic!`-family
-//!   macros in `serve/`, `sparse/`, `runtime/native/`: request-serving and
-//!   kernel code must propagate errors, not abort mid-batch.
+//!   macros in `serve/`, `sparse/`, `runtime/native/`, `kernel/`:
+//!   request-serving and kernel code must propagate errors, not abort
+//!   mid-batch.
 //! * `nondeterministic-iter` — no `HashMap` / `HashSet` in the same
 //!   parity-pinned modules: iteration order would silently break the
 //!   sparse==dense and sharded==single-worker bit-exactness guarantees.
@@ -41,7 +42,7 @@ pub const RULES: [&str; 5] = [
 
 /// One tokenized source file. `path` is relative to the scanned source
 /// root and uses forward slashes — the rules scope themselves by prefix
-/// (`serve/`, `sparse/`, `runtime/native/`).
+/// (`serve/`, `sparse/`, `runtime/native/`, `kernel/`).
 pub struct SourceFile {
     pub path: String,
     pub toks: Vec<Tok>,
@@ -183,7 +184,10 @@ fn is_id(toks: &[Tok], i: usize, s: &str) -> bool {
 /// Modules whose runtime paths must not panic and must iterate
 /// deterministically.
 fn hot_path_scope(path: &str) -> bool {
-    path.starts_with("serve/") || path.starts_with("sparse/") || path.starts_with("runtime/native/")
+    path.starts_with("serve/")
+        || path.starts_with("sparse/")
+        || path.starts_with("runtime/native/")
+        || path.starts_with("kernel/")
 }
 
 /// Deterministic-replay paths: the hot-path modules minus the three serve
@@ -657,6 +661,13 @@ mod tests {
         assert_eq!(f[0].line, 1);
         let (f2, _) = run_one("util/a.rs", src);
         assert!(f2.is_empty(), "util/ is outside the hot-path scope");
+    }
+
+    #[test]
+    fn kernel_modules_are_in_hot_path_scope() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }";
+        let (f, _) = run_one("kernel/gemm.rs", src);
+        assert_eq!(rules(&f), vec!["hot-path-panic"]);
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! `besa kernel-bench` — the microkernel roofline driver.
+//!
+//! Times every kernel family in [`crate::kernel`] at representative
+//! shapes — decode matvec, prefill GEMM, backward GEMMs, f64 matmul,
+//! CSR SpMM across sparsities, fused-dequant SpMM, attention score /
+//! weighted-sum rows — running the scalar reference and the micro kernel
+//! back to back, and writes a roofline-style record (GFLOP/s per kernel
+//! per shape, scalar vs micro, speedup) to `BENCH_kernels.json`.
+//!
+//! Before timing a shape the driver asserts the two implementations
+//! agree *bitwise* on that exact input — the bench refuses to report a
+//! speedup for a kernel that broke parity. `--smoke` shrinks shapes and
+//! the time budget to CI scale; `--json <path>` overrides the output
+//! path (`BESA_BENCH_SECS` scales the per-case budget as usual).
+
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::kernel::{attn, gemm, spmm};
+use crate::quant::QuantSpec;
+use crate::sparse::csr::{Csr, QuantCsr};
+use crate::tensor::Tensor;
+use crate::util::args::Args;
+use crate::util::bench::Bench;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Family tags every run must cover — the CI smoke gate (and the test
+/// below) checks the emitted JSON contains one record per entry.
+pub const FAMILIES: [&str; 9] = [
+    "matvec",
+    "gemm_nt",
+    "gemm_nn",
+    "gemm_tn",
+    "matmul_f64",
+    "spmm_csr",
+    "spmm_quant",
+    "attn_dots",
+    "attn_wsum",
+];
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed(seed);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn randv64(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed(seed);
+    (0..n).map(|_| rng.normal_f32() as f64).collect()
+}
+
+/// Dense `[rows, cols]` tensor with an exact-zero fraction of `sparsity`.
+fn random_sparse(rows: usize, cols: usize, sparsity: f64, seed: u64) -> Tensor {
+    let mut rng = Rng::seed(seed);
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| if rng.f64() < sparsity { 0.0 } else { rng.normal_f32() })
+        .collect();
+    Tensor::from_f32(&[rows, cols], data)
+}
+
+/// One scalar-vs-micro roofline record.
+fn record(family: &str, shape: &str, flops: f64, scalar_ns: f64, micro_ns: f64) -> Json {
+    json::obj(vec![
+        ("family", json::s(family)),
+        ("shape", json::s(shape)),
+        ("flops", json::num(flops)),
+        (
+            "scalar",
+            json::obj(vec![
+                ("mean_ns", json::num(scalar_ns)),
+                ("gflops", json::num(flops / scalar_ns)),
+            ]),
+        ),
+        (
+            "micro",
+            json::obj(vec![
+                ("mean_ns", json::num(micro_ns)),
+                ("gflops", json::num(flops / micro_ns)),
+            ]),
+        ),
+        ("speedup", json::num(scalar_ns / micro_ns)),
+        ("parity", json::s("bitwise")),
+    ])
+}
+
+pub fn cmd_kernel_bench(args: &Args) -> Result<()> {
+    let smoke = args.has("smoke");
+    let json_path = PathBuf::from(args.str_or("json", "BENCH_kernels.json"));
+    let mut b = Bench::new("kernel_bench");
+    if smoke {
+        b = b.warmup(1).budget_secs(0.02);
+    }
+    let mut records: Vec<Json> = Vec::new();
+
+    // ---- decode matvec (m=1 linear, the cached-decode projection) --------
+    let matvec_shapes: &[(usize, usize)] =
+        if smoke { &[(17, 9)] } else { &[(512, 512), (512, 2048)] };
+    for &(k, n) in matvec_shapes {
+        let x = randv(k, 11);
+        let w = randv(k * n, 12);
+        let mut ys = vec![0.0f32; n];
+        let mut ym = vec![0.0f32; n];
+        gemm::matvec_scalar_into(&x, &w, k, n, &mut ys);
+        gemm::matvec_micro_into(&x, &w, k, n, &mut ym);
+        ensure!(ys == ym, "matvec parity broke at k={k} n={n}");
+        let flops = 2.0 * (k * n) as f64;
+        let id = format!("matvec k={k} n={n}");
+        let s_ns = b
+            .run(&format!("{id} scalar"), || {
+                gemm::matvec_scalar_into(&x, &w, k, n, &mut ys);
+                ys[0]
+            })
+            .mean_ns;
+        let m_ns = b
+            .run(&format!("{id} micro"), || {
+                gemm::matvec_micro_into(&x, &w, k, n, &mut ym);
+                ym[0]
+            })
+            .mean_ns;
+        records.push(record("matvec", &format!("k={k} n={n}"), flops, s_ns, m_ns));
+    }
+
+    // ---- prefill GEMM (y = x @ w^T, the forward linear) ------------------
+    let nt_shapes: &[(usize, usize, usize)] =
+        if smoke { &[(5, 17, 9)] } else { &[(128, 512, 512), (128, 512, 2048)] };
+    for &(m, k, n) in nt_shapes {
+        let x = randv(m * k, 21);
+        let w = randv(n * k, 22);
+        ensure!(
+            gemm::mm_nt_scalar(&x, &w, m, k, n) == gemm::mm_nt_micro(&x, &w, m, k, n),
+            "mm_nt parity broke at m={m} k={k} n={n}"
+        );
+        let flops = 2.0 * (m * k * n) as f64;
+        let id = format!("gemm_nt m={m} k={k} n={n}");
+        let s_ns = b.run(&format!("{id} scalar"), || gemm::mm_nt_scalar(&x, &w, m, k, n)).mean_ns;
+        let m_ns = b.run(&format!("{id} micro"), || gemm::mm_nt_micro(&x, &w, m, k, n)).mean_ns;
+        records.push(record("gemm_nt", &format!("m={m} k={k} n={n}"), flops, s_ns, m_ns));
+    }
+
+    // ---- backward GEMMs (dx = g @ w, gw = g^T @ x) -----------------------
+    let bwd_shapes: &[(usize, usize, usize)] =
+        if smoke { &[(5, 9, 17)] } else { &[(128, 512, 512)] };
+    for &(m, n, k) in bwd_shapes {
+        let g = randv(m * n, 31);
+        let w = randv(n * k, 32);
+        let x = randv(m * k, 33);
+        ensure!(
+            gemm::mm_nn_scalar(&g, &w, m, n, k) == gemm::mm_nn_micro(&g, &w, m, n, k),
+            "mm_nn parity broke at m={m} n={n} k={k}"
+        );
+        ensure!(
+            gemm::mm_tn_scalar(&g, &x, m, n, k) == gemm::mm_tn_micro(&g, &x, m, n, k),
+            "mm_tn parity broke at m={m} n={n} k={k}"
+        );
+        let flops = 2.0 * (m * n * k) as f64;
+        let shape = format!("m={m} n={n} k={k}");
+        let nn = format!("gemm_nn {shape}");
+        let s_ns = b.run(&format!("{nn} scalar"), || gemm::mm_nn_scalar(&g, &w, m, n, k)).mean_ns;
+        let m_ns = b.run(&format!("{nn} micro"), || gemm::mm_nn_micro(&g, &w, m, n, k)).mean_ns;
+        records.push(record("gemm_nn", &shape, flops, s_ns, m_ns));
+        let tn = format!("gemm_tn {shape}");
+        let s_ns = b.run(&format!("{tn} scalar"), || gemm::mm_tn_scalar(&g, &x, m, n, k)).mean_ns;
+        let m_ns = b.run(&format!("{tn} micro"), || gemm::mm_tn_micro(&g, &x, m, n, k)).mean_ns;
+        records.push(record("gemm_tn", &shape, flops, s_ns, m_ns));
+    }
+
+    // ---- f64 matmul (linalg::Mat, probe/eigensolver shapes) --------------
+    let f64_shapes: &[(usize, usize, usize)] = if smoke { &[(5, 7, 6)] } else { &[(96, 96, 96)] };
+    for &(m, k, n) in f64_shapes {
+        let a = randv64(m * k, 41);
+        let c = randv64(k * n, 42);
+        ensure!(
+            gemm::matmul_f64_scalar(&a, &c, m, k, n) == gemm::matmul_f64_micro(&a, &c, m, k, n),
+            "matmul_f64 parity broke at m={m} k={k} n={n}"
+        );
+        let flops = 2.0 * (m * k * n) as f64;
+        let id = format!("matmul_f64 m={m} k={k} n={n}");
+        let s_ns =
+            b.run(&format!("{id} scalar"), || gemm::matmul_f64_scalar(&a, &c, m, k, n)).mean_ns;
+        let m_ns =
+            b.run(&format!("{id} micro"), || gemm::matmul_f64_micro(&a, &c, m, k, n)).mean_ns;
+        records.push(record("matmul_f64", &format!("m={m} k={k} n={n}"), flops, s_ns, m_ns));
+    }
+
+    // ---- CSR SpMM across sparsities + fused-dequant SpMM -----------------
+    let (rows, cols, t) = if smoke { (24, 16, 5) } else { (512, 512, 64) };
+    for (si, &sparsity) in [0.5f64, 0.7, 0.9].iter().enumerate() {
+        let csr = Csr::from_dense(&random_sparse(rows, cols, sparsity, 50 + si as u64));
+        let xt = randv(cols * t, 60 + si as u64);
+        let value = |kk: usize| csr.values[kk];
+        let mut ys = vec![0.0f32; rows * t];
+        let mut ym = vec![0.0f32; rows * t];
+        spmm::spmm_rows_scalar(&csr.row_ptr, &csr.col_idx, value, &xt, t, 0, rows, &mut ys);
+        spmm::spmm_rows_micro(&csr.row_ptr, &csr.col_idx, value, &xt, t, 0, rows, &mut ym);
+        ensure!(ys == ym, "spmm parity broke at sparsity={sparsity}");
+        let flops = 2.0 * (csr.nnz() * t) as f64;
+        let shape = format!("rows={rows} cols={cols} t={t} sparsity={sparsity}");
+        let s_ns = b
+            .run(&format!("spmm_csr {shape} scalar"), || {
+                ys.fill(0.0);
+                spmm::spmm_rows_scalar(&csr.row_ptr, &csr.col_idx, value, &xt, t, 0, rows, &mut ys);
+                ys[0]
+            })
+            .mean_ns;
+        let m_ns = b
+            .run(&format!("spmm_csr {shape} micro"), || {
+                ym.fill(0.0);
+                spmm::spmm_rows_micro(&csr.row_ptr, &csr.col_idx, value, &xt, t, 0, rows, &mut ym);
+                ym[0]
+            })
+            .mean_ns;
+        records.push(record("spmm_csr", &shape, flops, s_ns, m_ns));
+    }
+    {
+        let sparsity = 0.7f64;
+        let q =
+            QuantCsr::from_dense(&random_sparse(rows, cols, sparsity, 70), QuantSpec::default());
+        let xt = randv(cols * t, 71);
+        let value = |kk: usize| q.value(kk);
+        let mut ys = vec![0.0f32; rows * t];
+        let mut ym = vec![0.0f32; rows * t];
+        spmm::spmm_rows_scalar(&q.row_ptr, &q.col_idx, value, &xt, t, 0, rows, &mut ys);
+        spmm::spmm_rows_micro(&q.row_ptr, &q.col_idx, value, &xt, t, 0, rows, &mut ym);
+        ensure!(ys == ym, "quant spmm parity broke at sparsity={sparsity}");
+        let flops = 2.0 * (q.nnz() * t) as f64;
+        let shape = format!("rows={rows} cols={cols} t={t} sparsity={sparsity}");
+        let s_ns = b
+            .run(&format!("spmm_quant {shape} scalar"), || {
+                ys.fill(0.0);
+                spmm::spmm_rows_scalar(&q.row_ptr, &q.col_idx, value, &xt, t, 0, rows, &mut ys);
+                ys[0]
+            })
+            .mean_ns;
+        let m_ns = b
+            .run(&format!("spmm_quant {shape} micro"), || {
+                ym.fill(0.0);
+                spmm::spmm_rows_micro(&q.row_ptr, &q.col_idx, value, &xt, t, 0, rows, &mut ym);
+                ym[0]
+            })
+            .mean_ns;
+        records.push(record("spmm_quant", &shape, flops, s_ns, m_ns));
+    }
+
+    // ---- attention score + weighted-sum rows -----------------------------
+    let (nkeys, dh) = if smoke { (9, 8) } else { (512, 64) };
+    {
+        let q = randv(dh, 81);
+        let kmat = randv(nkeys * dh, 82);
+        let p = randv(nkeys, 83);
+        let mut ys = vec![0.0f32; nkeys];
+        let mut ym = vec![0.0f32; nkeys];
+        attn::dots_scalar(&q, &kmat, dh, 0, nkeys, &mut ys);
+        attn::dots_micro(&q, &kmat, dh, 0, nkeys, &mut ym);
+        ensure!(ys == ym, "attn dots parity broke at keys={nkeys} dh={dh}");
+        let flops = 2.0 * (nkeys * dh) as f64;
+        let shape = format!("keys={nkeys} dh={dh}");
+        let s_ns = b
+            .run(&format!("attn_dots {shape} scalar"), || {
+                attn::dots_scalar(&q, &kmat, dh, 0, nkeys, &mut ys);
+                ys[0]
+            })
+            .mean_ns;
+        let m_ns = b
+            .run(&format!("attn_dots {shape} micro"), || {
+                attn::dots_micro(&q, &kmat, dh, 0, nkeys, &mut ym);
+                ym[0]
+            })
+            .mean_ns;
+        records.push(record("attn_dots", &shape, flops, s_ns, m_ns));
+
+        let mut os = vec![0.0f32; dh];
+        let mut om = vec![0.0f32; dh];
+        attn::wsum_scalar(&mut os, &p, &kmat, dh, 0);
+        attn::wsum_micro(&mut om, &p, &kmat, dh, 0);
+        ensure!(os == om, "attn wsum parity broke at keys={nkeys} dh={dh}");
+        let s_ns = b
+            .run(&format!("attn_wsum {shape} scalar"), || {
+                os.fill(0.0);
+                attn::wsum_scalar(&mut os, &p, &kmat, dh, 0);
+                os[0]
+            })
+            .mean_ns;
+        let m_ns = b
+            .run(&format!("attn_wsum {shape} micro"), || {
+                om.fill(0.0);
+                attn::wsum_micro(&mut om, &p, &kmat, dh, 0);
+                om[0]
+            })
+            .mean_ns;
+        records.push(record("attn_wsum", &shape, flops, s_ns, m_ns));
+    }
+
+    b.report();
+
+    let payload = json::obj(vec![
+        ("bench", json::s("kernel_bench")),
+        ("mode_default", json::s("micro")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "provenance",
+            json::s(&format!(
+                "besa kernel-bench{} ({}-{})",
+                if smoke { " --smoke" } else { "" },
+                std::env::consts::ARCH,
+                std::env::consts::OS,
+            )),
+        ),
+        ("kernels", Json::Arr(records)),
+    ]);
+    std::fs::write(&json_path, payload.to_string_pretty() + "\n")
+        .with_context(|| format!("writing {}", json_path.display()))?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The smoke sweep must verify parity on every shape, cover every
+    /// family and emit parseable JSON — the same contract the CI
+    /// kernel-bench job checks against the binary.
+    #[test]
+    fn smoke_sweep_covers_every_family() {
+        let path = std::env::temp_dir().join("besa_kernel_bench_test.json");
+        let argv = vec![
+            "kernel-bench".to_string(),
+            "--smoke".to_string(),
+            "--json".to_string(),
+            path.to_string_lossy().into_owned(),
+        ];
+        let args = Args::parse(argv).unwrap();
+        cmd_kernel_bench(&args).unwrap();
+        let payload = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let kernels = payload.at(&["kernels"]).as_arr().unwrap();
+        for fam in FAMILIES {
+            assert!(
+                kernels.iter().any(|r| r.at(&["family"]).as_str() == Some(fam)),
+                "family {fam} missing from the sweep"
+            );
+        }
+        for r in kernels {
+            assert!(r.at(&["scalar", "gflops"]).as_f64().unwrap() > 0.0);
+            assert!(r.at(&["micro", "gflops"]).as_f64().unwrap() > 0.0);
+            assert_eq!(r.at(&["parity"]).as_str(), Some("bitwise"));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

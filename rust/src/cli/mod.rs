@@ -8,11 +8,13 @@
 //! besa simulate  --config md --ckpt runs/md-besa.bst
 //! besa serve-bench --config sm --ckpt runs/sm-besa.bst --modes dense,sparse,quant
 //! besa serve-bench --config sm --ckpt runs/sm-besa.bst --async --workers 4
+//! besa kernel-bench --json BENCH_kernels.json
 //! besa exp       table1|table2|table3|table4|table5|table6|fig1a|fig1b|fig3|fig4  [--configs sm,md]
 //! ```
 
 pub mod analyze;
 pub mod exp;
+pub mod kernels;
 pub mod runs;
 
 use anyhow::{bail, Result};
@@ -33,6 +35,7 @@ pub fn main(argv: Vec<String>) -> Result<()> {
         "probe" => runs::cmd_probe(&args),
         "simulate" => runs::cmd_simulate(&args),
         "serve-bench" => runs::cmd_serve_bench(&args),
+        "kernel-bench" => kernels::cmd_kernel_bench(&args),
         "analyze" => analyze::cmd_analyze(&args),
         "exp" => exp::dispatch(&args),
         "help" | _ => {
@@ -67,6 +70,11 @@ fn print_help() {
          \x20            --closed-loop <clients>; --async-format dense|sparse|quant),\n\
          \x20            reported at 1 and n workers with the scaling + queue-wait\n\
          \x20            breakdown\n\
+         \x20 kernel-bench  roofline sweep of the shared microkernel layer:\n\
+         \x20            scalar reference vs micro kernel per family (matvec,\n\
+         \x20            GEMMs, CSR/quant SpMM, attention rows), bitwise parity\n\
+         \x20            checked per shape, GFLOP/s into BENCH_kernels.json\n\
+         \x20            (--smoke: tiny CI shapes; --json <path>)\n\
          \x20 analyze    static analysis: artifact-graph shape checker over the\n\
          \x20            synthesized manifests + repo-specific source lints\n\
          \x20            (hot-path panics, lock-order cycles, determinism).\n\

@@ -122,6 +122,7 @@ pub fn besa_config(sparsity: f64, args: &Args) -> Result<BesaConfig> {
         metric: Metric::from_name(&args.str_or("metric", &file.str_or("prune.metric", "wanda")))
             .context("--metric must be weight|wanda|sparsegpt")?,
         quant: args.has("quant"),
+        grad_accum: args.usize_or("grad-accum", file.usize_or("prune.grad_accum", 1))?,
     })
 }
 

@@ -1,0 +1,135 @@
+//! Attention inner loops: query·key score rows and probability-weighted
+//! value sums, shared by the fixed-shape `ops::attention`, the serving
+//! prefill (`attention_causal`) and the KV-cached decode row — all three
+//! call these with their own key/value stride, so every attention path
+//! in the crate accumulates in the same ascending-position order (the
+//! cached == recompute bitwise invariant).
+
+use super::{mode, Mode};
+
+/// Reference score row: `out[j] = q · kmat[j·stride+off ..][..dh]` for
+/// `j < n`, one serial dot chain per key.
+pub fn dots_scalar(q: &[f32], kmat: &[f32], stride: usize, off: usize, n: usize, out: &mut [f32]) {
+    let dh = q.len();
+    for (j, o) in out.iter_mut().enumerate().take(n) {
+        let kj = &kmat[j * stride + off..j * stride + off + dh];
+        let mut dot = 0.0f32;
+        for (a, b) in q.iter().zip(kj) {
+            dot += a * b;
+        }
+        *o = dot;
+    }
+}
+
+/// Micro score row: four keys advance in lock-step (four independent
+/// chains); each dot is still a single ascending-feature chain, so every
+/// `out[j]` matches [`dots_scalar`] bitwise.
+pub fn dots_micro(q: &[f32], kmat: &[f32], stride: usize, off: usize, n: usize, out: &mut [f32]) {
+    let dh = q.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        let k0 = &kmat[j * stride + off..j * stride + off + dh];
+        let k1 = &kmat[(j + 1) * stride + off..(j + 1) * stride + off + dh];
+        let k2 = &kmat[(j + 2) * stride + off..(j + 2) * stride + off + dh];
+        let k3 = &kmat[(j + 3) * stride + off..(j + 3) * stride + off + dh];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for (tt, qv) in q.iter().enumerate() {
+            a0 += qv * k0[tt];
+            a1 += qv * k1[tt];
+            a2 += qv * k2[tt];
+            a3 += qv * k3[tt];
+        }
+        out[j] = a0;
+        out[j + 1] = a1;
+        out[j + 2] = a2;
+        out[j + 3] = a3;
+        j += 4;
+    }
+    while j < n {
+        let kj = &kmat[j * stride + off..j * stride + off + dh];
+        let mut dot = 0.0f32;
+        for (a, b) in q.iter().zip(kj) {
+            dot += a * b;
+        }
+        out[j] = dot;
+        j += 1;
+    }
+}
+
+/// Dispatching score row.
+pub fn dots(q: &[f32], kmat: &[f32], stride: usize, off: usize, n: usize, out: &mut [f32]) {
+    match mode() {
+        Mode::Scalar => dots_scalar(q, kmat, stride, off, n, out),
+        Mode::Micro => dots_micro(q, kmat, stride, off, n, out),
+    }
+}
+
+/// One query·key dot (the "new key" term of the cached decode row).
+/// Single ascending-feature chain in both modes by definition.
+pub fn dot1(q: &[f32], kj: &[f32]) -> f32 {
+    let mut dot = 0.0f32;
+    for (a, b) in q.iter().zip(kj) {
+        dot += a * b;
+    }
+    dot
+}
+
+/// Reference weighted value sum: `out[u] += Σ_j p[j] · vmat[j·stride+off+u]`
+/// as a j-outer AXPY sweep — `out` round-trips through memory per key.
+pub fn wsum_scalar(out: &mut [f32], p: &[f32], vmat: &[f32], stride: usize, off: usize) {
+    let dh = out.len();
+    for (j, pj) in p.iter().enumerate() {
+        let vj = &vmat[j * stride + off..j * stride + off + dh];
+        for (ov, vv) in out.iter_mut().zip(vj) {
+            *ov += pj * vv;
+        }
+    }
+}
+
+/// Micro weighted value sum: the output head (≤ 16-lane chunks) stays in
+/// registers while all keys stream past in ascending-j order — same
+/// per-element order as [`wsum_scalar`], bitwise equal.
+pub fn wsum_micro(out: &mut [f32], p: &[f32], vmat: &[f32], stride: usize, off: usize) {
+    const CW: usize = 16;
+    let dh = out.len();
+    let mut c0 = 0;
+    while c0 < dh {
+        let cw = (dh - c0).min(CW);
+        let mut acc = [0.0f32; CW];
+        acc[..cw].copy_from_slice(&out[c0..c0 + cw]);
+        if cw == CW {
+            for (j, pj) in p.iter().enumerate() {
+                let vj = &vmat[j * stride + off + c0..j * stride + off + c0 + CW];
+                for u in 0..CW {
+                    acc[u] += pj * vj[u];
+                }
+            }
+        } else {
+            for (j, pj) in p.iter().enumerate() {
+                let vj = &vmat[j * stride + off + c0..j * stride + off + c0 + cw];
+                for u in 0..cw {
+                    acc[u] += pj * vj[u];
+                }
+            }
+        }
+        out[c0..c0 + cw].copy_from_slice(&acc[..cw]);
+        c0 += CW;
+    }
+}
+
+/// Dispatching weighted value sum.
+pub fn wsum(out: &mut [f32], p: &[f32], vmat: &[f32], stride: usize, off: usize) {
+    match mode() {
+        Mode::Scalar => wsum_scalar(out, p, vmat, stride, off),
+        Mode::Micro => wsum_micro(out, p, vmat, stride, off),
+    }
+}
+
+/// `out[u] += a · v[u]` — the single-key tail of the cached decode row
+/// (the new key/value at the decoded position). Elementwise; one add per
+/// element in either mode, so there is nothing to reorder.
+pub fn axpy(out: &mut [f32], a: f32, v: &[f32]) {
+    for (ov, vv) in out.iter_mut().zip(v) {
+        *ov += a * vv;
+    }
+}

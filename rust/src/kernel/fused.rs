@@ -1,0 +1,47 @@
+//! Fused / allocation-free composites for the decode hot loop:
+//! RMSNorm into caller scratch, and RMSNorm+matvec in one call (the
+//! `block_fwd_cached` per-token path: normalize once into a scratch row,
+//! run the first projection immediately, let the caller reuse the
+//! normalized row for the sibling projections).
+//!
+//! The RMSNorm sum-of-squares is deliberately a single serial chain in
+//! both kernel modes: its reduction order is part of the cross-path
+//! bitwise contract (prefill rows, cached decode and the training-side
+//! `ops::rmsnorm` must agree bit for bit), and at `O(d)` per row it is
+//! noise next to the `O(d·n)` matmuls it feeds.
+
+use super::gemm;
+
+/// RMSNorm rows of length `d` into a caller buffer:
+/// `out = x / sqrt(mean(x²) + eps) * gain`. Identical arithmetic and
+/// reduction order in both kernel modes.
+pub fn rmsnorm_into(x: &[f32], gain: &[f32], d: usize, eps: f64, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (xr, yr) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let var: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (var + eps as f32).sqrt();
+        for ((yv, xv), gv) in yr.iter_mut().zip(xr).zip(gain) {
+            *yv = xv * r * gv;
+        }
+    }
+}
+
+/// Fused RMSNorm + matvec for one `[d]` activation row: normalizes into
+/// `h` (caller scratch, reusable for the sibling projections of the same
+/// normalized activation via [`gemm::matvec_into`]) and immediately runs
+/// `out[rows] = h @ w[rows,d]^T` while `h` is cache-hot. Bitwise equal
+/// to `rmsnorm` followed by `mm_nt(m=1)` — the fusion removes the two
+/// intermediate allocations of the unfused path, not any arithmetic.
+pub fn rmsnorm_matvec(
+    x: &[f32],
+    gain: &[f32],
+    eps: f64,
+    h: &mut [f32],
+    w: &[f32],
+    rows: usize,
+    out: &mut [f32],
+) {
+    let d = x.len();
+    rmsnorm_into(x, gain, d, eps, h);
+    gemm::matvec_into(h, w, d, rows, out);
+}

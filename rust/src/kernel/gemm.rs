@@ -1,0 +1,460 @@
+//! Dense matmul family. One scalar reference and one register-blocked
+//! micro implementation per entry point, bitwise-identical by the
+//! accumulation-order contract in [`crate::kernel`]: every output
+//! element is a single ascending-k chain of `mul` + `add` (Rust never
+//! contracts those into an FMA), so the micro tilings — which only
+//! regroup *independent* output elements into register blocks — produce
+//! the exact bits of the scalar loops.
+
+use super::{mode, Mode};
+
+/// Rows per register block of the packed `mm_nt` kernel.
+const MR: usize = 4;
+/// Output lanes per packed panel (two 128-bit f32 vectors).
+const NR: usize = 8;
+/// Reduction-dim tile: `KC · NR · 4` bytes of panel (16 KiB) stays
+/// L1-resident while the row loop streams over `x`.
+const KC: usize = 512;
+/// Register-resident output chunk of the `mm_nn` / `mm_tn` /
+/// f64-`matmul` stream kernels (eight 128-bit f32 vectors).
+const CH: usize = 32;
+/// f64 variant of [`CH`] (same eight 128-bit vectors).
+const CHD: usize = 16;
+
+// ---------------------------------------------------------------------------
+// mm_nt: y[M,N] = x[M,K] @ w[N,K]^T
+// ---------------------------------------------------------------------------
+
+/// Reference `y[M,N] = x[M,K] @ w[N,K]^T`: one serial ascending-k dot
+/// chain per output element (the golden-vector order).
+pub fn mm_nt_scalar(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    let mut y = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xi = &x[i * k..(i + 1) * k];
+        let yi = &mut y[i * n..(i + 1) * n];
+        for (j, yj) in yi.iter_mut().enumerate() {
+            let wj = &w[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (a, b) in xi.iter().zip(wj) {
+                acc += a * b;
+            }
+            *yj = acc;
+        }
+    }
+    y
+}
+
+/// Pack `w[N,K]` into k-major panels of [`NR`] adjacent output rows
+/// (`panel[jp][kk][jj] = w[jp·NR + jj][kk]`, tail rows zero-padded), so
+/// the inner kernel reads one contiguous [`NR`]-lane vector per k step.
+fn pack_panels(w: &[f32], n: usize, k: usize) -> Vec<f32> {
+    let np = n.div_ceil(NR);
+    let mut p = vec![0.0f32; np * k * NR];
+    for jp in 0..np {
+        let panel = &mut p[jp * k * NR..(jp + 1) * k * NR];
+        let jw = (n - jp * NR).min(NR);
+        for jj in 0..jw {
+            let row = &w[(jp * NR + jj) * k..(jp * NR + jj + 1) * k];
+            for (kk, v) in row.iter().enumerate() {
+                panel[kk * NR + jj] = *v;
+            }
+        }
+    }
+    p
+}
+
+/// Micro `mm_nt`: packed cache-tiled outer-product kernel. An
+/// [`MR`]`×`[`NR`] register block of output elements advances through
+/// the k dimension together (ascending, tiled by [`KC`] with partial
+/// sums parked in `y` between tiles), giving `MR·NR` independent FP
+/// chains where the scalar loop has one — bitwise equal to
+/// [`mm_nt_scalar`] because each element's chain is unchanged.
+///
+/// Row counts below [`MR`] skip the packing (which would cost as much
+/// as the multiply) and take the [`matvec_micro_into`] lane instead —
+/// same ascending-k order, so decode (`m=1`) and prefill (`m=s`) agree
+/// bitwise, which `greedy_cached == greedy_recompute` depends on.
+pub fn mm_nt_micro(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    let mut y = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return y;
+    }
+    if m < MR {
+        for i in 0..m {
+            matvec_micro_into(&x[i * k..(i + 1) * k], w, k, n, &mut y[i * n..(i + 1) * n]);
+        }
+        return y;
+    }
+    let packed = pack_panels(w, n, k);
+    let np = n.div_ceil(NR);
+    let mut kc = 0;
+    while kc < k.max(1) {
+        let kw = (k - kc).min(KC);
+        for jp in 0..np {
+            let panel = &packed[(jp * k + kc) * NR..(jp * k + kc + kw) * NR];
+            let j0 = jp * NR;
+            let jw = (n - j0).min(NR);
+            let mut i = 0;
+            while i + MR <= m {
+                let mut acc = [[0.0f32; NR]; MR];
+                if kc > 0 {
+                    for (r, ar) in acc.iter_mut().enumerate() {
+                        ar[..jw].copy_from_slice(&y[(i + r) * n + j0..(i + r) * n + j0 + jw]);
+                    }
+                }
+                for kk in 0..kw {
+                    let wrow = &panel[kk * NR..kk * NR + NR];
+                    for (r, ar) in acc.iter_mut().enumerate() {
+                        let xv = x[(i + r) * k + kc + kk];
+                        for c in 0..NR {
+                            ar[c] += xv * wrow[c];
+                        }
+                    }
+                }
+                for (r, ar) in acc.iter().enumerate() {
+                    y[(i + r) * n + j0..(i + r) * n + j0 + jw].copy_from_slice(&ar[..jw]);
+                }
+                i += MR;
+            }
+            while i < m {
+                let mut acc = [0.0f32; NR];
+                if kc > 0 {
+                    acc[..jw].copy_from_slice(&y[i * n + j0..i * n + j0 + jw]);
+                }
+                for kk in 0..kw {
+                    let wrow = &panel[kk * NR..kk * NR + NR];
+                    let xv = x[i * k + kc + kk];
+                    for c in 0..NR {
+                        acc[c] += xv * wrow[c];
+                    }
+                }
+                y[i * n + j0..i * n + j0 + jw].copy_from_slice(&acc[..jw]);
+                i += 1;
+            }
+        }
+        kc += KC.max(1);
+        if k == 0 {
+            break;
+        }
+    }
+    y
+}
+
+/// Dispatching `mm_nt` (the linear-layer kernel every caller routes
+/// through): [`mm_nt_micro`] by default, [`mm_nt_scalar`] under
+/// `BESA_KERNEL=scalar`. Both produce identical bits.
+pub fn mm_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    match mode() {
+        Mode::Scalar => mm_nt_scalar(x, w, m, k, n),
+        Mode::Micro => mm_nt_micro(x, w, m, k, n),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matvec: y[N] = x[K] @ w[N,K]^T (the decode fast path, m == 1)
+// ---------------------------------------------------------------------------
+
+/// Reference single-row `mm_nt` writing into a caller buffer.
+pub fn matvec_scalar_into(x: &[f32], w: &[f32], k: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(y.len(), n);
+    for (j, yj) in y.iter_mut().enumerate() {
+        let wj = &w[j * k..(j + 1) * k];
+        let mut acc = 0.0f32;
+        for (a, b) in x.iter().zip(wj) {
+            acc += a * b;
+        }
+        *yj = acc;
+    }
+}
+
+/// Micro matvec: four output dots advance in lock-step, four independent
+/// scalar FP chains where the reference has one. Each dot is still a
+/// single ascending-k chain — bitwise equal to [`matvec_scalar_into`].
+pub fn matvec_micro_into(x: &[f32], w: &[f32], k: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(y.len(), n);
+    let x = &x[..k];
+    let mut j = 0;
+    while j + 4 <= n {
+        let w0 = &w[j * k..j * k + k];
+        let w1 = &w[(j + 1) * k..(j + 1) * k + k];
+        let w2 = &w[(j + 2) * k..(j + 2) * k + k];
+        let w3 = &w[(j + 3) * k..(j + 3) * k + k];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for kk in 0..k {
+            let xv = x[kk];
+            a0 += xv * w0[kk];
+            a1 += xv * w1[kk];
+            a2 += xv * w2[kk];
+            a3 += xv * w3[kk];
+        }
+        y[j] = a0;
+        y[j + 1] = a1;
+        y[j + 2] = a2;
+        y[j + 3] = a3;
+        j += 4;
+    }
+    while j < n {
+        let wj = &w[j * k..j * k + k];
+        let mut acc = 0.0f32;
+        for kk in 0..k {
+            acc += x[kk] * wj[kk];
+        }
+        y[j] = acc;
+        j += 1;
+    }
+}
+
+/// Dispatching single-row linear into a caller buffer — the alloc-free
+/// decode path (`block_fwd_cached`, fused RMSNorm+matvec).
+pub fn matvec_into(x: &[f32], w: &[f32], k: usize, n: usize, y: &mut [f32]) {
+    match mode() {
+        Mode::Scalar => matvec_scalar_into(x, w, k, n, y),
+        Mode::Micro => matvec_micro_into(x, w, k, n, y),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mm_nn: dx[M,K] = g[M,N] @ w[N,K]
+// ---------------------------------------------------------------------------
+
+/// Reference `dx[M,K] = g[M,N] @ w[N,K]`: ascending-j AXPY sweep per row,
+/// skipping exact-zero `g` entries (which is bitwise-neutral: adding a
+/// `0.0·w` term never changes a finite partial sum's bits).
+pub fn mm_nn_scalar(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), n * k);
+    let mut dx = vec![0.0f32; m * k];
+    for i in 0..m {
+        let gi = &g[i * n..(i + 1) * n];
+        let di = &mut dx[i * k..(i + 1) * k];
+        for (j, gj) in gi.iter().enumerate() {
+            if *gj == 0.0 {
+                continue;
+            }
+            let wj = &w[j * k..(j + 1) * k];
+            for (d, wv) in di.iter_mut().zip(wj) {
+                *d += gj * wv;
+            }
+        }
+    }
+    dx
+}
+
+/// Micro `mm_nn`: a [`CH`]-wide chunk of the output row lives in
+/// registers while the whole ascending-j reduction streams past it —
+/// eliminating the per-j load/store round-trip of the reference AXPY.
+/// Same per-element ascending-j order and zero-skip: bitwise equal.
+pub fn mm_nn_micro(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), n * k);
+    let mut dx = vec![0.0f32; m * k];
+    for i in 0..m {
+        let gi = &g[i * n..(i + 1) * n];
+        let di = &mut dx[i * k..(i + 1) * k];
+        let mut kc = 0;
+        while kc + CH <= k {
+            let mut acc = [0.0f32; CH];
+            for (j, gj) in gi.iter().enumerate() {
+                if *gj == 0.0 {
+                    continue;
+                }
+                let wrow = &w[j * k + kc..j * k + kc + CH];
+                for c in 0..CH {
+                    acc[c] += gj * wrow[c];
+                }
+            }
+            di[kc..kc + CH].copy_from_slice(&acc);
+            kc += CH;
+        }
+        if kc < k {
+            let kw = k - kc;
+            let mut acc = [0.0f32; CH];
+            for (j, gj) in gi.iter().enumerate() {
+                if *gj == 0.0 {
+                    continue;
+                }
+                let wrow = &w[j * k + kc..j * k + kc + kw];
+                for c in 0..kw {
+                    acc[c] += gj * wrow[c];
+                }
+            }
+            di[kc..].copy_from_slice(&acc[..kw]);
+        }
+    }
+    dx
+}
+
+/// Dispatching `dx = g @ w` (linear-layer input gradient).
+pub fn mm_nn(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    match mode() {
+        Mode::Scalar => mm_nn_scalar(g, w, m, n, k),
+        Mode::Micro => mm_nn_micro(g, w, m, n, k),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mm_tn: gw[N,K] = g[M,N]^T @ x[M,K]
+// ---------------------------------------------------------------------------
+
+/// Reference `gw[N,K] = g[M,N]^T @ x[M,K]`: ascending-i AXPY sweep,
+/// zero-skip on `g` (bitwise-neutral, as in [`mm_nn_scalar`]).
+pub fn mm_tn_scalar(g: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(x.len(), m * k);
+    let mut gw = vec![0.0f32; n * k];
+    for i in 0..m {
+        let gi = &g[i * n..(i + 1) * n];
+        let xi = &x[i * k..(i + 1) * k];
+        for (j, gj) in gi.iter().enumerate() {
+            if *gj == 0.0 {
+                continue;
+            }
+            let row = &mut gw[j * k..(j + 1) * k];
+            for (d, xv) in row.iter_mut().zip(xi) {
+                *d += gj * xv;
+            }
+        }
+    }
+    gw
+}
+
+/// Micro `mm_tn`: loops reordered to k-chunk-outer / output-row / i so a
+/// [`CH`]-wide output chunk stays register-resident through the whole
+/// ascending-i reduction, and the `x` column chunk is reused across all
+/// `n` output rows from cache. Per-element order and zero-skip match the
+/// reference: bitwise equal.
+pub fn mm_tn_micro(g: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(x.len(), m * k);
+    let mut gw = vec![0.0f32; n * k];
+    let mut kc = 0;
+    while kc < k {
+        let kw = (k - kc).min(CH);
+        if kw == CH {
+            for j in 0..n {
+                let mut acc = [0.0f32; CH];
+                for i in 0..m {
+                    let gij = g[i * n + j];
+                    if gij == 0.0 {
+                        continue;
+                    }
+                    let xrow = &x[i * k + kc..i * k + kc + CH];
+                    for c in 0..CH {
+                        acc[c] += gij * xrow[c];
+                    }
+                }
+                gw[j * k + kc..j * k + kc + CH].copy_from_slice(&acc);
+            }
+        } else {
+            for j in 0..n {
+                let mut acc = [0.0f32; CH];
+                for i in 0..m {
+                    let gij = g[i * n + j];
+                    if gij == 0.0 {
+                        continue;
+                    }
+                    let xrow = &x[i * k + kc..i * k + kc + kw];
+                    for c in 0..kw {
+                        acc[c] += gij * xrow[c];
+                    }
+                }
+                gw[j * k + kc..j * k + kc + kw].copy_from_slice(&acc[..kw]);
+            }
+        }
+        kc += CH;
+    }
+    gw
+}
+
+/// Dispatching `gw = g^T @ x` (linear-layer weight gradient).
+pub fn mm_tn(g: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    match mode() {
+        Mode::Scalar => mm_tn_scalar(g, x, m, n, k),
+        Mode::Micro => mm_tn_micro(g, x, m, n, k),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f64 matmul (linalg substrate: SparseGPT's Hessian algebra)
+// ---------------------------------------------------------------------------
+
+/// Reference f64 `y[M,N] = a[M,K] @ b[K,N]`: ascending-k AXPY sweep per
+/// row with zero-skip on `a` (the historical `linalg::Mat::matmul` loop).
+pub fn matmul_f64_scalar(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut y = vec![0.0f64; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let dst = &mut y[i * n..(i + 1) * n];
+            for j in 0..n {
+                dst[j] += av * brow[j];
+            }
+        }
+    }
+    y
+}
+
+/// Micro f64 matmul: [`CHD`]-wide register-resident output chunks per
+/// ascending-k sweep (the f64 twin of [`mm_nn_micro`]). Bitwise equal to
+/// [`matmul_f64_scalar`].
+pub fn matmul_f64_micro(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut y = vec![0.0f64; m * n];
+    for i in 0..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let yi = &mut y[i * n..(i + 1) * n];
+        let mut jc = 0;
+        while jc + CHD <= n {
+            let mut acc = [0.0f64; CHD];
+            for (kk, av) in ai.iter().enumerate() {
+                if *av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n + jc..kk * n + jc + CHD];
+                for c in 0..CHD {
+                    acc[c] += av * brow[c];
+                }
+            }
+            yi[jc..jc + CHD].copy_from_slice(&acc);
+            jc += CHD;
+        }
+        if jc < n {
+            let jw = n - jc;
+            let mut acc = [0.0f64; CHD];
+            for (kk, av) in ai.iter().enumerate() {
+                if *av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n + jc..kk * n + jc + jw];
+                for c in 0..jw {
+                    acc[c] += av * brow[c];
+                }
+            }
+            yi[jc..].copy_from_slice(&acc[..jw]);
+        }
+    }
+    y
+}
+
+/// Dispatching f64 matmul (routes `linalg::Mat::matmul`).
+pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    match mode() {
+        Mode::Scalar => matmul_f64_scalar(a, b, m, k, n),
+        Mode::Micro => matmul_f64_micro(a, b, m, k, n),
+    }
+}

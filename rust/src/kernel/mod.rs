@@ -1,0 +1,77 @@
+//! Shared microkernel layer: every dense/sparse inner loop in the crate
+//! in two pinned implementations — `scalar` (the reference loops the
+//! golden vectors were generated against) and `micro` (cache-blocked,
+//! register-tiled, hand-unrolled for autovectorization; no new deps, no
+//! intrinsics, no `unsafe`).
+//!
+//! # The accumulation-order contract
+//!
+//! The repo pins *bitwise* cross-path equalities end to end: CSR serving
+//! == dense serving, KV-cached decode == full-prefix recompute,
+//! `block_fwd_cached` == prefill rows, quant CSR == fake-quant dense
+//! (`tests/serve_parity.rs`). All of them hold for one reason — every
+//! path accumulates each output element **in ascending reduction-index
+//! order** (ascending k / column / position), so dropping exact-zero
+//! terms or splitting work across rows never reassociates a float sum.
+//!
+//! The micro kernels keep that contract: they tile over *output*
+//! elements (register blocks of rows × lanes) and stream the reduction
+//! dimension through each block in ascending order, so every output
+//! element sees the same multiplies and adds in the same order as the
+//! scalar reference — `micro` is **bitwise equal** to `scalar` for every
+//! kernel in this module, and all existing parity tests run unchanged
+//! with `micro` as the default. The speedup comes from instruction-level
+//! parallelism *across* independent output elements (the scalar loops
+//! are serial FP dependency chains the compiler cannot reassociate) and
+//! from keeping accumulators in registers instead of round-tripping
+//! through memory per reduction step — not from reordering any sum.
+//!
+//! Per-kernel parity policy (enforced by `tests/kernel_parity.rs`, see
+//! `docs/kernels.md` for rationale): **bitwise for every kernel**. The
+//! tolerance class the policy reserves for reduction-reordering tilings
+//! is intentionally unused — in this codebase a reordered reduction
+//! would forfeit the cross-path bitwise invariants above, which are
+//! worth more than the last fraction of throughput.
+//!
+//! # Selection
+//!
+//! `BESA_KERNEL=scalar|micro` (default `micro`), read once per process.
+//! The `*_scalar` / `*_micro` entry points stay public so tests and
+//! `besa kernel-bench` can pin both paths inside one process.
+
+use std::sync::OnceLock;
+
+pub mod attn;
+pub mod fused;
+pub mod gemm;
+pub mod spmm;
+
+/// Which implementation the dispatching entry points run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Reference loops (golden-vector generation order).
+    Scalar,
+    /// Register-blocked kernels, bitwise equal to `Scalar` (see module
+    /// docs). The default.
+    Micro,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Scalar => "scalar",
+            Mode::Micro => "micro",
+        }
+    }
+}
+
+/// Process-wide kernel selection: `BESA_KERNEL=scalar` opts into the
+/// reference loops; anything else (including unset) is `Micro`. Cached in
+/// a `OnceLock` so hot paths pay one relaxed load, not an env lookup.
+pub fn mode() -> Mode {
+    static MODE: OnceLock<Mode> = OnceLock::new();
+    *MODE.get_or_init(|| match std::env::var("BESA_KERNEL") {
+        Ok(v) if v == "scalar" => Mode::Scalar,
+        _ => Mode::Micro,
+    })
+}

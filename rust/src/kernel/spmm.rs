@@ -1,0 +1,115 @@
+//! The CSR SpMM lane: `Y^T[rows, t] = W · X^T[cols, t]` over shared CSR
+//! structure, parameterized by a value accessor (plain f32 values or
+//! fused dequant — see `crate::sparse::spmm`). Scalar reference plus a
+//! stripe-register-blocked micro kernel, bitwise equal: each output
+//! element accumulates its row's stored nonzeros in ascending `k`
+//! (ascending-column) order in both, which is the contract that makes
+//! CSR serving reproduce the dense matmul bit for bit.
+
+use super::{mode, Mode};
+
+/// Token-dim stripe held in registers by the micro kernel (eight 128-bit
+/// f32 vectors).
+const TW: usize = 32;
+
+/// Reference kernel: per stored nonzero, one AXPY of `value(k) · x_row`
+/// into the output row — the output element round-trips through memory
+/// on every nonzero.
+pub fn spmm_rows_scalar<V: Fn(usize) -> f32>(
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    value: V,
+    x: &[f32],
+    t: usize,
+    lo_row: usize,
+    hi_row: usize,
+    out: &mut [f32],
+) {
+    for r in lo_row..hi_row {
+        let yrow = &mut out[(r - lo_row) * t..(r - lo_row + 1) * t];
+        let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+        for k in lo..hi {
+            let c = col_idx[k] as usize;
+            let v = value(k);
+            let xrow = &x[c * t..(c + 1) * t];
+            for (yv, xv) in yrow.iter_mut().zip(xrow) {
+                *yv += v * xv;
+            }
+        }
+    }
+}
+
+/// Micro kernel: loop order swapped to stripe-outer / nonzero-inner. A
+/// [`TW`]-wide stripe of the output row stays in registers while *all*
+/// of the row's nonzeros stream past in ascending-k order — no output
+/// load/store per nonzero (the reference pays two y memory ops per
+/// nonzero per lane) and [`TW`]/4 independent vector accumulator chains
+/// instead of a store-forwarding chain. Per-element accumulation order
+/// is unchanged, so the result is bitwise equal to [`spmm_rows_scalar`]
+/// for both value accessors (the dequant accessor is a pure function of
+/// `k` — re-evaluating it per stripe yields identical values).
+pub fn spmm_rows_micro<V: Fn(usize) -> f32>(
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    value: V,
+    x: &[f32],
+    t: usize,
+    lo_row: usize,
+    hi_row: usize,
+    out: &mut [f32],
+) {
+    for r in lo_row..hi_row {
+        let yrow = &mut out[(r - lo_row) * t..(r - lo_row + 1) * t];
+        let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+        let mut tc = 0;
+        while tc + TW <= t {
+            let mut acc = [0.0f32; TW];
+            for k in lo..hi {
+                let c = col_idx[k] as usize;
+                let v = value(k);
+                let xrow = &x[c * t + tc..c * t + tc + TW];
+                for u in 0..TW {
+                    acc[u] += v * xrow[u];
+                }
+            }
+            yrow[tc..tc + TW].copy_from_slice(&acc);
+            tc += TW;
+        }
+        if tc < t {
+            let tw = t - tc;
+            let mut acc = [0.0f32; TW];
+            for k in lo..hi {
+                let c = col_idx[k] as usize;
+                let v = value(k);
+                let xrow = &x[c * t + tc..c * t + tc + tw];
+                for u in 0..tw {
+                    acc[u] += v * xrow[u];
+                }
+            }
+            yrow[tc..].copy_from_slice(&acc[..tw]);
+        }
+    }
+}
+
+/// Dispatching row-range SpMM — the one sparse inner loop in the crate
+/// (`crate::sparse::spmm` routes both the plain and fused-dequant
+/// drivers through it).
+///
+/// `out` must be zeroed by the caller: the reference accumulates into it
+/// while the micro kernel overwrites each stripe, so the two agree (and
+/// the result is well-defined) only from a zero start.
+pub fn spmm_rows<V: Fn(usize) -> f32>(
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    value: V,
+    x: &[f32],
+    t: usize,
+    lo_row: usize,
+    hi_row: usize,
+    out: &mut [f32],
+) {
+    match mode() {
+        Mode::Scalar => spmm_rows_scalar(row_ptr, col_idx, value, x, t, lo_row, hi_row, out),
+        Mode::Micro => spmm_rows_micro(row_ptr, col_idx, value, x, t, lo_row, hi_row, out),
+    }
+}

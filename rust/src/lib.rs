@@ -30,6 +30,14 @@
 //!   [`eval`] for perplexity + zero-shot probes; [`data`] for the
 //!   synthetic corpus; [`sim`] for the ViTCoD accelerator cycle model
 //!   (paper §4.5 + Appendix B).
+//! * **[`kernel`]** — the shared microkernel layer every dense, sparse
+//!   and attention inner loop routes through: cache-tiled / packed GEMM,
+//!   register-blocked SpMM stripes, attention score/value lanes and the
+//!   fused RMSNorm+matvec decode path. Each kernel ships a scalar
+//!   reference and a register-blocked micro variant (`BESA_KERNEL=
+//!   scalar|micro`, default micro) that are bitwise identical by
+//!   construction; `besa kernel-bench` measures both into
+//!   `BENCH_kernels.json` (see `docs/kernels.md`).
 //! * **[`sparse`] + [`serve`]** — where the sparsity pays off: packed
 //!   CSR / quantized-CSR weights with one row-blocked SpMM kernel
 //!   (value-accessor parameterized), and an inference engine
@@ -59,6 +67,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod kernel;
 pub mod linalg;
 pub mod model;
 pub mod prune;

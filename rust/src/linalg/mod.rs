@@ -64,23 +64,14 @@ impl Mat {
         }
     }
 
+    /// `self @ other`; the f64 inner loop lives in
+    /// [`crate::kernel::gemm::matmul_f64`] (scalar AXPY reference vs
+    /// register-chunked micro kernel, bitwise equal).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows);
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &other.d[k * other.cols..(k + 1) * other.cols];
-                let dst = &mut out.d[i * other.cols..(i + 1) * other.cols];
-                for j in 0..other.cols {
-                    dst[j] += a * orow[j];
-                }
-            }
-        }
-        out
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let d = crate::kernel::gemm::matmul_f64(&self.d, &other.d, m, k, n);
+        Mat { rows: m, cols: n, d }
     }
 
     pub fn transpose(&self) -> Mat {

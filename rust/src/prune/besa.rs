@@ -24,6 +24,7 @@ use crate::prune::importance::{decode_mask, Metric};
 use crate::prune::{BlockMasks, BlockReport};
 use crate::runtime::{Arg, Prepared};
 use crate::tensor::Tensor;
+use crate::util::par::par_map;
 
 /// Sparsity-allocation granularity (paper Table 6). `Layer` is Wanda and
 /// lives in [`crate::prune::wanda`]; `TwoBlocks` is driven by
@@ -49,6 +50,14 @@ pub struct BesaConfig {
     pub metric: Metric,
     /// joint weight-quantization (paper §3.3): learn clipping strengths too
     pub quant: bool,
+    /// microbatches per optimizer step. `1` (default) is the classic
+    /// sequential loop. `> 1` evaluates each group of microbatches
+    /// thread-parallel against the *same* frozen thetas
+    /// ([`crate::util::par::par_map`]; `Engine` is `Sync`), averages the
+    /// gradients in fixed microbatch-index order outside the parallel
+    /// region, and takes one Adam step per group — deterministic for any
+    /// worker count, a different (averaged-step) trajectory than `1`.
+    pub grad_accum: usize,
 }
 
 impl Default for BesaConfig {
@@ -62,6 +71,7 @@ impl Default for BesaConfig {
             granularity: Granularity::Block,
             metric: Metric::Wanda,
             quant: false,
+            grad_accum: 1,
         }
     }
 }
@@ -175,11 +185,23 @@ impl BlockPruner for BesaPruner {
         };
 
         let n_batches = ctx.x_pruned.len();
+        let group_len = self.cfg.grad_accum.max(1);
+        let quant = self.cfg.quant;
         let mut curve = Vec::new();
         let mut last = (0.0, 0.0, 0.0);
+        let engine = &ctx.engine;
+        let x_pruned = &ctx.x_pruned;
+        let y_dense = &ctx.y_dense;
+        let ctx_norms = &ctx.norms;
         for _epoch in 0..self.cfg.epochs {
-            for bi in 0..n_batches {
-                let out = {
+            let mut b0 = 0;
+            while b0 < n_batches {
+                let group: Vec<usize> = (b0..(b0 + group_len).min(n_batches)).collect();
+                b0 += group.len();
+                // Every microbatch of the group is evaluated against the
+                // same frozen thetas/gammas; `Engine` is `Sync`, so groups
+                // fan out over scoped threads (one besa_step per worker).
+                let outs = par_map(&group, |&bi| {
                     let mut ins: Vec<Arg> = thetas.iter().map(Arg::Host).collect();
                     match &prepared {
                         Some(p) => {
@@ -193,29 +215,51 @@ impl BlockPruner for BesaPruner {
                             ins.push(Arg::Prep(&p.alpha_hat));
                         }
                         None => {
-                            ins.push(Arg::Host(&ctx.x_pruned[bi]));
-                            ins.push(Arg::Host(&ctx.y_dense[bi]));
+                            ins.push(Arg::Host(&x_pruned[bi]));
+                            ins.push(Arg::Host(&y_dense[bi]));
                             ins.extend(weights.iter().copied().map(Arg::Host));
-                            ins.push(Arg::Host(&ctx.norms[0]));
-                            ins.push(Arg::Host(&ctx.norms[1]));
+                            ins.push(Arg::Host(&ctx_norms[0]));
+                            ins.push(Arg::Host(&ctx_norms[1]));
                             ins.extend(ranks.iter().map(Arg::Host));
                             ins.push(Arg::Host(&lam));
                             ins.push(Arg::Host(&alpha_hat));
                         }
                     }
-                    if self.cfg.quant {
+                    if quant {
                         ins.extend(gammas.iter().map(Arg::Host));
                     }
-                    ctx.engine.run_args(&artifact, &ins)?
-                };
-                last = (
-                    out[0].scalar_value() as f64,
-                    out[1].scalar_value() as f64,
-                    out[2].scalar_value() as f64,
-                );
-                curve.push(last);
-                let grads: Vec<&Tensor> = out[3..3 + n_opt].iter().collect();
-                if self.cfg.quant {
+                    engine.run_args(&artifact, &ins)
+                })?;
+                for out in &outs {
+                    last = (
+                        out[0].scalar_value() as f64,
+                        out[1].scalar_value() as f64,
+                        out[2].scalar_value() as f64,
+                    );
+                    curve.push(last);
+                }
+                // Average the group's gradients in fixed microbatch-index
+                // order, *outside* the parallel region — bit-identical for
+                // any worker count, and exactly the per-batch gradient
+                // (no averaging at all) when the group has one member.
+                let mut avg: Vec<Tensor> = outs[0][3..3 + n_opt].to_vec();
+                for out in outs.iter().skip(1) {
+                    for (a, g) in avg.iter_mut().zip(&out[3..3 + n_opt]) {
+                        for (av, gv) in a.f32s_mut().iter_mut().zip(g.f32s()) {
+                            *av += *gv;
+                        }
+                    }
+                }
+                if outs.len() > 1 {
+                    let inv = 1.0 / outs.len() as f32;
+                    for a in avg.iter_mut() {
+                        for v in a.f32s_mut() {
+                            *v *= inv;
+                        }
+                    }
+                }
+                let grads: Vec<&Tensor> = avg.iter().collect();
+                if quant {
                     let mut params: Vec<&mut Tensor> = thetas.iter_mut().collect();
                     params.extend(gammas.iter_mut());
                     adam.step(&mut params, &grads);

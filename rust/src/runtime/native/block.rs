@@ -8,6 +8,7 @@
 
 use anyhow::Result;
 
+use crate::kernel::{fused, gemm};
 use crate::model::config::ModelConfig;
 use crate::tensor::Tensor;
 
@@ -222,13 +223,29 @@ pub fn block_fwd_cached(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Ten
     let mut v_new = vec![0.0f32; nb * d];
     let mut cos_p = vec![0.0f32; half];
     let mut sin_p = vec![0.0f32; half];
+    // Per-token scratch, hoisted out of the request loop so the decode
+    // hot path performs no per-token allocations; projections run through
+    // the fused RMSNorm+matvec / matvec lanes of [`crate::kernel`]
+    // (bitwise equal to the unfused rmsnorm + mm_nt they replace).
+    let mut h = vec![0.0f32; d];
+    let mut q = vec![0.0f32; d];
+    let mut k = vec![0.0f32; d];
+    let mut v = vec![0.0f32; d];
+    let mut att = vec![0.0f32; d];
+    let mut o = vec![0.0f32; d];
+    let mut x2 = vec![0.0f32; d];
+    let mut gate = vec![0.0f32; f];
+    let mut up = vec![0.0f32; f];
+    let mut down = vec![0.0f32; d];
+    let mut row = Vec::new();
     for i in 0..nb {
         let p = pos[i] as usize;
         let xi = &xs[i * d..(i + 1) * d];
-        let h1 = ops::rmsnorm(xi, norm1, d, eps);
-        let mut q = ops::mm_nt(&h1, weights[0], 1, d, d);
-        let mut k = ops::mm_nt(&h1, weights[1], 1, d, d);
-        let v = ops::mm_nt(&h1, weights[2], 1, d, d);
+        // fused norm + q projection; the normalized row in `h` then feeds
+        // the sibling k/v projections
+        fused::rmsnorm_matvec(xi, norm1, eps, &mut h, weights[0], d, &mut q);
+        gemm::matvec_into(&h, weights[1], d, d, &mut k);
+        gemm::matvec_into(&h, weights[2], d, d, &mut v);
         // RoPE angles for this position only — O(dh) per sequence, not a
         // full O(prefix·dh) table per call.
         ops::rope_angles_at(p, dh, cfg.rope_base, &mut cos_p, &mut sin_p);
@@ -238,14 +255,30 @@ pub fn block_fwd_cached(cfg: &ModelConfig, inputs: &[&Tensor]) -> Result<Vec<Ten
         // same hoisted kernel the in-process serving decode uses
         let kci = &kcs[i * cap * d..(i + 1) * cap * d];
         let vci = &vcs[i * cap * d..(i + 1) * cap * d];
-        let att = ops::attention_cached_row(&q, &k, &v, &kci[..p * d], &vci[..p * d], p, nh, dh);
-        let o = ops::mm_nt(&att, weights[3], 1, d, d);
-        let x2: Vec<f32> = xi.iter().zip(&o).map(|(a, b)| a + b).collect();
-        let h2 = ops::rmsnorm(&x2, norm2, d, eps);
-        let gate = ops::mm_nt(&h2, weights[4], 1, d, f);
-        let up = ops::mm_nt(&h2, weights[5], 1, d, f);
-        let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| ops::silu(*g) * u).collect();
-        let down = ops::mm_nt(&act, weights[6], 1, f, d);
+        ops::attention_cached_row_into(
+            &q,
+            &k,
+            &v,
+            &kci[..p * d],
+            &vci[..p * d],
+            p,
+            nh,
+            dh,
+            &mut row,
+            &mut att,
+        );
+        gemm::matvec_into(&att, weights[3], d, d, &mut o);
+        for (x2v, (a, b)) in x2.iter_mut().zip(xi.iter().zip(&o)) {
+            *x2v = a + b;
+        }
+        // fused norm + gate projection, sibling up projection, SwiGLU
+        // activation computed in place over `gate`
+        fused::rmsnorm_matvec(&x2, norm2, eps, &mut h, weights[4], f, &mut gate);
+        gemm::matvec_into(&h, weights[5], d, f, &mut up);
+        for (g, u) in gate.iter_mut().zip(&up) {
+            *g = ops::silu(*g) * u;
+        }
+        gemm::matvec_into(&gate, weights[6], f, d, &mut down);
         for (t, yv) in y[i * d..(i + 1) * d].iter_mut().enumerate() {
             *yv = x2[t] + down[t];
         }

@@ -7,73 +7,30 @@
 //! here was validated against central finite differences before being
 //! transliterated (see tests in `tests/native_parity.rs`).
 
+use crate::kernel::{attn, fused, gemm};
 use crate::model::config::ModelConfig;
 
 // ---------------------------------------------------------------------------
-// matmul family (row-major slices)
+// matmul family (row-major slices) — routed through the shared
+// microkernel layer (`crate::kernel::gemm`): scalar reference or
+// register-blocked micro per `BESA_KERNEL`, bitwise-identical either way
+// (ascending-k accumulation per output element in both).
 // ---------------------------------------------------------------------------
 
 /// `y[M,N] = x[M,K] @ w[N,K]^T` — the linear layer (both operands
 /// K-contiguous, the cache-friendly orientation).
 pub fn mm_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), n * k);
-    let mut y = vec![0.0f32; m * n];
-    for i in 0..m {
-        let xi = &x[i * k..(i + 1) * k];
-        let yi = &mut y[i * n..(i + 1) * n];
-        for (j, yj) in yi.iter_mut().enumerate() {
-            let wj = &w[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (a, b) in xi.iter().zip(wj) {
-                acc += a * b;
-            }
-            *yj = acc;
-        }
-    }
-    y
+    gemm::mm_nt(x, w, m, k, n)
 }
 
 /// `dx[M,K] = g[M,N] @ w[N,K]` — input gradient of the linear layer.
 pub fn mm_nn(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    debug_assert_eq!(g.len(), m * n);
-    debug_assert_eq!(w.len(), n * k);
-    let mut dx = vec![0.0f32; m * k];
-    for i in 0..m {
-        let gi = &g[i * n..(i + 1) * n];
-        let di = &mut dx[i * k..(i + 1) * k];
-        for (j, gj) in gi.iter().enumerate() {
-            if *gj == 0.0 {
-                continue;
-            }
-            let wj = &w[j * k..(j + 1) * k];
-            for (d, wv) in di.iter_mut().zip(wj) {
-                *d += gj * wv;
-            }
-        }
-    }
-    dx
+    gemm::mm_nn(g, w, m, n, k)
 }
 
 /// `gw[N,K] = g[M,N]^T @ x[M,K]` — weight gradient of the linear layer.
 pub fn mm_tn(g: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    debug_assert_eq!(g.len(), m * n);
-    debug_assert_eq!(x.len(), m * k);
-    let mut gw = vec![0.0f32; n * k];
-    for i in 0..m {
-        let gi = &g[i * n..(i + 1) * n];
-        let xi = &x[i * k..(i + 1) * k];
-        for (j, gj) in gi.iter().enumerate() {
-            if *gj == 0.0 {
-                continue;
-            }
-            let row = &mut gw[j * k..(j + 1) * k];
-            for (d, xv) in row.iter_mut().zip(xi) {
-                *d += gj * xv;
-            }
-        }
-    }
-    gw
+    gemm::mm_tn(g, x, m, n, k)
 }
 
 /// Elementwise product (masked weight `W ∘ M`).
@@ -89,13 +46,7 @@ pub fn hadamard(a: &[f32], b: &[f32]) -> Vec<f32> {
 /// `y = x / sqrt(mean(x^2) + eps) * gain`, rows of length `d`.
 pub fn rmsnorm(x: &[f32], gain: &[f32], d: usize, eps: f64) -> Vec<f32> {
     let mut y = vec![0.0f32; x.len()];
-    for (xr, yr) in x.chunks_exact(d).zip(y.chunks_exact_mut(d)) {
-        let var: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
-        let r = 1.0 / (var + eps as f32).sqrt();
-        for ((yv, xv), gv) in yr.iter_mut().zip(xr).zip(gain) {
-            *yv = xv * r * gv;
-        }
-    }
+    fused::rmsnorm_into(x, gain, d, eps, &mut y);
     y
 }
 
@@ -306,14 +257,11 @@ pub fn attention(
         for qi in 0..s {
             // causal row: keys 0..=qi
             let row = &mut ph[qi * s..(qi + 1) * s];
+            attn::dots(&qh[qi * dh..(qi + 1) * dh], kh, dh, 0, qi + 1, row);
             let mut mx = f32::NEG_INFINITY;
-            for ki in 0..=qi {
-                let mut dot = 0.0f32;
-                for t in 0..dh {
-                    dot += qh[qi * dh + t] * kh[ki * dh + t];
-                }
-                row[ki] = dot * scale;
-                mx = mx.max(row[ki]);
+            for item in row.iter_mut().take(qi + 1) {
+                *item *= scale;
+                mx = mx.max(*item);
             }
             let mut z = 0.0f32;
             for item in row.iter_mut().take(qi + 1) {
@@ -328,12 +276,7 @@ pub fn attention(
                 *item = 0.0;
             }
             let orow = &mut oh[qi * dh..(qi + 1) * dh];
-            for ki in 0..=qi {
-                let p = row[ki];
-                for (ov, vv2) in orow.iter_mut().zip(&vv[ki * dh..(ki + 1) * dh]) {
-                    *ov += p * vv2;
-                }
-            }
+            attn::wsum(orow, &row[..qi + 1], vv, dh, 0);
         }
     }
     let y = merge_heads(&out_h, b, s, h, dh);
@@ -424,46 +367,62 @@ pub fn attention_cached_row(
     n_heads: usize,
     dh: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_heads * dh];
+    let mut row = Vec::new();
+    attention_cached_row_into(
+        q, k_new, v_new, k_cache, v_cache, len, n_heads, dh, &mut row, &mut out,
+    );
+    out
+}
+
+/// Allocation-free body of [`attention_cached_row`]: writes the `[d]`
+/// attention output into `out` (overwritten, not accumulated) and uses
+/// `row` as the reusable softmax scratch (resized to `len + 1`). The
+/// decode hot loops (`serve::engine::decode_step`, `block_fwd_cached`)
+/// call this directly with per-request scratch so the per-token
+/// temporaries of the old path disappear.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_cached_row_into(
+    q: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    len: usize,
+    n_heads: usize,
+    dh: usize,
+    row: &mut Vec<f32>,
+    out: &mut [f32],
+) {
     let d = n_heads * dh;
+    debug_assert_eq!(out.len(), d);
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut out = vec![0.0f32; d];
-    let mut row = vec![0.0f32; len + 1];
+    out.fill(0.0);
+    row.clear();
+    row.resize(len + 1, 0.0);
     for h in 0..n_heads {
         let off = h * dh;
         let qh = &q[off..off + dh];
+        // score row: cached keys 0..len at stride d, then the new key
+        attn::dots(qh, k_cache, d, off, len, row);
+        row[len] = attn::dot1(qh, &k_new[off..off + dh]);
         let mut mx = f32::NEG_INFINITY;
-        for j in 0..=len {
-            let kj = if j < len {
-                &k_cache[j * d + off..j * d + off + dh]
-            } else {
-                &k_new[off..off + dh]
-            };
-            let mut dot = 0.0f32;
-            for (a, b) in qh.iter().zip(kj) {
-                dot += a * b;
-            }
-            row[j] = dot * scale;
-            mx = mx.max(row[j]);
+        for item in row.iter_mut() {
+            *item *= scale;
+            mx = mx.max(*item);
         }
         let mut z = 0.0f32;
         for item in row.iter_mut() {
             *item = (*item - mx).exp();
             z += *item;
         }
-        let oh = &mut out[off..off + dh];
-        for j in 0..=len {
-            let p = row[j] / z;
-            let vj = if j < len {
-                &v_cache[j * d + off..j * d + off + dh]
-            } else {
-                &v_new[off..off + dh]
-            };
-            for (ov, vv) in oh.iter_mut().zip(vj) {
-                *ov += p * vv;
-            }
+        for item in row.iter_mut() {
+            *item /= z;
         }
+        let oh = &mut out[off..off + dh];
+        attn::wsum(oh, &row[..len], v_cache, d, off);
+        attn::axpy(oh, row[len], &v_new[off..off + dh]);
     }
-    out
 }
 
 // ---------------------------------------------------------------------------

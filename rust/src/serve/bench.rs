@@ -21,7 +21,7 @@ use crate::util::{mean, percentile, Stopwatch};
 
 use super::engine::{
     argmax, block_tensors, decode_step, decode_step_backend, greedy_backend, greedy_cached,
-    greedy_recompute, last_logits, prefill, score_nll, BlockTensors, ServeContext,
+    greedy_recompute, last_logits, prefill, score_nll, BlockTensors, DecodeScratch, ServeContext,
 };
 use super::ingest::Pacing;
 use super::kv::KvCache;
@@ -119,6 +119,7 @@ pub fn run_trace(
     let mut sched = Scheduler::new(scfg.clone(), requests)?;
     let mut active: Vec<Active> = Vec::new();
     let mut finished: Vec<FinishedRequest> = Vec::with_capacity(total);
+    let mut scratch = DecodeScratch::new();
     let sw = Stopwatch::start();
     // Work-conserving replay: when the system drains before the next
     // arrival, the trace clock jumps forward instead of busy-waiting, so
@@ -197,7 +198,7 @@ pub fn run_trace(
                     Some((engine, blocks)) => {
                         decode_step_backend(ctx, engine, blocks, &last, &mut caches)?
                     }
-                    None => decode_step(ctx, &last, &mut caches),
+                    None => decode_step(ctx, &last, &mut caches, &mut scratch),
                 }
             };
             gen_tokens += next.len();

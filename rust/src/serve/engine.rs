@@ -77,7 +77,11 @@ fn rope_row(row: &mut [f32], pos: usize, cos: &[f32], sin: &[f32], n_heads: usiz
 
 /// Causal attention over one sequence: roped `q`/`k` and raw `v`, all
 /// `[s, d]` with heads side by side in the feature dim. Returns `[s, d]`.
+/// Score/value inner loops are the shared [`crate::kernel::attn`] lanes,
+/// so prefill accumulates in the same ascending-position order as the
+/// cached decode row (the cached == recompute bitwise invariant).
 fn attention_causal(q: &[f32], k: &[f32], v: &[f32], s: usize, n_heads: usize, dh: usize) -> Vec<f32> {
+    use crate::kernel::attn;
     let d = n_heads * dh;
     let scale = 1.0 / (dh as f32).sqrt();
     let mut out = vec![0.0f32; s * d];
@@ -86,29 +90,22 @@ fn attention_causal(q: &[f32], k: &[f32], v: &[f32], s: usize, n_heads: usize, d
         let off = h * dh;
         for qi in 0..s {
             let qrow = &q[qi * d + off..qi * d + off + dh];
+            attn::dots(qrow, k, d, off, qi + 1, &mut row);
             let mut mx = f32::NEG_INFINITY;
-            for ki in 0..=qi {
-                let krow = &k[ki * d + off..ki * d + off + dh];
-                let mut dot = 0.0f32;
-                for (a, b) in qrow.iter().zip(krow) {
-                    dot += a * b;
-                }
-                row[ki] = dot * scale;
-                mx = mx.max(row[ki]);
+            for item in row.iter_mut().take(qi + 1) {
+                *item *= scale;
+                mx = mx.max(*item);
             }
             let mut z = 0.0f32;
             for item in row.iter_mut().take(qi + 1) {
                 *item = (*item - mx).exp();
                 z += *item;
             }
-            let orow = &mut out[qi * d + off..qi * d + off + dh];
-            for ki in 0..=qi {
-                let p = row[ki] / z;
-                let vrow = &v[ki * d + off..ki * d + off + dh];
-                for (ov, vv) in orow.iter_mut().zip(vrow) {
-                    *ov += p * vv;
-                }
+            for item in row.iter_mut().take(qi + 1) {
+                *item /= z;
             }
+            let orow = &mut out[qi * d + off..qi * d + off + dh];
+            attn::wsum(orow, &row[..qi + 1], v, d, off);
         }
     }
     out
@@ -187,14 +184,36 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
+/// Reusable per-decode-step scratch: the attention activations and the
+/// softmax row the cached-attention kernel works in. One instance lives
+/// for the whole generation loop (offline replay, online worker, greedy
+/// reference), so the decode hot loop performs no per-token scratch
+/// allocations — the buffers grow to the high-water mark once and are
+/// reused.
+#[derive(Default)]
+pub struct DecodeScratch {
+    /// `[nb, d]` attention output of the current block.
+    att: Vec<f32>,
+    /// softmax row of the cached-attention kernel (`len + 1` entries).
+    row: Vec<f32>,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
+    }
+}
+
 /// One continuous-batching decode step: each active request contributes
 /// its last token; linears run batched over all requests, attention runs
 /// per request against its own KV cache. Appends this position to every
-/// cache and returns the next (greedy) token per request.
+/// cache and returns the next (greedy) token per request. `scratch`
+/// carries the reusable attention buffers across steps.
 pub fn decode_step(
     ctx: &ServeContext,
     last_tokens: &[i32],
     caches: &mut [&mut KvCache],
+    scratch: &mut DecodeScratch,
 ) -> Vec<i32> {
     let cfg = &ctx.model.cfg;
     let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
@@ -211,12 +230,13 @@ pub fn decode_step(
         let mut q = blk.lin[0].forward(&h1, nb);
         let mut k = blk.lin[1].forward(&h1, nb);
         let v = blk.lin[2].forward(&h1, nb);
-        let mut att = vec![0.0f32; nb * d];
+        scratch.att.clear();
+        scratch.att.resize(nb * d, 0.0);
         for i in 0..nb {
             let p = positions[i];
             rope_row(&mut q[i * d..(i + 1) * d], p, &ctx.cos, &ctx.sin, nh, dh);
             rope_row(&mut k[i * d..(i + 1) * d], p, &ctx.cos, &ctx.sin, nh, dh);
-            let out = ops::attention_cached_row(
+            ops::attention_cached_row_into(
                 &q[i * d..(i + 1) * d],
                 &k[i * d..(i + 1) * d],
                 &v[i * d..(i + 1) * d],
@@ -225,11 +245,12 @@ pub fn decode_step(
                 p,
                 nh,
                 dh,
+                &mut scratch.row,
+                &mut scratch.att[i * d..(i + 1) * d],
             );
-            att[i * d..(i + 1) * d].copy_from_slice(&out);
             caches[i].write(l, p, &k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
         }
-        let o = blk.lin[3].forward(&att, nb);
+        let o = blk.lin[3].forward(&scratch.att, nb);
         let x2: Vec<f32> = x.iter().zip(&o).map(|(a, b)| a + b).collect();
         let h2 = ops::rmsnorm(&x2, &blk.norm2, d, eps);
         let gate = blk.lin[4].forward(&h2, nb);
@@ -342,10 +363,11 @@ pub fn greedy_cached(ctx: &ServeContext, prompt: &[i32], n: usize) -> Vec<i32> {
     let s = prompt.len();
     let mut prev = argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32;
     let mut out = vec![prev];
+    let mut scratch = DecodeScratch::new();
     for _ in 1..n {
         let last = [prev];
         let mut caches = [&mut cache];
-        prev = decode_step(ctx, &last, &mut caches)[0];
+        prev = decode_step(ctx, &last, &mut caches, &mut scratch)[0];
         out.push(prev);
     }
     out

@@ -53,7 +53,9 @@
 //!
 //! ```no_run
 //! use besa::model::{ModelConfig, ParamStore};
-//! use besa::serve::engine::{decode_step, last_logits, argmax, prefill, ServeContext};
+//! use besa::serve::engine::{
+//!     decode_step, last_logits, argmax, prefill, DecodeScratch, ServeContext,
+//! };
 //! use besa::serve::model::{PackedModel, WeightFormat};
 //!
 //! let cfg = ModelConfig::builtin("test").unwrap();
@@ -64,9 +66,10 @@
 //! let hidden = prefill(&ctx, &[1, 2, 3], &mut cache);
 //! let d = ctx.model.cfg.d_model;
 //! let mut tok = argmax(&last_logits(&ctx, &hidden[2 * d..3 * d])) as i32;
+//! let mut scratch = DecodeScratch::new();
 //! for _ in 0..8 {
 //!     let mut caches = [&mut cache];
-//!     tok = decode_step(&ctx, &[tok], &mut caches)[0];
+//!     tok = decode_step(&ctx, &[tok], &mut caches, &mut scratch)[0];
 //! }
 //! ```
 //!

@@ -36,7 +36,9 @@ use anyhow::{bail, Result};
 
 use crate::util::par::{locked, scoped_workers};
 
-use super::engine::{argmax, decode_step, last_logits, prefill, score_nll, ServeContext};
+use super::engine::{
+    argmax, decode_step, last_logits, prefill, score_nll, DecodeScratch, ServeContext,
+};
 use super::ingest::{run_producer, ArrivedRequest, IngestQueue, Pacing, Pop};
 use super::kv::KvCache;
 use super::scheduler::{ReqKind, Request, SchedulerConfig};
@@ -206,6 +208,7 @@ fn worker_loop(
     let mut active: Vec<Active> = Vec::new();
     let mut in_flight_tokens = 0usize;
     let mut finished: Vec<OnlineFinished> = Vec::new();
+    let mut scratch = DecodeScratch::new();
     let mut stats = WorkerStats {
         worker: wid,
         requests: 0,
@@ -294,7 +297,7 @@ fn worker_loop(
             let next = {
                 let mut caches: Vec<&mut KvCache> =
                     active.iter_mut().map(|x| &mut x.cache).collect();
-                decode_step(ctx, &last, &mut caches)
+                decode_step(ctx, &last, &mut caches, &mut scratch)
             };
             stats.gen_tokens += next.len();
             for (x, t) in active.iter_mut().zip(&next) {

@@ -48,12 +48,14 @@ fn row_blocks(rows: usize, macs: usize) -> Vec<(usize, usize)> {
 }
 
 /// One row block of `Y^T = W · X^T` over shared CSR structure
-/// (`row_ptr`/`col_idx`): per stored nonzero `k`, one AXPY of
-/// `value(k) * x_row` into the output row. The `value` accessor is the
-/// *only* difference between the plain and fused-dequant kernels —
-/// monomorphized and inlined away, so merging them costs nothing in the
-/// inner loop and both paths share one accumulation order (the
-/// bitwise-parity contract of [`crate::sparse`]).
+/// (`row_ptr`/`col_idx`). The `value` accessor is the *only* difference
+/// between the plain and fused-dequant kernels — monomorphized and
+/// inlined away, so merging them costs nothing in the inner loop and
+/// both paths share one accumulation order (the bitwise-parity contract
+/// of [`crate::sparse`]). The inner loop itself lives in
+/// [`crate::kernel::spmm`]: a scalar AXPY reference and a
+/// register-blocked token-stripe micro kernel, selected by `BESA_KERNEL`
+/// and bitwise equal.
 #[inline]
 fn spmm_rows_with<V: Fn(usize) -> f32>(
     row_ptr: &[u32],
@@ -65,18 +67,7 @@ fn spmm_rows_with<V: Fn(usize) -> f32>(
     hi_row: usize,
     out: &mut [f32],
 ) {
-    for r in lo_row..hi_row {
-        let yrow = &mut out[(r - lo_row) * t..(r - lo_row + 1) * t];
-        let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
-        for k in lo..hi {
-            let c = col_idx[k] as usize;
-            let v = value(k);
-            let xrow = &x[c * t..(c + 1) * t];
-            for (yv, xv) in yrow.iter_mut().zip(xrow) {
-                *yv += v * xv;
-            }
-        }
-    }
+    crate::kernel::spmm::spmm_rows(row_ptr, col_idx, value, x, t, lo_row, hi_row, out);
 }
 
 /// Row-blocked, optionally parallel driver shared by [`spmm`] and

@@ -1,0 +1,301 @@
+//! Parity pins for the shared microkernel layer (`besa::kernel`).
+//!
+//! Policy (docs/kernels.md): every micro kernel is **bitwise** equal to
+//! its scalar reference. Each test sweeps the edge shapes around the
+//! kernel's tiling boundaries — 0, 1, tile−1, tile, tile+1 and a
+//! non-multiple — plus degenerate sparse structures (empty CSR, single
+//! row), and the dispatching entry points must agree with the scalar
+//! reference no matter which mode the process runs in.
+//!
+//! Tiling constants under test (see `docs/kernels.md`): `mm_nt` packs
+//! MR=4 × NR=8 register blocks over KC=512 k-tiles; `mm_nn` / `mm_tn`
+//! stream CH=32-lane output chunks (CHD=16 for the f64 matmul); SpMM
+//! holds TW=32-wide token stripes; the attention weighted sum uses
+//! 16-lane chunks.
+
+use besa::kernel::{attn, fused, gemm, spmm};
+use besa::quant::QuantSpec;
+use besa::sparse::csr::{Csr, QuantCsr};
+use besa::tensor::Tensor;
+use besa::util::rng::Rng;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed(seed);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+/// Random values with an exact-zero fraction, to exercise the
+/// zero-skip branches of the AXPY-style kernels.
+fn randv_sparse(n: usize, zero_frac: f64, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed(seed);
+    (0..n)
+        .map(|_| if rng.f64() < zero_frac { 0.0 } else { rng.normal_f32() })
+        .collect()
+}
+
+fn randv64(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed(seed);
+    (0..n).map(|_| rng.normal_f32() as f64).collect()
+}
+
+fn random_sparse_tensor(rows: usize, cols: usize, sparsity: f64, seed: u64) -> Tensor {
+    Tensor::from_f32(&[rows, cols], randv_sparse(rows * cols, sparsity, seed))
+}
+
+/// mm_nt tile boundaries: MR=4 rows, NR=8 lanes, KC=512 k-tile. Every
+/// combination of {0, 1, tile−1, tile, tile+1, non-multiple} per dim.
+#[test]
+fn mm_nt_micro_bitwise_on_tile_edges() {
+    let ms = [0usize, 1, 3, 4, 5, 6];
+    let ns = [0usize, 1, 7, 8, 9, 12];
+    let ks = [0usize, 1, 100, 511, 512, 513];
+    for &m in &ms {
+        for &n in &ns {
+            for &k in &ks {
+                let x = randv(m * k, 1 + (m * 1000 + n * 10 + k) as u64);
+                let w = randv(n * k, 2 + (m * 1000 + n * 10 + k) as u64);
+                let scalar = gemm::mm_nt_scalar(&x, &w, m, k, n);
+                let micro = gemm::mm_nt_micro(&x, &w, m, k, n);
+                assert_eq!(scalar, micro, "mm_nt diverged at m={m} k={k} n={n}");
+            }
+        }
+    }
+}
+
+/// The matvec lane (4-dot unroll) must match its reference and the
+/// m=1 row of the packed GEMM — cached decode vs prefill rows depend
+/// on this agreement.
+#[test]
+fn matvec_lanes_bitwise_and_match_mm_nt_row() {
+    for &k in &[0usize, 1, 5, 32, 100] {
+        for &n in &[0usize, 1, 2, 3, 4, 5, 9] {
+            let x = randv(k, 7 + (k * 100 + n) as u64);
+            let w = randv(n * k, 8 + (k * 100 + n) as u64);
+            let mut ys = vec![0.0f32; n];
+            let mut ym = vec![0.0f32; n];
+            gemm::matvec_scalar_into(&x, &w, k, n, &mut ys);
+            gemm::matvec_micro_into(&x, &w, k, n, &mut ym);
+            assert_eq!(ys, ym, "matvec diverged at k={k} n={n}");
+            assert_eq!(ys, gemm::mm_nt_scalar(&x, &w, 1, k, n), "matvec != mm_nt(m=1)");
+        }
+    }
+}
+
+/// Backward GEMMs stream CH=32-lane output chunks; both skip exact-zero
+/// gradient entries, which must stay bitwise-neutral.
+#[test]
+fn mm_nn_mm_tn_bitwise_with_zero_skip() {
+    let dims = [0usize, 1, 3, 8];
+    let kdims = [0usize, 1, 31, 32, 33, 50];
+    for &m in &dims {
+        for &n in &dims {
+            for &k in &kdims {
+                let seed = (m * 10000 + n * 100 + k) as u64;
+                let g = randv_sparse(m * n, 0.3, 11 + seed);
+                let w = randv(n * k, 12 + seed);
+                let x = randv(m * k, 13 + seed);
+                assert_eq!(
+                    gemm::mm_nn_scalar(&g, &w, m, n, k),
+                    gemm::mm_nn_micro(&g, &w, m, n, k),
+                    "mm_nn diverged at m={m} n={n} k={k}"
+                );
+                assert_eq!(
+                    gemm::mm_tn_scalar(&g, &x, m, n, k),
+                    gemm::mm_tn_micro(&g, &x, m, n, k),
+                    "mm_tn diverged at m={m} n={n} k={k}"
+                );
+            }
+        }
+    }
+}
+
+/// f64 matmul (the `linalg::Mat` route) chunks CHD=16 output lanes and
+/// keeps the historical zero-skip on the left operand.
+#[test]
+fn matmul_f64_bitwise_on_chunk_edges() {
+    let dims = [0usize, 1, 3, 7];
+    let ndims = [0usize, 1, 15, 16, 17, 22];
+    for &m in &dims {
+        for &k in &dims {
+            for &n in &ndims {
+                let seed = (m * 10000 + k * 100 + n) as u64;
+                let mut a = randv64(m * k, 21 + seed);
+                // plant exact zeros to hit the skip branch
+                for v in a.iter_mut().step_by(3) {
+                    *v = 0.0;
+                }
+                let c = randv64(k * n, 22 + seed);
+                assert_eq!(
+                    gemm::matmul_f64_scalar(&a, &c, m, k, n),
+                    gemm::matmul_f64_micro(&a, &c, m, k, n),
+                    "matmul_f64 diverged at m={m} k={k} n={n}"
+                );
+            }
+        }
+    }
+}
+
+fn spmm_pair(csr: &Csr, t: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let x = randv(csr.cols * t, seed);
+    let mut ys = vec![0.0f32; csr.rows * t];
+    let mut ym = vec![0.0f32; csr.rows * t];
+    let value = |kk: usize| csr.values[kk];
+    spmm::spmm_rows_scalar(&csr.row_ptr, &csr.col_idx, value, &x, t, 0, csr.rows, &mut ys);
+    spmm::spmm_rows_micro(&csr.row_ptr, &csr.col_idx, value, &x, t, 0, csr.rows, &mut ym);
+    (ys, ym)
+}
+
+/// SpMM stripe boundaries (TW=32 tokens) plus degenerate structures:
+/// empty CSR (0% density), single-row matrices, fully dense rows.
+#[test]
+fn spmm_bitwise_on_stripe_edges_and_degenerate_csr() {
+    for &t in &[0usize, 1, 31, 32, 33, 64] {
+        for &(rows, cols, sparsity) in &[
+            (16usize, 12usize, 0.0f64), // fully dense
+            (16, 12, 0.5),
+            (16, 12, 1.0), // empty CSR: no stored nonzeros at all
+            (1, 24, 0.5),  // single row
+            (24, 1, 0.5),  // single column
+        ] {
+            let seed = (t * 1000 + rows * 10 + cols) as u64;
+            let csr = Csr::from_dense(&random_sparse_tensor(rows, cols, sparsity, 31 + seed));
+            let (ys, ym) = spmm_pair(&csr, t, 32 + seed);
+            assert_eq!(
+                ys, ym,
+                "spmm diverged at t={t} rows={rows} cols={cols} sparsity={sparsity}"
+            );
+        }
+    }
+}
+
+/// The fused-dequant accessor is a pure function of the nonzero index —
+/// parameterizing the value accessor must not change the stripe kernel.
+#[test]
+fn spmm_quant_accessor_bitwise() {
+    for &t in &[1usize, 5, 33] {
+        let q = QuantCsr::from_dense(&random_sparse_tensor(20, 14, 0.5, 41), QuantSpec::default());
+        let x = randv(14 * t, 42 + t as u64);
+        let mut ys = vec![0.0f32; 20 * t];
+        let mut ym = vec![0.0f32; 20 * t];
+        let value = |kk: usize| q.value(kk);
+        spmm::spmm_rows_scalar(&q.row_ptr, &q.col_idx, value, &x, t, 0, 20, &mut ys);
+        spmm::spmm_rows_micro(&q.row_ptr, &q.col_idx, value, &x, t, 0, 20, &mut ym);
+        assert_eq!(ys, ym, "quant spmm diverged at t={t}");
+    }
+}
+
+/// Attention score rows (4-key lock-step) and weighted value sums
+/// (16-lane chunks), including strided/offset head layouts.
+#[test]
+fn attn_rows_bitwise_on_chunk_edges() {
+    for &dh in &[1usize, 8, 15, 16, 17] {
+        for &nkeys in &[0usize, 1, 3, 4, 5, 8] {
+            // two heads per position: stride 2·dh, second head at offset dh
+            let stride = 2 * dh;
+            let seed = (dh * 100 + nkeys) as u64;
+            let q = randv(dh, 51 + seed);
+            let kmat = randv(nkeys * stride, 52 + seed);
+            let p = randv(nkeys, 53 + seed);
+            for &off in &[0usize, dh] {
+                let mut ys = vec![0.0f32; nkeys];
+                let mut ym = vec![0.0f32; nkeys];
+                attn::dots_scalar(&q, &kmat, stride, off, nkeys, &mut ys);
+                attn::dots_micro(&q, &kmat, stride, off, nkeys, &mut ym);
+                assert_eq!(ys, ym, "dots diverged at dh={dh} keys={nkeys} off={off}");
+
+                let mut os = vec![0.0f32; dh];
+                let mut om = vec![0.0f32; dh];
+                attn::wsum_scalar(&mut os, &p, &kmat, stride, off);
+                attn::wsum_micro(&mut om, &p, &kmat, stride, off);
+                assert_eq!(os, om, "wsum diverged at dh={dh} keys={nkeys} off={off}");
+            }
+        }
+    }
+}
+
+/// `wsum` accumulates into `out` (the cached-decode row adds the new
+/// key's value on top) — both kernels must honor a nonzero start.
+#[test]
+fn wsum_accumulates_from_nonzero_start() {
+    let (dh, nkeys) = (17usize, 6usize);
+    let init = randv(dh, 61);
+    let p = randv(nkeys, 62);
+    let vmat = randv(nkeys * dh, 63);
+    let mut os = init.clone();
+    let mut om = init.clone();
+    attn::wsum_scalar(&mut os, &p, &vmat, dh, 0);
+    attn::wsum_micro(&mut om, &p, &vmat, dh, 0);
+    assert_eq!(os, om);
+    assert_ne!(os, init, "wsum must have accumulated something");
+}
+
+/// The fused RMSNorm+matvec is the unfused pipeline minus allocations.
+#[test]
+fn fused_rmsnorm_matvec_matches_unfused() {
+    for &(d, rows) in &[(1usize, 1usize), (7, 5), (32, 9), (33, 8)] {
+        let x = randv(d, 71 + d as u64);
+        let gain = randv(d, 72 + d as u64);
+        let w = randv(rows * d, 73 + d as u64);
+        let eps = 1e-5f64;
+
+        let mut h = vec![0.0f32; d];
+        let mut fused_out = vec![0.0f32; rows];
+        fused::rmsnorm_matvec(&x, &gain, eps, &mut h, &w, rows, &mut fused_out);
+
+        let mut norm = vec![0.0f32; d];
+        fused::rmsnorm_into(&x, &gain, d, eps, &mut norm);
+        assert_eq!(h, norm, "scratch row must hold the normalized activation");
+        let unfused = gemm::mm_nt_scalar(&norm, &w, 1, d, rows);
+        assert_eq!(fused_out, unfused, "fused path diverged at d={d} rows={rows}");
+    }
+}
+
+/// Whatever `BESA_KERNEL` resolves to in this process, every dispatching
+/// entry point must reproduce the scalar reference bitwise — this is the
+/// documented per-kernel parity policy, checked end to end.
+#[test]
+fn dispatchers_match_scalar_reference_in_any_mode() {
+    let (m, k, n) = (5usize, 33usize, 9usize);
+    let x = randv(m * k, 81);
+    let w = randv(n * k, 82);
+    assert_eq!(gemm::mm_nt(&x, &w, m, k, n), gemm::mm_nt_scalar(&x, &w, m, k, n));
+
+    let g = randv_sparse(m * n, 0.3, 83);
+    assert_eq!(gemm::mm_nn(&g, &w, m, n, k), gemm::mm_nn_scalar(&g, &w, m, n, k));
+    assert_eq!(gemm::mm_tn(&g, &x, m, n, k), gemm::mm_tn_scalar(&g, &x, m, n, k));
+
+    let a = randv64(m * k, 84);
+    let c = randv64(k * n, 85);
+    assert_eq!(gemm::matmul_f64(&a, &c, m, k, n), gemm::matmul_f64_scalar(&a, &c, m, k, n));
+
+    let mut yd = vec![0.0f32; n];
+    let mut ysc = vec![0.0f32; n];
+    gemm::matvec_into(&x[..k], &w, k, n, &mut yd);
+    gemm::matvec_scalar_into(&x[..k], &w, k, n, &mut ysc);
+    assert_eq!(yd, ysc);
+
+    let csr = Csr::from_dense(&random_sparse_tensor(10, 8, 0.5, 86));
+    let t = 6;
+    let xt = randv(8 * t, 87);
+    let value = |kk: usize| csr.values[kk];
+    let mut sd = vec![0.0f32; 10 * t];
+    let mut ss = vec![0.0f32; 10 * t];
+    spmm::spmm_rows(&csr.row_ptr, &csr.col_idx, value, &xt, t, 0, 10, &mut sd);
+    spmm::spmm_rows_scalar(&csr.row_ptr, &csr.col_idx, value, &xt, t, 0, 10, &mut ss);
+    assert_eq!(sd, ss);
+
+    let (dh, nkeys) = (16usize, 5usize);
+    let q = randv(dh, 88);
+    let kmat = randv(nkeys * dh, 89);
+    let p = randv(nkeys, 90);
+    let mut dd = vec![0.0f32; nkeys];
+    let mut ds = vec![0.0f32; nkeys];
+    attn::dots(&q, &kmat, dh, 0, nkeys, &mut dd);
+    attn::dots_scalar(&q, &kmat, dh, 0, nkeys, &mut ds);
+    assert_eq!(dd, ds);
+    let mut wd = vec![0.0f32; dh];
+    let mut ws = vec![0.0f32; dh];
+    attn::wsum(&mut wd, &p, &kmat, dh, 0);
+    attn::wsum_scalar(&mut ws, &p, &kmat, dh, 0);
+    assert_eq!(wd, ws);
+}
