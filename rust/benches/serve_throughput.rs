@@ -150,6 +150,7 @@ fn main() {
             workers,
             sched: SchedulerConfig { token_budget: 512, max_batch: 8 },
             pacing: Pacing::Replay { time_scale: 0.0 },
+            ..OnlineConfig::default()
         };
         b.run_throughput(
             &format!("online x{} sparse workers={workers}", trace_cfg.n_requests),

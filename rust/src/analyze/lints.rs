@@ -3,9 +3,9 @@
 //! rustdoc promises.
 //!
 //! * `hot-path-panic` — no `.unwrap()` / `.expect()` / `panic!`-family
-//!   macros in `serve/`, `sparse/`, `runtime/native/`, `kernel/`:
-//!   request-serving and kernel code must propagate errors, not abort
-//!   mid-batch.
+//!   macros in `serve/`, `sparse/`, `runtime/native/`, `kernel/`,
+//!   `telemetry/`: request-serving and kernel code must propagate
+//!   errors, not abort mid-batch.
 //! * `nondeterministic-iter` — no `HashMap` / `HashSet` in the same
 //!   parity-pinned modules: iteration order would silently break the
 //!   sparse==dense and sharded==single-worker bit-exactness guarantees.
@@ -19,7 +19,9 @@
 //!   unordered parallel float reduction is not reproducible.
 //! * `wallclock-in-replay` — no `Instant` / `SystemTime` in deterministic
 //!   replay paths (`serve/` outside the wall-clock-by-design ingest /
-//!   online / bench modules, plus `sparse/` and `runtime/native/`).
+//!   online / bench modules and the socket front end `serve/net/`, plus
+//!   `sparse/` and `runtime/native/`; `telemetry/` is excluded — span
+//!   timing *is* wall-clock measurement).
 //!
 //! `#[cfg(test)]` items are skipped entirely, and any finding can be
 //! silenced with an inline `// besa-lint: allow(<rule>)` comment on the
@@ -188,14 +190,20 @@ fn hot_path_scope(path: &str) -> bool {
         || path.starts_with("sparse/")
         || path.starts_with("runtime/native/")
         || path.starts_with("kernel/")
+        || path.starts_with("telemetry/")
 }
 
-/// Deterministic-replay paths: the hot-path modules minus the three serve
-/// modules that measure wall-clock time by design (arrival pacing,
-/// latency metrics, throughput benchmarks).
+/// Deterministic-replay paths: the hot-path modules minus the serve
+/// modules that measure wall-clock time by design — arrival pacing,
+/// latency metrics, throughput benchmarks, the socket front end
+/// (`serve/net/`: socket deadlines and drain timeouts are wall-clock by
+/// nature), and `telemetry/` (span timing *is* wall-clock measurement).
 fn replay_scope(path: &str) -> bool {
     const WALLCLOCK_BY_DESIGN: [&str; 3] = ["serve/ingest.rs", "serve/online.rs", "serve/bench.rs"];
-    hot_path_scope(path) && !WALLCLOCK_BY_DESIGN.contains(&path)
+    hot_path_scope(path)
+        && !WALLCLOCK_BY_DESIGN.contains(&path)
+        && !path.starts_with("serve/net/")
+        && !path.starts_with("telemetry/")
 }
 
 // ---- simple per-token rules ------------------------------------------
@@ -715,6 +723,26 @@ mod tests {
         assert_eq!(rules(&f), vec!["wallclock-in-replay"]);
         let (f2, _) = run_one("serve/bench.rs", src);
         assert!(f2.is_empty(), "bench measures wall-clock by design");
+    }
+
+    #[test]
+    fn wallclock_scope_excludes_net_and_telemetry() {
+        let src = "fn f() { let _t = Instant::now(); }";
+        let (f, _) = run_one("serve/net/server.rs", src);
+        assert!(f.is_empty(), "socket deadlines are wall-clock by nature");
+        let (f2, _) = run_one("telemetry/mod.rs", src);
+        assert!(f2.is_empty(), "span timing is wall-clock measurement");
+    }
+
+    #[test]
+    fn telemetry_and_net_are_in_hot_path_scope() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }";
+        let (f, _) = run_one("telemetry/mod.rs", src);
+        assert_eq!(rules(&f), vec!["hot-path-panic"]);
+        let (f2, _) = run_one("serve/net/proto.rs", src);
+        assert_eq!(rules(&f2), vec!["hot-path-panic"]);
+        let (f3, _) = run_one("serve/net/server.rs", "use std::collections::HashMap;\n");
+        assert_eq!(rules(&f3), vec!["nondeterministic-iter"]);
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! besa simulate  --config md --ckpt runs/md-besa.bst
 //! besa serve-bench --config sm --ckpt runs/sm-besa.bst --modes dense,sparse,quant
 //! besa serve-bench --config sm --ckpt runs/sm-besa.bst --async --workers 4
+//! besa serve-bench --config sm --ckpt runs/sm-besa.bst --overload-sweep --deadline-ms 250
+//! besa serve-net  --smoke --drive --policy edf --deadline-ms 40 --trace-out spans.jsonl
 //! besa kernel-bench --json BENCH_kernels.json
 //! besa exp       table1|table2|table3|table4|table5|table6|fig1a|fig1b|fig3|fig4  [--configs sm,md]
 //! ```
@@ -15,6 +17,7 @@
 pub mod analyze;
 pub mod exp;
 pub mod kernels;
+pub mod net;
 pub mod runs;
 
 use anyhow::{bail, Result};
@@ -35,6 +38,7 @@ pub fn main(argv: Vec<String>) -> Result<()> {
         "probe" => runs::cmd_probe(&args),
         "simulate" => runs::cmd_simulate(&args),
         "serve-bench" => runs::cmd_serve_bench(&args),
+        "serve-net" => net::cmd_serve_net(&args),
         "kernel-bench" => kernels::cmd_kernel_bench(&args),
         "analyze" => analyze::cmd_analyze(&args),
         "exp" => exp::dispatch(&args),
@@ -69,7 +73,19 @@ fn print_help() {
          \x20            sharded workers (--time-scale <x>: 0 floods the queue;\n\
          \x20            --closed-loop <clients>; --async-format dense|sparse|quant),\n\
          \x20            reported at 1 and n workers with the scaling + queue-wait\n\
-         \x20            breakdown\n\
+         \x20            breakdown. --overload-sweep adds goodput-vs-offered-load\n\
+         \x20            curves per queue policy (--deadline-ms <ms>;\n\
+         \x20            --overload-multipliers 0.5,1,2,4,8; --policies fifo,edf;\n\
+         \x20            --queue-cap <n>). --trace-out <path> dumps per-request\n\
+         \x20            telemetry spans as JSONL (docs/telemetry.md)\n\
+         \x20 serve-net  TCP front end over the same workers: line-delimited JSON\n\
+         \x20            + an HTTP/1.1 subset (GET /healthz, POST /v1/generate),\n\
+         \x20            per-client token buckets (--bucket-rate, --bucket-burst),\n\
+         \x20            deadline shedding (--deadline-reject), bounded queue\n\
+         \x20            (--queue-cap), --policy fifo|priority|edf, graceful drain\n\
+         \x20            (--drain-deadline-s). --drive runs the hermetic loopback\n\
+         \x20            self-test (--clients, --requests, --deadline-ms);\n\
+         \x20            --addr <ip:port> binds (port 0 = ephemeral); docs/serving.md\n\
          \x20 kernel-bench  roofline sweep of the shared microkernel layer:\n\
          \x20            scalar reference vs micro kernel per family (matvec,\n\
          \x20            GEMMs, CSR/quant SpMM, attention rows), bitwise parity\n\

@@ -1,0 +1,250 @@
+//! `besa serve-net`: stand up the TCP front end ([`crate::serve::net`])
+//! over a pruned checkpoint — or, with `--drive`, run a hermetic
+//! loopback self-test: spawn the server on an ephemeral port, drive a
+//! seeded trace through concurrent line-protocol clients, then shut
+//! down gracefully and verify the overload-control accounting
+//! (`queued == finished + shed`, clean drain, telemetry non-empty).
+//! This is what the CI serve-net smoke job runs.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ParamStore;
+use crate::serve::bench::magnitude_prune_in_place;
+use crate::serve::net::{request_line, WireEvent};
+use crate::serve::{
+    poisson_trace, LineClient, NetConfig, NetServer, NetStats, PackedModel, Policy, Request,
+    SchedulerConfig, ServeContext, TraceConfig, WeightFormat,
+};
+use crate::telemetry::Tracer;
+use crate::util::args::Args;
+use crate::util::par::scoped_workers;
+
+use super::runs::{engine_for, load_params};
+
+/// What one drive client observed, summed over its share of the trace.
+#[derive(Debug, Default, Clone, Copy)]
+struct DriveCounts {
+    done: usize,
+    within_deadline: usize,
+    shed: usize,
+    rejected: usize,
+    errors: usize,
+}
+
+pub fn cmd_serve_net(args: &Args) -> Result<()> {
+    let smoke = args.has("smoke");
+    let config = args.str_or("config", if smoke { "test" } else { "sm" });
+    let engine = engine_for(args, &config)?;
+    let cfg = engine.config().clone();
+
+    let params = if smoke || args.has("synthetic") {
+        let mut p = ParamStore::init(&cfg, args.u64_or("seed", 1234)?);
+        magnitude_prune_in_place(&mut p, &cfg, args.f64_or("sparsity", 0.5)?)?;
+        p
+    } else {
+        load_params(args, &engine)?
+    };
+
+    let format = match args.str_or("format", "sparse").as_str() {
+        "dense" => WeightFormat::Dense,
+        "sparse" | "csr" => WeightFormat::Csr,
+        "quant" => WeightFormat::Quant(crate::quant::QuantSpec::default()),
+        other => bail!("--format must be dense|sparse|quant, got '{other}'"),
+    };
+    let policy = {
+        let name = args.str_or("policy", "fifo");
+        Policy::from_name(&name)
+            .with_context(|| format!("--policy must be fifo|priority|edf, got '{name}'"))?
+    };
+    let sched = SchedulerConfig {
+        token_budget: args.usize_or("token-budget", if smoke { 256 } else { 1024 })?,
+        max_batch: args.usize_or("max-batch", 8)?,
+    };
+    let ncfg = NetConfig {
+        addr: args.str_or("addr", "127.0.0.1:0"),
+        workers: args.usize_or("workers", 2)?,
+        sched,
+        policy,
+        queue_cap: args.usize_or("queue-cap", 256)?,
+        bucket_rate: args.f64_or("bucket-rate", 0.0)?,
+        bucket_burst: args.f64_or("bucket-burst", 0.0)?,
+        admit_reject: args.has("deadline-reject"),
+        drain_deadline: Duration::from_secs_f64(args.f64_or("drain-deadline-s", 10.0)?),
+        ..NetConfig::default()
+    };
+
+    // every admissible request must fit the smallest replica
+    let max_pos = args.usize_or("max-pos", ncfg.sched.token_budget)?;
+    let ctxs = (0..ncfg.workers)
+        .map(|_| Ok(ServeContext::new(PackedModel::materialize(&params, &cfg, format)?, max_pos)))
+        .collect::<Result<Vec<_>>>()?;
+
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let tracer = trace_out.as_ref().map(|_| Arc::new(Tracer::new()));
+
+    let server = NetServer::start(ctxs, ncfg.clone(), tracer.clone())?;
+    let addr = server.addr();
+    println!(
+        "serve-net: {} on {addr} ({} workers, policy {}, queue cap {})",
+        format.name(),
+        ncfg.workers,
+        ncfg.policy.name(),
+        ncfg.queue_cap
+    );
+
+    let stats = if args.has("drive") {
+        drive_loopback(args, smoke, server, &addr)?
+    } else {
+        let secs = args.f64_or("duration-s", 5.0)?;
+        println!("serving for {secs:.1}s (pass --drive for the loopback self-test)");
+        std::thread::sleep(Duration::from_secs_f64(secs));
+        server.shutdown()?
+    };
+
+    print_stats(&stats);
+    if !stats.drained_clean {
+        bail!("graceful drain missed the deadline: connections still open at shutdown");
+    }
+    if !stats.accounted() {
+        bail!(
+            "accounting violated: {} queued but {} finished + {} shed",
+            stats.requests,
+            stats.finished.len(),
+            stats.shed.len()
+        );
+    }
+    if let (Some(path), Some(t)) = (&trace_out, &tracer) {
+        let n = t.write_jsonl(path)?;
+        println!("[telemetry: {n} spans -> {}]", path.display());
+        if n == 0 {
+            bail!("telemetry dump is empty — spans were never recorded");
+        }
+    }
+    Ok(())
+}
+
+/// The loopback self-test: drive a seeded trace through `--clients`
+/// concurrent line-protocol connections as fast as they will go, then
+/// drain and cross-check the client-side event counts against the
+/// server-side accounting.
+fn drive_loopback(
+    args: &Args,
+    smoke: bool,
+    server: NetServer,
+    addr: &std::net::SocketAddr,
+) -> Result<NetStats> {
+    let deadline_ms = args.f64_or("deadline-ms", if smoke { 250.0 } else { 0.0 })?;
+    let (d_req, d_pmin, d_pmax, d_gmin, d_gmax) = if smoke {
+        (32, 8, 16, 4, 8)
+    } else {
+        (128, 16, 48, 8, 24)
+    };
+    let nclients = args.usize_or("clients", 4)?.max(1);
+    let tcfg = TraceConfig {
+        n_requests: args.usize_or("requests", d_req)?,
+        rate: args.f64_or("rate", 256.0)?,
+        prompt_min: args.usize_or("prompt-min", d_pmin)?,
+        prompt_max: args.usize_or("prompt-max", d_pmax)?,
+        gen_min: args.usize_or("gen-min", d_gmin)?,
+        gen_max: args.usize_or("gen-max", d_gmax)?,
+        score_fraction: args.f64_or("score-fraction", 0.25)?,
+        burst: args.usize_or("burst", 1)?,
+        seed: args.u64_or("trace-seed", 0x7ACE)?,
+        deadline_min_s: deadline_ms.max(0.0) / 1e3,
+        deadline_max_s: deadline_ms.max(0.0) / 1e3,
+        priority_tiers: args.usize_or("priority-tiers", 1)?.clamp(1, 255) as u8,
+        clients: nclients as u32,
+    };
+    let requests = poisson_trace(&tcfg);
+    let total = requests.len();
+    println!("driving {total} requests over {nclients} clients (deadline {deadline_ms:.0} ms)");
+
+    // shard round-robin by trace id; each client runs its share
+    // sequentially, so concurrency (and queue pressure) == `nclients`
+    let results = scoped_workers(nclients, |c| -> Result<DriveCounts> {
+        let mut client = LineClient::connect(addr)?;
+        let mut counts = DriveCounts::default();
+        for req in requests.iter().filter(|r| r.id % nclients == c) {
+            drive_one(&mut client, req, &mut counts)?;
+        }
+        Ok(counts)
+    });
+    let mut agg = DriveCounts::default();
+    for r in results {
+        let c = r?;
+        agg.done += c.done;
+        agg.within_deadline += c.within_deadline;
+        agg.shed += c.shed;
+        agg.rejected += c.rejected;
+        agg.errors += c.errors;
+    }
+    println!(
+        "clients saw: {} done ({} within deadline), {} shed, {} rejected, {} errors",
+        agg.done, agg.within_deadline, agg.shed, agg.rejected, agg.errors
+    );
+    let stats = server.shutdown()?;
+    if agg.done + agg.shed + agg.rejected + agg.errors != total {
+        bail!(
+            "client accounting violated: {} events for {} requests",
+            agg.done + agg.shed + agg.rejected + agg.errors,
+            total
+        );
+    }
+    if agg.done != stats.finished.len() || agg.shed != stats.shed.len() {
+        bail!(
+            "client/server disagree: clients saw {} done / {} shed, server {} / {}",
+            agg.done,
+            agg.shed,
+            stats.finished.len(),
+            stats.shed.len()
+        );
+    }
+    Ok(stats)
+}
+
+/// Send one trace request and fold its terminal event into `counts`.
+fn drive_one(client: &mut LineClient, req: &Request, counts: &mut DriveCounts) -> Result<()> {
+    let events = client.request(&request_line(req.id as u64, req))?;
+    match events.last() {
+        Some(WireEvent::Done { deadline_met, .. }) => {
+            counts.done += 1;
+            if *deadline_met {
+                counts.within_deadline += 1;
+            }
+        }
+        Some(WireEvent::Shed { .. }) => counts.shed += 1,
+        Some(WireEvent::Rejected { .. }) => counts.rejected += 1,
+        Some(WireEvent::Error { .. }) => counts.errors += 1,
+        Some(WireEvent::Token { .. }) | None => {
+            bail!("request {} ended without a terminal event", req.id)
+        }
+    }
+    Ok(())
+}
+
+fn print_stats(stats: &NetStats) {
+    let tokens: usize = stats.finished.iter().map(|f| f.tokens.len()).sum();
+    println!(
+        "server: {} conns, {} queued, {} finished ({} tokens), {} shed, {} queue-rejected",
+        stats.accepted_conns,
+        stats.requests,
+        stats.finished.len(),
+        tokens,
+        stats.shed.len(),
+        stats.rejected.len()
+    );
+    println!(
+        "        {} rate-limited, {} parse errors, drained clean: {}",
+        stats.rejected_rate, stats.parse_errors, stats.drained_clean
+    );
+    for w in &stats.workers {
+        println!(
+            "  worker {}: {} requests, {} prompt + {} gen tokens, busy {:.3}s",
+            w.worker, w.requests, w.prompt_tokens, w.gen_tokens, w.busy_s
+        );
+    }
+}

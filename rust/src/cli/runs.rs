@@ -243,12 +243,17 @@ pub fn cmd_probe(args: &Args) -> Result<()> {
 /// latency / speedup (+ `BENCH_serve.json`). `--async` adds the online
 /// multi-worker mode: wall-clock ingestion (`--time-scale`, or
 /// `--closed-loop N` clients) into `--workers` sharded workers, reported
-/// at one worker and at N for the scaling. `--smoke`/`--synthetic` build
+/// at one worker and at N for the scaling. `--overload-sweep` adds
+/// goodput-vs-offered-load curves per queue policy (`--deadline-ms`,
+/// `--overload-multipliers`, `--policies`). `--trace-out <path>` dumps
+/// per-request telemetry spans as JSONL. `--smoke`/`--synthetic` build
 /// a magnitude-pruned checkpoint in process so the run is hermetic.
 pub fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use crate::serve::bench::{magnitude_prune_in_place, OnlineBenchConfig, ServeMode};
+    use crate::serve::bench::{
+        magnitude_prune_in_place, OnlineBenchConfig, OverloadSweepConfig, ServeMode,
+    };
     use crate::serve::model::WeightFormat;
-    use crate::serve::{Pacing, SchedulerConfig, ServeBenchConfig, TraceConfig};
+    use crate::serve::{Pacing, Policy, SchedulerConfig, ServeBenchConfig, TraceConfig};
 
     let smoke = args.has("smoke");
     let config = args.str_or("config", if smoke { "test" } else { "sm" });
@@ -280,6 +285,9 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     } else {
         (48, 24.0, 16, cfg.seq_len.max(17) - 1, 8, 24)
     };
+    // base-trace QoS: `--deadline-ms 0` (the default) disables deadlines;
+    // the overload sweep carries its own deadline default below
+    let deadline_ms = args.f64_or("deadline-ms", 0.0)?;
     let trace = TraceConfig {
         n_requests: args.usize_or("requests", d_req)?,
         rate: args.f64_or("rate", d_rate)?,
@@ -290,22 +298,35 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         score_fraction: args.f64_or("score-fraction", 0.25)?,
         burst: args.usize_or("burst", 1)?,
         seed: args.u64_or("trace-seed", 0x7ACE)?,
+        deadline_min_s: deadline_ms.max(0.0) / 1e3,
+        deadline_max_s: deadline_ms.max(0.0) / 1e3,
+        priority_tiers: args.usize_or("priority-tiers", 1)?.clamp(1, 255) as u8,
+        clients: args.usize_or("trace-clients", 1)?.max(1) as u32,
     };
     let sched = SchedulerConfig {
         token_budget: args.usize_or("token-budget", if smoke { 256 } else { 1024 })?,
         max_batch: args.usize_or("max-batch", 8)?,
     };
+    let policy = {
+        let name = args.str_or("policy", "fifo");
+        Policy::from_name(&name)
+            .with_context(|| format!("--policy must be fifo|priority|edf, got '{name}'"))?
+    };
+    let queue_cap = args.usize_or("queue-cap", 0)?;
     // `--async`: the online multi-worker section. Pacing is closed-loop
     // when `--closed-loop N` is given, else wall-clock trace replay at
     // `--time-scale` (smoke defaults to 0 — flood the queue and measure
     // pure drain throughput, the deterministic-duration CI mode).
-    let online = if args.has("async") {
-        let format = match args.str_or("async-format", "sparse").as_str() {
+    let parse_format = |flag: &str, name: String| -> Result<WeightFormat> {
+        Ok(match name.as_str() {
             "dense" => WeightFormat::Dense,
             "sparse" | "csr" => WeightFormat::Csr,
             "quant" => WeightFormat::Quant(crate::quant::QuantSpec::default()),
-            other => bail!("--async-format must be dense|sparse|quant, got '{other}'"),
-        };
+            other => bail!("--{flag} must be dense|sparse|quant, got '{other}'"),
+        })
+    };
+    let online = if args.has("async") {
+        let format = parse_format("async-format", args.str_or("async-format", "sparse"))?;
         let clients = args.usize_or("closed-loop", 0)?;
         let pacing = if clients > 0 {
             Pacing::ClosedLoop { clients }
@@ -314,7 +335,52 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
                 time_scale: args.f64_or("time-scale", if smoke { 0.0 } else { 1.0 })?,
             }
         };
-        Some(OnlineBenchConfig { workers: args.usize_or("workers", 4)?, format, pacing })
+        Some(OnlineBenchConfig {
+            workers: args.usize_or("workers", 4)?,
+            format,
+            pacing,
+            policy,
+            queue_cap,
+        })
+    } else {
+        None
+    };
+    // `--overload-sweep`: goodput-vs-offered-load curves for every queue
+    // policy (or `--policies fifo,edf`), replaying one seeded trace at
+    // each `--overload-multipliers` point under a uniform `--deadline-ms`
+    let overload = if args.has("overload-sweep") {
+        let defaults = OverloadSweepConfig::default();
+        let multipliers = match args.get("overload-multipliers") {
+            None => defaults.multipliers,
+            Some(_) => args
+                .list_or("overload-multipliers", &[])
+                .iter()
+                .map(|m| {
+                    m.parse::<f64>()
+                        .with_context(|| format!("--overload-multipliers: bad float '{m}'"))
+                })
+                .collect::<Result<_>>()?,
+        };
+        let policies = match args.get("policies") {
+            None => defaults.policies,
+            Some(_) => args
+                .list_or("policies", &[])
+                .iter()
+                .map(|p| {
+                    Policy::from_name(p)
+                        .with_context(|| format!("--policies: unknown policy '{p}'"))
+                })
+                .collect::<Result<_>>()?,
+        };
+        Some(OverloadSweepConfig {
+            multipliers,
+            policies,
+            workers: args.usize_or("workers", defaults.workers)?,
+            format: parse_format("sweep-format", args.str_or("sweep-format", "sparse"))?,
+            deadline_s: if deadline_ms > 0.0 { deadline_ms / 1e3 } else { defaults.deadline_s },
+            queue_cap: args.usize_or("queue-cap", defaults.queue_cap)?,
+            admit_reject: !args.has("no-admit-reject"),
+        })
     } else {
         None
     };
@@ -325,11 +391,13 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         quant: crate::quant::QuantSpec::default(),
         parity_decode_tokens: args.usize_or("parity-tokens", if smoke { 4 } else { 8 })?,
         online,
+        overload,
         json_path: match args.get("json") {
             Some("none") => None,
             Some(p) => Some(PathBuf::from(p)),
             None => Some(PathBuf::from("BENCH_serve.json")),
         },
+        trace_out: args.get("trace-out").map(PathBuf::from),
     };
     crate::serve::bench::run_serve_bench(&engine, &params, &bcfg)?;
     Ok(())

@@ -47,7 +47,15 @@
 //!   the online mode (`--async`): wall-clock request ingestion
 //!   (Poisson / bursty / closed-loop) into a sharded multi-worker pool
 //!   with per-worker continuous batching and a queue-wait vs compute
-//!   metrics split.
+//!   metrics split. [`serve::net`] puts a real TCP front end on the same
+//!   engine (line-delimited JSON + an HTTP/1.1-subset adapter, `besa
+//!   serve-net`) with overload control: per-client token buckets,
+//!   deadline shedding, bounded-queue backpressure, FIFO / priority /
+//!   EDF queue policies and graceful drain (see `docs/serving.md`).
+//! * **[`telemetry`]** — per-request span timing (accept / parse / queue
+//!   / admit / prefill / decode / serialize) buffered per worker and
+//!   dumped as JSONL via `--trace-out` (label discipline in
+//!   `docs/telemetry.md`).
 //!
 //! Cross-backend correctness is pinned by `tests/native_parity.rs`:
 //! golden vectors generated from a float64 reference transliteration of
@@ -76,6 +84,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod sparse;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 

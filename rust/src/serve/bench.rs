@@ -10,11 +10,12 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::model::{ModelConfig, ParamStore, LAYER_NAMES};
 use crate::quant::QuantSpec;
 use crate::runtime::Engine;
+use crate::telemetry::Tracer;
 use crate::util::json::{self, Json};
 use crate::util::par::par_map;
 use crate::util::{mean, percentile, Stopwatch};
@@ -26,8 +27,8 @@ use super::engine::{
 use super::ingest::Pacing;
 use super::kv::KvCache;
 use super::model::{PackedModel, WeightFormat};
-use super::online::{serve_online, OnlineConfig, OnlineStats};
-use super::scheduler::{ReqKind, Request, Scheduler, SchedulerConfig};
+use super::online::{serve_online_traced, OnlineConfig, OnlineStats};
+use super::scheduler::{Policy, ReqKind, Request, Scheduler, SchedulerConfig};
 use super::trace::{poisson_trace, TraceConfig};
 
 /// Which execution path serves the trace.
@@ -283,6 +284,10 @@ pub struct OnlineBenchConfig {
     /// weight format every replica packs
     pub format: WeightFormat,
     pub pacing: Pacing,
+    /// arrival-queue pop order (output-invariant)
+    pub policy: Policy,
+    /// arrival-queue capacity; 0 = unbounded
+    pub queue_cap: usize,
 }
 
 impl Default for OnlineBenchConfig {
@@ -291,6 +296,46 @@ impl Default for OnlineBenchConfig {
             workers: 4,
             format: WeightFormat::Csr,
             pacing: Pacing::Replay { time_scale: 1.0 },
+            policy: Policy::Fifo,
+            queue_cap: 0,
+        }
+    }
+}
+
+/// The overload section (`besa serve-bench --overload-sweep`): the same
+/// seeded, deadline-carrying trace replayed at several offered-load
+/// multipliers, once per queue policy, measuring *goodput* — requests
+/// completed within their deadline per second — plus shed/reject counts.
+/// The interesting claim is graceful degradation: past saturation,
+/// goodput should flatten (work is shed early) instead of collapsing
+/// (everything finishes late).
+pub struct OverloadSweepConfig {
+    /// offered-load multipliers (1.0 = the trace's own rate; replayed at
+    /// `time_scale = 1/m`)
+    pub multipliers: Vec<f64>,
+    /// queue policies to compare
+    pub policies: Vec<Policy>,
+    pub workers: usize,
+    /// weight format every replica packs
+    pub format: WeightFormat,
+    /// per-request completion deadline, seconds
+    pub deadline_s: f64,
+    /// bounded arrival-queue capacity
+    pub queue_cap: usize,
+    /// predictive admit-time shedding
+    pub admit_reject: bool,
+}
+
+impl Default for OverloadSweepConfig {
+    fn default() -> Self {
+        OverloadSweepConfig {
+            multipliers: vec![0.5, 1.0, 2.0, 4.0, 8.0],
+            policies: Policy::ALL.to_vec(),
+            workers: 2,
+            format: WeightFormat::Csr,
+            deadline_s: 0.25,
+            queue_cap: 64,
+            admit_reject: true,
         }
     }
 }
@@ -305,8 +350,12 @@ pub struct ServeBenchConfig {
     pub parity_decode_tokens: usize,
     /// run the async multi-worker section too
     pub online: Option<OnlineBenchConfig>,
+    /// run the goodput-vs-offered-load overload sweep too
+    pub overload: Option<OverloadSweepConfig>,
     /// where to write the machine-readable record; None skips the file
     pub json_path: Option<PathBuf>,
+    /// dump per-request telemetry spans of the online sections as JSONL
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ServeBenchConfig {
@@ -323,7 +372,9 @@ impl Default for ServeBenchConfig {
             quant: QuantSpec::default(),
             parity_decode_tokens: 8,
             online: None,
+            overload: None,
             json_path: Some(PathBuf::from("BENCH_serve.json")),
+            trace_out: None,
         }
     }
 }
@@ -472,6 +523,8 @@ fn online_run_summary(stats: &OnlineStats, workers: usize) -> OnlineRunSummary {
             "queue_wait_fraction",
             json::num(mean_queue_wait_ms / (mean_queue_wait_ms + mean_service_ms).max(1e-12)),
         ),
+        ("shed", json::num(stats.shed.len() as f64)),
+        ("rejected", json::num(stats.rejected.len() as f64)),
         ("per_worker", Json::Arr(per_worker)),
     ]);
     OnlineRunSummary {
@@ -496,6 +549,7 @@ fn run_online_bench(
     cfg: &ModelConfig,
     bcfg: &ServeBenchConfig,
     ocfg: &OnlineBenchConfig,
+    tracer: Option<&Tracer>,
 ) -> Result<Json> {
     if ocfg.workers == 0 {
         bail!("async serving needs at least one worker");
@@ -529,10 +583,18 @@ fn run_online_bench(
                 ))
             })
             .collect::<Result<Vec<_>>>()?;
-        let stats = serve_online(
+        let stats = serve_online_traced(
             &ctxs,
             requests.clone(),
-            &OnlineConfig { workers: w, sched: bcfg.sched.clone(), pacing: ocfg.pacing },
+            &OnlineConfig {
+                workers: w,
+                sched: bcfg.sched.clone(),
+                pacing: ocfg.pacing,
+                policy: ocfg.policy,
+                queue_cap: ocfg.queue_cap,
+                ..OnlineConfig::default()
+            },
+            tracer,
         )?;
         let summary = online_run_summary(&stats, w);
         println!(
@@ -571,6 +633,8 @@ fn run_online_bench(
     let mut fields = vec![
         ("format", json::s(ocfg.format.name())),
         ("pacing", json::s(ocfg.pacing.name())),
+        ("policy", json::s(ocfg.policy.name())),
+        ("queue_cap", json::num(ocfg.queue_cap as f64)),
     ];
     match ocfg.pacing {
         Pacing::Replay { time_scale } => fields.push(("time_scale", json::num(time_scale))),
@@ -583,6 +647,128 @@ fn run_online_bench(
         fields.push(("scaling_vs_single_worker", json::num(scaling)));
     }
     Ok(json::obj(fields))
+}
+
+/// The overload sweep: goodput-vs-offered-load curves per queue policy.
+/// Every cell replays the *same* seeded trace (deadlines, priority tiers
+/// and client ids baked in) at `time_scale = 1/multiplier`, so the only
+/// thing that varies along a curve is how hard the arrivals press.
+fn run_overload_sweep(
+    params: &ParamStore,
+    cfg: &ModelConfig,
+    bcfg: &ServeBenchConfig,
+    swcfg: &OverloadSweepConfig,
+    tracer: Option<&Tracer>,
+) -> Result<Json> {
+    if swcfg.workers == 0 {
+        bail!("overload sweep needs at least one worker");
+    }
+    if !swcfg.deadline_s.is_finite() || swcfg.deadline_s <= 0.0 {
+        bail!("overload sweep needs a positive finite deadline");
+    }
+    if swcfg.multipliers.is_empty() || swcfg.policies.is_empty() {
+        bail!("overload sweep needs at least one multiplier and one policy");
+    }
+    for &m in &swcfg.multipliers {
+        if !m.is_finite() || m <= 0.0 {
+            bail!("offered-load multipliers must be positive, got {m}");
+        }
+    }
+    // the sweep trace: the bench trace plus uniform deadlines, 3 priority
+    // tiers and 4 clients (so priority/EDF have something to order by)
+    let tcfg = TraceConfig {
+        deadline_min_s: swcfg.deadline_s,
+        deadline_max_s: swcfg.deadline_s,
+        priority_tiers: 3,
+        clients: 4,
+        ..bcfg.trace.clone()
+    };
+    let requests = poisson_trace(&tcfg);
+    if requests.is_empty() {
+        bail!("trace produced no requests");
+    }
+    let n = requests.len();
+    let max_pos = tcfg.max_request_tokens();
+    let ctxs = (0..swcfg.workers)
+        .map(|_| {
+            Ok(ServeContext::new(PackedModel::materialize(params, cfg, swcfg.format)?, max_pos))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    println!(
+        "\n== overload sweep: format {}, {} workers, deadline {:.0} ms, queue cap {} ==",
+        swcfg.format.name(),
+        swcfg.workers,
+        swcfg.deadline_s * 1e3,
+        swcfg.queue_cap
+    );
+    println!(
+        "{:<10} {:>6} {:>12} {:>10} {:>9} {:>6} {:>9} {:>12} {:>8}",
+        "policy",
+        "xload",
+        "offered r/s",
+        "completed",
+        "in-dl",
+        "shed",
+        "rejected",
+        "goodput r/s",
+        "frac"
+    );
+    let mut policy_rows: Vec<Json> = Vec::new();
+    for &policy in &swcfg.policies {
+        let mut points: Vec<Json> = Vec::new();
+        for &m in &swcfg.multipliers {
+            let ocfg = OnlineConfig {
+                workers: swcfg.workers,
+                sched: bcfg.sched.clone(),
+                pacing: Pacing::Replay { time_scale: 1.0 / m },
+                policy,
+                queue_cap: swcfg.queue_cap,
+                admit_reject: swcfg.admit_reject,
+            };
+            let stats = serve_online_traced(&ctxs, requests.clone(), &ocfg, tracer)?;
+            let within = stats.within_deadline();
+            let wall = stats.wall_s.max(1e-9);
+            let goodput_rps = within as f64 / wall;
+            let goodput_frac = within as f64 / n as f64;
+            println!(
+                "{:<10} {:>5.1}x {:>12.1} {:>10} {:>9} {:>6} {:>9} {:>12.1} {:>7.1}%",
+                policy.name(),
+                m,
+                tcfg.rate * m,
+                stats.finished.len(),
+                within,
+                stats.shed.len(),
+                stats.rejected.len(),
+                goodput_rps,
+                goodput_frac * 100.0
+            );
+            points.push(json::obj(vec![
+                ("multiplier", json::num(m)),
+                ("offered_rps", json::num(tcfg.rate * m)),
+                ("wall_s", json::num(stats.wall_s)),
+                ("completed", json::num(stats.finished.len() as f64)),
+                ("within_deadline", json::num(within as f64)),
+                ("shed", json::num(stats.shed.len() as f64)),
+                ("rejected", json::num(stats.rejected.len() as f64)),
+                ("goodput_rps", json::num(goodput_rps)),
+                ("goodput_frac", json::num(goodput_frac)),
+            ]));
+        }
+        policy_rows.push(json::obj(vec![
+            ("policy", json::s(policy.name())),
+            ("points", Json::Arr(points)),
+        ]));
+    }
+    Ok(json::obj(vec![
+        ("deadline_ms", json::num(swcfg.deadline_s * 1e3)),
+        ("workers", json::num(swcfg.workers as f64)),
+        ("queue_cap", json::num(swcfg.queue_cap as f64)),
+        ("admit_reject", Json::Bool(swcfg.admit_reject)),
+        ("format", json::s(swcfg.format.name())),
+        ("requests", json::num(n as f64)),
+        ("base_rate", json::num(tcfg.rate)),
+        ("policies", Json::Arr(policy_rows)),
+    ]))
 }
 
 /// Zero the smallest-magnitude fraction of every prunable weight — the
@@ -729,9 +915,18 @@ pub fn run_serve_bench(
         None
     };
 
+    // telemetry: one tracer shared by every traced section of the run
+    let tracer = bcfg.trace_out.as_ref().map(|_| Tracer::new());
+
     // async multi-worker section
     let online = match &bcfg.online {
-        Some(ocfg) => Some(run_online_bench(params, &cfg, bcfg, ocfg)?),
+        Some(ocfg) => Some(run_online_bench(params, &cfg, bcfg, ocfg, tracer.as_ref())?),
+        None => None,
+    };
+
+    // overload sweep: goodput-vs-offered-load curves per queue policy
+    let overload = match &bcfg.overload {
+        Some(swcfg) => Some(run_overload_sweep(params, &cfg, bcfg, swcfg, tracer.as_ref())?),
         None => None,
     };
 
@@ -810,10 +1005,18 @@ pub fn run_serve_bench(
     if let Some(o) = online {
         payload_fields.push(("online", o));
     }
+    if let Some(o) = overload {
+        payload_fields.push(("overload", o));
+    }
     let payload = json::obj(payload_fields);
     if let Some(path) = &bcfg.json_path {
-        std::fs::write(path, payload.to_string_pretty())?;
+        std::fs::write(path, payload.to_string_pretty())
+            .with_context(|| format!("writing serve bench record to {}", path.display()))?;
         println!("[results -> {}]", path.display());
+    }
+    if let (Some(path), Some(t)) = (&bcfg.trace_out, &tracer) {
+        let n = t.write_jsonl(path)?;
+        println!("[telemetry: {n} spans -> {}]", path.display());
     }
     Ok(payload)
 }

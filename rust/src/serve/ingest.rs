@@ -1,5 +1,5 @@
 //! Real-time request ingestion: the front end of the online serving
-//! engine ([`super::online`]).
+//! engine ([`super::online`]) and of the socket edge ([`super::net`]).
 //!
 //! A producer thread ([`run_producer`]) replays a trace in *wall-clock*
 //! time — sleeping until each request's arrival stamp under
@@ -7,25 +7,47 @@
 //! immediately, the pure-backlog "drain" mode), or holding a fixed number
 //! of outstanding requests under [`Pacing::ClosedLoop`] (arrival stamps
 //! ignored; the next request is released as soon as a completion frees a
-//! client slot, the classic closed-loop load generator).
+//! client slot, the classic closed-loop load generator). The TCP front
+//! end pushes directly from connection handler threads instead.
 //!
-//! Arrived requests land in an [`IngestQueue`]: a mutex-guarded FIFO with
-//! condvar wakeups that serving workers pop from *conditionally* — a
+//! Arrived requests land in an [`IngestQueue`]: a mutex-guarded queue
+//! with condvar wakeups that serving workers pop from *conditionally* — a
 //! worker only takes the front request when its own admission predicate
 //! (token budget + batch slots, see [`super::online`]) accepts it, so
-//! admission control stays with the workers while arrival order stays
-//! FIFO. The queue also tracks how many popped requests are still in
-//! flight, which is what the closed-loop producer throttles on, and
-//! stamps every request with its enqueue instant so the metrics pipeline
-//! can split latency into queue wait vs compute.
+//! admission control stays with the workers while arrival order follows
+//! the configured [`Policy`] (FIFO by default; priority tiers or
+//! earliest-deadline-first reorder *who is served next*, never what any
+//! request computes). Head-of-line blocking within the policy order is
+//! deliberate — no admitted request can starve behind later arrivals.
+//!
+//! Overload control is built in ([`QueueConfig`]):
+//!
+//! - **bounded queue** — pushes beyond `capacity` are rejected
+//!   ([`RejectReason::QueueFull`], a 503 at the wire);
+//! - **deadline shedding, admit-time** — a request whose deadline is
+//!   already unmeetable (expired, or predicted-late from the EWMA service
+//!   time when `admit_reject` is on) is rejected at push
+//!   ([`RejectReason::DeadlineUnmeetable`]);
+//! - **deadline shedding, in-queue** — every pop first sweeps out queued
+//!   requests whose deadline has passed ([`Reply::Shed`], so a waiting
+//!   connection learns immediately);
+//! - **draining** — pushes after [`IngestQueue::close`] are rejected
+//!   ([`RejectReason::Draining`]), which is what makes graceful shutdown
+//!   race-free: nothing can slip into a closing queue.
+//!
+//! Every outcome is recorded exactly once: a request either reaches a
+//! worker (and retires through `note_done`), is shed, or is rejected —
+//! [`IngestQueue::take_outcomes`] returns the shed/rejected ledgers so
+//! callers can assert `finished + shed + rejected == submitted`.
 
 use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::par::{locked, wait_on, wait_timeout_on};
 
-use super::scheduler::Request;
+use super::scheduler::{Policy, Request};
 
 /// One request made visible to the workers, stamped with the wall-clock
 /// instant it became visible (the online arrival time: queue wait and
@@ -33,6 +55,13 @@ use super::scheduler::Request;
 pub struct ArrivedRequest {
     pub req: Request,
     pub enqueued: Instant,
+    /// absolute completion deadline (None = no deadline)
+    pub deadline_at: Option<Instant>,
+    /// streaming reply channel of the connection that submitted this
+    /// request (None for trace replay, where nobody is waiting)
+    pub reply: Option<Sender<Reply>>,
+    /// arrival sequence number — the FIFO tiebreak inside every policy
+    pub(crate) seq: u64,
 }
 
 /// How the producer paces the trace into the queue.
@@ -56,16 +85,94 @@ impl Pacing {
     }
 }
 
-/// Outcome of a conditional pop.
-pub enum Pop {
-    /// The front request passed the caller's admission predicate.
-    Got(ArrivedRequest),
-    /// A front request exists but the caller declined it (budget full).
-    Refused,
-    /// Nothing queued right now; the producer is still running.
-    Empty,
-    /// Queue empty and closed — no more work will ever arrive.
-    Drained,
+/// Streaming events sent back to whoever submitted a request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    /// One generated token (index 0 is the prefill argmax).
+    Token { index: usize, token: i32 },
+    /// The request retired normally. `tokens` is the full generated
+    /// sequence (empty for scoring requests, which carry `nll` instead).
+    Done { tokens: Vec<i32>, nll: Option<f64>, deadline_met: bool },
+    /// The request was shed from the queue after its deadline passed.
+    Shed { waited_s: f64 },
+}
+
+/// Why a push was turned away at the door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// per-client token bucket empty (checked by the caller, `serve::net`)
+    RateLimited,
+    /// bounded queue at capacity
+    QueueFull,
+    /// deadline already passed, or predicted unmeetable at admission
+    DeadlineUnmeetable,
+    /// the queue is closed — the server is draining
+    Draining,
+}
+
+impl RejectReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::RateLimited => "rate-limited",
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::DeadlineUnmeetable => "deadline-unmeetable",
+            RejectReason::Draining => "draining",
+        }
+    }
+
+    /// HTTP-style status for the wire: 429 for rate limiting (the client
+    /// should back off and retry), 503 for server-side overload.
+    pub fn http_code(&self) -> u16 {
+        match self {
+            RejectReason::RateLimited => 429,
+            _ => 503,
+        }
+    }
+}
+
+/// Outcome of a push.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    Queued,
+    Rejected(RejectReason),
+}
+
+/// A request shed from the queue (deadline passed while waiting).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShedOutcome {
+    pub id: usize,
+    pub waited_s: f64,
+}
+
+/// A request rejected at push.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RejectOutcome {
+    pub id: usize,
+    pub reason: RejectReason,
+}
+
+/// Overload-control knobs of an [`IngestQueue`].
+#[derive(Debug, Clone, Copy)]
+pub struct QueueConfig {
+    /// pop-order policy (output-invariant; see [`Policy`])
+    pub policy: Policy,
+    /// queued-request cap; 0 = unbounded (trace-replay benches)
+    pub capacity: usize,
+    /// how many workers drain this queue — scales the admit-time
+    /// wait estimate
+    pub workers_hint: usize,
+    /// predictive admit-time shedding: reject a deadline-carrying request
+    /// when `(queued + in_flight + 1) * ewma_service / workers` already
+    /// exceeds its deadline (a conservative scalar estimate — batching
+    /// makes real service faster, so this only trips when the backlog is
+    /// hopeless)
+    pub admit_reject: bool,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig { policy: Policy::Fifo, capacity: 0, workers_hint: 1, admit_reject: false }
+    }
 }
 
 struct QueueState {
@@ -73,10 +180,18 @@ struct QueueState {
     closed: bool,
     /// popped by a worker and not yet retired (closed-loop accounting)
     in_flight: usize,
+    /// arrival counter, the stable tiebreak for every policy
+    next_seq: u64,
+    /// EWMA of per-request service seconds (admit-time wait estimate)
+    ewma_service_s: f64,
+    shed: Vec<ShedOutcome>,
+    rejected: Vec<RejectOutcome>,
 }
 
-/// Shared arrival queue between one producer and N serving workers.
+/// Shared arrival queue between producers (trace replay or connection
+/// handlers) and N serving workers.
 pub struct IngestQueue {
+    cfg: QueueConfig,
     state: Mutex<QueueState>,
     /// signaled on push / close: workers waiting for work
     arrived: Condvar,
@@ -90,25 +205,109 @@ impl Default for IngestQueue {
     }
 }
 
+/// True when `a` should be served before `b` under `policy`. Strict —
+/// equal keys keep arrival order, so every policy is a stable sort.
+fn orders_before(a: &ArrivedRequest, b: &ArrivedRequest, policy: Policy) -> bool {
+    match policy {
+        Policy::Fifo => false,
+        Policy::Priority => (a.req.qos.priority, a.seq) < (b.req.qos.priority, b.seq),
+        // deadline-free requests (None) sort after every deadline via the
+        // is_none() bool; FIFO among themselves via seq
+        Policy::Edf => {
+            (a.deadline_at.is_none(), a.deadline_at, a.seq)
+                < (b.deadline_at.is_none(), b.deadline_at, b.seq)
+        }
+    }
+}
+
 impl IngestQueue {
     pub fn new() -> IngestQueue {
+        IngestQueue::with_config(QueueConfig::default())
+    }
+
+    pub fn with_config(cfg: QueueConfig) -> IngestQueue {
         IngestQueue {
+            cfg,
             state: Mutex::new(QueueState {
                 ready: VecDeque::new(),
                 closed: false,
                 in_flight: 0,
+                next_seq: 0,
+                ewma_service_s: 0.0,
+                shed: Vec::new(),
+                rejected: Vec::new(),
             }),
             arrived: Condvar::new(),
             retired: Condvar::new(),
         }
     }
 
-    /// Make one request visible to the workers (stamped now).
-    pub fn push(&self, req: Request) {
-        let mut g = locked(&self.state);
-        g.ready.push_back(ArrivedRequest { req, enqueued: Instant::now() });
-        drop(g);
-        self.arrived.notify_all();
+    /// Make one request visible to the workers (stamped now). Trace
+    /// replay: nobody waits on a reply channel, rejections only land in
+    /// the ledger.
+    pub fn push(&self, req: Request) -> Admit {
+        self.push_opts(req, None)
+    }
+
+    /// Full-control push: overload checks in order — draining, bounded
+    /// capacity, deadline (expired now / predicted unmeetable) — then
+    /// policy-ordered insertion. `reply` receives streamed tokens and the
+    /// terminal event if the caller is a live connection.
+    pub fn push_opts(&self, req: Request, reply: Option<Sender<Reply>>) -> Admit {
+        let now = Instant::now();
+        let deadline_at = deadline_after(now, req.qos.deadline_s);
+        let rejection = {
+            let mut g = locked(&self.state);
+            let reason = if g.closed {
+                Some(RejectReason::Draining)
+            } else if self.cfg.capacity > 0 && g.ready.len() >= self.cfg.capacity {
+                Some(RejectReason::QueueFull)
+            } else if matches!(deadline_at, Some(d) if d <= now) {
+                Some(RejectReason::DeadlineUnmeetable)
+            } else if self.cfg.admit_reject
+                && req.qos.deadline_s.is_finite()
+                && g.ewma_service_s > 0.0
+                && {
+                    let backlog = (g.ready.len() + g.in_flight + 1) as f64;
+                    backlog * g.ewma_service_s / self.cfg.workers_hint.max(1) as f64
+                        > req.qos.deadline_s
+                }
+            {
+                Some(RejectReason::DeadlineUnmeetable)
+            } else {
+                None
+            };
+            match reason {
+                Some(r) => {
+                    g.rejected.push(RejectOutcome { id: req.id, reason: r });
+                    Some(r)
+                }
+                None => {
+                    let seq = g.next_seq;
+                    g.next_seq += 1;
+                    let arrived = ArrivedRequest { req, enqueued: now, deadline_at, reply, seq };
+                    // stable back-scan insertion: arrivals are usually
+                    // near their final slot, and FIFO never scans at all
+                    let mut pos = g.ready.len();
+                    while pos > 0 && orders_before(&arrived, &g.ready[pos - 1], self.cfg.policy) {
+                        pos -= 1;
+                    }
+                    if pos == g.ready.len() {
+                        g.ready.push_back(arrived);
+                    } else {
+                        g.ready.insert(pos, arrived);
+                    }
+                    None
+                }
+            }
+        };
+        match rejection {
+            Some(r) => Admit::Rejected(r),
+            None => {
+                self.arrived.notify_all();
+                Admit::Queued
+            }
+        }
     }
 
     /// No more pushes will follow; workers drain what is queued and exit.
@@ -117,26 +316,51 @@ impl IngestQueue {
         self.arrived.notify_all();
     }
 
-    /// Pop the front request iff `admit` accepts it. FIFO is preserved:
-    /// a declined front request stays at the front (head-of-line blocking
-    /// is deliberate — no request can starve behind later arrivals).
+    /// Pop the front request iff `admit` accepts it, after sweeping out
+    /// every queued request whose deadline has already passed (in-queue
+    /// shedding). Within the policy order a declined front request stays
+    /// at the front — head-of-line blocking is deliberate, no admitted
+    /// request can starve behind later arrivals.
     pub fn try_pop(&self, admit: impl FnOnce(&Request) -> bool) -> Pop {
-        let mut g = locked(&self.state);
-        let decision = g.ready.front().map(|front| admit(&front.req));
-        match decision {
-            Some(true) => match g.ready.pop_front() {
-                Some(a) => {
-                    g.in_flight += 1;
-                    Pop::Got(a)
+        let mut expired: Vec<(Option<Sender<Reply>>, f64)> = Vec::new();
+        let popped = {
+            let mut g = locked(&self.state);
+            let now = Instant::now();
+            let mut i = 0;
+            while i < g.ready.len() {
+                if matches!(g.ready[i].deadline_at, Some(d) if d <= now) {
+                    if let Some(dead) = g.ready.remove(i) {
+                        let waited_s = now.saturating_duration_since(dead.enqueued).as_secs_f64();
+                        g.shed.push(ShedOutcome { id: dead.req.id, waited_s });
+                        expired.push((dead.reply, waited_s));
+                    }
+                } else {
+                    i += 1;
                 }
-                // unreachable (front() just matched under this guard),
-                // but Empty is the safe answer if it ever weren't
+            }
+            let decision = g.ready.front().map(|front| admit(&front.req));
+            match decision {
+                Some(true) => match g.ready.pop_front() {
+                    Some(a) => {
+                        g.in_flight += 1;
+                        Pop::Got(a)
+                    }
+                    // unreachable (front() just matched under this guard),
+                    // but Empty is the safe answer if it ever weren't
+                    None => Pop::Empty,
+                },
+                Some(false) => Pop::Refused,
+                None if g.closed => Pop::Drained,
                 None => Pop::Empty,
-            },
-            Some(false) => Pop::Refused,
-            None if g.closed => Pop::Drained,
-            None => Pop::Empty,
+            }
+        };
+        // shed notifications go out after the lock is released
+        for (reply, waited_s) in expired {
+            if let Some(tx) = reply {
+                let _ = tx.send(Reply::Shed { waited_s });
+            }
         }
+        popped
     }
 
     /// Block until something arrives or the queue closes, up to `timeout`
@@ -148,11 +372,20 @@ impl IngestQueue {
         }
     }
 
-    /// A popped request retired; frees one closed-loop client slot.
-    pub fn note_done(&self) {
+    /// A popped request retired after `service_s` seconds of service;
+    /// frees one closed-loop client slot and feeds the admit-time wait
+    /// estimate (ignored when not positive).
+    pub fn note_done(&self, service_s: f64) {
         let mut g = locked(&self.state);
         debug_assert!(g.in_flight > 0, "note_done without a matching pop");
         g.in_flight = g.in_flight.saturating_sub(1);
+        if service_s > 0.0 {
+            g.ewma_service_s = if g.ewma_service_s > 0.0 {
+                0.8 * g.ewma_service_s + 0.2 * service_s
+            } else {
+                service_s
+            };
+        }
         drop(g);
         self.retired.notify_all();
     }
@@ -172,11 +405,39 @@ impl IngestQueue {
         let g = locked(&self.state);
         g.closed && g.ready.is_empty()
     }
+
+    /// Drain the shed/rejected ledgers (each outcome reported once).
+    pub fn take_outcomes(&self) -> (Vec<ShedOutcome>, Vec<RejectOutcome>) {
+        let mut g = locked(&self.state);
+        (std::mem::take(&mut g.shed), std::mem::take(&mut g.rejected))
+    }
+}
+
+/// Absolute deadline for a relative one; None when there is no deadline
+/// (infinite or otherwise unrepresentable).
+fn deadline_after(now: Instant, deadline_s: f64) -> Option<Instant> {
+    if !deadline_s.is_finite() || deadline_s < 0.0 {
+        return None;
+    }
+    Duration::try_from_secs_f64(deadline_s).ok().and_then(|d| now.checked_add(d))
+}
+
+/// Outcome of a conditional pop.
+pub enum Pop {
+    /// The front request passed the caller's admission predicate.
+    Got(ArrivedRequest),
+    /// A front request exists but the caller declined it (budget full).
+    Refused,
+    /// Nothing queued right now; the producer is still running.
+    Empty,
+    /// Queue empty and closed — no more work will ever arrive.
+    Drained,
 }
 
 /// Feed `requests` (sorted by arrival for [`Pacing::Replay`]) into the
 /// queue under the given pacing, then close it. Runs on its own scoped
-/// thread next to the serving workers.
+/// thread next to the serving workers. Rejected pushes (bounded queue,
+/// unmeetable deadlines) land in the queue's ledger.
 pub fn run_producer(queue: &IngestQueue, requests: Vec<Request>, pacing: Pacing) {
     let start = Instant::now();
     match pacing {
@@ -187,13 +448,13 @@ pub fn run_producer(queue: &IngestQueue, requests: Vec<Request>, pacing: Pacing)
                 if due > elapsed {
                     std::thread::sleep(Duration::from_secs_f64(due - elapsed));
                 }
-                queue.push(r);
+                let _ = queue.push(r);
             }
         }
         Pacing::ClosedLoop { clients } => {
             for r in requests {
                 queue.wait_capacity(clients.max(1));
-                queue.push(r);
+                let _ = queue.push(r);
             }
         }
     }
@@ -203,10 +464,29 @@ pub fn run_producer(queue: &IngestQueue, requests: Vec<Request>, pacing: Pacing)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::scheduler::ReqKind;
+    use crate::serve::scheduler::{Qos, ReqKind};
 
     fn req(id: usize, cost: usize) -> Request {
-        Request { id, arrival: 0.0, tokens: vec![0; cost], kind: ReqKind::Score }
+        Request {
+            id,
+            arrival: 0.0,
+            tokens: vec![0; cost],
+            kind: ReqKind::Score,
+            qos: Qos::default(),
+        }
+    }
+
+    fn req_qos(id: usize, qos: Qos) -> Request {
+        Request { id, arrival: 0.0, tokens: vec![0; 4], kind: ReqKind::Score, qos }
+    }
+
+    fn pop_ids(q: &IngestQueue) -> Vec<usize> {
+        let mut ids = Vec::new();
+        while let Pop::Got(a) = q.try_pop(|_| true) {
+            ids.push(a.req.id);
+            q.note_done(0.0);
+        }
+        ids
     }
 
     #[test]
@@ -245,7 +525,7 @@ mod tests {
                     match q.try_pop(|_| true) {
                         Pop::Got(_) => {
                             got += 1;
-                            q.note_done();
+                            q.note_done(0.0);
                         }
                         Pop::Drained => break,
                         _ => q.wait_arrival(Duration::from_millis(1)),
@@ -267,12 +547,134 @@ mod tests {
             match q.try_pop(|_| true) {
                 Pop::Got(a) => {
                     ids.push(a.req.id);
-                    q.note_done();
+                    q.note_done(0.0);
                 }
                 Pop::Drained => break,
                 _ => unreachable!("flooded queue is never empty before drain"),
             }
         }
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn priority_policy_orders_tiers_fifo_within_tier() {
+        let q = IngestQueue::with_config(QueueConfig {
+            policy: Policy::Priority,
+            ..Default::default()
+        });
+        for (id, tier) in [(0, 2u8), (1, 0), (2, 1), (3, 0), (4, 2)] {
+            let admit = q.push(req_qos(id, Qos { priority: tier, ..Qos::default() }));
+            assert_eq!(admit, Admit::Queued);
+        }
+        // tier 0 first (arrival order 1 then 3), then tier 1, then tier 2
+        assert_eq!(pop_ids(&q), vec![1, 3, 2, 0, 4]);
+    }
+
+    #[test]
+    fn edf_policy_orders_by_deadline_none_last() {
+        let q = IngestQueue::with_config(QueueConfig { policy: Policy::Edf, ..Default::default() });
+        q.push(req_qos(0, Qos::with_deadline(5.0)));
+        q.push(req_qos(1, Qos::default())); // no deadline → last
+        q.push(req_qos(2, Qos::with_deadline(1.0)));
+        q.push(req_qos(3, Qos::with_deadline(3.0)));
+        assert_eq!(pop_ids(&q), vec![2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let q = IngestQueue::with_config(QueueConfig { capacity: 2, ..Default::default() });
+        assert_eq!(q.push(req(0, 1)), Admit::Queued);
+        assert_eq!(q.push(req(1, 1)), Admit::Queued);
+        assert_eq!(q.push(req(2, 1)), Admit::Rejected(RejectReason::QueueFull));
+        // popping one frees a slot
+        assert!(matches!(q.try_pop(|_| true), Pop::Got(_)));
+        assert_eq!(q.push(req(3, 1)), Admit::Queued);
+        let (_, rejected) = q.take_outcomes();
+        assert_eq!(rejected, vec![RejectOutcome { id: 2, reason: RejectReason::QueueFull }]);
+    }
+
+    #[test]
+    fn expired_deadline_rejected_at_push() {
+        let q = IngestQueue::new();
+        let admit = q.push(req_qos(7, Qos::with_deadline(0.0)));
+        assert_eq!(admit, Admit::Rejected(RejectReason::DeadlineUnmeetable));
+    }
+
+    #[test]
+    fn predictive_admit_reject_uses_service_ewma() {
+        let q = IngestQueue::with_config(QueueConfig {
+            workers_hint: 1,
+            admit_reject: true,
+            ..Default::default()
+        });
+        // no service history yet: deadline-carrying requests are admitted
+        assert_eq!(q.push(req_qos(0, Qos::with_deadline(0.5))), Admit::Queued);
+        assert!(matches!(q.try_pop(|_| true), Pop::Got(_)));
+        q.note_done(1.0); // EWMA seeds at 1s per request
+        // 1 request of backlog (itself) * 1s > 0.5s deadline → hopeless
+        assert_eq!(
+            q.push(req_qos(1, Qos::with_deadline(0.5))),
+            Admit::Rejected(RejectReason::DeadlineUnmeetable)
+        );
+        // a relaxed deadline still gets in
+        assert_eq!(q.push(req_qos(2, Qos::with_deadline(5.0))), Admit::Queued);
+        // deadline-free requests are never predictively rejected
+        assert_eq!(q.push(req_qos(3, Qos::default())), Admit::Queued);
+    }
+
+    #[test]
+    fn in_queue_shedding_notifies_and_records() {
+        let q = IngestQueue::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let admit = q.push_opts(req_qos(4, Qos::with_deadline(0.002)), Some(tx));
+        assert_eq!(admit, Admit::Queued);
+        std::thread::sleep(Duration::from_millis(10));
+        // the sweep runs at pop time: the expired request never reaches
+        // a worker, and the waiting connection hears about it
+        assert!(matches!(q.try_pop(|_| true), Pop::Empty));
+        match rx.try_recv() {
+            Ok(Reply::Shed { waited_s }) => assert!(waited_s >= 0.002),
+            other => panic!("expected a shed notification, got {other:?}"),
+        }
+        let (shed, rejected) = q.take_outcomes();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 4);
+        assert!(rejected.is_empty());
+        // ledgers drain exactly once
+        let (shed2, _) = q.take_outcomes();
+        assert!(shed2.is_empty());
+    }
+
+    #[test]
+    fn push_after_close_rejected_as_draining() {
+        let q = IngestQueue::new();
+        q.close();
+        assert_eq!(q.push(req(0, 1)), Admit::Rejected(RejectReason::Draining));
+        assert!(q.is_drained());
+    }
+
+    /// Graceful-drain accounting: every submitted request lands in
+    /// exactly one ledger (popped, shed, or rejected) — none lost, none
+    /// double-counted.
+    #[test]
+    fn drain_accounting_is_exact() {
+        let q = IngestQueue::with_config(QueueConfig { capacity: 3, ..Default::default() });
+        let mut queued = 0usize;
+        let mut rejected_now = 0usize;
+        for i in 0..5 {
+            // one of the five has an already-expired deadline
+            let r = if i == 2 { req_qos(i, Qos::with_deadline(0.0)) } else { req(i, 1) };
+            match q.push(r) {
+                Admit::Queued => queued += 1,
+                Admit::Rejected(_) => rejected_now += 1,
+            }
+        }
+        // capacity 3 + one expired: 3 queued, 2 rejected
+        assert_eq!((queued, rejected_now), (3, 2));
+        q.close();
+        let popped = pop_ids(&q).len();
+        let (shed, rejected) = q.take_outcomes();
+        assert_eq!(popped + shed.len() + rejected.len(), 5);
+        assert_eq!(rejected.len(), rejected_now);
     }
 }

@@ -31,7 +31,14 @@
 //!   behind `besa serve-bench`: offline trace replay per weight format
 //!   plus the async multi-worker mode (`--async`), reporting throughput,
 //!   p50/p95/p99 latency, per-worker utilization and the queue-wait vs
-//!   compute split into `BENCH_serve.json`.
+//!   compute split into `BENCH_serve.json` — and `--overload-sweep`,
+//!   goodput-vs-offered-load curves per queue [`scheduler::Policy`].
+//! * [`net`] — the TCP front end (`besa serve-net`): line-delimited JSON
+//!   + an HTTP/1.1-subset adapter over the very same `worker_loop`, with
+//!   overload control (per-client token buckets, deadline shedding,
+//!   bounded-queue backpressure, FIFO/priority/EDF policies) and
+//!   graceful drain. Protocol and operations in `docs/serving.md`;
+//!   per-request span tracing in `docs/telemetry.md`.
 //!
 //! # Quickstart
 //!
@@ -83,15 +90,17 @@ pub mod engine;
 pub mod ingest;
 pub mod kv;
 pub mod model;
+pub mod net;
 pub mod online;
 pub mod scheduler;
 pub mod trace;
 
 pub use bench::{run_serve_bench, run_trace, ServeBenchConfig, ServeMode};
 pub use engine::ServeContext;
-pub use ingest::{IngestQueue, Pacing};
+pub use ingest::{Admit, IngestQueue, Pacing, QueueConfig, RejectReason, Reply};
 pub use kv::KvCache;
 pub use model::{PackedModel, WeightFormat};
-pub use online::{serve_online, OnlineConfig, OnlineStats};
-pub use scheduler::{ReqKind, Request, Scheduler, SchedulerConfig};
+pub use net::{LineClient, NetConfig, NetServer, NetStats};
+pub use online::{serve_online, serve_online_traced, OnlineConfig, OnlineStats};
+pub use scheduler::{Policy, Qos, ReqKind, Request, Scheduler, SchedulerConfig};
 pub use trace::{poisson_trace, TraceConfig};

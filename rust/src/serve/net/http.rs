@@ -1,0 +1,257 @@
+//! A deliberately small HTTP/1.1 subset, just enough to expose the
+//! serving engine to `curl` and load generators over the same handler as
+//! the line protocol:
+//!
+//! * `GET /healthz` → `200 {"status":"ok"}`
+//! * `POST /v1/generate` (body = one request object, the same schema as
+//!   a [`super::proto`] request line) → one-shot JSON response (tokens
+//!   are collected, not streamed — use the line protocol for streaming)
+//!
+//! Every response closes the connection (`Connection: close`); there is
+//! no keep-alive, chunked encoding, or TLS. All reads are bounded by
+//! [`super::proto::ProtoLimits::max_line_bytes`] so a hostile peer
+//! cannot balloon memory; oversizes map to 413 and malformed framing to
+//! 400, mirroring the line protocol's error codes.
+
+use std::io::{BufRead, Read, Write};
+
+use super::proto::{ProtoError, ProtoLimits};
+
+/// Longest header section we accept before calling the request hostile.
+const MAX_HEADERS: usize = 64;
+
+/// A parsed request head plus its (possibly empty) body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes, stripping the
+/// terminator (and a preceding `\r`). `Ok(None)` means clean EOF before
+/// any byte. An unterminated line *under* the cap (EOF mid-line) is
+/// returned as-is; over the cap is a 413.
+pub fn read_line_bounded<R: BufRead>(
+    r: &mut R,
+    cap: usize,
+) -> Result<Option<String>, ProtoError> {
+    let mut buf = Vec::new();
+    let mut lim = Read::take(&mut *r, cap as u64 + 1);
+    match lim.read_until(b'\n', &mut buf) {
+        Ok(0) => Ok(None),
+        Ok(_) => {
+            if buf.last() != Some(&b'\n') && buf.len() > cap {
+                return Err(ProtoError::new(
+                    413,
+                    format!("line exceeds the {cap} byte cap"),
+                ));
+            }
+            if buf.last() == Some(&b'\n') {
+                buf.pop();
+            }
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            String::from_utf8(buf)
+                .map(Some)
+                .map_err(|_| ProtoError::new(400, "line is not valid UTF-8"))
+        }
+        Err(e) => Err(ProtoError::new(400, format!("read failed: {e}"))),
+    }
+}
+
+/// Read one request (request line, headers, `Content-Length` body).
+/// `Ok(None)` on clean EOF before a request line.
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    limits: &ProtoLimits,
+) -> Result<Option<HttpRequest>, ProtoError> {
+    let cap = limits.max_line_bytes;
+    let line = match read_line_bounded(r, cap)? {
+        None => return Ok(None),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/1.") => {
+            (m.to_string(), p.to_string())
+        }
+        _ => return Err(ProtoError::new(400, format!("bad request line {line:?}"))),
+    };
+
+    let mut content_length = 0usize;
+    for n in 0.. {
+        if n >= MAX_HEADERS {
+            return Err(ProtoError::new(400, "too many headers"));
+        }
+        let h = match read_line_bounded(r, cap)? {
+            None => return Err(ProtoError::new(400, "eof inside headers")),
+            Some(h) => h,
+        };
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| ProtoError::new(400, format!("bad content-length {value:?}")))?;
+            }
+        }
+        // headers without ':' are tolerated and ignored — we only ever
+        // need content-length
+    }
+
+    if content_length > cap {
+        return Err(ProtoError::new(
+            413,
+            format!("body of {content_length} bytes exceeds the {cap} byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)
+        .map_err(|e| ProtoError::new(400, format!("short body: {e}")))?;
+    let body =
+        String::from_utf8(body).map_err(|_| ProtoError::new(400, "body is not valid UTF-8"))?;
+    Ok(Some(HttpRequest { method, path, body }))
+}
+
+/// Reason phrase for the codes this server emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete response (JSON body, `Connection: close`).
+pub fn write_response<W: Write>(w: &mut W, code: u16, body: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        code,
+        status_text(code),
+        body.len(),
+        body
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn limits() -> ProtoLimits {
+        ProtoLimits { max_line_bytes: 128, max_prompt: 8, max_new: 8 }
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let mut c = Cursor::new(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n".to_vec());
+        let r = read_request(&mut c, &limits()).unwrap().unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert_eq!(r.body, "");
+    }
+
+    #[test]
+    fn parses_post_with_content_length_body() {
+        let body = r#"{"id":1,"prompt":[2],"max_new":3}"#;
+        let raw = format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Type: application/json\r\nCONTENT-LENGTH: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let mut c = Cursor::new(raw.into_bytes());
+        let r = read_request(&mut c, &limits()).unwrap().unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/generate");
+        assert_eq!(r.body, body);
+    }
+
+    #[test]
+    fn bare_lf_lines_are_accepted_too() {
+        let mut c = Cursor::new(b"GET / HTTP/1.0\nA: b\n\n".to_vec());
+        let r = read_request(&mut c, &limits()).unwrap().unwrap();
+        assert_eq!((r.method.as_str(), r.path.as_str()), ("GET", "/"));
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_framing_errors_are_4xx() {
+        let mut c = Cursor::new(Vec::new());
+        assert!(read_request(&mut c, &limits()).unwrap().is_none());
+
+        // garbage request line
+        let mut c = Cursor::new(b"what is this\r\n\r\n".to_vec());
+        assert_eq!(read_request(&mut c, &limits()).unwrap_err().code, 400);
+
+        // eof inside headers
+        let mut c = Cursor::new(b"GET / HTTP/1.1\r\nHost: x\r\n".to_vec());
+        assert_eq!(read_request(&mut c, &limits()).unwrap_err().code, 400);
+
+        // body shorter than content-length
+        let mut c =
+            Cursor::new(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc".to_vec());
+        assert_eq!(read_request(&mut c, &limits()).unwrap_err().code, 400);
+
+        // non-numeric content-length
+        let mut c =
+            Cursor::new(b"POST / HTTP/1.1\r\nContent-Length: ten\r\n\r\n".to_vec());
+        assert_eq!(read_request(&mut c, &limits()).unwrap_err().code, 400);
+    }
+
+    #[test]
+    fn oversizes_map_to_413() {
+        let l = limits();
+        // request line over the cap
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(300));
+        let mut c = Cursor::new(long.into_bytes());
+        assert_eq!(read_request(&mut c, &l).unwrap_err().code, 413);
+
+        // declared body over the cap — rejected before reading it
+        let mut c =
+            Cursor::new(b"POST / HTTP/1.1\r\nContent-Length: 4096\r\n\r\n".to_vec());
+        assert_eq!(read_request(&mut c, &l).unwrap_err().code, 413);
+
+        // header flood
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..100 {
+            raw.push_str(&format!("H{i}: v\r\n"));
+        }
+        raw.push_str("\r\n");
+        let mut c = Cursor::new(raw.into_bytes());
+        assert_eq!(read_request(&mut c, &l).unwrap_err().code, 400);
+    }
+
+    #[test]
+    fn bounded_line_reader_handles_utf8_and_eof_tails() {
+        let mut c = Cursor::new(vec![0xff, 0xfe, b'\n']);
+        assert_eq!(read_line_bounded(&mut c, 64).unwrap_err().code, 400);
+
+        // unterminated tail under the cap comes back as a line
+        let mut c = Cursor::new(b"tail".to_vec());
+        assert_eq!(read_line_bounded(&mut c, 64).unwrap().as_deref(), Some("tail"));
+        assert!(read_line_bounded(&mut c, 64).unwrap().is_none());
+    }
+
+    #[test]
+    fn responses_are_well_formed() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, r#"{"status":"ok"}"#).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 15\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"status\":\"ok\"}"));
+        assert_eq!(status_text(429), "Too Many Requests");
+        assert_eq!(status_text(777), "Unknown");
+    }
+}

@@ -1,0 +1,25 @@
+//! The socket edge of the serving engine (`besa serve-net`): a hermetic,
+//! std-only TCP front end over the same continuous-batching workers as
+//! the offline engine — see `docs/serving.md` for the protocol and the
+//! overload-control model.
+//!
+//! * [`proto`] — the line-delimited JSON wire protocol (requests,
+//!   streamed token/done/error events) and its shared response bodies;
+//! * [`http`] — the HTTP/1.1 subset (`GET /healthz`,
+//!   `POST /v1/generate`) adapting the same handler for `curl`;
+//! * [`bucket`] — per-client token-bucket admission, denominated in
+//!   model work (prompt + max generation tokens);
+//! * [`server`] — the [`NetServer`] itself: listener thread, per
+//!   connection handlers, graceful drain, and the [`LineClient`] the
+//!   drive mode and the parity tests use.
+
+pub mod bucket;
+pub mod http;
+pub mod proto;
+pub mod server;
+
+pub use bucket::{ClientBuckets, TokenBucket};
+pub use proto::{
+    parse_event, parse_request, request_line, ProtoError, ProtoLimits, WireEvent, WireRequest,
+};
+pub use server::{LineClient, NetConfig, NetServer, NetStats};

@@ -1,0 +1,569 @@
+//! The line-delimited JSON wire protocol (and the shared response
+//! bodies the HTTP adapter reuses).
+//!
+//! One request per `\n`-terminated line:
+//!
+//! ```json
+//! {"id": 7, "prompt": [3, 14, 15], "max_new": 8,
+//!  "deadline_ms": 250, "priority": 0, "client": 2}
+//! ```
+//!
+//! `id` and `prompt` are required; `score: true` turns the request into
+//! prompt scoring (`max_new` then being irrelevant); `deadline_ms` /
+//! `priority` / `client` are the optional QoS fields. **Unknown fields
+//! are rejected** (code 400) — silently ignoring a typo like
+//! `"deadline_m"` would drop the client's deadline on the floor, the
+//! worst possible failure mode for an overload-control protocol.
+//!
+//! Responses are also one JSON object per line. Tokens stream as they
+//! are generated, then exactly one terminal event closes the request:
+//!
+//! ```json
+//! {"event":"token","id":7,"index":0,"token":42}
+//! {"event":"done","id":7,"status":"ok","tokens":[42,17],"nll":null,"deadline_met":true}
+//! {"event":"done","id":7,"status":"shed","code":503,"waited_ms":12.5}
+//! {"event":"done","id":7,"status":"rejected","code":429,"reason":"client 2 rate-limited"}
+//! {"event":"error","code":400,"reason":"unknown field 'deadline_m'"}
+//! ```
+//!
+//! Number formatting goes through [`crate::util::json`], whose shortest
+//! round-trip `f64` printing makes the NLL in a `done` line bit-exact
+//! with the engine's value — the loopback parity test compares them as
+//! floats, not approximately.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{self, Json};
+
+use super::super::scheduler::{Qos, ReqKind, Request};
+
+/// Caps on what a connection may send.
+#[derive(Debug, Clone, Copy)]
+pub struct ProtoLimits {
+    /// request line / HTTP body byte cap (oversizes are 413s)
+    pub max_line_bytes: usize,
+    /// prompt token cap (with `max_new`, bounds the KV footprint the
+    /// server provisioned per request)
+    pub max_prompt: usize,
+    /// generation cap per request
+    pub max_new: usize,
+}
+
+impl Default for ProtoLimits {
+    fn default() -> Self {
+        ProtoLimits { max_line_bytes: 64 * 1024, max_prompt: 512, max_new: 128 }
+    }
+}
+
+impl ProtoLimits {
+    /// Largest KV footprint any conforming request can reach — what the
+    /// server must provision per batch slot.
+    pub fn max_request_tokens(&self) -> usize {
+        self.max_prompt + self.max_new
+    }
+}
+
+/// A parse/validation failure, with its HTTP-style status code.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    pub code: u16,
+    pub reason: String,
+}
+
+impl ProtoError {
+    pub fn new(code: u16, reason: impl Into<String>) -> ProtoError {
+        ProtoError { code, reason: reason.into() }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.code, self.reason)
+    }
+}
+
+/// A validated wire request, not yet bound to an engine id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    /// client-chosen correlation id, echoed in every response event
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub score: bool,
+    pub qos: Qos,
+}
+
+impl WireRequest {
+    /// Bind to an engine-side request id and arrival stamp.
+    pub fn into_request(self, internal_id: usize, arrival_s: f64) -> Request {
+        let kind = if self.score {
+            ReqKind::Score
+        } else {
+            ReqKind::Generate { max_new: self.max_new }
+        };
+        Request { id: internal_id, arrival: arrival_s, tokens: self.prompt, kind, qos: self.qos }
+    }
+}
+
+const KNOWN_FIELDS: [&str; 7] =
+    ["id", "prompt", "max_new", "score", "deadline_ms", "priority", "client"];
+
+fn uint_field(v: &Json, name: &str, max: f64) -> Result<f64, ProtoError> {
+    match v.as_f64() {
+        Some(n) if n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n <= max => Ok(n),
+        _ => Err(ProtoError::new(
+            400,
+            format!("field '{name}' must be an integer in 0..={max:.0}"),
+        )),
+    }
+}
+
+/// Parse and validate one request line (without its terminator) against
+/// `limits`. Every failure is a [`ProtoError`] with a 4xx code; the
+/// caller turns it into an `error` event or HTTP status.
+pub fn parse_request(line: &str, limits: &ProtoLimits) -> Result<WireRequest, ProtoError> {
+    if line.len() > limits.max_line_bytes {
+        return Err(ProtoError::new(
+            413,
+            format!(
+                "request of {} bytes exceeds the {} byte cap",
+                line.len(),
+                limits.max_line_bytes
+            ),
+        ));
+    }
+    let v = Json::parse(line).map_err(|e| ProtoError::new(400, format!("bad json: {e}")))?;
+    let obj = v.as_obj().ok_or_else(|| ProtoError::new(400, "request must be a JSON object"))?;
+    for k in obj.keys() {
+        if !KNOWN_FIELDS.contains(&k.as_str()) {
+            return Err(ProtoError::new(400, format!("unknown field '{k}'")));
+        }
+    }
+    let id = match obj.get("id") {
+        Some(j) => uint_field(j, "id", 9.0e15)? as u64,
+        None => return Err(ProtoError::new(400, "missing field 'id'")),
+    };
+    let prompt_arr = obj
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ProtoError::new(400, "missing or non-array field 'prompt'"))?;
+    if prompt_arr.is_empty() {
+        return Err(ProtoError::new(400, "'prompt' must not be empty"));
+    }
+    if prompt_arr.len() > limits.max_prompt {
+        return Err(ProtoError::new(
+            413,
+            format!(
+                "prompt of {} tokens exceeds the {} token cap",
+                prompt_arr.len(),
+                limits.max_prompt
+            ),
+        ));
+    }
+    let mut prompt = Vec::with_capacity(prompt_arr.len());
+    for t in prompt_arr {
+        match t.as_f64() {
+            Some(n)
+                if n.is_finite()
+                    && n.fract() == 0.0
+                    && n >= i32::MIN as f64
+                    && n <= i32::MAX as f64 =>
+            {
+                prompt.push(n as i32)
+            }
+            _ => return Err(ProtoError::new(400, "'prompt' tokens must be 32-bit integers")),
+        }
+    }
+    let score = match obj.get("score") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err(ProtoError::new(400, "'score' must be a boolean")),
+    };
+    let max_new = match obj.get("max_new") {
+        None => {
+            if score {
+                0
+            } else {
+                return Err(ProtoError::new(400, "missing field 'max_new'"));
+            }
+        }
+        Some(j) => {
+            let n = uint_field(j, "max_new", limits.max_new as f64)? as usize;
+            if n == 0 && !score {
+                return Err(ProtoError::new(400, "'max_new' must be >= 1"));
+            }
+            n
+        }
+    };
+    let deadline_s = match obj.get("deadline_ms") {
+        None => f64::INFINITY,
+        Some(j) => match j.as_f64() {
+            Some(ms) if ms.is_finite() && ms > 0.0 && ms <= 1.0e9 => ms / 1e3,
+            _ => {
+                return Err(ProtoError::new(
+                    400,
+                    "'deadline_ms' must be a positive number of milliseconds (<= 1e9)",
+                ))
+            }
+        },
+    };
+    let priority = match obj.get("priority") {
+        None => 1u8,
+        Some(j) => uint_field(j, "priority", 255.0)? as u8,
+    };
+    let client = match obj.get("client") {
+        None => 0u32,
+        Some(j) => uint_field(j, "client", u32::MAX as f64)? as u32,
+    };
+    Ok(WireRequest {
+        id,
+        prompt,
+        max_new,
+        score,
+        qos: Qos { deadline_s, priority, client },
+    })
+}
+
+/// Serialize a [`Request`] back into a request line (used by the
+/// loopback driver and the parity tests — the exact inverse of
+/// [`parse_request`] for in-range values).
+pub fn request_line(wire_id: u64, r: &Request) -> String {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("id", json::num(wire_id as f64)),
+        ("prompt", json::arr(r.tokens.iter().map(|t| json::num(*t as f64)))),
+    ];
+    match r.kind {
+        ReqKind::Score => fields.push(("score", Json::Bool(true))),
+        ReqKind::Generate { max_new } => fields.push(("max_new", json::num(max_new as f64))),
+    }
+    if r.qos.deadline_s.is_finite() {
+        fields.push(("deadline_ms", json::num(r.qos.deadline_s * 1e3)));
+    }
+    if r.qos.priority != 1 {
+        fields.push(("priority", json::num(r.qos.priority as f64)));
+    }
+    if r.qos.client != 0 {
+        fields.push(("client", json::num(r.qos.client as f64)));
+    }
+    let mut line = json::obj(fields).to_string();
+    line.push('\n');
+    line
+}
+
+fn nll_json(nll: Option<f64>) -> Json {
+    match nll {
+        Some(v) => json::num(v),
+        None => Json::Null,
+    }
+}
+
+/// `token` stream event line.
+pub fn token_line(id: u64, index: usize, token: i32) -> String {
+    let mut line = json::obj(vec![
+        ("event", json::s("token")),
+        ("id", json::num(id as f64)),
+        ("index", json::num(index as f64)),
+        ("token", json::num(token as f64)),
+    ])
+    .to_string();
+    line.push('\n');
+    line
+}
+
+/// Terminal `done/ok` body (no terminator — the HTTP adapter sends it as
+/// a response body).
+pub fn done_body(id: u64, tokens: &[i32], nll: Option<f64>, deadline_met: bool) -> String {
+    json::obj(vec![
+        ("event", json::s("done")),
+        ("id", json::num(id as f64)),
+        ("status", json::s("ok")),
+        ("tokens", json::arr(tokens.iter().map(|t| json::num(*t as f64)))),
+        ("nll", nll_json(nll)),
+        ("deadline_met", Json::Bool(deadline_met)),
+    ])
+    .to_string()
+}
+
+pub fn done_line(id: u64, tokens: &[i32], nll: Option<f64>, deadline_met: bool) -> String {
+    let mut line = done_body(id, tokens, nll, deadline_met);
+    line.push('\n');
+    line
+}
+
+/// Terminal `done/shed` body: the deadline passed while queued.
+pub fn shed_body(id: u64, waited_s: f64) -> String {
+    json::obj(vec![
+        ("event", json::s("done")),
+        ("id", json::num(id as f64)),
+        ("status", json::s("shed")),
+        ("code", json::num(503.0)),
+        ("waited_ms", json::num(waited_s * 1e3)),
+    ])
+    .to_string()
+}
+
+pub fn shed_line(id: u64, waited_s: f64) -> String {
+    let mut line = shed_body(id, waited_s);
+    line.push('\n');
+    line
+}
+
+/// Terminal `done/rejected` body: turned away at admission.
+pub fn reject_body(id: u64, code: u16, reason: &str) -> String {
+    json::obj(vec![
+        ("event", json::s("done")),
+        ("id", json::num(id as f64)),
+        ("status", json::s("rejected")),
+        ("code", json::num(code as f64)),
+        ("reason", json::s(reason)),
+    ])
+    .to_string()
+}
+
+pub fn reject_line(id: u64, code: u16, reason: &str) -> String {
+    let mut line = reject_body(id, code, reason);
+    line.push('\n');
+    line
+}
+
+/// Connection-level `error` body (no request id: the line never parsed).
+pub fn error_body(code: u16, reason: &str) -> String {
+    json::obj(vec![
+        ("event", json::s("error")),
+        ("code", json::num(code as f64)),
+        ("reason", json::s(reason)),
+    ])
+    .to_string()
+}
+
+pub fn error_line(code: u16, reason: &str) -> String {
+    let mut line = error_body(code, reason);
+    line.push('\n');
+    line
+}
+
+/// Client-side view of one response line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireEvent {
+    Token { id: u64, index: usize, token: i32 },
+    Done { id: u64, tokens: Vec<i32>, nll: Option<f64>, deadline_met: bool },
+    Shed { id: u64, code: u16, waited_ms: f64 },
+    Rejected { id: u64, code: u16, reason: String },
+    Error { code: u16, reason: String },
+}
+
+impl WireEvent {
+    /// True for the event that closes a request (everything but `token`).
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, WireEvent::Token { .. })
+    }
+}
+
+fn need_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key).and_then(Json::as_f64).ok_or_else(|| anyhow!("missing numeric '{key}'"))
+}
+
+fn need_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key).and_then(Json::as_str).ok_or_else(|| anyhow!("missing string '{key}'"))
+}
+
+/// Parse one response line (the client half of the protocol, used by the
+/// loopback driver and the tests).
+pub fn parse_event(line: &str) -> Result<WireEvent> {
+    let v = Json::parse(line)?;
+    match need_str(&v, "event")? {
+        "token" => Ok(WireEvent::Token {
+            id: need_f64(&v, "id")? as u64,
+            index: need_f64(&v, "index")? as usize,
+            token: need_f64(&v, "token")? as i32,
+        }),
+        "error" => Ok(WireEvent::Error {
+            code: need_f64(&v, "code")? as u16,
+            reason: need_str(&v, "reason")?.to_string(),
+        }),
+        "done" => {
+            let id = need_f64(&v, "id")? as u64;
+            match need_str(&v, "status")? {
+                "ok" => {
+                    let tokens = v
+                        .get("tokens")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("done/ok without 'tokens'"))?
+                        .iter()
+                        .map(|t| t.as_f64().map(|n| n as i32))
+                        .collect::<Option<Vec<i32>>>()
+                        .ok_or_else(|| anyhow!("non-numeric token in done/ok"))?;
+                    let nll = v.get("nll").and_then(Json::as_f64);
+                    let deadline_met = matches!(v.get("deadline_met"), Some(Json::Bool(true)));
+                    Ok(WireEvent::Done { id, tokens, nll, deadline_met })
+                }
+                "shed" => Ok(WireEvent::Shed {
+                    id,
+                    code: need_f64(&v, "code")? as u16,
+                    waited_ms: need_f64(&v, "waited_ms")?,
+                }),
+                "rejected" => Ok(WireEvent::Rejected {
+                    id,
+                    code: need_f64(&v, "code")? as u16,
+                    reason: need_str(&v, "reason")?.to_string(),
+                }),
+                other => Err(anyhow!("unknown done status '{other}'")),
+            }
+        }
+        other => Err(anyhow!("unknown event '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> ProtoLimits {
+        ProtoLimits { max_line_bytes: 256, max_prompt: 8, max_new: 16 }
+    }
+
+    #[test]
+    fn minimal_request_parses_with_defaults() {
+        let w = parse_request(r#"{"id": 3, "prompt": [1, 2, 3], "max_new": 4}"#, &limits())
+            .unwrap();
+        assert_eq!(w.id, 3);
+        assert_eq!(w.prompt, vec![1, 2, 3]);
+        assert_eq!(w.max_new, 4);
+        assert!(!w.score);
+        assert!(w.qos.deadline_s.is_infinite());
+        assert_eq!((w.qos.priority, w.qos.client), (1, 0));
+    }
+
+    #[test]
+    fn qos_fields_parse() {
+        let w = parse_request(
+            r#"{"id":1,"prompt":[5],"max_new":2,"deadline_ms":250,"priority":0,"client":7}"#,
+            &limits(),
+        )
+        .unwrap();
+        assert_eq!(w.qos.deadline_s, 0.25);
+        assert_eq!((w.qos.priority, w.qos.client), (0, 7));
+    }
+
+    #[test]
+    fn score_requests_need_no_max_new() {
+        let w = parse_request(r#"{"id":1,"prompt":[5,6],"score":true}"#, &limits()).unwrap();
+        assert!(w.score);
+        let r = w.into_request(42, 1.5);
+        assert_eq!(r.kind, ReqKind::Score);
+        assert_eq!((r.id, r.arrival), (42, 1.5));
+    }
+
+    /// Fuzz-ish rejection table: every malformed line maps to the right
+    /// 4xx without panicking.
+    #[test]
+    fn malformed_requests_reject_with_codes() {
+        let l = limits();
+        let cases: Vec<(&str, u16)> = vec![
+            // truncated / bad json
+            (r#"{"id": 3, "prompt": [1,"#, 400),
+            (r#""#, 400),
+            (r#"garbage"#, 400),
+            (r#"[1,2,3]"#, 400),
+            (r#"null"#, 400),
+            // unknown fields are rejected, not ignored
+            (r#"{"id":1,"prompt":[1],"max_new":2,"deadline_m":9}"#, 400),
+            (r#"{"id":1,"prompt":[1],"max_new":2,"extra":true}"#, 400),
+            // missing requireds
+            (r#"{"prompt":[1],"max_new":2}"#, 400),
+            (r#"{"id":1,"max_new":2}"#, 400),
+            (r#"{"id":1,"prompt":[1]}"#, 400),
+            // type errors
+            (r#"{"id":"x","prompt":[1],"max_new":2}"#, 400),
+            (r#"{"id":1.5,"prompt":[1],"max_new":2}"#, 400),
+            (r#"{"id":-1,"prompt":[1],"max_new":2}"#, 400),
+            (r#"{"id":1,"prompt":[1.5],"max_new":2}"#, 400),
+            (r#"{"id":1,"prompt":[1e12],"max_new":2}"#, 400),
+            (r#"{"id":1,"prompt":"abc","max_new":2}"#, 400),
+            (r#"{"id":1,"prompt":[],"max_new":2}"#, 400),
+            (r#"{"id":1,"prompt":[1],"max_new":0}"#, 400),
+            (r#"{"id":1,"prompt":[1],"max_new":2,"score":1}"#, 400),
+            (r#"{"id":1,"prompt":[1],"max_new":2,"deadline_ms":0}"#, 400),
+            (r#"{"id":1,"prompt":[1],"max_new":2,"deadline_ms":-5}"#, 400),
+            (r#"{"id":1,"prompt":[1],"max_new":2,"priority":300}"#, 400),
+            // oversizes
+            (r#"{"id":1,"prompt":[1,2,3,4,5,6,7,8,9],"max_new":2}"#, 413),
+            (r#"{"id":1,"prompt":[1],"max_new":17}"#, 400),
+        ];
+        for (line, want) in cases {
+            match parse_request(line, &l) {
+                Err(e) => assert_eq!(e.code, want, "line {line:?} gave {e}"),
+                Ok(w) => panic!("line {line:?} unexpectedly parsed: {w:?}"),
+            }
+        }
+        // the byte cap trips before json parsing
+        let huge = format!(r#"{{"id":1,"prompt":[{}],"max_new":2}}"#, "1,".repeat(400) + "1");
+        assert_eq!(parse_request(&huge, &l).unwrap_err().code, 413);
+    }
+
+    #[test]
+    fn request_line_round_trips_through_parse() {
+        let l = ProtoLimits::default();
+        let reqs = vec![
+            Request {
+                id: 9,
+                arrival: 0.0,
+                tokens: vec![1, 2, 3],
+                kind: ReqKind::Generate { max_new: 5 },
+                qos: Qos { deadline_s: 0.25, priority: 2, client: 3 },
+            },
+            Request {
+                id: 10,
+                arrival: 0.0,
+                tokens: vec![-4, 0, 7],
+                kind: ReqKind::Score,
+                qos: Qos::default(),
+            },
+        ];
+        for r in reqs {
+            let line = request_line(r.id as u64, &r);
+            let w = parse_request(line.trim(), &l).unwrap();
+            assert_eq!(w.id, r.id as u64);
+            assert_eq!(w.prompt, r.tokens);
+            assert_eq!(w.qos, r.qos);
+            let back = w.into_request(r.id, r.arrival);
+            assert_eq!(back.kind, r.kind);
+        }
+    }
+
+    #[test]
+    fn response_lines_parse_as_events() {
+        let ev = parse_event(token_line(7, 0, 42).trim()).unwrap();
+        assert_eq!(ev, WireEvent::Token { id: 7, index: 0, token: 42 });
+        assert!(!ev.is_terminal());
+
+        let ev = parse_event(done_line(7, &[42, 17], None, true).trim()).unwrap();
+        assert_eq!(
+            ev,
+            WireEvent::Done { id: 7, tokens: vec![42, 17], nll: None, deadline_met: true }
+        );
+        assert!(ev.is_terminal());
+
+        // NLL round-trips bit-exactly through the shortest-repr writer
+        let nll = 123.456789012345678_f64 / 7.0;
+        match parse_event(done_line(1, &[], Some(nll), false).trim()).unwrap() {
+            WireEvent::Done { nll: Some(back), deadline_met, .. } => {
+                assert_eq!(back, nll, "f64 must round-trip exactly over the wire");
+                assert!(!deadline_met);
+            }
+            other => panic!("bad event {other:?}"),
+        }
+
+        let ev = parse_event(shed_line(5, 0.0125).trim()).unwrap();
+        assert_eq!(ev, WireEvent::Shed { id: 5, code: 503, waited_ms: 12.5 });
+
+        let ev = parse_event(reject_line(6, 429, "client 2 rate-limited").trim()).unwrap();
+        assert!(matches!(ev, WireEvent::Rejected { id: 6, code: 429, .. }));
+
+        let ev = parse_event(error_line(400, "bad json").trim()).unwrap();
+        assert!(matches!(ev, WireEvent::Error { code: 400, .. }));
+
+        assert!(parse_event("{}").is_err());
+        assert!(parse_event(r#"{"event":"mystery"}"#).is_err());
+    }
+}

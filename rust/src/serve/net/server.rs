@@ -1,0 +1,671 @@
+//! The TCP front end: a [`NetServer`] binds a listener, parses both wire
+//! protocols ([`super::proto`] lines and the [`super::http`] subset) into
+//! the shared arrival queue ([`crate::serve::ingest::IngestQueue`]), and
+//! streams generated tokens back while the same
+//! [`crate::serve::online::worker_loop`] workers as the offline engine do
+//! the serving — the socket edge adds *no* model code, which is what
+//! makes loopback == offline replay parity (`tests/serve_parity.rs`)
+//! structural rather than lucky.
+//!
+//! # Threads
+//!
+//! * one nonblocking **listener** thread accepting connections while
+//!   `accepting` holds;
+//! * one detached **handler** thread per connection (sniffs HTTP vs
+//!   lines from the first bytes, then parse → admit → stream replies);
+//! * `workers` **serving** threads running the continuous-batching loop.
+//!
+//! Handlers and workers meet only at the ingest queue and the per-request
+//! reply channels. Locks are never nested: the bucket check, the queue
+//! push and the connection-count bookkeeping each take exactly one lock
+//! in its own statement.
+//!
+//! # Overload control
+//!
+//! Admission applies, in order: capacity sanity (a request whose
+//! worst-case KV footprint no replica could ever hold is a 400), the
+//! per-client token bucket ([`super::bucket`], 429), then the queue's own
+//! checks — bounded capacity, expired or predictively-unmeetable
+//! deadlines, draining (503s). Queued requests past their deadline are
+//! shed by the worker-side sweep and the waiting connection hears
+//! [`Reply::Shed`] immediately.
+//!
+//! # Graceful drain
+//!
+//! [`NetServer::shutdown`] stops accepting, joins the listener, waits up
+//! to `drain_deadline` for open connections to finish, *then* closes the
+//! queue (so late in-flight submissions still land) and joins the
+//! workers. [`NetStats`] reports whether the drain beat the deadline and
+//! the exact `queued == finished + shed` accounting.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::telemetry::{sink_or_disabled, SpanKind, SpanSink, Tracer};
+use crate::util::par::{locked, spawn_named, wait_timeout_on};
+
+use super::super::engine::ServeContext;
+use super::super::ingest::{
+    Admit, IngestQueue, QueueConfig, RejectOutcome, Reply, ShedOutcome,
+};
+use super::super::online::{worker_loop, OnlineFinished, WorkerStats};
+use super::super::scheduler::{Policy, SchedulerConfig};
+use super::bucket::ClientBuckets;
+use super::http::{read_request, write_response};
+use super::proto::{
+    done_body, done_line, error_body, error_line, parse_event, parse_request, reject_body,
+    reject_line, shed_body, shed_line, token_line, ProtoLimits, WireEvent, WireRequest,
+};
+
+/// Accept-loop poll interval while the listener is nonblocking-idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+/// Socket read timeout: an idle connection eventually releases its
+/// handler thread instead of pinning it forever.
+const READ_TIMEOUT: Duration = Duration::from_secs(60);
+/// Cap on waiting for the serving side of an admitted request.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Configuration of one [`NetServer`].
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// bind address; port 0 picks an ephemeral port (read it back with
+    /// [`NetServer::addr`])
+    pub addr: String,
+    /// serving workers (one [`ServeContext`] replica each)
+    pub workers: usize,
+    /// per-worker admission caps (token budget + batch slots)
+    pub sched: SchedulerConfig,
+    /// arrival-queue pop order (output-invariant)
+    pub policy: Policy,
+    /// arrival-queue capacity; 0 = unbounded
+    pub queue_cap: usize,
+    /// per-client token-bucket refill, tokens/second; 0 disables
+    pub bucket_rate: f64,
+    /// per-client token-bucket capacity
+    pub bucket_burst: f64,
+    /// predictive admit-time deadline shedding
+    /// ([`QueueConfig::admit_reject`])
+    pub admit_reject: bool,
+    /// how long [`NetServer::shutdown`] waits for open connections
+    pub drain_deadline: Duration,
+    pub limits: ProtoLimits,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            sched: SchedulerConfig::default(),
+            policy: Policy::Fifo,
+            queue_cap: 256,
+            bucket_rate: 0.0,
+            bucket_burst: 0.0,
+            admit_reject: false,
+            drain_deadline: Duration::from_secs(10),
+            limits: ProtoLimits::default(),
+        }
+    }
+}
+
+/// Everything the listener, handlers and workers share.
+struct Shared {
+    cfg: NetConfig,
+    queue: IngestQueue,
+    tracer: Option<Arc<Tracer>>,
+    /// server start; request arrival stamps and bucket clocks are
+    /// seconds since here
+    epoch: Instant,
+    /// smallest replica KV capacity — bounds any admissible request
+    min_pos: usize,
+    accepting: AtomicBool,
+    /// open connection handlers (the drain barrier)
+    conn_count: Mutex<usize>,
+    conn_done: Condvar,
+    /// engine-side request ids; 0 is reserved for connection-scoped spans
+    next_id: AtomicUsize,
+    buckets: Mutex<ClientBuckets>,
+    accepted: AtomicUsize,
+    queued: AtomicUsize,
+    rejected_rate: AtomicUsize,
+    parse_errors: AtomicUsize,
+}
+
+/// Decrements the connection count on scope exit (including panics), so
+/// the drain barrier in [`NetServer::shutdown`] can never hang on a
+/// connection that died.
+struct ConnGuard {
+    sh: Arc<Shared>,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        {
+            let mut g = locked(&self.sh.conn_count);
+            *g = g.saturating_sub(1);
+        }
+        self.sh.conn_done.notify_all();
+    }
+}
+
+/// Final accounting of one server lifetime, returned by
+/// [`NetServer::shutdown`].
+pub struct NetStats {
+    /// retired requests, sorted by engine-side id
+    pub finished: Vec<OnlineFinished>,
+    pub workers: Vec<WorkerStats>,
+    /// queued requests shed after their deadline passed
+    pub shed: Vec<ShedOutcome>,
+    /// requests rejected by the queue (bounded capacity, unmeetable
+    /// deadline, draining)
+    pub rejected: Vec<RejectOutcome>,
+    /// connections accepted over the lifetime
+    pub accepted_conns: usize,
+    /// requests that entered the queue — `finished + shed` exactly
+    pub requests: usize,
+    /// lines/bodies that failed protocol validation
+    pub parse_errors: usize,
+    /// requests refused by the per-client token bucket (never queued)
+    pub rejected_rate: usize,
+    /// every connection closed before the drain deadline
+    pub drained_clean: bool,
+}
+
+impl NetStats {
+    /// The graceful-drain invariant: every queued request retired or was
+    /// shed — nothing vanished.
+    pub fn accounted(&self) -> bool {
+        self.requests == self.finished.len() + self.shed.len()
+    }
+}
+
+/// A running TCP front end. Construct with [`NetServer::start`], stop
+/// with [`NetServer::shutdown`].
+pub struct NetServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    listener: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<(WorkerStats, Vec<OnlineFinished>)>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr`, spawn the worker pool (consuming one
+    /// [`ServeContext`] replica per worker) and the listener thread, and
+    /// return once the socket is accepting.
+    pub fn start(
+        ctxs: Vec<ServeContext>,
+        cfg: NetConfig,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Result<NetServer> {
+        if cfg.workers == 0 {
+            anyhow::bail!("serve-net needs at least one worker");
+        }
+        if ctxs.len() != cfg.workers {
+            anyhow::bail!("got {} model replicas for {} workers", ctxs.len(), cfg.workers);
+        }
+        if cfg.sched.max_batch == 0 {
+            anyhow::bail!("scheduler max_batch must be >= 1");
+        }
+        let min_pos = ctxs.iter().map(|c| c.max_pos()).min().unwrap_or(0);
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding serve-net listener to {}", cfg.addr))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the serve-net listener nonblocking")?;
+        let addr = listener.local_addr().context("reading the bound listener address")?;
+
+        let buckets = ClientBuckets::new(cfg.bucket_rate, cfg.bucket_burst);
+        let queue = IngestQueue::with_config(QueueConfig {
+            policy: cfg.policy,
+            capacity: cfg.queue_cap,
+            workers_hint: cfg.workers,
+            admit_reject: cfg.admit_reject,
+        });
+        let shared = Arc::new(Shared {
+            cfg,
+            queue,
+            tracer,
+            epoch: Instant::now(),
+            min_pos,
+            accepting: AtomicBool::new(true),
+            conn_count: Mutex::new(0),
+            conn_done: Condvar::new(),
+            next_id: AtomicUsize::new(1),
+            buckets: Mutex::new(buckets),
+            accepted: AtomicUsize::new(0),
+            queued: AtomicUsize::new(0),
+            rejected_rate: AtomicUsize::new(0),
+            parse_errors: AtomicUsize::new(0),
+        });
+
+        let mut workers = Vec::with_capacity(shared.cfg.workers);
+        for (wid, ctx) in ctxs.into_iter().enumerate() {
+            let sh = Arc::clone(&shared);
+            let spawned = spawn_named(&format!("besa-serve-worker-{wid}"), move || {
+                let mut sink = sink_or_disabled(sh.tracer.as_deref());
+                worker_loop(wid, &ctx, &sh.queue, &sh.cfg.sched, &mut sink)
+            });
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // release the workers already running, then fail
+                    shared.queue.close();
+                    return Err(e);
+                }
+            }
+        }
+
+        let sh = Arc::clone(&shared);
+        let listener_thread = spawn_named("besa-serve-listener", move || {
+            accept_loop(&sh, listener);
+        });
+        let listener_thread = match listener_thread {
+            Ok(h) => h,
+            Err(e) => {
+                shared.queue.close();
+                return Err(e);
+            }
+        };
+
+        Ok(NetServer { shared, addr, listener: Some(listener_thread), workers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting, wait for open connections (up to
+    /// the drain deadline), close the queue, join the workers, and
+    /// return the full accounting.
+    pub fn shutdown(mut self) -> Result<NetStats> {
+        self.shared.accepting.store(false, Ordering::SeqCst);
+        if let Some(h) = self.listener.take() {
+            h.join().map_err(|_| anyhow!("serve-net listener thread panicked"))?;
+        }
+        let deadline = Instant::now() + self.shared.cfg.drain_deadline;
+        let drained_clean = {
+            let mut g = locked(&self.shared.conn_count);
+            while *g > 0 && Instant::now() < deadline {
+                g = wait_timeout_on(&self.shared.conn_done, g, Duration::from_millis(20));
+            }
+            *g == 0
+        };
+        // only now does the queue close: connections that made it in
+        // before the deadline still get served, and anything later is
+        // rejected as Draining — race-free by construction
+        self.shared.queue.close();
+        let mut finished = Vec::new();
+        let mut workers = Vec::new();
+        for h in self.workers.drain(..) {
+            let (ws, fin) = h.join().map_err(|_| anyhow!("serve-net worker panicked"))?;
+            workers.push(ws);
+            finished.extend(fin);
+        }
+        finished.sort_by_key(|f| f.id);
+        let (shed, rejected) = self.shared.queue.take_outcomes();
+        Ok(NetStats {
+            finished,
+            workers,
+            shed,
+            rejected,
+            accepted_conns: self.shared.accepted.load(Ordering::Relaxed),
+            requests: self.shared.queued.load(Ordering::Relaxed),
+            parse_errors: self.shared.parse_errors.load(Ordering::Relaxed),
+            rejected_rate: self.shared.rejected_rate.load(Ordering::Relaxed),
+            drained_clean,
+        })
+    }
+}
+
+/// Accept until `accepting` clears; each connection gets a detached
+/// handler thread, registered in the drain barrier *before* the spawn so
+/// shutdown can never miss it.
+fn accept_loop(sh: &Arc<Shared>, listener: TcpListener) {
+    while sh.accepting.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                sh.accepted.fetch_add(1, Ordering::Relaxed);
+                {
+                    let mut g = locked(&sh.conn_count);
+                    *g += 1;
+                }
+                let csh = Arc::clone(sh);
+                let spawned = spawn_named("besa-serve-conn", move || {
+                    let guard = ConnGuard { sh: Arc::clone(&csh) };
+                    handle_conn(&csh, stream);
+                    drop(guard);
+                });
+                if spawned.is_err() {
+                    // undo the registration the handler never got to own
+                    {
+                        let mut g = locked(&sh.conn_count);
+                        *g = g.saturating_sub(1);
+                    }
+                    sh.conn_done.notify_all();
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Sniff the protocol from the first buffered bytes and dispatch.
+fn handle_conn(sh: &Arc<Shared>, stream: TcpStream) {
+    let t_accept = Instant::now();
+    let mut sink = sink_or_disabled(sh.tracer.as_deref());
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    let head = match reader.fill_buf() {
+        Ok(b) => b,
+        Err(_) => return,
+    };
+    const HTTP_METHODS: [&[u8; 4]; 5] = [b"GET ", b"POST", b"PUT ", b"HEAD", b"DELE"];
+    let is_http = HTTP_METHODS.iter().any(|p| head.starts_with(*p));
+    sink.record(0, SpanKind::Accept, -1, t_accept, Instant::now(), true);
+    if is_http {
+        handle_http(sh, &mut reader, &mut writer, &mut sink);
+    } else {
+        handle_lines(sh, &mut reader, &mut writer, &mut sink);
+    }
+    let _ = writer.flush();
+}
+
+/// The line protocol: one request per line, responses streamed back;
+/// protocol errors answer with an `error` line and (except for lost
+/// framing) keep the connection.
+fn handle_lines(
+    sh: &Arc<Shared>,
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    sink: &mut SpanSink<'_>,
+) {
+    let cap = sh.cfg.limits.max_line_bytes;
+    loop {
+        let t_read = Instant::now();
+        let mut buf = Vec::new();
+        let mut lim = Read::take(&mut *reader, cap as u64 + 1);
+        let line = match lim.read_until(b'\n', &mut buf) {
+            Ok(0) => return, // clean EOF
+            Ok(_) if buf.last() != Some(&b'\n') && buf.len() > cap => {
+                // framing is lost past the cap: answer and close
+                sh.parse_errors.fetch_add(1, Ordering::Relaxed);
+                sink.record(0, SpanKind::Parse, -1, t_read, Instant::now(), false);
+                let msg = format!("request line exceeds the {cap} byte cap");
+                let _ = writer.write_all(error_line(413, &msg).as_bytes());
+                return;
+            }
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    buf.pop();
+                }
+                match String::from_utf8(buf) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        sh.parse_errors.fetch_add(1, Ordering::Relaxed);
+                        sink.record(0, SpanKind::Parse, -1, t_read, Instant::now(), false);
+                        let _ = writer.write_all(
+                            error_line(400, "request line is not valid UTF-8").as_bytes(),
+                        );
+                        let _ = writer.flush();
+                        continue;
+                    }
+                }
+            }
+            // read timeout or hard socket error: nothing mid-line we
+            // could answer coherently
+            Err(_) => return,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let wire = match parse_request(&line, &sh.cfg.limits) {
+            Ok(w) => w,
+            Err(e) => {
+                sh.parse_errors.fetch_add(1, Ordering::Relaxed);
+                sink.record(0, SpanKind::Parse, -1, t_read, Instant::now(), false);
+                let _ = writer.write_all(error_line(e.code, &e.reason).as_bytes());
+                let _ = writer.flush();
+                continue;
+            }
+        };
+        let wire_id = wire.id;
+        match admit(sh, wire) {
+            Err((code, reason)) => {
+                let _ = writer.write_all(reject_line(wire_id, code, &reason).as_bytes());
+                let _ = writer.flush();
+            }
+            Ok((internal, rx)) => {
+                sink.record(internal, SpanKind::Parse, -1, t_read, Instant::now(), true);
+                if !stream_replies(wire_id, internal, &rx, writer, sink) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Pump one admitted request's reply channel onto the socket. Returns
+/// false when the connection should close (write failure or a serving
+/// stall).
+fn stream_replies(
+    wire_id: u64,
+    internal: u64,
+    rx: &Receiver<Reply>,
+    writer: &mut BufWriter<TcpStream>,
+    sink: &mut SpanSink<'_>,
+) -> bool {
+    loop {
+        match rx.recv_timeout(REPLY_TIMEOUT) {
+            Ok(Reply::Token { index, token }) => {
+                if writer.write_all(token_line(wire_id, index, token).as_bytes()).is_err() {
+                    return false;
+                }
+                if writer.flush().is_err() {
+                    return false;
+                }
+            }
+            Ok(Reply::Done { tokens, nll, deadline_met }) => {
+                let t_ser = Instant::now();
+                let line = done_line(wire_id, &tokens, nll, deadline_met);
+                let ok = writer.write_all(line.as_bytes()).is_ok() && writer.flush().is_ok();
+                sink.record(internal, SpanKind::Serialize, -1, t_ser, Instant::now(), ok);
+                return ok;
+            }
+            Ok(Reply::Shed { waited_s }) => {
+                let ok = writer.write_all(shed_line(wire_id, waited_s).as_bytes()).is_ok()
+                    && writer.flush().is_ok();
+                return ok;
+            }
+            // the serving side went quiet for a full minute: tell the
+            // client and drop the connection rather than hang it
+            Err(_) => {
+                let _ = writer.write_all(error_line(500, "serving stalled").as_bytes());
+                let _ = writer.flush();
+                return false;
+            }
+        }
+    }
+}
+
+/// The HTTP adapter: exactly one request per connection
+/// (`Connection: close`), generation collected into a single body.
+fn handle_http(
+    sh: &Arc<Shared>,
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    sink: &mut SpanSink<'_>,
+) {
+    let req = match read_request(reader, &sh.cfg.limits) {
+        Ok(Some(r)) => r,
+        Ok(None) => return,
+        Err(e) => {
+            sh.parse_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = write_response(writer, e.code, &error_body(e.code, &e.reason));
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = write_response(writer, 200, r#"{"status":"ok"}"#);
+        }
+        ("POST", "/v1/generate") => {
+            let t_parse = Instant::now();
+            let wire = match parse_request(&req.body, &sh.cfg.limits) {
+                Ok(w) => w,
+                Err(e) => {
+                    sh.parse_errors.fetch_add(1, Ordering::Relaxed);
+                    sink.record(0, SpanKind::Parse, -1, t_parse, Instant::now(), false);
+                    let _ = write_response(writer, e.code, &error_body(e.code, &e.reason));
+                    return;
+                }
+            };
+            let wire_id = wire.id;
+            match admit(sh, wire) {
+                Err((code, reason)) => {
+                    let _ = write_response(writer, code, &reject_body(wire_id, code, &reason));
+                }
+                Ok((internal, rx)) => {
+                    sink.record(internal, SpanKind::Parse, -1, t_parse, Instant::now(), true);
+                    collect_http_reply(wire_id, internal, &rx, writer, sink);
+                }
+            }
+        }
+        _ => {
+            let _ = write_response(
+                writer,
+                404,
+                &error_body(404, &format!("no route {} {}", req.method, req.path)),
+            );
+        }
+    }
+}
+
+/// Wait out one admitted request and answer it as a single HTTP body
+/// (streamed tokens are folded into the terminal `done` event).
+fn collect_http_reply(
+    wire_id: u64,
+    internal: u64,
+    rx: &Receiver<Reply>,
+    writer: &mut BufWriter<TcpStream>,
+    sink: &mut SpanSink<'_>,
+) {
+    loop {
+        match rx.recv_timeout(REPLY_TIMEOUT) {
+            Ok(Reply::Token { .. }) => continue,
+            Ok(Reply::Done { tokens, nll, deadline_met }) => {
+                let t_ser = Instant::now();
+                let body = done_body(wire_id, &tokens, nll, deadline_met);
+                let ok = write_response(writer, 200, &body).is_ok();
+                sink.record(internal, SpanKind::Serialize, -1, t_ser, Instant::now(), ok);
+                return;
+            }
+            Ok(Reply::Shed { waited_s }) => {
+                let _ = write_response(writer, 503, &shed_body(wire_id, waited_s));
+                return;
+            }
+            Err(_) => {
+                let _ = write_response(writer, 500, &error_body(500, "serving stalled"));
+                return;
+            }
+        }
+    }
+}
+
+/// Admission: capacity sanity → per-client token bucket → queue checks.
+/// On success returns the engine-side id and the reply channel; on
+/// rejection the HTTP-style code and reason for the wire.
+fn admit(sh: &Arc<Shared>, wire: WireRequest) -> Result<(u64, Receiver<Reply>), (u16, String)> {
+    let arrival_s = sh.epoch.elapsed().as_secs_f64();
+    let internal = sh.next_id.fetch_add(1, Ordering::Relaxed);
+    let req = wire.into_request(internal, arrival_s);
+    let cost = req.cost();
+    let capacity = sh.cfg.sched.token_budget.min(sh.min_pos);
+    if cost > capacity {
+        return Err((
+            400,
+            format!("request needs {cost} tokens but the server caps at {capacity}"),
+        ));
+    }
+    let admitted = {
+        let mut b = locked(&sh.buckets);
+        b.try_admit(req.qos.client, arrival_s, cost as f64)
+    };
+    if !admitted {
+        sh.rejected_rate.fetch_add(1, Ordering::Relaxed);
+        return Err((429, format!("client {} rate-limited", req.qos.client)));
+    }
+    let (tx, rx) = std::sync::mpsc::channel::<Reply>();
+    match sh.queue.push_opts(req, Some(tx)) {
+        Admit::Queued => {
+            sh.queued.fetch_add(1, Ordering::Relaxed);
+            Ok((internal as u64, rx))
+        }
+        Admit::Rejected(r) => Err((r.http_code(), r.label().to_string())),
+    }
+}
+
+/// A minimal blocking client for the line protocol — what the loopback
+/// drive mode (`besa serve-net --drive`), the CI smoke job and the
+/// parity tests speak.
+pub struct LineClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl LineClient {
+    pub fn connect(addr: &SocketAddr) -> Result<LineClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting line client to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+        let reader = BufReader::new(stream.try_clone().context("cloning client stream")?);
+        Ok(LineClient { reader, writer: stream })
+    }
+
+    /// Send one already-`\n`-terminated request line.
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes()).context("writing request line")?;
+        Ok(())
+    }
+
+    /// Read the next response event.
+    pub fn read_event(&mut self) -> Result<WireEvent> {
+        let mut s = String::new();
+        let n = self.reader.read_line(&mut s).context("reading response line")?;
+        if n == 0 {
+            anyhow::bail!("server closed the connection");
+        }
+        parse_event(s.trim_end())
+    }
+
+    /// Send one request and collect events through its terminal event.
+    pub fn request(&mut self, line: &str) -> Result<Vec<WireEvent>> {
+        self.send_line(line)?;
+        let mut events = Vec::new();
+        loop {
+            let ev = self.read_event()?;
+            let terminal = ev.is_terminal();
+            events.push(ev);
+            if terminal {
+                return Ok(events);
+            }
+        }
+    }
+}

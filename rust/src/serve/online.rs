@@ -7,9 +7,12 @@
 //! KV caches of the requests it admitted — nothing but the arrival queue
 //! is shared, so workers never contend on model state. Every worker runs
 //! its own continuous-batching loop: pull admissions from the shared
-//! FIFO while its token budget and batch slots allow, prefill them, then
+//! queue while its token budget and batch slots allow, prefill them, then
 //! one batched decode step per iteration for everything active —
 //! the same loop as the offline [`super::bench::run_trace`], sharded.
+//! The same `worker_loop` also serves the TCP front end ([`super::net`]),
+//! where it additionally streams tokens back over per-request reply
+//! channels.
 //!
 //! # Determinism / parity
 //!
@@ -17,31 +20,46 @@
 //! batch) is racy, but the *output* of a request is not: greedy decode
 //! depends only on the model and the request's own prompt — batched
 //! linears are row-independent and attention reads only the request's own
-//! KV cache — so any worker count produces identical per-request tokens
-//! and NLLs. `tests/serve_parity.rs` pins sharded == single-worker ==
-//! offline replay.
+//! KV cache — so any worker count, and any queue [`Policy`], produces
+//! identical per-request tokens and NLLs. `tests/serve_parity.rs` pins
+//! sharded == single-worker == offline replay, and FIFO == priority ==
+//! EDF per-request outputs.
+//!
+//! # Overload
+//!
+//! [`OnlineConfig`] exposes the queue's overload knobs (policy, bounded
+//! capacity, predictive admit-time shedding); requests carrying deadlines
+//! can be shed in-queue or rejected at push, and every outcome lands in
+//! [`OnlineStats`] — `finished + shed + rejected == submitted`, always.
 //!
 //! # Metrics
 //!
 //! Per worker: requests served, prompt/generated tokens, busy (compute)
 //! seconds vs pool wall-clock, peak batch occupancy. Per request: queue
-//! wait (enqueue → admission) vs service (admission → retire) split.
-//! [`super::bench`] merges these into aggregate throughput and latency
-//! percentiles for `BENCH_serve.json`.
+//! wait (enqueue → admission) vs service (admission → retire) split, and
+//! whether the deadline was met. With a [`Tracer`] attached
+//! ([`serve_online_traced`]), workers also record queue/admit/prefill/
+//! decode spans per request (see [`crate::telemetry`]). [`super::bench`]
+//! merges these into aggregate throughput and latency percentiles for
+//! `BENCH_serve.json`.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::telemetry::{sink_or_disabled, SpanKind, SpanSink, Tracer};
 use crate::util::par::{locked, scoped_workers};
 
 use super::engine::{
     argmax, decode_step, last_logits, prefill, score_nll, DecodeScratch, ServeContext,
 };
-use super::ingest::{run_producer, ArrivedRequest, IngestQueue, Pacing, Pop};
+use super::ingest::{
+    run_producer, ArrivedRequest, IngestQueue, Pacing, Pop, QueueConfig, RejectOutcome, Reply,
+    ShedOutcome,
+};
 use super::kv::KvCache;
-use super::scheduler::{ReqKind, Request, SchedulerConfig};
+use super::scheduler::{Policy, ReqKind, Request, SchedulerConfig};
 
 /// How long an idle worker sleeps before re-checking the queue.
 const IDLE_POLL: Duration = Duration::from_millis(1);
@@ -54,6 +72,26 @@ pub struct OnlineConfig {
     /// per-worker admission caps (token budget + batch slots)
     pub sched: SchedulerConfig,
     pub pacing: Pacing,
+    /// arrival-queue pop order (output-invariant)
+    pub policy: Policy,
+    /// arrival-queue capacity; 0 = unbounded
+    pub queue_cap: usize,
+    /// predictive admit-time deadline shedding (see
+    /// [`QueueConfig::admit_reject`])
+    pub admit_reject: bool,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            workers: 1,
+            sched: SchedulerConfig::default(),
+            pacing: Pacing::Replay { time_scale: 1.0 },
+            policy: Policy::Fifo,
+            queue_cap: 0,
+            admit_reject: false,
+        }
+    }
 }
 
 /// One retired request, with the queue-wait vs compute split.
@@ -72,6 +110,8 @@ pub struct OnlineFinished {
     pub tokens: Vec<i32>,
     /// total prompt NLL (scoring requests only)
     pub nll: Option<f64>,
+    /// retired before its deadline (always true without a deadline)
+    pub deadline_met: bool,
 }
 
 /// Counters of one worker's whole run.
@@ -90,6 +130,10 @@ pub struct WorkerStats {
 pub struct OnlineStats {
     pub finished: Vec<OnlineFinished>,
     pub workers: Vec<WorkerStats>,
+    /// requests shed in-queue after their deadline passed
+    pub shed: Vec<ShedOutcome>,
+    /// requests rejected at push (bounded queue, unmeetable deadline)
+    pub rejected: Vec<RejectOutcome>,
     /// wall-clock seconds from pool start to last worker exit
     pub wall_s: f64,
 }
@@ -99,17 +143,28 @@ impl OnlineStats {
     pub fn total_tokens(&self) -> usize {
         self.workers.iter().map(|w| w.prompt_tokens + w.gen_tokens).sum()
     }
+
+    /// retired requests that met their deadline (the goodput numerator).
+    pub fn within_deadline(&self) -> usize {
+        self.finished.iter().filter(|f| f.deadline_met).count()
+    }
 }
 
 /// A request being decoded by one worker.
 struct Active {
     req: Request,
     enqueued: Instant,
+    /// pop instant — the start of service
+    admitted_at: Instant,
+    deadline_at: Option<Instant>,
+    reply: Option<std::sync::mpsc::Sender<Reply>>,
     queue_wait_s: f64,
     cache: KvCache,
     last: i32,
     produced: usize,
     tokens: Vec<i32>,
+    /// first batched decode step this request took part in
+    decode_started: Option<Instant>,
 }
 
 /// Serve `requests` through `ocfg.workers` sharded workers, one
@@ -121,6 +176,18 @@ pub fn serve_online(
     ctxs: &[ServeContext],
     requests: Vec<Request>,
     ocfg: &OnlineConfig,
+) -> Result<OnlineStats> {
+    serve_online_traced(ctxs, requests, ocfg, None)
+}
+
+/// [`serve_online`] with optional per-request span tracing: each worker
+/// flushes queue/admit/prefill/decode spans into `tracer` through its own
+/// buffered [`SpanSink`].
+pub fn serve_online_traced(
+    ctxs: &[ServeContext],
+    requests: Vec<Request>,
+    ocfg: &OnlineConfig,
+    tracer: Option<&Tracer>,
 ) -> Result<OnlineStats> {
     if ocfg.workers == 0 {
         bail!("online serving needs at least one worker");
@@ -162,7 +229,12 @@ pub fn serve_online(
         }
     }
     let total = requests.len();
-    let queue = IngestQueue::new();
+    let queue = IngestQueue::with_config(QueueConfig {
+        policy: ocfg.policy,
+        capacity: ocfg.queue_cap,
+        workers_hint: ocfg.workers,
+        admit_reject: ocfg.admit_reject,
+    });
     // hand the owned request vec to the producer without cloning the
     // token buffers (scoped_workers takes Fn, so no direct move)
     let pending = Mutex::new(Some(requests));
@@ -179,7 +251,8 @@ pub fn serve_online(
             }
             None
         } else {
-            Some(worker_loop(i - 1, &ctxs[i - 1], &queue, &ocfg.sched))
+            let mut sink = sink_or_disabled(tracer);
+            Some(worker_loop(i - 1, &ctxs[i - 1], &queue, &ocfg.sched, &mut sink))
         }
     });
     let wall_s = start.elapsed().as_secs_f64();
@@ -190,19 +263,65 @@ pub fn serve_online(
         finished.extend(fin);
     }
     finished.sort_by_key(|f| f.id);
-    debug_assert_eq!(finished.len(), total, "every request retires exactly once");
-    Ok(OnlineStats { finished, workers, wall_s })
+    let (shed, rejected) = queue.take_outcomes();
+    debug_assert_eq!(
+        finished.len() + shed.len() + rejected.len(),
+        total,
+        "every request retires, sheds, or is rejected exactly once"
+    );
+    Ok(OnlineStats { finished, workers, shed, rejected, wall_s })
+}
+
+/// Retire one request: release its budget, answer the reply channel,
+/// record the finished entry and feed the queue's service estimate.
+#[allow(clippy::too_many_arguments)]
+fn retire(
+    x: Active,
+    wid: usize,
+    queue: &IngestQueue,
+    sink: &mut SpanSink<'_>,
+    finished: &mut Vec<OnlineFinished>,
+    stats: &mut WorkerStats,
+    nll: Option<f64>,
+) {
+    let now = Instant::now();
+    stats.requests += 1;
+    let deadline_met = match x.deadline_at {
+        Some(dl) => now <= dl,
+        None => true,
+    };
+    let wire = x.req.id as u64;
+    if let Some(start) = x.decode_started {
+        sink.record(wire, SpanKind::Decode, wid as i64, start, now, true);
+    }
+    if let Some(tx) = &x.reply {
+        let _ = tx.send(Reply::Done { tokens: x.tokens.clone(), nll, deadline_met });
+    }
+    finished.push(OnlineFinished {
+        id: x.req.id,
+        worker: wid,
+        queue_wait_s: x.queue_wait_s,
+        latency_s: now.saturating_duration_since(x.enqueued).as_secs_f64(),
+        out_tokens: x.produced,
+        tokens: x.tokens,
+        nll,
+        deadline_met,
+    });
+    queue.note_done(now.saturating_duration_since(x.admitted_at).as_secs_f64());
 }
 
 /// One worker's continuous-batching loop: admit from the shared queue
 /// while budget and slots allow, prefill admissions, one batched decode
 /// step per iteration, retire at each request's token budget. Exits when
-/// the queue is drained and nothing is left in flight.
-fn worker_loop(
+/// the queue is drained and nothing is left in flight. Streams each
+/// generated token to the request's reply channel (when one is attached)
+/// as soon as it exists, and records per-request spans into `sink`.
+pub(crate) fn worker_loop(
     wid: usize,
     ctx: &ServeContext,
     queue: &IngestQueue,
     scfg: &SchedulerConfig,
+    sink: &mut SpanSink<'_>,
 ) -> (WorkerStats, Vec<OnlineFinished>) {
     let d = ctx.model.cfg.d_model;
     let mut active: Vec<Active> = Vec::new();
@@ -220,13 +339,12 @@ fn worker_loop(
     loop {
         // admit while the per-worker budget and batch slots allow; the
         // queue wait ends here, at the pop
-        let mut admitted: Vec<(ArrivedRequest, f64)> = Vec::new();
+        let mut admitted: Vec<ArrivedRequest> = Vec::new();
         while active.len() + admitted.len() < scfg.max_batch {
             match queue.try_pop(|r| in_flight_tokens + r.cost() <= scfg.token_budget) {
                 Pop::Got(a) => {
                     in_flight_tokens += a.req.cost();
-                    let waited = a.enqueued.elapsed().as_secs_f64();
-                    admitted.push((a, waited));
+                    admitted.push(a);
                 }
                 Pop::Refused | Pop::Empty | Pop::Drained => break,
             }
@@ -239,60 +357,82 @@ fn worker_loop(
             continue;
         }
         let work = Instant::now();
-        for (a, queue_wait_s) in admitted {
-            let ArrivedRequest { req, enqueued } = a;
+        for a in admitted {
+            let ArrivedRequest { req, enqueued, deadline_at, reply, .. } = a;
+            let admitted_at = work;
+            let queue_wait_s = admitted_at.saturating_duration_since(enqueued).as_secs_f64();
+            let wire = req.id as u64;
+            sink.record(wire, SpanKind::Queue, wid as i64, enqueued, admitted_at, true);
             stats.prompt_tokens += req.tokens.len();
             let s = req.tokens.len();
             let mut cache = ctx.new_cache();
+            let t_prefill = Instant::now();
+            sink.record(wire, SpanKind::Admit, wid as i64, admitted_at, t_prefill, true);
             let hidden = prefill(ctx, &req.tokens, &mut cache);
+            sink.record(wire, SpanKind::Prefill, wid as i64, t_prefill, Instant::now(), true);
             match req.kind {
                 ReqKind::Score => {
                     let nll = score_nll(ctx, &hidden, &req.tokens);
+                    let nll_sum: f64 = nll.iter().map(|v| *v as f64).sum();
                     in_flight_tokens -= req.cost();
-                    stats.requests += 1;
-                    finished.push(OnlineFinished {
-                        id: req.id,
-                        worker: wid,
-                        queue_wait_s,
-                        latency_s: enqueued.elapsed().as_secs_f64(),
-                        out_tokens: 0,
-                        tokens: Vec::new(),
-                        nll: Some(nll.iter().map(|v| *v as f64).sum()),
-                    });
-                    queue.note_done();
+                    retire(
+                        Active {
+                            req,
+                            enqueued,
+                            admitted_at,
+                            deadline_at,
+                            reply,
+                            queue_wait_s,
+                            cache,
+                            last: 0,
+                            produced: 0,
+                            tokens: Vec::new(),
+                            decode_started: None,
+                        },
+                        wid,
+                        queue,
+                        sink,
+                        &mut finished,
+                        &mut stats,
+                        Some(nll_sum),
+                    );
                 }
                 ReqKind::Generate { max_new } => {
                     let first = argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32;
                     stats.gen_tokens += 1;
+                    if let Some(tx) = &reply {
+                        let _ = tx.send(Reply::Token { index: 0, token: first });
+                    }
+                    let x = Active {
+                        req,
+                        enqueued,
+                        admitted_at,
+                        deadline_at,
+                        reply,
+                        queue_wait_s,
+                        cache,
+                        last: first,
+                        produced: 1,
+                        tokens: vec![first],
+                        decode_started: None,
+                    };
                     if max_new <= 1 {
-                        in_flight_tokens -= req.cost();
-                        stats.requests += 1;
-                        finished.push(OnlineFinished {
-                            id: req.id,
-                            worker: wid,
-                            queue_wait_s,
-                            latency_s: enqueued.elapsed().as_secs_f64(),
-                            out_tokens: 1,
-                            tokens: vec![first],
-                            nll: None,
-                        });
-                        queue.note_done();
+                        in_flight_tokens -= x.req.cost();
+                        retire(x, wid, queue, sink, &mut finished, &mut stats, None);
                     } else {
-                        active.push(Active {
-                            req,
-                            enqueued,
-                            queue_wait_s,
-                            cache,
-                            last: first,
-                            produced: 1,
-                            tokens: vec![first],
-                        });
+                        active.push(x);
                     }
                 }
             }
         }
         stats.peak_active = stats.peak_active.max(active.len());
         if !active.is_empty() {
+            let t_step = Instant::now();
+            for x in active.iter_mut() {
+                if x.decode_started.is_none() {
+                    x.decode_started = Some(t_step);
+                }
+            }
             let last: Vec<i32> = active.iter().map(|x| x.last).collect();
             let next = {
                 let mut caches: Vec<&mut KvCache> =
@@ -304,6 +444,9 @@ fn worker_loop(
                 x.last = *t;
                 x.produced += 1;
                 x.tokens.push(*t);
+                if let Some(tx) = &x.reply {
+                    let _ = tx.send(Reply::Token { index: x.produced - 1, token: *t });
+                }
             }
             let mut i = 0;
             while i < active.len() {
@@ -314,17 +457,7 @@ fn worker_loop(
                 if active[i].produced >= max_new {
                     let x = active.swap_remove(i);
                     in_flight_tokens -= x.req.cost();
-                    stats.requests += 1;
-                    finished.push(OnlineFinished {
-                        id: x.req.id,
-                        worker: wid,
-                        queue_wait_s: x.queue_wait_s,
-                        latency_s: x.enqueued.elapsed().as_secs_f64(),
-                        out_tokens: x.produced,
-                        tokens: x.tokens,
-                        nll: None,
-                    });
-                    queue.note_done();
+                    retire(x, wid, queue, sink, &mut finished, &mut stats, None);
                 } else {
                     i += 1;
                 }
@@ -355,6 +488,7 @@ mod tests {
             score_fraction: 0.3,
             burst: 1,
             seed,
+            ..TraceConfig::default()
         };
         let reqs = poisson_trace(&tcfg);
         (tcfg, reqs)
@@ -384,6 +518,7 @@ mod tests {
             workers: 0,
             sched: sched.clone(),
             pacing: Pacing::Replay { time_scale: 0.0 },
+            ..OnlineConfig::default()
         };
         assert!(serve_online(&[], reqs.clone(), &ocfg).is_err());
         // zero batch slots is the same starvation with workers alive
@@ -391,6 +526,7 @@ mod tests {
             workers: 1,
             sched: SchedulerConfig { token_budget: 64, max_batch: 0 },
             pacing: Pacing::Replay { time_scale: 0.0 },
+            ..OnlineConfig::default()
         };
         assert!(serve_online(&ctxs, reqs.clone(), &ocfg).is_err());
         // a request that exceeds the per-worker budget would starve the
@@ -400,6 +536,7 @@ mod tests {
             workers: 1,
             sched: SchedulerConfig { token_budget: 2, max_batch: 2 },
             pacing: Pacing::Replay { time_scale: 0.0 },
+            ..OnlineConfig::default()
         };
         assert!(serve_online(&ctxs, reqs.clone(), &ocfg).is_err());
         // zero closed-loop clients would deadlock the producer
@@ -407,6 +544,7 @@ mod tests {
             workers: 1,
             sched,
             pacing: Pacing::ClosedLoop { clients: 0 },
+            ..OnlineConfig::default()
         };
         assert!(serve_online(&ctxs, reqs, &ocfg).is_err());
     }
@@ -426,6 +564,7 @@ mod tests {
             workers: 2,
             sched: SchedulerConfig { token_budget: 64, max_batch: 2 },
             pacing: Pacing::Replay { time_scale: 0.0 },
+            ..OnlineConfig::default()
         };
         let stats = serve_online(&ctxs, reqs.clone(), &ocfg).unwrap();
         assert_eq!(stats.finished.len(), n);
@@ -433,6 +572,7 @@ mod tests {
         for f in &stats.finished {
             assert!(seen.insert(f.id), "request {} retired twice", f.id);
             assert!(f.latency_s >= f.queue_wait_s && f.queue_wait_s >= 0.0);
+            assert!(f.deadline_met, "deadline-free requests always report met");
         }
         // every generation request produced its full token budget
         for (f, r) in stats.finished.iter().zip(&reqs) {
@@ -451,6 +591,7 @@ mod tests {
         assert!(gens > 0, "trace should include generation requests");
         let served: usize = stats.workers.iter().map(|w| w.requests).sum();
         assert_eq!(served, n);
+        assert!(stats.shed.is_empty() && stats.rejected.is_empty());
     }
 
     #[test]
@@ -462,11 +603,84 @@ mod tests {
             workers: 2,
             sched: SchedulerConfig { token_budget: 64, max_batch: 2 },
             pacing: Pacing::ClosedLoop { clients: 3 },
+            ..OnlineConfig::default()
         };
         let stats = serve_online(&ctxs, reqs, &ocfg).unwrap();
         assert_eq!(stats.finished.len(), n);
         // at most `clients` could ever be in flight pool-wide
         let peak: usize = stats.workers.iter().map(|w| w.peak_active).sum();
         assert!(peak <= 2 * 3, "peak occupancy {peak} vs 3 clients");
+    }
+
+    /// Overload accounting under hopeless deadlines: a flooded queue with
+    /// microsecond deadlines must shed (in-queue) or reject (at push)
+    /// most requests — and every one of the `n` lands in exactly one of
+    /// the three ledgers.
+    #[test]
+    fn deadline_shedding_accounts_for_every_request() {
+        let (tcfg, mut reqs) = small_trace(8, 4);
+        for r in &mut reqs {
+            r.qos.deadline_s = 1e-6;
+        }
+        let n = reqs.len();
+        let ctxs = contexts(1, tcfg.max_request_tokens());
+        let ocfg = OnlineConfig {
+            workers: 1,
+            sched: SchedulerConfig { token_budget: 16, max_batch: 1 },
+            pacing: Pacing::Replay { time_scale: 0.0 },
+            policy: Policy::Edf,
+            ..OnlineConfig::default()
+        };
+        let stats = serve_online(&ctxs, reqs, &ocfg).unwrap();
+        assert_eq!(
+            stats.finished.len() + stats.shed.len() + stats.rejected.len(),
+            n,
+            "no request lost or double-counted under shedding"
+        );
+        // with a 1µs budget and max_batch 1, the flood cannot all be
+        // served in time: something must have been shed or rejected
+        assert!(
+            stats.shed.len() + stats.rejected.len() > 0,
+            "hopeless deadlines must trigger shedding"
+        );
+        for f in &stats.finished {
+            assert!(!f.deadline_met, "nothing completes within 1µs");
+        }
+    }
+
+    /// A tracer attached to an online run records spans for every
+    /// retired request, with queue/prefill spans present per request.
+    #[test]
+    fn traced_run_records_spans_per_request() {
+        let (tcfg, reqs) = small_trace(5, 5);
+        let n = reqs.len();
+        let ctxs = contexts(1, tcfg.max_request_tokens());
+        let ocfg = OnlineConfig {
+            workers: 1,
+            sched: SchedulerConfig { token_budget: 64, max_batch: 2 },
+            pacing: Pacing::Replay { time_scale: 0.0 },
+            ..OnlineConfig::default()
+        };
+        let tracer = Tracer::new();
+        let stats = serve_online_traced(&ctxs, reqs, &ocfg, Some(&tracer)).unwrap();
+        assert_eq!(stats.finished.len(), n);
+        let spans = tracer.drain();
+        let mut reqs_with_queue = std::collections::BTreeSet::new();
+        let mut reqs_with_prefill = std::collections::BTreeSet::new();
+        for s in &spans {
+            match s.kind {
+                SpanKind::Queue => {
+                    reqs_with_queue.insert(s.req);
+                }
+                SpanKind::Prefill => {
+                    reqs_with_prefill.insert(s.req);
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(reqs_with_queue.len(), n, "a queue span per retired request");
+        assert_eq!(reqs_with_prefill.len(), n, "a prefill span per retired request");
+        // drained once: a second drain is empty
+        assert!(tracer.drain().is_empty());
     }
 }

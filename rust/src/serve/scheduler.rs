@@ -20,6 +20,72 @@ pub enum ReqKind {
     Score,
 }
 
+/// Quality-of-service metadata a request carries through admission and
+/// scheduling. QoS never changes *what* a request computes — greedy
+/// decode depends only on the model and the prompt — it only changes
+/// *whether* and *when* the request is served (admission control,
+/// deadline shedding, [`Policy`] ordering).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Qos {
+    /// completion deadline, seconds after the request becomes visible to
+    /// the queue; `f64::INFINITY` means no deadline
+    pub deadline_s: f64,
+    /// scheduling tier under [`Policy::Priority`]: lower is more urgent
+    pub priority: u8,
+    /// client identity, the per-client token-bucket key (`serve::net`)
+    pub client: u32,
+}
+
+impl Default for Qos {
+    fn default() -> Self {
+        Qos { deadline_s: f64::INFINITY, priority: 1, client: 0 }
+    }
+}
+
+impl Qos {
+    /// QoS with only a relative deadline set.
+    pub fn with_deadline(deadline_s: f64) -> Qos {
+        Qos { deadline_s, ..Qos::default() }
+    }
+}
+
+/// Queue ordering policy of the online arrival queue
+/// ([`super::ingest::IngestQueue`]). Changes *order*, never *outputs*:
+/// per-request tokens are policy-invariant (pinned by
+/// `tests/serve_parity.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// strict arrival order (the default; head-of-line blocking is
+    /// deliberate so nothing starves)
+    Fifo,
+    /// [`Qos::priority`] tiers, FIFO inside a tier (lower tier first)
+    Priority,
+    /// earliest deadline first; deadline-free requests sort last,
+    /// FIFO among themselves
+    Edf,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 3] = [Policy::Fifo, Policy::Priority, Policy::Edf];
+
+    pub fn from_name(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "priority" | "prio" => Some(Policy::Priority),
+            "edf" | "deadline" => Some(Policy::Edf),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Priority => "priority",
+            Policy::Edf => "edf",
+        }
+    }
+}
+
 /// One inference request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -28,6 +94,7 @@ pub struct Request {
     pub arrival: f64,
     pub tokens: Vec<i32>,
     pub kind: ReqKind,
+    pub qos: Qos,
 }
 
 impl Request {
@@ -142,7 +209,19 @@ mod tests {
             arrival,
             tokens: vec![0; prompt],
             kind: ReqKind::Generate { max_new },
+            qos: Qos::default(),
         }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::from_name("nope"), None);
+        let q = Qos::default();
+        assert!(q.deadline_s.is_infinite() && q.priority == 1 && q.client == 0);
+        assert_eq!(Qos::with_deadline(0.5).deadline_s, 0.5);
     }
 
     #[test]

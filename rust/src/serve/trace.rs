@@ -10,7 +10,7 @@ use crate::data::corpus::Corpus;
 use crate::data::Domain;
 use crate::util::rng::Rng;
 
-use super::scheduler::{ReqKind, Request};
+use super::scheduler::{Qos, ReqKind, Request};
 
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
@@ -30,6 +30,17 @@ pub struct TraceConfig {
     /// gaps between groups so the mean rate stays `rate`
     pub burst: usize,
     pub seed: u64,
+    /// per-request relative deadline drawn uniformly from
+    /// `deadline_min_s..=deadline_max_s` wall seconds; `deadline_max_s`
+    /// of 0 disables deadlines (every request gets `f64::INFINITY`)
+    pub deadline_min_s: f64,
+    pub deadline_max_s: f64,
+    /// priority tiers drawn uniformly from `0..priority_tiers` (0 is the
+    /// most urgent); 1 leaves every request at the default tier
+    pub priority_tiers: u8,
+    /// distinct client ids drawn uniformly from `0..clients` (the
+    /// token-bucket key in `serve::net`); 1 leaves everyone as client 0
+    pub clients: u32,
 }
 
 impl Default for TraceConfig {
@@ -44,6 +55,10 @@ impl Default for TraceConfig {
             score_fraction: 0.25,
             burst: 1,
             seed: 0x7ACE,
+            deadline_min_s: 0.0,
+            deadline_max_s: 0.0,
+            priority_tiers: 1,
+            clients: 1,
         }
     }
 }
@@ -63,8 +78,20 @@ pub fn poisson_trace(cfg: &TraceConfig) -> Vec<Request> {
     assert!(cfg.gen_min >= 1 && cfg.gen_min <= cfg.gen_max);
     assert!(cfg.rate > 0.0);
     assert!(cfg.burst >= 1, "burst size must be >= 1");
+    assert!(cfg.priority_tiers >= 1, "priority_tiers must be >= 1");
+    assert!(cfg.clients >= 1, "clients must be >= 1");
+    if cfg.deadline_max_s > 0.0 {
+        assert!(
+            cfg.deadline_min_s >= 0.0 && cfg.deadline_min_s <= cfg.deadline_max_s,
+            "deadline range must satisfy 0 <= min <= max"
+        );
+    }
     let mut rng = Rng::seed(cfg.seed);
     let mut corpus = Corpus::new(Domain::C4Syn, cfg.seed ^ 0x5EED);
+    // QoS draws come from their own stream so the arrival/prompt/kind
+    // streams above stay byte-identical to QoS-free traces of the same
+    // seed — policy comparisons then run the exact same workload.
+    let mut qrng = Rng::seed(cfg.seed ^ 0x0905);
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(cfg.n_requests);
     for id in 0..cfg.n_requests {
@@ -81,7 +108,19 @@ pub fn poisson_trace(cfg: &TraceConfig) -> Vec<Request> {
                 max_new: cfg.gen_min + rng.below(cfg.gen_max - cfg.gen_min + 1),
             }
         };
-        out.push(Request { id, arrival: t, tokens: corpus.take(plen), kind });
+        let deadline_s = if cfg.deadline_max_s > 0.0 {
+            cfg.deadline_min_s + qrng.f64() * (cfg.deadline_max_s - cfg.deadline_min_s)
+        } else {
+            f64::INFINITY
+        };
+        let priority = if cfg.priority_tiers > 1 {
+            qrng.below(cfg.priority_tiers as usize) as u8
+        } else {
+            1
+        };
+        let client = if cfg.clients > 1 { qrng.below(cfg.clients as usize) as u32 } else { 0 };
+        let qos = Qos { deadline_s, priority, client };
+        out.push(Request { id, arrival: t, tokens: corpus.take(plen), kind, qos });
     }
     out
 }
@@ -136,6 +175,38 @@ mod tests {
         }
         let mean_gap = t.last().unwrap().arrival / t.len() as f64;
         assert!((mean_gap - 0.02).abs() < 0.006, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn qos_stream_leaves_base_trace_untouched() {
+        let plain = poisson_trace(&TraceConfig::default());
+        let qcfg = TraceConfig {
+            deadline_min_s: 0.1,
+            deadline_max_s: 0.5,
+            priority_tiers: 3,
+            clients: 4,
+            ..Default::default()
+        };
+        let with_qos = poisson_trace(&qcfg);
+        // same seed, same workload: QoS comes from its own rng stream
+        for (a, b) in plain.iter().zip(&with_qos) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.kind, b.kind);
+        }
+        for r in &with_qos {
+            assert!(r.qos.deadline_s >= 0.1 && r.qos.deadline_s <= 0.5);
+            assert!(r.qos.priority < 3);
+            assert!(r.qos.client < 4);
+        }
+        assert!(
+            with_qos.iter().any(|r| r.qos.priority != with_qos[0].qos.priority),
+            "priority tiers actually vary across the trace"
+        );
+        for r in &plain {
+            assert!(r.qos.deadline_s.is_infinite());
+            assert_eq!((r.qos.priority, r.qos.client), (1, 0));
+        }
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Per-request span timing for the serving stack.
+//!
+//! A [`Tracer`] is the run-scoped collector: workers and connection
+//! handlers each hold a [`SpanSink`] — a plain per-thread buffer — and
+//! record [`SpanRecord`]s locally with no synchronization on the hot
+//! path. A sink flushes its whole buffer into the tracer's shard list in
+//! one lock acquisition (explicitly via [`SpanSink::flush`], and always
+//! on drop), so the mutex is touched once per worker lifetime plus once
+//! per explicit flush, never per span. The run ends with
+//! [`Tracer::drain`] (all spans, time-sorted) or [`Tracer::write_jsonl`]
+//! (`--trace-out`).
+//!
+//! # Label discipline
+//!
+//! Span labels are a stable, closed vocabulary ([`SpanKind::ALL`], one
+//! lowercase token each — see `docs/telemetry.md`): `accept`, `parse`,
+//! `queue`, `admit`, `prefill`, `decode`, `serialize`. Consumers may rely
+//! on these strings never being renamed; new stages extend the enum (and
+//! the doc table) rather than repurposing an existing label.
+//!
+//! Timestamps are microseconds since the tracer's epoch (its creation
+//! instant), so one run's spans are mutually comparable and diffable
+//! across runs; they are *not* wall-clock dates. `worker` is the serving
+//! worker index, or -1 for front-end spans (accept/parse/serialize happen
+//! on connection handler threads). `req` is the engine-side request id.
+
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::par::locked;
+
+/// One stage of a request's life. The wire label ([`SpanKind::label`])
+/// is stable — see the module docs for the discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// connection accepted → protocol sniffed (front end)
+    Accept,
+    /// request line/body read → parsed (front end)
+    Parse,
+    /// enqueued → popped by a worker
+    Queue,
+    /// popped → prefill starts (admission bookkeeping)
+    Admit,
+    /// prompt prefill through the blocks
+    Prefill,
+    /// first batched decode step → retire
+    Decode,
+    /// terminal reply serialized and written (front end)
+    Serialize,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 7] = [
+        SpanKind::Accept,
+        SpanKind::Parse,
+        SpanKind::Queue,
+        SpanKind::Admit,
+        SpanKind::Prefill,
+        SpanKind::Decode,
+        SpanKind::Serialize,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanKind::Accept => "accept",
+            SpanKind::Parse => "parse",
+            SpanKind::Queue => "queue",
+            SpanKind::Admit => "admit",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::Serialize => "serialize",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<SpanKind> {
+        SpanKind::ALL.into_iter().find(|k| k.label() == s)
+    }
+}
+
+/// One timed stage of one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// engine-side request id (0 for connection-scoped front-end spans)
+    pub req: u64,
+    pub kind: SpanKind,
+    /// serving worker index; -1 = front-end (connection handler) thread
+    pub worker: i64,
+    /// microseconds since the tracer epoch
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// false when the stage failed (e.g. a parse error)
+    pub ok: bool,
+}
+
+/// Run-scoped span collector. Cheap to share by reference (workers) or
+/// `Arc` (detached server threads).
+pub struct Tracer {
+    epoch: Instant,
+    shards: Mutex<Vec<Vec<SpanRecord>>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer { epoch: Instant::now(), shards: Mutex::new(Vec::new()) }
+    }
+
+    /// Microseconds from the tracer epoch to `t` (0 for pre-epoch
+    /// instants — saturating, never panicking).
+    pub fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// A buffering sink bound to this tracer. One per worker thread.
+    pub fn sink(&self) -> SpanSink<'_> {
+        SpanSink { tracer: Some(self), buf: Vec::new() }
+    }
+
+    /// Absorb one sink's buffer as a shard (one lock acquisition).
+    fn absorb(&self, buf: Vec<SpanRecord>) {
+        if !buf.is_empty() {
+            locked(&self.shards).push(buf);
+        }
+    }
+
+    /// All spans recorded so far, sorted by (start, request, kind);
+    /// shards are consumed (a second drain returns only newer spans).
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        let shards = std::mem::take(&mut *locked(&self.shards));
+        let mut out: Vec<SpanRecord> = shards.into_iter().flatten().collect();
+        out.sort_by_key(|s| (s.start_us, s.req, s.kind));
+        out
+    }
+
+    /// Drain and dump as JSONL (one span object per line, schema in
+    /// `docs/telemetry.md`). Returns the number of spans written; errors
+    /// name the path.
+    pub fn write_jsonl(&self, path: &Path) -> Result<usize> {
+        let spans = self.drain();
+        let mut out = String::with_capacity(spans.len() * 96);
+        for s in &spans {
+            let line = json::obj(vec![
+                ("req", json::num(s.req as f64)),
+                ("span", json::s(s.kind.label())),
+                ("worker", json::num(s.worker as f64)),
+                ("t_us", json::num(s.start_us as f64)),
+                ("dur_us", json::num(s.dur_us as f64)),
+                ("ok", Json::Bool(s.ok)),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        std::fs::write(path, out)
+            .with_context(|| format!("writing telemetry JSONL to {}", path.display()))?;
+        Ok(spans.len())
+    }
+}
+
+/// Per-thread span buffer. Records are local (no locking); the buffer
+/// flushes into the tracer on [`SpanSink::flush`] and on drop. A
+/// disabled sink ([`SpanSink::disabled`] / [`sink_or_disabled`] with
+/// `None`) makes every record a no-op, so call sites stay unconditional.
+pub struct SpanSink<'a> {
+    tracer: Option<&'a Tracer>,
+    buf: Vec<SpanRecord>,
+}
+
+impl SpanSink<'_> {
+    /// A sink that drops everything (tracing off).
+    pub fn disabled() -> SpanSink<'static> {
+        SpanSink { tracer: None, buf: Vec::new() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Record one span from a start/end instant pair. No-op when
+    /// disabled; pre-epoch instants saturate to 0.
+    pub fn record(
+        &mut self,
+        req: u64,
+        kind: SpanKind,
+        worker: i64,
+        start: Instant,
+        end: Instant,
+        ok: bool,
+    ) {
+        if let Some(t) = self.tracer {
+            let start_us = t.us_since_epoch(start);
+            let dur_us = t.us_since_epoch(end).saturating_sub(start_us);
+            self.buf.push(SpanRecord { req, kind, worker, start_us, dur_us, ok });
+        }
+    }
+
+    /// Push the buffered spans into the tracer now (one lock).
+    pub fn flush(&mut self) {
+        if let Some(t) = self.tracer {
+            t.absorb(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl Drop for SpanSink<'_> {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// The usual construction: a live sink when a tracer is attached, a
+/// no-op sink otherwise.
+pub fn sink_or_disabled(tracer: Option<&Tracer>) -> SpanSink<'_> {
+    match tracer {
+        Some(t) => t.sink(),
+        None => SpanSink::disabled(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_stable_and_round_trip() {
+        let want = ["accept", "parse", "queue", "admit", "prefill", "decode", "serialize"];
+        let got: Vec<&str> = SpanKind::ALL.iter().map(|k| k.label()).collect();
+        assert_eq!(got, want, "span labels are a frozen vocabulary (docs/telemetry.md)");
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::from_label(k.label()), Some(k));
+        }
+        assert_eq!(SpanKind::from_label("nope"), None);
+    }
+
+    #[test]
+    fn sinks_buffer_and_flush_on_drop() {
+        let tracer = Tracer::new();
+        let t0 = Instant::now();
+        let t1 = t0 + std::time::Duration::from_micros(250);
+        {
+            let mut sink = tracer.sink();
+            sink.record(7, SpanKind::Prefill, 0, t0, t1, true);
+            sink.record(7, SpanKind::Decode, 0, t1, t1, true);
+            // nothing visible until the sink flushes
+            assert!(tracer.drain().is_empty());
+        } // drop flushes
+        let spans = tracer.drain();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].kind, SpanKind::Prefill);
+        assert!(spans[0].dur_us >= 250);
+        assert_eq!(spans[1].dur_us, 0, "zero-length spans are representable");
+        // drained exactly once
+        assert!(tracer.drain().is_empty());
+    }
+
+    #[test]
+    fn disabled_sink_is_a_no_op() {
+        let mut sink = SpanSink::disabled();
+        assert!(!sink.is_enabled());
+        let now = Instant::now();
+        sink.record(1, SpanKind::Queue, -1, now, now, true);
+        sink.flush(); // must not panic with no tracer
+        assert!(sink.buf.is_empty());
+    }
+
+    #[test]
+    fn pre_epoch_instants_saturate() {
+        let before = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let tracer = Tracer::new();
+        assert_eq!(tracer.us_since_epoch(before), 0);
+        let mut sink = tracer.sink();
+        sink.record(0, SpanKind::Accept, -1, before, before, true);
+        sink.flush();
+        let spans = tracer.drain();
+        assert_eq!((spans[0].start_us, spans[0].dur_us), (0, 0));
+    }
+
+    #[test]
+    fn jsonl_dump_round_trips_through_the_json_parser() {
+        let dir = std::env::temp_dir().join("besa_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spans.jsonl");
+        let tracer = Tracer::new();
+        let t0 = Instant::now();
+        {
+            let mut sink = tracer.sink();
+            sink.record(3, SpanKind::Queue, 1, t0, t0 + std::time::Duration::from_micros(10), true);
+            sink.record(3, SpanKind::Parse, -1, t0, t0, false);
+        }
+        let n = tracer.write_jsonl(&path).unwrap();
+        assert_eq!(n, 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let v = Json::parse(line).unwrap();
+            let span = v.get("span").and_then(Json::as_str).unwrap();
+            assert!(SpanKind::from_label(span).is_some(), "unknown label {span}");
+            assert!(v.get("t_us").and_then(Json::as_f64).is_some());
+            assert!(v.get("dur_us").and_then(Json::as_f64).is_some());
+            assert!(v.get("req").and_then(Json::as_f64).is_some());
+            assert!(v.get("worker").and_then(Json::as_f64).is_some());
+            assert!(matches!(v.get("ok"), Some(Json::Bool(_))));
+        }
+        // the front-end span keeps its -1 worker and failed-ok flag
+        assert!(text.contains("\"worker\":-1") || text.contains("\"worker\": -1"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_jsonl_fails_loudly_on_unwritable_path() {
+        let tracer = Tracer::new();
+        let t0 = Instant::now();
+        {
+            let mut sink = tracer.sink();
+            sink.record(0, SpanKind::Queue, 0, t0, t0, true);
+        }
+        let bad = Path::new("/nonexistent-besa-dir/spans.jsonl");
+        let err = tracer.write_jsonl(bad).unwrap_err();
+        assert!(err.to_string().contains("spans.jsonl"), "error names the path: {err}");
+    }
+}

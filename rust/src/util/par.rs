@@ -109,6 +109,23 @@ where
     Ok(out)
 }
 
+/// Spawn a named OS thread (visible in debuggers and panic messages),
+/// surfacing spawn failure as a `Result` instead of panicking. Unlike
+/// [`scoped_workers`] the thread is *detached from the caller's stack
+/// frame* — the closure must be `'static` (the TCP front end moves an
+/// `Arc` of its shared state in) — and the caller keeps the
+/// [`std::thread::JoinHandle`].
+pub fn spawn_named<T, F>(name: &str, f: F) -> Result<std::thread::JoinHandle<T>>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .map_err(|e| anyhow!("spawning thread '{name}': {e}"))
+}
+
 /// Run `n` long-lived indexed workers (`f(0)..f(n-1)`) on scoped threads
 /// and collect their results in index order. Unlike [`par_map`] — which
 /// steals small uniform items — each call here *is* one worker for its
@@ -168,6 +185,16 @@ mod tests {
         assert!(scoped_workers(0, |i| i).is_empty());
         assert_eq!(scoped_workers(1, |i| i * 3), vec![0]);
         assert_eq!(scoped_workers(5, |i| i * 3), vec![0, 3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn spawn_named_runs_and_joins() {
+        let h = spawn_named("besa-test-thread", || {
+            assert_eq!(std::thread::current().name(), Some("besa-test-thread"));
+            41 + 1
+        })
+        .unwrap();
+        assert_eq!(h.join().unwrap(), 42);
     }
 
     #[test]

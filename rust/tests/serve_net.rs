@@ -1,0 +1,281 @@
+//! Behavior suite for the TCP front end (hermetic, loopback, `test`
+//! config): the HTTP adapter's routes and status codes, line-protocol
+//! error recovery, deterministic overload control (per-client token
+//! buckets, unmeetable deadlines), graceful-drain accounting under
+//! deadline pressure, and span telemetry emission.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use besa::model::{ModelConfig, ParamStore};
+use besa::serve::bench::magnitude_prune_in_place;
+use besa::serve::engine::ServeContext;
+use besa::serve::model::{PackedModel, WeightFormat};
+use besa::serve::net::WireEvent;
+use besa::serve::{LineClient, NetConfig, NetServer, SchedulerConfig};
+use besa::telemetry::{SpanKind, Tracer};
+use besa::util::json::Json;
+
+/// One serving replica per worker over a magnitude-pruned test model.
+fn contexts(workers: usize, max_pos: usize) -> (ModelConfig, Vec<ServeContext>) {
+    let cfg = ModelConfig::builtin("test").expect("built-in test config");
+    let mut params = ParamStore::init(&cfg, 42);
+    magnitude_prune_in_place(&mut params, &cfg, 0.5).unwrap();
+    let ctxs = (0..workers)
+        .map(|_| {
+            ServeContext::new(
+                PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+                max_pos,
+            )
+        })
+        .collect();
+    (cfg, ctxs)
+}
+
+/// Send one raw HTTP request and return (status code, body). The server
+/// answers `Connection: close`, so reading to EOF frames the response.
+fn http_roundtrip(addr: &std::net::SocketAddr, raw: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut text = String::new();
+    stream.read_to_string(&mut text).unwrap();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {text:?}"));
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn post_generate(body: &str) -> String {
+    format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+}
+
+#[test]
+fn http_adapter_routes_and_status_codes() {
+    let (_cfg, ctxs) = contexts(1, 64);
+    let server = NetServer::start(ctxs, NetConfig::default(), None).unwrap();
+    let addr = server.addr();
+
+    let (code, body) = http_roundtrip(&addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(code, 200);
+    assert_eq!(body, r#"{"status":"ok"}"#);
+
+    let req = post_generate(r#"{"id":1,"prompt":[1,2,3,4],"max_new":3}"#);
+    let (code, body) = http_roundtrip(&addr, &req);
+    assert_eq!(code, 200, "generate failed: {body}");
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("event").and_then(Json::as_str), Some("done"));
+    assert_eq!(v.get("id").and_then(Json::as_usize), Some(1));
+    assert_eq!(v.get("tokens").and_then(Json::as_arr).map(|a| a.len()), Some(3));
+
+    let (code, _) = http_roundtrip(&addr, "GET /nope HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(code, 404);
+
+    let (code, _) = http_roundtrip(&addr, &post_generate("this is not json"));
+    assert_eq!(code, 400);
+
+    let (code, _) = http_roundtrip(&addr, &post_generate(r#"{"id":2,"prompt":[1],"wat":1}"#));
+    assert_eq!(code, 400, "unknown fields must be rejected, not ignored");
+
+    let stats = server.shutdown().unwrap();
+    assert!(stats.drained_clean);
+    assert!(stats.accounted());
+    assert_eq!(stats.finished.len(), 1);
+    assert_eq!(stats.parse_errors, 2);
+    assert_eq!(stats.accepted_conns, 5);
+}
+
+#[test]
+fn line_protocol_recovers_from_bad_requests() {
+    let (_cfg, ctxs) = contexts(1, 64);
+    let server = NetServer::start(ctxs, NetConfig::default(), None).unwrap();
+    let mut client = LineClient::connect(&server.addr()).unwrap();
+
+    // malformed JSON: an error event, but the connection survives
+    client.send_line("{nope\n").unwrap();
+    match client.read_event().unwrap() {
+        WireEvent::Error { code, .. } => assert_eq!(code, 400),
+        other => panic!("wanted a 400 error, got {other:?}"),
+    }
+
+    // unknown field: rejected (silent dropping would hide typos in QoS
+    // fields, the worst failure mode for overload control)
+    client.send_line("{\"id\":1,\"prompt\":[1,2],\"max_new\":1,\"deadline_m\":5}\n").unwrap();
+    match client.read_event().unwrap() {
+        WireEvent::Error { code, reason } => {
+            assert_eq!(code, 400);
+            assert!(reason.contains("deadline_m"), "reason names the field: {reason}");
+        }
+        other => panic!("wanted a 400 error, got {other:?}"),
+    }
+
+    // the same connection still serves valid requests afterwards
+    let events = client.request("{\"id\":2,\"prompt\":[1,2,3],\"max_new\":2}\n").unwrap();
+    match events.last().unwrap() {
+        WireEvent::Done { id, tokens, .. } => {
+            assert_eq!(*id, 2);
+            assert_eq!(tokens.len(), 2);
+        }
+        other => panic!("wanted done, got {other:?}"),
+    }
+
+    // an oversized line loses framing: answer 413, then close
+    let huge = format!("{}\n", "x".repeat(70_000));
+    client.send_line(&huge).unwrap();
+    match client.read_event().unwrap() {
+        WireEvent::Error { code, .. } => assert_eq!(code, 413),
+        other => panic!("wanted a 413 error, got {other:?}"),
+    }
+    assert!(client.read_event().is_err(), "server closes after losing framing");
+
+    drop(client);
+    let stats = server.shutdown().unwrap();
+    assert!(stats.drained_clean);
+    assert!(stats.accounted());
+    assert_eq!(stats.finished.len(), 1);
+    assert_eq!(stats.parse_errors, 3);
+}
+
+#[test]
+fn token_bucket_rate_limits_second_request() {
+    let (_cfg, ctxs) = contexts(1, 64);
+    let ncfg = NetConfig {
+        // burst covers exactly one request of cost 7 (4 prompt + 3 gen);
+        // refill is negligible over the test's lifetime
+        bucket_rate: 1e-6,
+        bucket_burst: 7.0,
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(ctxs, ncfg, None).unwrap();
+    let mut client = LineClient::connect(&server.addr()).unwrap();
+
+    let line = "{\"id\":1,\"prompt\":[1,2,3,4],\"max_new\":3}\n";
+    let events = client.request(line).unwrap();
+    assert!(
+        matches!(events.last().unwrap(), WireEvent::Done { .. }),
+        "first request fits the burst: {events:?}"
+    );
+    let events = client.request(line).unwrap();
+    match events.last().unwrap() {
+        WireEvent::Rejected { code, reason, .. } => {
+            assert_eq!(*code, 429);
+            assert!(reason.contains("rate-limited"), "{reason}");
+        }
+        other => panic!("wanted a 429 rejection, got {other:?}"),
+    }
+
+    drop(client);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.finished.len(), 1);
+    assert_eq!(stats.rejected_rate, 1, "bucket refusals never enter the queue");
+    assert!(stats.accounted());
+}
+
+#[test]
+fn expired_deadline_rejected_at_admission() {
+    let (_cfg, ctxs) = contexts(1, 64);
+    let server = NetServer::start(ctxs, NetConfig::default(), None).unwrap();
+    let mut client = LineClient::connect(&server.addr()).unwrap();
+
+    // a sub-nanosecond deadline has already passed by the push check
+    let line = "{\"id\":9,\"prompt\":[1,2,3],\"max_new\":2,\"deadline_ms\":1e-9}\n";
+    let events = client.request(line).unwrap();
+    match events.last().unwrap() {
+        WireEvent::Rejected { code, reason, .. } => {
+            assert_eq!(*code, 503);
+            assert!(reason.contains("deadline"), "{reason}");
+        }
+        other => panic!("wanted a 503 rejection, got {other:?}"),
+    }
+
+    drop(client);
+    let stats = server.shutdown().unwrap();
+    assert!(stats.accounted());
+    assert_eq!(stats.rejected.len(), 1);
+    assert!(stats.finished.is_empty());
+}
+
+/// Deadline pressure end to end: every request ends in exactly one
+/// terminal event, client- and server-side counts agree, the drain is
+/// clean, and the tracer saw the whole span vocabulary in action.
+#[test]
+fn tight_deadlines_account_exactly_and_emit_spans() {
+    let (_cfg, ctxs) = contexts(1, 256);
+    let tracer = Arc::new(Tracer::new());
+    let ncfg = NetConfig {
+        sched: SchedulerConfig { token_budget: 256, max_batch: 1 },
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(ctxs, ncfg, Some(Arc::clone(&tracer))).unwrap();
+
+    // two pipelined clients × 4 requests with 5 ms deadlines against a
+    // single batch-of-1 worker: late ones shed in-queue, but nothing is
+    // ever lost or double-answered
+    let counts = std::sync::Mutex::new((0usize, 0usize));
+    std::thread::scope(|scope| {
+        for c in 0..2u64 {
+            let addr = server.addr();
+            let counts = &counts;
+            scope.spawn(move || {
+                let mut client = LineClient::connect(&addr).unwrap();
+                for i in 0..4u64 {
+                    let line = format!(
+                        "{{\"id\":{},\"prompt\":[1,2,3,4],\"max_new\":24,\"deadline_ms\":5}}\n",
+                        c * 4 + i
+                    );
+                    let events = client.request(&line).unwrap();
+                    let mut g = counts.lock().unwrap();
+                    match events.last().unwrap() {
+                        WireEvent::Done { .. } => g.0 += 1,
+                        WireEvent::Shed { code, .. } => {
+                            assert_eq!(*code, 503);
+                            g.1 += 1;
+                        }
+                        other => panic!("unexpected terminal {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let (done, shed) = *counts.lock().unwrap();
+    assert_eq!(done + shed, 8, "every request got exactly one terminal event");
+
+    let stats = server.shutdown().unwrap();
+    assert!(stats.drained_clean);
+    assert!(stats.accounted(), "queued == finished + shed");
+    assert_eq!(stats.finished.len(), done);
+    assert_eq!(stats.shed.len(), shed);
+    assert_eq!(stats.requests, 8);
+    assert_eq!(stats.accepted_conns, 2);
+
+    let spans = tracer.drain();
+    assert!(!spans.is_empty(), "the net path must emit telemetry");
+    let kinds: std::collections::BTreeSet<SpanKind> = spans.iter().map(|s| s.kind).collect();
+    assert!(kinds.contains(&SpanKind::Accept));
+    assert!(kinds.contains(&SpanKind::Parse));
+    if done > 0 {
+        assert!(kinds.contains(&SpanKind::Queue));
+        assert!(kinds.contains(&SpanKind::Prefill));
+        assert!(kinds.contains(&SpanKind::Serialize));
+    }
+}
+
+#[test]
+fn idle_server_drains_clean() {
+    let (_cfg, ctxs) = contexts(2, 64);
+    let ncfg = NetConfig { workers: 2, ..NetConfig::default() };
+    let server = NetServer::start(ctxs, ncfg, None).unwrap();
+    let stats = server.shutdown().unwrap();
+    assert!(stats.drained_clean);
+    assert!(stats.accounted());
+    assert_eq!(stats.requests, 0);
+    assert_eq!(stats.accepted_conns, 0);
+    assert_eq!(stats.workers.len(), 2);
+}

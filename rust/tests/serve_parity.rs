@@ -11,7 +11,11 @@
 //!   identical outputs across weight formats;
 //! * the online multi-worker engine retires every request with identical
 //!   per-request outputs at any worker count, equal to the offline
-//!   single-threaded replay (sharding preserves per-request determinism).
+//!   single-threaded replay (sharding preserves per-request determinism);
+//! * the queue policy (FIFO / priority / EDF) changes only *ordering*,
+//!   never any request's output;
+//! * serving over loopback TCP through the line protocol reproduces the
+//!   offline replay token for token, with NLLs bit-exact across the wire.
 
 use std::collections::BTreeMap;
 
@@ -24,9 +28,13 @@ use besa::serve::engine::{
     score_nll, ServeContext,
 };
 use besa::serve::model::{PackedModel, WeightFormat};
+use besa::serve::net::{request_line, WireEvent};
 use besa::serve::scheduler::SchedulerConfig;
 use besa::serve::trace::TraceConfig;
-use besa::serve::{poisson_trace, run_trace, serve_online, OnlineConfig, Pacing, ReqKind};
+use besa::serve::{
+    poisson_trace, run_trace, serve_online, LineClient, NetConfig, NetServer, OnlineConfig, Pacing,
+    Policy, ReqKind,
+};
 use besa::tensor::Tensor;
 
 fn pruned_setup() -> (Engine, ModelConfig, ParamStore) {
@@ -216,6 +224,7 @@ fn trace_replay_consistent_across_formats() {
         score_fraction: 0.3,
         burst: 1,
         seed: 99,
+        ..TraceConfig::default()
     };
     let sched = SchedulerConfig { token_budget: 64, max_batch: 3 };
     let requests = poisson_trace(&tcfg);
@@ -279,6 +288,7 @@ fn sharded_online_matches_single_worker_and_offline_replay() {
         score_fraction: 0.25,
         burst: 3,
         seed: 123,
+        ..TraceConfig::default()
     };
     let sched = SchedulerConfig { token_budget: 64, max_batch: 3 };
     let requests = poisson_trace(&tcfg);
@@ -310,6 +320,7 @@ fn sharded_online_matches_single_worker_and_offline_replay() {
             workers,
             sched: sched.clone(),
             pacing: Pacing::Replay { time_scale: 0.0 },
+            ..OnlineConfig::default()
         };
         let stats = serve_online(&ctxs, requests.clone(), &ocfg).unwrap();
         assert_eq!(stats.finished.len(), tcfg.n_requests, "{workers} workers: all retire");
@@ -326,4 +337,136 @@ fn sharded_online_matches_single_worker_and_offline_replay() {
             .collect();
         assert_eq!(got, reference, "{workers} workers vs offline replay: bitwise identical");
     }
+}
+
+/// The queue policy reorders *service*, never outputs: with QoS fields in
+/// the trace (deadlines, priority tiers, clients) but deadlines far too
+/// loose to shed, FIFO, priority and EDF must retire every request with
+/// identical per-request tokens and NLLs.
+#[test]
+fn queue_policies_preserve_per_request_outputs() {
+    let (_engine, cfg, params) = pruned_setup();
+    let tcfg = TraceConfig {
+        n_requests: 12,
+        rate: 500.0,
+        prompt_min: 4,
+        prompt_max: 12,
+        gen_min: 2,
+        gen_max: 6,
+        score_fraction: 0.25,
+        burst: 3,
+        seed: 321,
+        deadline_min_s: 10.0,
+        deadline_max_s: 30.0,
+        priority_tiers: 3,
+        clients: 2,
+    };
+    let sched = SchedulerConfig { token_budget: 64, max_batch: 3 };
+    let requests = poisson_trace(&tcfg);
+    let max_pos = tcfg.max_request_tokens();
+    let ctxs: Vec<ServeContext> = (0..2)
+        .map(|_| {
+            ServeContext::new(
+                PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+                max_pos,
+            )
+        })
+        .collect();
+    let mut outputs: Vec<BTreeMap<usize, (Vec<i32>, Option<f64>)>> = Vec::new();
+    for policy in Policy::ALL {
+        let ocfg = OnlineConfig {
+            workers: 2,
+            sched: sched.clone(),
+            pacing: Pacing::Replay { time_scale: 0.0 },
+            policy,
+            ..OnlineConfig::default()
+        };
+        let stats = serve_online(&ctxs, requests.clone(), &ocfg).unwrap();
+        assert_eq!(stats.finished.len(), tcfg.n_requests, "{}: all retire", policy.name());
+        assert!(stats.shed.is_empty(), "{}: loose deadlines never shed", policy.name());
+        assert!(stats.rejected.is_empty());
+        outputs.push(
+            stats
+                .finished
+                .iter()
+                .map(|f| (f.id, (f.tokens.clone(), f.nll)))
+                .collect(),
+        );
+    }
+    assert_eq!(outputs[0], outputs[1], "fifo vs priority outputs");
+    assert_eq!(outputs[0], outputs[2], "fifo vs edf outputs");
+}
+
+/// The tentpole parity pin: serving over loopback TCP through the line
+/// protocol reproduces the offline single-threaded replay token for
+/// token, with scoring NLLs bit-exact across the JSON wire (the number
+/// formatter prints the shortest representation that round-trips).
+#[test]
+fn loopback_tcp_matches_offline_replay() {
+    let (_engine, cfg, params) = pruned_setup();
+    let tcfg = TraceConfig {
+        n_requests: 8,
+        rate: 500.0,
+        prompt_min: 4,
+        prompt_max: 12,
+        gen_min: 2,
+        gen_max: 6,
+        score_fraction: 0.25,
+        burst: 1,
+        seed: 77,
+        ..TraceConfig::default()
+    };
+    let sched = SchedulerConfig { token_budget: 64, max_batch: 3 };
+    let requests = poisson_trace(&tcfg);
+    let max_pos = tcfg.max_request_tokens();
+
+    let ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+        max_pos,
+    );
+    let offline = run_trace(&ctx, None, requests.clone(), &sched).unwrap();
+    let reference: BTreeMap<usize, (Vec<i32>, Option<f64>)> = offline
+        .finished
+        .iter()
+        .map(|f| (f.id, (f.tokens.clone(), f.nll)))
+        .collect();
+    assert_eq!(reference.len(), requests.len());
+    assert!(reference.values().any(|(_, nll)| nll.is_some()), "trace includes scoring");
+
+    let server_ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+        max_pos,
+    );
+    let ncfg = NetConfig { workers: 1, sched: sched.clone(), ..NetConfig::default() };
+    let server = NetServer::start(vec![server_ctx], ncfg, None).unwrap();
+    let mut client = LineClient::connect(&server.addr()).unwrap();
+    for req in &requests {
+        let events = client.request(&request_line(req.id as u64, req)).unwrap();
+        let (want_tokens, want_nll) = &reference[&req.id];
+        match events.last().unwrap() {
+            WireEvent::Done { id, tokens, nll, deadline_met } => {
+                assert_eq!(*id, req.id as u64);
+                assert!(*deadline_met, "no deadlines in this trace");
+                assert_eq!(tokens, want_tokens, "request {} tokens over TCP", req.id);
+                assert_eq!(*nll, *want_nll, "request {} NLL bit-exact over the wire", req.id);
+            }
+            other => panic!("request {} got terminal {other:?}", req.id),
+        }
+        // the streamed token events must equal the final record, in order
+        let streamed: Vec<i32> = events
+            .iter()
+            .filter_map(|e| match e {
+                WireEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(&streamed, want_tokens, "request {} streamed tokens", req.id);
+    }
+    drop(client); // close the connection so the drain barrier clears
+    let stats = server.shutdown().unwrap();
+    assert!(stats.drained_clean, "loopback client closed before the drain deadline");
+    assert!(stats.accounted(), "queued == finished + shed");
+    assert_eq!(stats.finished.len(), requests.len());
+    assert_eq!(stats.parse_errors, 0);
+    assert_eq!(stats.rejected_rate, 0);
 }
