@@ -15,7 +15,7 @@ use besa::serve::engine::{
 use besa::serve::model::{PackedModel, WeightFormat};
 use besa::serve::scheduler::SchedulerConfig;
 use besa::serve::trace::{poisson_trace, TraceConfig};
-use besa::serve::{run_trace, serve_online, OnlineConfig, Pacing, ServeBenchConfig, ServeMode};
+use besa::serve::{run_trace, serve_online, KvSpec, OnlineConfig, Pacing, ServeBenchConfig, ServeMode};
 use besa::util::bench::Bench;
 use besa::util::rng::Rng;
 
@@ -114,6 +114,7 @@ fn main() {
         ..bcfg.trace
     };
     let sched = SchedulerConfig { token_budget: 512, max_batch: 8 };
+    let kvspec = KvSpec::contig();
     for mode in [ServeMode::Dense, ServeMode::Sparse, ServeMode::Quant] {
         let format = match mode {
             ServeMode::Sparse => WeightFormat::Csr,
@@ -130,7 +131,7 @@ fn main() {
             &format!("trace x{} {}", trace_cfg.n_requests, mode.name()),
             total_tokens as f64,
             "tok/s",
-            || run_trace(&ctx, None, requests.clone(), &sched).unwrap(),
+            || run_trace(&ctx, None, requests.clone(), &sched, &kvspec).unwrap(),
         );
     }
 

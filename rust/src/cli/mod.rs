@@ -76,15 +76,22 @@ fn print_help() {
          \x20            breakdown. --overload-sweep adds goodput-vs-offered-load\n\
          \x20            curves per queue policy (--deadline-ms <ms>;\n\
          \x20            --overload-multipliers 0.5,1,2,4,8; --policies fifo,edf;\n\
-         \x20            --queue-cap <n>). --trace-out <path> dumps per-request\n\
+         \x20            --queue-cap <n>). --kv contig|paged picks the KV backing\n\
+         \x20            (--kv-page <tokens/page>, --kv-pages <pool cap, 0=unbounded>,\n\
+         \x20            --share-prefix for COW prompt-prefix sharing,\n\
+         \x20            --shared-prefix-tokens <n> prepends a common prompt prefix\n\
+         \x20            to the trace); paged adds the paged-vs-contig section to\n\
+         \x20            the record. --trace-out <path> dumps per-request\n\
          \x20            telemetry spans as JSONL (docs/telemetry.md)\n\
          \x20 serve-net  TCP front end over the same workers: line-delimited JSON\n\
          \x20            + an HTTP/1.1 subset (GET /healthz, POST /v1/generate),\n\
          \x20            per-client token buckets (--bucket-rate, --bucket-burst),\n\
          \x20            deadline shedding (--deadline-reject), bounded queue\n\
          \x20            (--queue-cap), --policy fifo|priority|edf, graceful drain\n\
-         \x20            (--drain-deadline-s). --drive runs the hermetic loopback\n\
-         \x20            self-test (--clients, --requests, --deadline-ms);\n\
+         \x20            (--drain-deadline-s), --kv contig|paged (+ --kv-page,\n\
+         \x20            --kv-pages, --steal, --share-prefix: paged allocator, decode\n\
+         \x20            work stealing, prefix sharing). --drive runs the hermetic\n\
+         \x20            loopback self-test (--clients, --requests, --deadline-ms);\n\
          \x20            --addr <ip:port> binds (port 0 = ephemeral); docs/serving.md\n\
          \x20 kernel-bench  roofline sweep of the shared microkernel layer:\n\
          \x20            scalar reference vs micro kernel per family (matvec,\n\

@@ -23,7 +23,7 @@ use crate::telemetry::Tracer;
 use crate::util::args::Args;
 use crate::util::par::scoped_workers;
 
-use super::runs::{engine_for, load_params};
+use super::runs::{engine_for, load_params, parse_kv_mode};
 
 /// What one drive client observed, summed over its share of the trace.
 #[derive(Debug, Default, Clone, Copy)]
@@ -73,6 +73,9 @@ pub fn cmd_serve_net(args: &Args) -> Result<()> {
         bucket_rate: args.f64_or("bucket-rate", 0.0)?,
         bucket_burst: args.f64_or("bucket-burst", 0.0)?,
         admit_reject: args.has("deadline-reject"),
+        kv: parse_kv_mode(args)?,
+        steal: args.has("steal"),
+        share_prefix: args.has("share-prefix"),
         drain_deadline: Duration::from_secs_f64(args.f64_or("drain-deadline-s", 10.0)?),
         ..NetConfig::default()
     };
@@ -89,11 +92,12 @@ pub fn cmd_serve_net(args: &Args) -> Result<()> {
     let server = NetServer::start(ctxs, ncfg.clone(), tracer.clone())?;
     let addr = server.addr();
     println!(
-        "serve-net: {} on {addr} ({} workers, policy {}, queue cap {})",
+        "serve-net: {} on {addr} ({} workers, policy {}, queue cap {}, kv {})",
         format.name(),
         ncfg.workers,
         ncfg.policy.name(),
-        ncfg.queue_cap
+        ncfg.queue_cap,
+        ncfg.kv.name()
     );
 
     let stats = if args.has("drive") {
@@ -158,6 +162,7 @@ fn drive_loopback(
         deadline_max_s: deadline_ms.max(0.0) / 1e3,
         priority_tiers: args.usize_or("priority-tiers", 1)?.clamp(1, 255) as u8,
         clients: nclients as u32,
+        shared_prefix_len: args.usize_or("shared-prefix-tokens", 0)?,
     };
     let requests = poisson_trace(&tcfg);
     let total = requests.len();

@@ -238,6 +238,24 @@ pub fn cmd_probe(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the KV-backing flags shared by `serve-bench` and `serve-net`:
+/// `--kv contig|paged`, `--kv-page <tokens/page>` and `--kv-pages <cap>`
+/// (0 = unbounded pool).
+pub(crate) fn parse_kv_mode(args: &Args) -> Result<crate::serve::KvMode> {
+    use crate::serve::KvMode;
+    match args.str_or("kv", "contig").as_str() {
+        "contig" => Ok(KvMode::Contig),
+        "paged" => {
+            let page_tokens = args.usize_or("kv-page", 16)?;
+            if page_tokens == 0 {
+                bail!("--kv-page must be >= 1");
+            }
+            Ok(KvMode::Paged { page_tokens, max_pages: args.usize_or("kv-pages", 0)? })
+        }
+        other => bail!("--kv must be contig|paged, got '{other}'"),
+    }
+}
+
 /// `besa serve-bench`: replay a Poisson/bursty request trace through the
 /// sparse serving engine in each weight format and report throughput /
 /// latency / speedup (+ `BENCH_serve.json`). `--async` adds the online
@@ -245,9 +263,12 @@ pub fn cmd_probe(args: &Args) -> Result<()> {
 /// `--closed-loop N` clients) into `--workers` sharded workers, reported
 /// at one worker and at N for the scaling. `--overload-sweep` adds
 /// goodput-vs-offered-load curves per queue policy (`--deadline-ms`,
-/// `--overload-multipliers`, `--policies`). `--trace-out <path>` dumps
-/// per-request telemetry spans as JSONL. `--smoke`/`--synthetic` build
-/// a magnitude-pruned checkpoint in process so the run is hermetic.
+/// `--overload-multipliers`, `--policies`). `--kv paged` serves through
+/// the paged allocator (`--kv-page` tokens per page, `--share-prefix`
+/// for COW prompt-prefix sharing) and adds the paged-vs-contiguous
+/// section to the record. `--trace-out <path>` dumps per-request
+/// telemetry spans as JSONL. `--smoke`/`--synthetic` build a
+/// magnitude-pruned checkpoint in process so the run is hermetic.
 pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     use crate::serve::bench::{
         magnitude_prune_in_place, OnlineBenchConfig, OverloadSweepConfig, ServeMode,
@@ -302,6 +323,7 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         deadline_max_s: deadline_ms.max(0.0) / 1e3,
         priority_tiers: args.usize_or("priority-tiers", 1)?.clamp(1, 255) as u8,
         clients: args.usize_or("trace-clients", 1)?.max(1) as u32,
+        shared_prefix_len: args.usize_or("shared-prefix-tokens", 0)?,
     };
     let sched = SchedulerConfig {
         token_budget: args.usize_or("token-budget", if smoke { 256 } else { 1024 })?,
@@ -389,6 +411,8 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         trace,
         sched,
         quant: crate::quant::QuantSpec::default(),
+        kv: parse_kv_mode(args)?,
+        share_prefix: args.has("share-prefix"),
         parity_decode_tokens: args.usize_or("parity-tokens", if smoke { 4 } else { 8 })?,
         online,
         overload,

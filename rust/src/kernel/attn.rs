@@ -125,6 +125,63 @@ pub fn wsum(out: &mut [f32], p: &[f32], vmat: &[f32], stride: usize, off: usize)
     }
 }
 
+/// One contiguous run of key/value rows — how a paged KV cache exposes a
+/// block's committed positions to the attention kernels (`serve::paged`).
+/// `k`/`v` hold `rows` rows at the caller's stride; consecutive segments
+/// cover consecutive position ranges.
+#[derive(Clone, Copy)]
+pub struct KvSegment<'a> {
+    /// roped keys, `rows` rows at the caller's stride
+    pub k: &'a [f32],
+    /// raw values, `rows` rows at the caller's stride
+    pub v: &'a [f32],
+    /// committed rows in this run
+    pub rows: usize,
+}
+
+/// Score row over segmented keys: [`dots`] on each segment in order.
+/// Every `out[j]` is one independent dot chain, so where a position lands
+/// (which segment holds it) cannot change its value — the gather view is
+/// bitwise identical to [`dots`] over the concatenated rows, in either
+/// dispatch mode.
+pub fn dots_gather<'a>(
+    q: &[f32],
+    segs: impl Fn(usize) -> KvSegment<'a>,
+    n_segs: usize,
+    stride: usize,
+    off: usize,
+    out: &mut [f32],
+) {
+    let mut j0 = 0;
+    for si in 0..n_segs {
+        let seg = segs(si);
+        dots(q, seg.k, stride, off, seg.rows, &mut out[j0..]);
+        j0 += seg.rows;
+    }
+}
+
+/// Weighted value sum over segmented values: [`wsum`] on each segment in
+/// ascending position order. Both lanes accumulate strictly ascending in
+/// j — scalar as a j-outer AXPY, micro restarting its register chunks
+/// from the partial `out` at each segment boundary without altering any
+/// f32 — so the gather view is bitwise identical to [`wsum`] over the
+/// concatenated rows.
+pub fn wsum_gather<'a>(
+    out: &mut [f32],
+    p: &[f32],
+    segs: impl Fn(usize) -> KvSegment<'a>,
+    n_segs: usize,
+    stride: usize,
+    off: usize,
+) {
+    let mut j0 = 0;
+    for si in 0..n_segs {
+        let seg = segs(si);
+        wsum(out, &p[j0..j0 + seg.rows], seg.v, stride, off);
+        j0 += seg.rows;
+    }
+}
+
 /// `out[u] += a · v[u]` — the single-key tail of the cached decode row
 /// (the new key/value at the decoded position). Elementwise; one add per
 /// element in either mode, so there is nothing to reorder.

@@ -394,6 +394,31 @@ pub fn attention_cached_row_into(
     row: &mut Vec<f32>,
     out: &mut [f32],
 ) {
+    let seg = attn::KvSegment { k: k_cache, v: v_cache, rows: len };
+    attention_cached_row_gather_into(q, k_new, v_new, |_| seg, 1, len, n_heads, dh, row, out);
+}
+
+/// [`attention_cached_row_into`] reading the cached positions through a
+/// page-gather view: `segs(0..n_segs)` yields contiguous runs covering
+/// positions `0..len` in ascending order (a paged `serve::paged::Kv`
+/// exposes one run per page). The softmax body is position-blind and the
+/// gather kernels ([`attn::dots_gather`], [`attn::wsum_gather`]) keep the
+/// per-position accumulation order of their contiguous forms, so paging
+/// the cache cannot change a single bit of the output — the paged ==
+/// contiguous parity `tests/serve_parity.rs` pins.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_cached_row_gather_into<'a>(
+    q: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
+    segs: impl Fn(usize) -> attn::KvSegment<'a>,
+    n_segs: usize,
+    len: usize,
+    n_heads: usize,
+    dh: usize,
+    row: &mut Vec<f32>,
+    out: &mut [f32],
+) {
     let d = n_heads * dh;
     debug_assert_eq!(out.len(), d);
     let scale = 1.0 / (dh as f32).sqrt();
@@ -404,7 +429,7 @@ pub fn attention_cached_row_into(
         let off = h * dh;
         let qh = &q[off..off + dh];
         // score row: cached keys 0..len at stride d, then the new key
-        attn::dots(qh, k_cache, d, off, len, row);
+        attn::dots_gather(qh, &segs, n_segs, d, off, row);
         row[len] = attn::dot1(qh, &k_new[off..off + dh]);
         let mut mx = f32::NEG_INFINITY;
         for item in row.iter_mut() {
@@ -420,7 +445,7 @@ pub fn attention_cached_row_into(
             *item /= z;
         }
         let oh = &mut out[off..off + dh];
-        attn::wsum(oh, &row[..len], v_cache, d, off);
+        attn::wsum_gather(oh, &row[..len], &segs, n_segs, d, off);
         attn::axpy(oh, row[len], &v_new[off..off + dh]);
     }
 }

@@ -25,8 +25,8 @@ use super::engine::{
     greedy_recompute, last_logits, prefill, score_nll, BlockTensors, DecodeScratch, ServeContext,
 };
 use super::ingest::Pacing;
-use super::kv::KvCache;
 use super::model::{PackedModel, WeightFormat};
+use super::paged::{gather_caches, Kv, KvMode, KvSpec, PagePool, PrefixRegistry};
 use super::online::{serve_online_traced, OnlineConfig, OnlineStats};
 use super::scheduler::{Policy, ReqKind, Request, Scheduler, SchedulerConfig};
 use super::trace::{poisson_trace, TraceConfig};
@@ -87,20 +87,27 @@ pub struct TraceStats {
     pub prompt_tokens: usize,
     pub gen_tokens: usize,
     pub peak_active: usize,
+    /// high-water resident KV bytes: the pool's peak live pages in paged
+    /// mode (COW-shared pages counted once), the peak sum of active slab
+    /// bytes in contiguous mode
+    pub peak_kv_bytes: usize,
 }
 
 /// Replay `requests` through the continuous-batching loop: admit by token
 /// budget, prefill new admissions (parallel across prompts), then one
-/// batched decode step per iteration for everything active.
+/// batched decode step per iteration for everything active. `kv` picks
+/// the cache backing (`KvSpec::contig()` reproduces the historical
+/// per-request slabs bitwise).
 pub fn run_trace(
     ctx: &ServeContext,
     backend: Option<(&Engine, &[BlockTensors])>,
     requests: Vec<Request>,
     scfg: &SchedulerConfig,
+    kv: &KvSpec,
 ) -> Result<TraceStats> {
     struct Active {
         req: Request,
-        cache: KvCache,
+        cache: Kv,
         last: i32,
         produced: usize,
         tokens: Vec<i32>,
@@ -129,6 +136,7 @@ pub fn run_trace(
     let mut prompt_tokens = 0usize;
     let mut gen_tokens = 0usize;
     let mut peak_active = 0usize;
+    let mut peak_contig_bytes = 0usize;
     while finished.len() < total {
         let mut now = sw.secs() + clock_offset;
         if active.is_empty() {
@@ -142,7 +150,14 @@ pub fn run_trace(
         let admitted = sched.admit(now, active.len());
         if !admitted.is_empty() {
             let prefilled = par_map(&admitted, |req| {
-                let mut cache = ctx.new_cache();
+                let mut cache = match ctx.new_kv(kv, req.cost()) {
+                    Some(c) => c,
+                    None => bail!(
+                        "page pool cannot cover admitted request {} ({} tokens)",
+                        req.id,
+                        req.cost()
+                    ),
+                };
                 let hidden = prefill(ctx, &req.tokens, &mut cache);
                 Ok((cache, hidden))
             })?;
@@ -190,11 +205,12 @@ pub fn run_trace(
             }
         }
         peak_active = peak_active.max(active.len());
+        peak_contig_bytes =
+            peak_contig_bytes.max(active.iter().map(|a| a.cache.mem_bytes()).sum());
         if !active.is_empty() {
             let last: Vec<i32> = active.iter().map(|a| a.last).collect();
             let next = {
-                let mut caches: Vec<&mut KvCache> =
-                    active.iter_mut().map(|a| &mut a.cache).collect();
+                let mut caches = gather_caches(&mut active, |a| &mut a.cache);
                 match backend {
                     Some((engine, blocks)) => {
                         decode_step_backend(ctx, engine, blocks, &last, &mut caches)?
@@ -231,12 +247,17 @@ pub fn run_trace(
             }
         }
     }
+    let peak_kv_bytes = match kv.pool() {
+        Some(p) => p.stats().peak_live * p.page_bytes(),
+        None => peak_contig_bytes,
+    };
     Ok(TraceStats {
         finished,
         wall_s: sw.secs(),
         prompt_tokens,
         gen_tokens,
         peak_active,
+        peak_kv_bytes,
     })
 }
 
@@ -254,6 +275,7 @@ pub struct ModeReport {
     pub p99_ms: f64,
     pub peak_active: usize,
     pub weight_mbytes: f64,
+    pub peak_kv_mbytes: f64,
 }
 
 fn mode_report(mode: ServeMode, weight_bytes: usize, stats: &TraceStats) -> ModeReport {
@@ -272,6 +294,7 @@ fn mode_report(mode: ServeMode, weight_bytes: usize, stats: &TraceStats) -> Mode
         p99_ms: percentile(&lat_ms, 99.0),
         peak_active: stats.peak_active,
         weight_mbytes: weight_bytes as f64 / (1024.0 * 1024.0),
+        peak_kv_mbytes: stats.peak_kv_bytes as f64 / (1024.0 * 1024.0),
     }
 }
 
@@ -346,6 +369,12 @@ pub struct ServeBenchConfig {
     pub trace: TraceConfig,
     pub sched: SchedulerConfig,
     pub quant: QuantSpec,
+    /// KV-cache backing for every replay (`--kv contig|paged`); paged
+    /// mode adds the paged-vs-contiguous section to the record
+    pub kv: KvMode,
+    /// register prompts in a [`PrefixRegistry`] so later admissions fork
+    /// their shared prefix instead of recomputing it (paged mode only)
+    pub share_prefix: bool,
     /// tokens generated in the KV-vs-recompute parity check
     pub parity_decode_tokens: usize,
     /// run the async multi-worker section too
@@ -370,6 +399,8 @@ impl Default for ServeBenchConfig {
             trace: TraceConfig::default(),
             sched: SchedulerConfig::default(),
             quant: QuantSpec::default(),
+            kv: KvMode::Contig,
+            share_prefix: false,
             parity_decode_tokens: 8,
             online: None,
             overload: None,
@@ -592,6 +623,8 @@ fn run_online_bench(
                 pacing: ocfg.pacing,
                 policy: ocfg.policy,
                 queue_cap: ocfg.queue_cap,
+                kv: bcfg.kv,
+                share_prefix: bcfg.share_prefix,
                 ..OnlineConfig::default()
             },
             tracer,
@@ -771,6 +804,238 @@ fn run_overload_sweep(
     ]))
 }
 
+/// The paged-vs-contiguous section (`--kv paged`): the same trace under
+/// both cache backings (resident-KV high-water mark + output parity),
+/// admission concurrency under a fixed memory budget, the prefix-sharing
+/// residency reduction on a shared-prompt trace, and park/steal counts
+/// under a skewed decode-length trace with work stealing on.
+fn run_paged_bench(
+    params: &ParamStore,
+    cfg: &ModelConfig,
+    bcfg: &ServeBenchConfig,
+    tracer: Option<&Tracer>,
+) -> Result<Json> {
+    let (page_tokens, max_pages) = match bcfg.kv {
+        KvMode::Paged { page_tokens, max_pages } => (page_tokens, max_pages),
+        KvMode::Contig => bail!("the paged section needs --kv paged"),
+    };
+    let (nb, d) = (cfg.n_blocks, cfg.d_model);
+    let requests = poisson_trace(&bcfg.trace);
+    if requests.is_empty() {
+        bail!("trace produced no requests");
+    }
+    let max_pos = bcfg.trace.max_request_tokens();
+    let ctx =
+        ServeContext::new(PackedModel::materialize(params, cfg, WeightFormat::Dense)?, max_pos);
+    let page_bytes = PagePool::new(nb, d, page_tokens, 0).page_bytes();
+    println!(
+        "\n== serve-bench paged: {} tokens/page ({:.1} KiB/page), cap {} pages ==",
+        page_tokens,
+        page_bytes as f64 / 1024.0,
+        max_pages
+    );
+
+    // the same trace under both backings: resident KV + output parity
+    let contig = run_trace(&ctx, None, requests.clone(), &bcfg.sched, &KvSpec::contig())?;
+    let paged_spec = KvSpec::for_mode(bcfg.kv, nb, d);
+    let paged = run_trace(&ctx, None, requests.clone(), &bcfg.sched, &paged_spec)?;
+    let contig_map: BTreeMap<usize, Vec<i32>> =
+        contig.finished.iter().map(|f| (f.id, f.tokens.clone())).collect();
+    let paged_map: BTreeMap<usize, Vec<i32>> =
+        paged.finished.iter().map(|f| (f.id, f.tokens.clone())).collect();
+    let outputs_match = contig_map == paged_map;
+    if !outputs_match {
+        crate::warnlog!("paged replay changed per-request outputs vs contiguous");
+    }
+    println!(
+        "resident KV (same trace): contig peak {:.3} MB, paged peak {:.3} MB; outputs {}",
+        contig.peak_kv_bytes as f64 / (1024.0 * 1024.0),
+        paged.peak_kv_bytes as f64 / (1024.0 * 1024.0),
+        if outputs_match { "match" } else { "MISMATCH" }
+    );
+
+    // fixed memory budget: whole contiguous slabs vs cost-sized paged
+    // reservations (no model run — pure admission accounting)
+    let contig_bytes = 2 * nb * max_pos * d * 4;
+    let budget = 4 * contig_bytes;
+    let contig_fit = budget / contig_bytes;
+    let pool = PagePool::new(nb, d, page_tokens, budget / page_bytes);
+    let mut held = Vec::new();
+    for r in &requests {
+        match pool.new_table(r.cost()) {
+            Some(t) => held.push(t),
+            None => break,
+        }
+    }
+    let paged_fit = held.len();
+    drop(held);
+    println!(
+        "fixed memory ({:.3} MB): contig fits {} requests, paged admits {}",
+        budget as f64 / (1024.0 * 1024.0),
+        contig_fit,
+        paged_fit
+    );
+
+    // prefix sharing on a shared-prompt trace: materialize every prompt's
+    // pages with and without the registry (dummy rows — the residency
+    // accounting is what's measured) and compare live pool pages
+    let prefix_tokens = (4 * page_tokens).max(8);
+    let shared_cfg = TraceConfig { shared_prefix_len: prefix_tokens, ..bcfg.trace.clone() };
+    let shared_reqs = poisson_trace(&shared_cfg);
+    let (zk, zv) = (vec![0.0f32; d], vec![0.0f32; d]);
+    let pool_a = PagePool::new(nb, d, page_tokens, 0);
+    let mut held_a = Vec::new();
+    for r in &shared_reqs {
+        let s = r.tokens.len();
+        let mut t = match pool_a.new_table(s) {
+            Some(t) => t,
+            None => bail!("unbounded pool refused a table"),
+        };
+        for pos in 0..s {
+            t.write(0, pos, &zk, &zv);
+        }
+        t.set_len(s);
+        held_a.push(t);
+    }
+    let unshared_bytes = pool_a.stats().live * page_bytes;
+    drop(held_a);
+    let pool_b = PagePool::new(nb, d, page_tokens, 0);
+    let reg = PrefixRegistry::new(shared_reqs.len().max(1));
+    let mut forks = 0usize;
+    let mut held_b = Vec::new();
+    for r in &shared_reqs {
+        let s = r.tokens.len();
+        let t = match reg.fork_longest(&r.tokens, s) {
+            Some((p0, mut t)) => {
+                forks += 1;
+                for pos in p0..s {
+                    t.write(0, pos, &zk, &zv);
+                }
+                t.set_len(s);
+                t
+            }
+            None => {
+                let mut t = match pool_b.new_table(s) {
+                    Some(t) => t,
+                    None => bail!("unbounded pool refused a table"),
+                };
+                for pos in 0..s {
+                    t.write(0, pos, &zk, &zv);
+                }
+                t.set_len(s);
+                reg.register(&r.tokens, &mut t);
+                t
+            }
+        };
+        held_b.push(t);
+    }
+    let shared_bytes = pool_b.stats().live * page_bytes;
+    let cow_clones = pool_b.stats().cow_clones;
+    drop(held_b);
+    reg.clear();
+    println!(
+        "prefix sharing ({} shared tokens, {} requests): {:.3} MB -> {:.3} MB resident \
+         ({} forks, {} cow clones)",
+        prefix_tokens,
+        shared_reqs.len(),
+        unshared_bytes as f64 / (1024.0 * 1024.0),
+        shared_bytes as f64 / (1024.0 * 1024.0),
+        forks,
+        cow_clones
+    );
+
+    // work stealing under a skewed decode-length trace: two workers, one
+    // draws the long decodes, the idle one steals them mid-flight
+    let skew_cfg = TraceConfig {
+        score_fraction: 0.0,
+        gen_min: 1,
+        gen_max: (bcfg.trace.gen_max * 4).max(16),
+        ..bcfg.trace.clone()
+    };
+    let skew_reqs = poisson_trace(&skew_cfg);
+    // a cap sized for the base trace may not hold the stretched decodes
+    let skew_kv = match bcfg.kv {
+        KvMode::Paged { page_tokens, max_pages }
+            if max_pages > 0
+                && skew_reqs.iter().any(|r| r.cost() > max_pages * page_tokens) =>
+        {
+            KvMode::Paged { page_tokens, max_pages: 0 }
+        }
+        mode => mode,
+    };
+    let skew_max_pos = skew_cfg.max_request_tokens();
+    let ctxs = (0..2)
+        .map(|_| {
+            Ok(ServeContext::new(
+                PackedModel::materialize(params, cfg, WeightFormat::Dense)?,
+                skew_max_pos,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let stats = serve_online_traced(
+        &ctxs,
+        skew_reqs.clone(),
+        &OnlineConfig {
+            workers: 2,
+            sched: bcfg.sched.clone(),
+            pacing: Pacing::Replay { time_scale: 0.1 },
+            kv: skew_kv,
+            steal: true,
+            share_prefix: bcfg.share_prefix,
+            ..OnlineConfig::default()
+        },
+        tracer,
+    )?;
+    println!(
+        "work stealing (skewed trace, 2 workers): {} finished, {} parks, {} steals",
+        stats.finished.len(),
+        stats.parks,
+        stats.steals
+    );
+
+    Ok(json::obj(vec![
+        ("page_tokens", json::num(page_tokens as f64)),
+        ("max_pages", json::num(max_pages as f64)),
+        ("page_bytes", json::num(page_bytes as f64)),
+        ("outputs_match_contig", Json::Bool(outputs_match)),
+        (
+            "resident",
+            json::obj(vec![
+                ("contig_peak_bytes", json::num(contig.peak_kv_bytes as f64)),
+                ("paged_peak_bytes", json::num(paged.peak_kv_bytes as f64)),
+            ]),
+        ),
+        (
+            "fixed_memory",
+            json::obj(vec![
+                ("budget_bytes", json::num(budget as f64)),
+                ("contig_requests", json::num(contig_fit as f64)),
+                ("paged_requests", json::num(paged_fit as f64)),
+            ]),
+        ),
+        (
+            "prefix_sharing",
+            json::obj(vec![
+                ("prefix_tokens", json::num(prefix_tokens as f64)),
+                ("requests", json::num(shared_reqs.len() as f64)),
+                ("forks", json::num(forks as f64)),
+                ("cow_clones", json::num(cow_clones as f64)),
+                ("resident_bytes_unshared", json::num(unshared_bytes as f64)),
+                ("resident_bytes_shared", json::num(shared_bytes as f64)),
+            ]),
+        ),
+        (
+            "steal",
+            json::obj(vec![
+                ("workers", json::num(2.0)),
+                ("requests", json::num(stats.finished.len() as f64)),
+                ("parks", json::num(stats.parks as f64)),
+                ("steals", json::num(stats.steals as f64)),
+            ]),
+        ),
+    ]))
+}
+
 /// Zero the smallest-magnitude fraction of every prunable weight — the
 /// hermetic stand-in checkpoint for `--smoke` / `--synthetic` runs (the
 /// real flow serves a `besa prune` checkpoint via `--ckpt`).
@@ -817,9 +1082,10 @@ pub fn run_serve_bench(
     let n_score = requests.iter().filter(|r| r.kind == ReqKind::Score).count();
     let sparsity = params.prunable_sparsity(cfg.n_blocks);
     println!(
-        "\n== serve-bench: config {}, backend {}, sparsity {:.2}, {} requests ({} gen / {} score) ==",
+        "\n== serve-bench: config {}, backend {}, kv {}, sparsity {:.2}, {} requests ({} gen / {} score) ==",
         cfg.name,
         engine.backend_name(),
+        bcfg.kv.name(),
         sparsity,
         requests.len(),
         requests.len() - n_score,
@@ -843,7 +1109,10 @@ pub fn run_serve_bench(
             }
             _ => None,
         };
-        let stats = run_trace(&ctx, backend, requests.clone(), &bcfg.sched)?;
+        // fresh KV spec (and pool, in paged mode) per replay so resident
+        // accounting never mixes across modes
+        let kvspec = KvSpec::for_mode(bcfg.kv, cfg.n_blocks, cfg.d_model);
+        let stats = run_trace(&ctx, backend, requests.clone(), &bcfg.sched, &kvspec)?;
         reports.push(mode_report(*mode, weight_bytes, &stats));
     }
 
@@ -855,8 +1124,8 @@ pub fn run_serve_bench(
         .map(|r| r.tokens_per_s)
         .filter(|tps| *tps > 0.0);
     println!(
-        "{:<14} {:>10} {:>9} {:>9} {:>9} {:>10} {:>10} {:>8}",
-        "mode", "tok/s", "p50 ms", "p95 ms", "p99 ms", "wall s", "weights", "speedup"
+        "{:<14} {:>10} {:>9} {:>9} {:>9} {:>10} {:>10} {:>9} {:>8}",
+        "mode", "tok/s", "p50 ms", "p95 ms", "p99 ms", "wall s", "weights", "kv peak", "speedup"
     );
     for report in &reports {
         let speedup = match dense_tps {
@@ -864,7 +1133,7 @@ pub fn run_serve_bench(
             None => "-".to_string(),
         };
         println!(
-            "{:<14} {:>10.0} {:>9.2} {:>9.2} {:>9.2} {:>10.2} {:>8.2}MB {:>8}",
+            "{:<14} {:>10.0} {:>9.2} {:>9.2} {:>9.2} {:>10.2} {:>8.2}MB {:>7.2}MB {:>8}",
             report.mode,
             report.tokens_per_s,
             report.p50_ms,
@@ -872,6 +1141,7 @@ pub fn run_serve_bench(
             report.p99_ms,
             report.wall_s,
             report.weight_mbytes,
+            report.peak_kv_mbytes,
             speedup
         );
     }
@@ -930,6 +1200,13 @@ pub fn run_serve_bench(
         None => None,
     };
 
+    // paged-vs-contiguous section: residency, fixed-memory concurrency,
+    // prefix sharing, work stealing
+    let paged = match bcfg.kv {
+        KvMode::Paged { .. } => Some(run_paged_bench(params, &cfg, bcfg, tracer.as_ref())?),
+        KvMode::Contig => None,
+    };
+
     // machine-readable record
     let mode_rows: Vec<Json> = reports
         .iter()
@@ -947,6 +1224,7 @@ pub fn run_serve_bench(
                 ("p99_ms", json::num(r.p99_ms)),
                 ("peak_active", json::num(r.peak_active as f64)),
                 ("weight_mbytes", json::num(r.weight_mbytes)),
+                ("peak_kv_mbytes", json::num(r.peak_kv_mbytes)),
             ])
         })
         .collect();
@@ -963,6 +1241,7 @@ pub fn run_serve_bench(
         ("bench", json::s("serve_throughput")),
         ("config", json::s(&cfg.name)),
         ("backend", json::s(engine.backend_name())),
+        ("kv", json::s(bcfg.kv.name())),
         ("sparsity", json::num(sparsity)),
         (
             "trace",
@@ -1007,6 +1286,9 @@ pub fn run_serve_bench(
     }
     if let Some(o) = overload {
         payload_fields.push(("overload", o));
+    }
+    if let Some(p) = paged {
+        payload_fields.push(("paged", p));
     }
     let payload = json::obj(payload_fields);
     if let Some(path) = &bcfg.json_path {

@@ -23,6 +23,7 @@ use crate::tensor::Tensor;
 
 use super::kv::KvCache;
 use super::model::PackedModel;
+use super::paged::{Kv, KvSpec};
 
 /// A packed model plus the RoPE tables for every position it may serve.
 pub struct ServeContext {
@@ -45,9 +46,17 @@ impl ServeContext {
         self.max_pos
     }
 
-    /// Fresh KV cache sized for this context.
-    pub fn new_cache(&self) -> KvCache {
-        KvCache::new(self.model.cfg.n_blocks, self.model.cfg.d_model, self.max_pos)
+    /// Fresh contiguous KV cache sized for this context's full window.
+    pub fn new_cache(&self) -> Kv {
+        Kv::Contig(KvCache::new(self.model.cfg.n_blocks, self.model.cfg.d_model, self.max_pos))
+    }
+
+    /// KV cache for one request through a [`KvSpec`]: the contiguous slab
+    /// spans the full window, a paged table reserves exactly `cost`
+    /// tokens. `None` only in paged mode when the pool cap cannot cover
+    /// the reservation (the clean-rejection path).
+    pub fn new_kv(&self, spec: &KvSpec, cost: usize) -> Option<Kv> {
+        spec.new_kv(self.model.cfg.n_blocks, self.model.cfg.d_model, self.max_pos, cost)
     }
 }
 
@@ -114,7 +123,7 @@ fn attention_causal(q: &[f32], k: &[f32], v: &[f32], s: usize, n_heads: usize, d
 /// Run the whole prompt through the model, filling `cache` with roped
 /// keys / raw values for every block and position. Returns the final
 /// hidden states `[s, d]` (pre-`norm_f`).
-pub fn prefill(ctx: &ServeContext, tokens: &[i32], cache: &mut KvCache) -> Vec<f32> {
+pub fn prefill(ctx: &ServeContext, tokens: &[i32], cache: &mut Kv) -> Vec<f32> {
     let cfg = &ctx.model.cfg;
     let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
     let s = tokens.len();
@@ -204,17 +213,19 @@ impl DecodeScratch {
     }
 }
 
-/// One continuous-batching decode step: each active request contributes
-/// its last token; linears run batched over all requests, attention runs
-/// per request against its own KV cache. Appends this position to every
-/// cache and returns the next (greedy) token per request. `scratch`
-/// carries the reusable attention buffers across steps.
-pub fn decode_step(
+/// Transformer body of one continuous-batching decode step: each active
+/// request contributes its last token; linears run batched over all
+/// requests, attention runs per request against its own KV cache through
+/// the segment-gather view (one segment for a contiguous cache, one per
+/// page for a paged one — bitwise identical either way). Appends this
+/// position to every cache and returns the new hidden rows `[nb, d]`
+/// (pre-`norm_f`). `scratch` carries the reusable attention buffers.
+pub fn decode_hidden(
     ctx: &ServeContext,
     last_tokens: &[i32],
-    caches: &mut [&mut KvCache],
+    caches: &mut [&mut Kv],
     scratch: &mut DecodeScratch,
-) -> Vec<i32> {
+) -> Vec<f32> {
     let cfg = &ctx.model.cfg;
     let (d, nh, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
     let nb = last_tokens.len();
@@ -236,12 +247,13 @@ pub fn decode_step(
             let p = positions[i];
             rope_row(&mut q[i * d..(i + 1) * d], p, &ctx.cos, &ctx.sin, nh, dh);
             rope_row(&mut k[i * d..(i + 1) * d], p, &ctx.cos, &ctx.sin, nh, dh);
-            ops::attention_cached_row_into(
+            let cache = &caches[i];
+            ops::attention_cached_row_gather_into(
                 &q[i * d..(i + 1) * d],
                 &k[i * d..(i + 1) * d],
                 &v[i * d..(i + 1) * d],
-                caches[i].k_block(l),
-                caches[i].v_block(l),
+                |si| cache.segment(l, si),
+                cache.n_segments(),
                 p,
                 nh,
                 dh,
@@ -263,9 +275,52 @@ pub fn decode_step(
         let n = c.len();
         c.set_len(n + 1);
     }
-    let h = ops::rmsnorm(&x, &ctx.model.norm_f, d, eps);
+    x
+}
+
+/// One continuous-batching decode step: [`decode_hidden`] plus the tied
+/// head — returns the next (greedy) token per request.
+pub fn decode_step(
+    ctx: &ServeContext,
+    last_tokens: &[i32],
+    caches: &mut [&mut Kv],
+    scratch: &mut DecodeScratch,
+) -> Vec<i32> {
+    let cfg = &ctx.model.cfg;
+    let (d, nb) = (cfg.d_model, last_tokens.len());
+    let x = decode_hidden(ctx, last_tokens, caches, scratch);
+    let h = ops::rmsnorm(&x, &ctx.model.norm_f, d, cfg.norm_eps);
     let logits = ops::mm_nt(&h, &ctx.model.embed, nb, d, cfg.vocab);
     (0..nb).map(|i| argmax(&logits[i * cfg.vocab..(i + 1) * cfg.vocab]) as i32).collect()
+}
+
+/// Continue a prefill over an already-cached prefix: `cache` holds
+/// positions `0..start` (e.g. shared from a registered prompt prefix —
+/// [`super::paged::PrefixRegistry`]); the remaining prompt positions
+/// `start..s` run one cached decode row at a time, appending to `cache`.
+/// Returns the final hidden row `[d]` (pre-`norm_f`).
+///
+/// Bitwise identical to the same row of a full [`prefill`]: the batched
+/// linears are row-independent, and the cached attention row replicates
+/// `attention_causal`'s exact per-position operation sequence — the
+/// cached == recompute invariant `tests/serve_parity.rs` pins, applied
+/// mid-prompt.
+pub fn prefill_continue(
+    ctx: &ServeContext,
+    tokens: &[i32],
+    cache: &mut Kv,
+    scratch: &mut DecodeScratch,
+) -> Vec<f32> {
+    let s = tokens.len();
+    let start = cache.len();
+    assert!(start >= 1 && start < s, "cached prefix {start} outside 1..{s}");
+    assert!(s <= ctx.max_pos, "prompt length {s} outside 1..={}", ctx.max_pos);
+    let mut x = Vec::new();
+    for pos in start..s {
+        let mut caches = [&mut *cache];
+        x = decode_hidden(ctx, &tokens[pos..pos + 1], &mut caches, scratch);
+    }
+    x
 }
 
 /// Per-block host tensors for routing decode through the execution
@@ -303,7 +358,7 @@ pub fn decode_step_backend(
     engine: &Engine,
     blocks: &[BlockTensors],
     last_tokens: &[i32],
-    caches: &mut [&mut KvCache],
+    caches: &mut [&mut Kv],
 ) -> Result<Vec<i32>> {
     let cfg = &ctx.model.cfg;
     let d = cfg.d_model;
@@ -315,15 +370,18 @@ pub fn decode_step_backend(
     let pos_t = Tensor::from_i32(&[nb], positions.iter().map(|p| *p as i32).collect());
     let mut x = embed_rows(&ctx.model.embed, last_tokens, d, cfg.vocab);
     for (l, bt) in blocks.iter().enumerate() {
-        // pack this block's caches [nb, cap, d]; rows past a request's
-        // fill level stay zero and are never read (pos masks them)
+        // pack this block's caches [nb, cap, d] (gathering paged tables
+        // into contiguous rows); rows past a request's fill level stay
+        // zero and are never read (pos masks them)
         let mut kc = vec![0.0f32; nb * cap * d];
         let mut vc = vec![0.0f32; nb * cap * d];
         for i in 0..nb {
-            let kb = caches[i].k_block(l);
-            kc[i * cap * d..i * cap * d + kb.len()].copy_from_slice(kb);
-            let vb = caches[i].v_block(l);
-            vc[i * cap * d..i * cap * d + vb.len()].copy_from_slice(vb);
+            let n = caches[i].len() * d;
+            caches[i].gather_block_into(
+                l,
+                &mut kc[i * cap * d..i * cap * d + n],
+                &mut vc[i * cap * d..i * cap * d + n],
+            );
         }
         let x_t = Tensor::from_f32(&[nb, 1, d], x);
         let kc_t = Tensor::from_f32(&[nb, cap, d], kc);
@@ -351,26 +409,34 @@ pub fn decode_step_backend(
     Ok((0..nb).map(|i| argmax(&logits[i * cfg.vocab..(i + 1) * cfg.vocab]) as i32).collect())
 }
 
-/// Greedy-generate `n` tokens: one prefill, then KV-cached decode steps.
-/// The shared reference loop for benches and the parity suite.
-pub fn greedy_cached(ctx: &ServeContext, prompt: &[i32], n: usize) -> Vec<i32> {
+/// Greedy-generate `n` tokens into a caller-provided (empty) cache: one
+/// prefill, then KV-cached decode steps. The cache may be contiguous or
+/// paged — the tokens are bitwise identical either way (parity-pinned).
+pub fn greedy_with_cache(ctx: &ServeContext, prompt: &[i32], n: usize, cache: &mut Kv) -> Vec<i32> {
     if n == 0 {
         return Vec::new();
     }
+    assert!(cache.is_empty(), "greedy_with_cache expects a fresh cache");
     let d = ctx.model.cfg.d_model;
-    let mut cache = ctx.new_cache();
-    let hidden = prefill(ctx, prompt, &mut cache);
+    let hidden = prefill(ctx, prompt, cache);
     let s = prompt.len();
     let mut prev = argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32;
     let mut out = vec![prev];
     let mut scratch = DecodeScratch::new();
     for _ in 1..n {
         let last = [prev];
-        let mut caches = [&mut cache];
+        let mut caches = [&mut *cache];
         prev = decode_step(ctx, &last, &mut caches, &mut scratch)[0];
         out.push(prev);
     }
     out
+}
+
+/// Greedy-generate `n` tokens: one prefill, then KV-cached decode steps.
+/// The shared reference loop for benches and the parity suite.
+pub fn greedy_cached(ctx: &ServeContext, prompt: &[i32], n: usize) -> Vec<i32> {
+    let mut cache = ctx.new_cache();
+    greedy_with_cache(ctx, prompt, n, &mut cache)
 }
 
 /// Greedy-generate `n` tokens by re-running the full prefix for every

@@ -80,31 +80,5 @@ impl KvCache {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn write_commit_read() {
-        let mut c = KvCache::new(2, 3, 4);
-        assert!(c.is_empty());
-        c.write(0, 0, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
-        c.write(1, 0, &[7.0, 8.0, 9.0], &[1.0, 1.0, 1.0]);
-        assert!(c.k_block(0).is_empty(), "uncommitted rows stay invisible");
-        c.set_len(1);
-        assert_eq!(c.k_block(0), &[1.0, 2.0, 3.0]);
-        assert_eq!(c.v_block(1), &[1.0, 1.0, 1.0]);
-        c.write(0, 1, &[0.5; 3], &[0.25; 3]);
-        c.write(1, 1, &[0.5; 3], &[0.25; 3]);
-        c.set_len(2);
-        assert_eq!(c.len(), 2);
-        assert_eq!(&c.k_block(0)[3..], &[0.5; 3]);
-    }
-
-    #[test]
-    #[should_panic]
-    fn write_past_capacity_panics() {
-        let mut c = KvCache::new(1, 2, 2);
-        c.write(0, 2, &[0.0, 0.0], &[0.0, 0.0]);
-    }
-}
+// Unit tests live in `super::paged::tests`, side by side with the paged
+// representation they are compared against.

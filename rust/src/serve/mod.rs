@@ -9,6 +9,12 @@
 //!   checkpoint materialized into dense / CSR / quantized-CSR projections.
 //! * [`kv`] — [`kv::KvCache`]: per-request roped-key/value cache, one
 //!   `[capacity, d]` plane per block.
+//! * [`paged`] — the paged alternative ([`paged::PagePool`] /
+//!   [`paged::PageTable`]): fixed-size pages from a shared free-list pool,
+//!   refcounted copy-on-write prefix sharing, page-table migration for
+//!   decode work stealing, and the [`paged::Kv`] enum both cache
+//!   representations serve through. `--kv paged|contig` selects at run
+//!   time; the two are bitwise-parity-pinned.
 //! * [`engine`] — variable-length prefill (fills the KV cache), batched
 //!   O(1)-per-token decode, prompt scoring, plus a decode path routed
 //!   through the runtime backend's `block_fwd_cached` artifact.
@@ -92,6 +98,7 @@ pub mod kv;
 pub mod model;
 pub mod net;
 pub mod online;
+pub mod paged;
 pub mod scheduler;
 pub mod trace;
 
@@ -102,5 +109,6 @@ pub use kv::KvCache;
 pub use model::{PackedModel, WeightFormat};
 pub use net::{LineClient, NetConfig, NetServer, NetStats};
 pub use online::{serve_online, serve_online_traced, OnlineConfig, OnlineStats};
+pub use paged::{gather_caches, Kv, KvMode, KvSpec, PagePool, PageTable, PrefixRegistry};
 pub use scheduler::{Policy, Qos, ReqKind, Request, Scheduler, SchedulerConfig};
 pub use trace::{poisson_trace, TraceConfig};

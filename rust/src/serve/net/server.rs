@@ -23,12 +23,16 @@
 //! # Overload control
 //!
 //! Admission applies, in order: capacity sanity (a request whose
-//! worst-case KV footprint no replica could ever hold is a 400), the
-//! per-client token bucket ([`super::bucket`], 429), then the queue's own
-//! checks — bounded capacity, expired or predictively-unmeetable
-//! deadlines, draining (503s). Queued requests past their deadline are
-//! shed by the worker-side sweep and the waiting connection hears
-//! [`Reply::Shed`] immediately.
+//! worst-case KV footprint no replica — or, in `--kv paged` mode, the
+//! whole page pool — could ever hold is a 400), the per-client token
+//! bucket ([`super::bucket`], 429), then the queue's own checks —
+//! bounded capacity, expired or predictively-unmeetable deadlines,
+//! draining (503s). Queued requests past their deadline are shed by the
+//! worker-side sweep and the waiting connection hears [`Reply::Shed`]
+//! immediately. A servable request that cannot get pool pages *right
+//! now* is not rejected: the worker parks it and retries, so transient
+//! pool exhaustion shows up as queueing delay (or a deadline shed), and
+//! `queued == finished + shed` keeps holding.
 //!
 //! # Graceful drain
 //!
@@ -55,7 +59,8 @@ use super::super::engine::ServeContext;
 use super::super::ingest::{
     Admit, IngestQueue, QueueConfig, RejectOutcome, Reply, ShedOutcome,
 };
-use super::super::online::{worker_loop, OnlineFinished, WorkerStats};
+use super::super::online::{worker_loop, OnlineFinished, WorkerEnv, WorkerStats};
+use super::super::paged::{KvMode, KvSpec};
 use super::super::scheduler::{Policy, SchedulerConfig};
 use super::bucket::ClientBuckets;
 use super::http::{read_request, write_response};
@@ -93,6 +98,13 @@ pub struct NetConfig {
     /// predictive admit-time deadline shedding
     /// ([`QueueConfig::admit_reject`])
     pub admit_reject: bool,
+    /// KV-cache backing (`--kv contig|paged`); a bounded paged pool turns
+    /// exhaustion into deterministic 400/503 rejections, never a panic
+    pub kv: KvMode,
+    /// decode work stealing between workers (paged mode)
+    pub steal: bool,
+    /// fork admissions from registered shared prompt prefixes (paged mode)
+    pub share_prefix: bool,
     /// how long [`NetServer::shutdown`] waits for open connections
     pub drain_deadline: Duration,
     pub limits: ProtoLimits,
@@ -109,6 +121,9 @@ impl Default for NetConfig {
             bucket_rate: 0.0,
             bucket_burst: 0.0,
             admit_reject: false,
+            kv: KvMode::Contig,
+            steal: false,
+            share_prefix: false,
             drain_deadline: Duration::from_secs(10),
             limits: ProtoLimits::default(),
         }
@@ -125,6 +140,9 @@ struct Shared {
     epoch: Instant,
     /// smallest replica KV capacity — bounds any admissible request
     min_pos: usize,
+    /// per-run KV allocation state shared by the worker pool (pool,
+    /// steal board, prefix registry)
+    env: WorkerEnv,
     accepting: AtomicBool,
     /// open connection handlers (the drain barrier)
     conn_count: Mutex<usize>,
@@ -213,7 +231,17 @@ impl NetServer {
         if cfg.sched.max_batch == 0 {
             anyhow::bail!("scheduler max_batch must be >= 1");
         }
+        if let KvMode::Paged { page_tokens: 0, .. } = cfg.kv {
+            anyhow::bail!("paged KV needs a nonzero page size");
+        }
         let min_pos = ctxs.iter().map(|c| c.max_pos()).min().unwrap_or(0);
+        let mcfg = &ctxs[0].model.cfg;
+        let env = WorkerEnv::new(
+            KvSpec::for_mode(cfg.kv, mcfg.n_blocks, mcfg.d_model),
+            cfg.steal,
+            cfg.share_prefix,
+            cfg.workers,
+        );
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding serve-net listener to {}", cfg.addr))?;
         listener
@@ -234,6 +262,7 @@ impl NetServer {
             tracer,
             epoch: Instant::now(),
             min_pos,
+            env,
             accepting: AtomicBool::new(true),
             conn_count: Mutex::new(0),
             conn_done: Condvar::new(),
@@ -250,7 +279,7 @@ impl NetServer {
             let sh = Arc::clone(&shared);
             let spawned = spawn_named(&format!("besa-serve-worker-{wid}"), move || {
                 let mut sink = sink_or_disabled(sh.tracer.as_deref());
-                worker_loop(wid, &ctx, &sh.queue, &sh.cfg.sched, &mut sink)
+                worker_loop(wid, &ctx, &sh.queue, &sh.cfg.sched, &sh.env, &mut sink)
             });
             match spawned {
                 Ok(h) => workers.push(h),
@@ -596,7 +625,13 @@ fn admit(sh: &Arc<Shared>, wire: WireRequest) -> Result<(u64, Receiver<Reply>), 
     let internal = sh.next_id.fetch_add(1, Ordering::Relaxed);
     let req = wire.into_request(internal, arrival_s);
     let cost = req.cost();
-    let capacity = sh.cfg.sched.token_budget.min(sh.min_pos);
+    // the page pool's total capacity bounds requests the same way the
+    // token budget and context window do: over it, no reservation could
+    // ever succeed, so the request is unservable — a 400, not a 503
+    let mut capacity = sh.cfg.sched.token_budget.min(sh.min_pos);
+    if let Some(m) = sh.env.max_cost_tokens() {
+        capacity = capacity.min(m);
+    }
     if cost > capacity {
         return Err((
             400,

@@ -23,7 +23,22 @@
 //! KV cache — so any worker count, and any queue [`Policy`], produces
 //! identical per-request tokens and NLLs. `tests/serve_parity.rs` pins
 //! sharded == single-worker == offline replay, and FIFO == priority ==
-//! EDF per-request outputs.
+//! EDF per-request outputs. The same argument covers the paged KV mode
+//! (`--kv paged`, [`super::paged`]): paging, copy-on-write prefix
+//! sharing and decode work stealing move *where* a request's KV rows
+//! live, never their values or read order, so paged == contiguous and
+//! stolen-mid-decode == pinned are bitwise too (same suite).
+//!
+//! # Work stealing
+//!
+//! With `steal` enabled, workers share a [`StealBoard`]: an idle worker
+//! posts demand and takes parked decodes; a busy worker with at least
+//! two in flight parks its longest-remaining decode in response. The
+//! handover moves the request's [`Active`] — page table included — so
+//! no cache contents are copied. A parker never parks its last decode,
+//! so it always keeps retiring work and parked pages always drain; a
+//! worker only exits when the queue is drained *and* the board is empty,
+//! so a parked decode can never be orphaned at shutdown.
 //!
 //! # Overload
 //!
@@ -52,13 +67,14 @@ use crate::telemetry::{sink_or_disabled, SpanKind, SpanSink, Tracer};
 use crate::util::par::{locked, scoped_workers};
 
 use super::engine::{
-    argmax, decode_step, last_logits, prefill, score_nll, DecodeScratch, ServeContext,
+    argmax, decode_step, last_logits, prefill, prefill_continue, score_nll, DecodeScratch,
+    ServeContext,
 };
 use super::ingest::{
     run_producer, ArrivedRequest, IngestQueue, Pacing, Pop, QueueConfig, RejectOutcome, Reply,
     ShedOutcome,
 };
-use super::kv::KvCache;
+use super::paged::{gather_caches, Kv, KvMode, KvSpec, PrefixRegistry};
 use super::scheduler::{Policy, ReqKind, Request, SchedulerConfig};
 
 /// How long an idle worker sleeps before re-checking the queue.
@@ -79,6 +95,15 @@ pub struct OnlineConfig {
     /// predictive admit-time deadline shedding (see
     /// [`QueueConfig::admit_reject`])
     pub admit_reject: bool,
+    /// KV cache backing per request (`--kv contig|paged`)
+    pub kv: KvMode,
+    /// decode work stealing: workers park long-running decodes on a
+    /// shared board and idle workers take them over by page-table
+    /// migration (`--steal`)
+    pub steal: bool,
+    /// copy-on-write prompt-prefix sharing across requests — paged mode
+    /// only (`--share-prefix`)
+    pub share_prefix: bool,
 }
 
 impl Default for OnlineConfig {
@@ -90,6 +115,9 @@ impl Default for OnlineConfig {
             policy: Policy::Fifo,
             queue_cap: 0,
             admit_reject: false,
+            kv: KvMode::Contig,
+            steal: false,
+            share_prefix: false,
         }
     }
 }
@@ -136,6 +164,10 @@ pub struct OnlineStats {
     pub rejected: Vec<RejectOutcome>,
     /// wall-clock seconds from pool start to last worker exit
     pub wall_s: f64,
+    /// decodes parked for handover (with `steal` enabled)
+    pub parks: usize,
+    /// parked decodes taken over by another worker
+    pub steals: usize,
 }
 
 impl OnlineStats {
@@ -159,12 +191,202 @@ struct Active {
     deadline_at: Option<Instant>,
     reply: Option<std::sync::mpsc::Sender<Reply>>,
     queue_wait_s: f64,
-    cache: KvCache,
+    cache: Kv,
     last: i32,
     produced: usize,
     tokens: Vec<i32>,
     /// first batched decode step this request took part in
     decode_started: Option<Instant>,
+}
+
+/// A decode parked for handover: the whole [`Active`] (page table
+/// included) moves to the thief — no KV bytes are copied.
+struct Parked {
+    x: Active,
+    /// origin worker
+    from: usize,
+    /// park instant (start of the thief's Steal span)
+    at: Instant,
+}
+
+/// Work-stealing board shared by every worker of one run: idle workers
+/// post demand; busy workers park their longest-remaining decode in
+/// response; idle workers steal parked entries by moving the whole
+/// [`Active`] (a page-table migration — cache contents are never
+/// copied). Stealing cannot change any request's tokens — greedy decode
+/// depends only on the request's own KV state, which moves with it
+/// (`tests/serve_parity.rs` pins stolen == pinned per token).
+pub(crate) struct StealBoard {
+    state: Mutex<BoardState>,
+}
+
+struct BoardState {
+    parked: Vec<Parked>,
+    /// idle workers currently asking for work (capped at the pool size)
+    demand: usize,
+    workers: usize,
+    parks: usize,
+    steals: usize,
+}
+
+impl StealBoard {
+    fn new(workers: usize) -> StealBoard {
+        StealBoard {
+            state: Mutex::new(BoardState {
+                parked: Vec::new(),
+                demand: 0,
+                workers,
+                parks: 0,
+                steals: 0,
+            }),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        locked(&self.state).parked.is_empty()
+    }
+
+    /// An idle worker asks for work (bounded, so a long idle phase cannot
+    /// inflate demand past the pool size).
+    fn note_demand(&self) {
+        let mut g = locked(&self.state);
+        let cap = g.workers.max(1);
+        g.demand = (g.demand + 1).min(cap);
+    }
+
+    /// Should a busy worker park one of its decodes? Only while demand
+    /// outstrips what is already parked.
+    fn should_park(&self) -> bool {
+        let g = locked(&self.state);
+        g.demand > g.parked.len()
+    }
+
+    fn park(&self, x: Active, from: usize, at: Instant) {
+        let mut g = locked(&self.state);
+        g.parks += 1;
+        g.demand = g.demand.saturating_sub(1);
+        g.parked.push(Parked { x, from, at });
+    }
+
+    /// Take the oldest parked entry whose cost fits in `room` budget
+    /// tokens (FIFO among the fitting — deterministic given the board
+    /// contents).
+    fn try_steal(&self, room: usize) -> Option<Parked> {
+        let mut g = locked(&self.state);
+        let idx = g.parked.iter().position(|p| p.x.req.cost() <= room)?;
+        g.steals += 1;
+        g.demand = g.demand.saturating_sub(1);
+        Some(g.parked.remove(idx))
+    }
+
+    fn counts(&self) -> (usize, usize) {
+        let g = locked(&self.state);
+        (g.parks, g.steals)
+    }
+}
+
+/// Per-run serving environment shared by every worker: how KV caches are
+/// allocated ([`KvSpec`]), the optional work-stealing board, and the
+/// optional shared-prompt prefix registry. One instance per
+/// [`serve_online`] run (or per [`super::net::NetServer`]).
+pub(crate) struct WorkerEnv {
+    kv: KvSpec,
+    board: Option<StealBoard>,
+    registry: Option<PrefixRegistry>,
+}
+
+/// Registered shared prompts the registry holds at most (each pins its
+/// prefill pages until evicted by [`PrefixRegistry::clear`]).
+const REGISTRY_CAP: usize = 32;
+
+impl WorkerEnv {
+    pub(crate) fn new(kv: KvSpec, steal: bool, share_prefix: bool, workers: usize) -> WorkerEnv {
+        let board = if steal { Some(StealBoard::new(workers)) } else { None };
+        // prefix sharing shares *pages*, so it needs the paged allocator
+        let registry = if share_prefix && matches!(kv, KvSpec::Paged(_)) {
+            Some(PrefixRegistry::new(REGISTRY_CAP))
+        } else {
+            None
+        };
+        WorkerEnv { kv, board, registry }
+    }
+
+    /// The plain environment: contiguous caches, no stealing, no sharing.
+    pub(crate) fn contig() -> WorkerEnv {
+        WorkerEnv::new(KvSpec::contig(), false, false, 0)
+    }
+
+    pub(crate) fn kv(&self) -> &KvSpec {
+        &self.kv
+    }
+
+    /// Largest request cost this environment can ever serve (`None` = no
+    /// bound beyond the context length).
+    pub(crate) fn max_cost_tokens(&self) -> Option<usize> {
+        self.kv.max_cost_tokens()
+    }
+
+    /// Advisory admission check (pool-capacity half of the worker's pop
+    /// predicate).
+    fn can_admit(&self, cost: usize) -> bool {
+        self.kv.can_admit(cost)
+    }
+
+    /// Allocate the KV cache for one admitted request. Generation
+    /// requests first try to fork a registered prompt prefix (sharing its
+    /// pages copy-on-write); the returned `usize` is the number of
+    /// positions already cached (0 = fresh cache, full prefill needed).
+    /// On pool exhaustion the registry is dropped and allocation retried
+    /// once — admissions always beat caching. `None` means genuinely no
+    /// room now: the caller holds the request and retries later.
+    fn acquire(&self, ctx: &ServeContext, req: &Request) -> Option<(Kv, usize)> {
+        if let Some(reg) = &self.registry {
+            if matches!(req.kind, ReqKind::Generate { .. }) {
+                if let Some((p0, table)) = reg.fork_longest(&req.tokens, req.cost()) {
+                    return Some((Kv::Paged(table), p0));
+                }
+            }
+        }
+        if let Some(kv) = ctx.new_kv(&self.kv, req.cost()) {
+            return Some((kv, 0));
+        }
+        if let Some(reg) = &self.registry {
+            reg.clear();
+            if let Some(kv) = ctx.new_kv(&self.kv, req.cost()) {
+                return Some((kv, 0));
+            }
+        }
+        None
+    }
+
+    /// Offer a freshly prefilled generation prompt to the prefix registry
+    /// (no-op without sharing or for contiguous caches).
+    fn register(&self, tokens: &[i32], cache: &mut Kv) {
+        if let Some(reg) = &self.registry {
+            if let Kv::Paged(t) = cache {
+                reg.register(tokens, t);
+            }
+        }
+    }
+
+    fn board(&self) -> Option<&StealBoard> {
+        self.board.as_ref()
+    }
+
+    fn board_is_drained(&self) -> bool {
+        match &self.board {
+            Some(b) => b.is_empty(),
+            None => true,
+        }
+    }
+
+    /// (parks, steals) counters of the whole run.
+    pub(crate) fn steal_counts(&self) -> (usize, usize) {
+        match &self.board {
+            Some(b) => b.counts(),
+            None => (0, 0),
+        }
+    }
 }
 
 /// Serve `requests` through `ocfg.workers` sharded workers, one
@@ -210,6 +432,21 @@ pub fn serve_online_traced(
     // ctxs is non-empty (checked above); 0 if it somehow weren't, which
     // rejects any nonzero-cost request instead of panicking
     let min_pos = ctxs.iter().map(|c| c.max_pos()).min().unwrap_or(0);
+    if let KvMode::Paged { page_tokens, .. } = ocfg.kv {
+        if page_tokens == 0 {
+            bail!("paged KV needs a page size of at least one token");
+        }
+    }
+    let cfg0 = &ctxs[0].model.cfg;
+    let env = WorkerEnv::new(
+        KvSpec::for_mode(ocfg.kv, cfg0.n_blocks, cfg0.d_model),
+        ocfg.steal,
+        ocfg.share_prefix,
+        ocfg.workers,
+    );
+    // with a capped page pool, a request larger than the whole pool
+    // could never allocate and would stall its worker forever
+    let kv_cap = env.max_cost_tokens().unwrap_or(usize::MAX);
     for r in &requests {
         if r.cost() > ocfg.sched.token_budget {
             bail!(
@@ -225,6 +462,14 @@ pub fn serve_online_traced(
                 r.id,
                 r.cost(),
                 min_pos
+            );
+        }
+        if r.cost() > kv_cap {
+            bail!(
+                "request {} cost {} exceeds the page-pool capacity {}",
+                r.id,
+                r.cost(),
+                kv_cap
             );
         }
     }
@@ -252,7 +497,7 @@ pub fn serve_online_traced(
             None
         } else {
             let mut sink = sink_or_disabled(tracer);
-            Some(worker_loop(i - 1, &ctxs[i - 1], &queue, &ocfg.sched, &mut sink))
+            Some(worker_loop(i - 1, &ctxs[i - 1], &queue, &ocfg.sched, &env, &mut sink))
         }
     });
     let wall_s = start.elapsed().as_secs_f64();
@@ -269,7 +514,8 @@ pub fn serve_online_traced(
         total,
         "every request retires, sheds, or is rejected exactly once"
     );
-    Ok(OnlineStats { finished, workers, shed, rejected, wall_s })
+    let (parks, steals) = env.steal_counts();
+    Ok(OnlineStats { finished, workers, shed, rejected, wall_s, parks, steals })
 }
 
 /// Retire one request: release its budget, answer the reply channel,
@@ -310,21 +556,60 @@ fn retire(
     queue.note_done(now.saturating_duration_since(x.admitted_at).as_secs_f64());
 }
 
+/// Steal the oldest parked decode that fits in `room` budget tokens,
+/// moving its whole [`Active`] (page table included) into this worker's
+/// batch. Records the Steal span (parked → now, thief's index) and
+/// resets `decode_started` so the thief's Decode span covers only its own
+/// stretch.
+fn steal_one(
+    env: &WorkerEnv,
+    wid: usize,
+    room: usize,
+    sink: &mut SpanSink<'_>,
+    active: &mut Vec<Active>,
+    in_flight_tokens: &mut usize,
+) -> bool {
+    let board = match env.board() {
+        Some(b) => b,
+        None => return false,
+    };
+    let p = match board.try_steal(room) {
+        Some(p) => p,
+        None => return false,
+    };
+    let mut x = p.x;
+    sink.record(x.req.id as u64, SpanKind::Steal, wid as i64, p.at, Instant::now(), true);
+    x.decode_started = None;
+    *in_flight_tokens += x.req.cost();
+    active.push(x);
+    true
+}
+
 /// One worker's continuous-batching loop: admit from the shared queue
-/// while budget and slots allow, prefill admissions, one batched decode
-/// step per iteration, retire at each request's token budget. Exits when
-/// the queue is drained and nothing is left in flight. Streams each
-/// generated token to the request's reply channel (when one is attached)
-/// as soon as it exists, and records per-request spans into `sink`.
+/// while budget and slots allow, prefill admissions (continuing from a
+/// shared prompt prefix when the registry has one), one batched decode
+/// step per iteration, retire at each request's token budget. With
+/// stealing enabled, an idle worker takes parked decodes from `env`'s
+/// board, and a busy worker parks its longest-remaining decode when idle
+/// workers ask — never its last one, so a parker always keeps retiring
+/// work (parked pages drain, no stuck shutdown). Exits when the queue is
+/// drained, the board is empty and nothing is left in flight. Streams
+/// each generated token to the request's reply channel (when one is
+/// attached) as soon as it exists, and records per-request spans into
+/// `sink`.
 pub(crate) fn worker_loop(
     wid: usize,
     ctx: &ServeContext,
     queue: &IngestQueue,
     scfg: &SchedulerConfig,
+    env: &WorkerEnv,
     sink: &mut SpanSink<'_>,
 ) -> (WorkerStats, Vec<OnlineFinished>) {
     let d = ctx.model.cfg.d_model;
     let mut active: Vec<Active> = Vec::new();
+    // popped but waiting for pool pages: budget-counted, retried in
+    // arrival order before fresh admissions
+    let mut pending: Vec<ArrivedRequest> = Vec::new();
     let mut in_flight_tokens = 0usize;
     let mut finished: Vec<OnlineFinished> = Vec::new();
     let mut scratch = DecodeScratch::new();
@@ -340,8 +625,10 @@ pub(crate) fn worker_loop(
         // admit while the per-worker budget and batch slots allow; the
         // queue wait ends here, at the pop
         let mut admitted: Vec<ArrivedRequest> = Vec::new();
-        while active.len() + admitted.len() < scfg.max_batch {
-            match queue.try_pop(|r| in_flight_tokens + r.cost() <= scfg.token_budget) {
+        while active.len() + pending.len() + admitted.len() < scfg.max_batch {
+            match queue.try_pop(|r| {
+                in_flight_tokens + r.cost() <= scfg.token_budget && env.can_admit(r.cost())
+            }) {
                 Pop::Got(a) => {
                     in_flight_tokens += a.req.cost();
                     admitted.push(a);
@@ -349,15 +636,37 @@ pub(crate) fn worker_loop(
                 Pop::Refused | Pop::Empty | Pop::Drained => break,
             }
         }
-        if admitted.is_empty() && active.is_empty() {
-            if queue.is_drained() {
+        if admitted.is_empty() && pending.is_empty() && active.is_empty() {
+            // idle: take over a parked decode before sleeping or exiting
+            if steal_one(env, wid, scfg.token_budget, sink, &mut active, &mut in_flight_tokens)
+            {
+                continue;
+            }
+            if let Some(board) = env.board() {
+                board.note_demand();
+            }
+            if queue.is_drained() && env.board_is_drained() {
                 break;
             }
             queue.wait_arrival(IDLE_POLL);
             continue;
         }
         let work = Instant::now();
-        for a in admitted {
+        // pending first (arrival fairness), then this round's admissions
+        let mut batch = std::mem::take(&mut pending);
+        batch.extend(admitted);
+        let mut progressed = false;
+        for a in batch {
+            let (mut cache, prefix) = match env.acquire(ctx, &a.req) {
+                Some(got) => got,
+                None => {
+                    // pool dry right now: hold the request (budget stays
+                    // counted) and retry once pages free up
+                    pending.push(a);
+                    continue;
+                }
+            };
+            progressed = true;
             let ArrivedRequest { req, enqueued, deadline_at, reply, .. } = a;
             let admitted_at = work;
             let queue_wait_s = admitted_at.saturating_duration_since(enqueued).as_secs_f64();
@@ -365,13 +674,15 @@ pub(crate) fn worker_loop(
             sink.record(wire, SpanKind::Queue, wid as i64, enqueued, admitted_at, true);
             stats.prompt_tokens += req.tokens.len();
             let s = req.tokens.len();
-            let mut cache = ctx.new_cache();
             let t_prefill = Instant::now();
             sink.record(wire, SpanKind::Admit, wid as i64, admitted_at, t_prefill, true);
-            let hidden = prefill(ctx, &req.tokens, &mut cache);
-            sink.record(wire, SpanKind::Prefill, wid as i64, t_prefill, Instant::now(), true);
             match req.kind {
                 ReqKind::Score => {
+                    // scoring reads every position's hidden row, so it
+                    // always runs the full prefill (acquire never forks
+                    // a prefix for Score)
+                    let hidden = prefill(ctx, &req.tokens, &mut cache);
+                    sink.record(wire, SpanKind::Prefill, wid as i64, t_prefill, Instant::now(), true);
                     let nll = score_nll(ctx, &hidden, &req.tokens);
                     let nll_sum: f64 = nll.iter().map(|v| *v as f64).sum();
                     in_flight_tokens -= req.cost();
@@ -398,7 +709,19 @@ pub(crate) fn worker_loop(
                     );
                 }
                 ReqKind::Generate { max_new } => {
-                    let first = argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32;
+                    // a forked cache already holds `prefix` positions;
+                    // the remaining prompt rows run as cached decode
+                    // rows — bitwise identical to the full prefill's
+                    // final row (parity-pinned)
+                    let first = if prefix > 0 {
+                        let row = prefill_continue(ctx, &req.tokens, &mut cache, &mut scratch);
+                        argmax(&last_logits(ctx, &row)) as i32
+                    } else {
+                        let hidden = prefill(ctx, &req.tokens, &mut cache);
+                        env.register(&req.tokens, &mut cache);
+                        argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32
+                    };
+                    sink.record(wire, SpanKind::Prefill, wid as i64, t_prefill, Instant::now(), true);
                     stats.gen_tokens += 1;
                     if let Some(tx) = &reply {
                         let _ = tx.send(Reply::Token { index: 0, token: first });
@@ -426,6 +749,32 @@ pub(crate) fn worker_loop(
             }
         }
         stats.peak_active = stats.peak_active.max(active.len());
+        // park one decode when idle workers are asking — the one with
+        // the most tokens left, and never the last one (the parker must
+        // keep retiring work so parked pages always drain)
+        if let Some(board) = env.board() {
+            if active.len() >= 2 && board.should_park() {
+                let mut pick = 0;
+                let mut most = 0usize;
+                for (i, x) in active.iter().enumerate() {
+                    let remaining = match x.req.kind {
+                        ReqKind::Generate { max_new } => max_new.saturating_sub(x.produced),
+                        ReqKind::Score => 0,
+                    };
+                    if remaining > most {
+                        most = remaining;
+                        pick = i;
+                    }
+                }
+                let mut x = active.remove(pick);
+                let now = Instant::now();
+                let from = x.decode_started.unwrap_or(x.admitted_at);
+                sink.record(x.req.id as u64, SpanKind::Migrate, wid as i64, from, now, true);
+                x.decode_started = None;
+                in_flight_tokens -= x.req.cost();
+                board.park(x, wid, now);
+            }
+        }
         if !active.is_empty() {
             let t_step = Instant::now();
             for x in active.iter_mut() {
@@ -435,8 +784,7 @@ pub(crate) fn worker_loop(
             }
             let last: Vec<i32> = active.iter().map(|x| x.last).collect();
             let next = {
-                let mut caches: Vec<&mut KvCache> =
-                    active.iter_mut().map(|x| &mut x.cache).collect();
+                let mut caches = gather_caches(&mut active, |x| &mut x.cache);
                 decode_step(ctx, &last, &mut caches, &mut scratch)
             };
             stats.gen_tokens += next.len();
@@ -462,9 +810,18 @@ pub(crate) fn worker_loop(
                     i += 1;
                 }
             }
+        } else if !progressed && !pending.is_empty() {
+            // nothing to compute and the pool is dry: try to take over a
+            // parked decode (its retirement frees pages), else wait for
+            // another worker to release some
+            let room = scfg.token_budget.saturating_sub(in_flight_tokens);
+            if !steal_one(env, wid, room, sink, &mut active, &mut in_flight_tokens) {
+                std::thread::sleep(IDLE_POLL);
+            }
         }
         stats.busy_s += work.elapsed().as_secs_f64();
     }
+    debug_assert!(pending.is_empty(), "drained with requests still waiting for pages");
     (stats, finished)
 }
 
@@ -646,6 +1003,64 @@ mod tests {
         for f in &stats.finished {
             assert!(!f.deadline_met, "nothing completes within 1µs");
         }
+    }
+
+    /// Paged KV with stealing and prefix sharing on: every request still
+    /// retires exactly once, and the steal ledger stays consistent
+    /// (nothing stolen that was never parked).
+    #[test]
+    fn paged_mode_with_stealing_and_sharing_serves_every_request() {
+        let (tcfg, reqs) = small_trace(10, 6);
+        let n = reqs.len();
+        let ctxs = contexts(2, tcfg.max_request_tokens());
+        let ocfg = OnlineConfig {
+            workers: 2,
+            sched: SchedulerConfig { token_budget: 64, max_batch: 2 },
+            pacing: Pacing::Replay { time_scale: 0.0 },
+            kv: KvMode::Paged { page_tokens: 4, max_pages: 0 },
+            steal: true,
+            share_prefix: true,
+            ..OnlineConfig::default()
+        };
+        let stats = serve_online(&ctxs, reqs, &ocfg).unwrap();
+        assert_eq!(stats.finished.len(), n);
+        assert!(stats.steals <= stats.parks, "every steal takes a previously parked decode");
+        let mut seen = std::collections::BTreeSet::new();
+        for f in &stats.finished {
+            assert!(seen.insert(f.id), "request {} retired twice", f.id);
+        }
+    }
+
+    /// A page pool that fits roughly one request at a time serializes
+    /// the run through the exhaustion/retry path instead of losing or
+    /// duplicating work — and a request bigger than the whole pool is
+    /// rejected up front instead of stalling its worker forever.
+    #[test]
+    fn tight_page_pool_still_serves_every_request() {
+        use crate::serve::paged::pages_for;
+        let (tcfg, reqs) = small_trace(8, 7);
+        let n = reqs.len();
+        let max_req = tcfg.max_request_tokens();
+        let ctxs = contexts(2, max_req);
+        let ocfg = OnlineConfig {
+            workers: 2,
+            sched: SchedulerConfig { token_budget: 64, max_batch: 2 },
+            pacing: Pacing::Replay { time_scale: 0.0 },
+            kv: KvMode::Paged { page_tokens: 2, max_pages: pages_for(max_req, 2) },
+            ..OnlineConfig::default()
+        };
+        let stats = serve_online(&ctxs, reqs.clone(), &ocfg).unwrap();
+        assert_eq!(stats.finished.len(), n, "exhaustion must delay, never drop");
+
+        // a pool smaller than the largest admissible request is an error
+        let ocfg = OnlineConfig {
+            workers: 2,
+            sched: SchedulerConfig { token_budget: 64, max_batch: 2 },
+            pacing: Pacing::Replay { time_scale: 0.0 },
+            kv: KvMode::Paged { page_tokens: 2, max_pages: 1 },
+            ..OnlineConfig::default()
+        };
+        assert!(serve_online(&ctxs, reqs, &ocfg).is_err());
     }
 
     /// A tracer attached to an online run records spans for every

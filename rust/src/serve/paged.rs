@@ -1,0 +1,911 @@
+//! Paged KV allocation: fixed-size pages drawn from a shared
+//! [`PagePool`], one [`PageTable`] per request, refcounted copy-on-write
+//! prefix sharing and free-list reuse — the serving-memory counterpart of
+//! the contiguous [`KvCache`].
+//!
+//! # Page layout
+//!
+//! A [`Page`] holds `page_tokens` consecutive positions for *every*
+//! block: `[n_blocks, page_tokens, d]` row-major per tensor — exactly a
+//! contiguous [`KvCache`] with `capacity == page_tokens`. Page `i` of a
+//! table covers positions `i*page_tokens .. (i+1)*page_tokens`, so the
+//! committed rows of a block are a sequence of contiguous runs
+//! ([`Kv::segment`]) and the cached-attention kernel walks them in
+//! ascending position order — the paged read path is bitwise identical
+//! to the contiguous one (see [`crate::kernel::attn::dots_gather`]).
+//!
+//! # Pool invariants
+//!
+//! * **Conservation** — every buffer the pool ever created is either
+//!   referenced by a live page or parked on the free list:
+//!   `live + free == created`, always ([`PoolStats`]). A page's buffers
+//!   return to the free list exactly once, when its last `Arc` drops.
+//! * **Bounded residency** — with `max_pages > 0`,
+//!   `live + reserved <= max_pages`, always. Admission *reserves* the
+//!   worst-case page count of a request up front
+//!   ([`PagePool::new_table`]); an admitted request therefore never runs
+//!   out of pages mid-decode, and exhaustion is a deterministic
+//!   admission-time event (surfacing as 503/shed in `serve/net`, never a
+//!   panic).
+//! * **Copy-on-write** — pages are shared between tables by refcount
+//!   ([`PageTable::fork`]); the first write into a shared page clones it
+//!   into a fresh page first, so a fork never mutates its parent's
+//!   pages. The clone is paid for by the forking table's reservation.
+//!
+//! # Lock order
+//!
+//! The pool mutex (`PoolCore::state`) is a leaf lock: nothing else is
+//! ever acquired while holding it. [`PrefixRegistry`] acquires its entry
+//! lock first and may then take the pool lock (fork/reserve) — always in
+//! that order.
+
+use std::sync::{Arc, Mutex};
+
+use crate::kernel::attn::KvSegment;
+use crate::util::par::locked;
+
+use super::kv::KvCache;
+
+/// Pages needed to hold `tokens` positions at `page_tokens` per page.
+pub fn pages_for(tokens: usize, page_tokens: usize) -> usize {
+    tokens.div_ceil(page_tokens)
+}
+
+/// One fixed-size page of KV rows: `[n_blocks, page_tokens, d]` row-major
+/// per tensor. Shared between tables via `Arc`; dropping the last
+/// reference recycles the buffers into the owning pool's free list
+/// (never freeing them behind the pool's accounting).
+pub struct Page {
+    /// roped keys, `[n_blocks, page_tokens, d]`
+    k: Vec<f32>,
+    /// raw values, `[n_blocks, page_tokens, d]`
+    v: Vec<f32>,
+    core: Arc<PoolCore>,
+}
+
+impl Drop for Page {
+    fn drop(&mut self) {
+        let k = std::mem::take(&mut self.k);
+        let v = std::mem::take(&mut self.v);
+        let mut g = locked(&self.core.state);
+        debug_assert!(g.live > 0, "page drop without a live count");
+        g.live = g.live.saturating_sub(1);
+        g.free.push((k, v));
+    }
+}
+
+/// Mutable pool state behind the (leaf) pool mutex.
+struct PoolState {
+    /// recycled `(k, v)` buffers awaiting reuse
+    free: Vec<(Vec<f32>, Vec<f32>)>,
+    /// pages currently referenced by at least one table (shared once)
+    live: usize,
+    /// admission reservations not yet materialized into pages
+    reserved: usize,
+    /// buffers ever created; `live + free.len() == created`, always
+    created: usize,
+    /// high-water mark of `live` (resident-bytes reporting)
+    peak_live: usize,
+    /// copy-on-write clones performed
+    cow_clones: usize,
+}
+
+struct PoolCore {
+    n_blocks: usize,
+    d: usize,
+    page_tokens: usize,
+    /// cap on `live + reserved`; 0 = unbounded
+    max_pages: usize,
+    state: Mutex<PoolState>,
+}
+
+/// Snapshot of a pool's accounting, for benches and invariant checks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub live: usize,
+    pub free: usize,
+    pub reserved: usize,
+    pub created: usize,
+    pub peak_live: usize,
+    pub cow_clones: usize,
+}
+
+/// A shared pool of fixed-size KV pages (cheaply clonable handle).
+///
+/// # Invariants
+///
+/// * `live + free == created` — no buffer leaks, none is double-freed
+///   (pinned after every step by `tests/properties.rs`).
+/// * with `max_pages > 0`: `live + reserved <= max_pages` — admission
+///   reservations and resident pages never oversubscribe the cap.
+#[derive(Clone)]
+pub struct PagePool {
+    core: Arc<PoolCore>,
+}
+
+impl PagePool {
+    /// `max_pages == 0` leaves residency unbounded.
+    pub fn new(n_blocks: usize, d: usize, page_tokens: usize, max_pages: usize) -> PagePool {
+        assert!(n_blocks > 0 && d > 0 && page_tokens > 0, "degenerate page shape");
+        PagePool {
+            core: Arc::new(PoolCore {
+                n_blocks,
+                d,
+                page_tokens,
+                max_pages,
+                state: Mutex::new(PoolState {
+                    free: Vec::new(),
+                    live: 0,
+                    reserved: 0,
+                    created: 0,
+                    peak_live: 0,
+                    cow_clones: 0,
+                }),
+            }),
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.core.page_tokens
+    }
+
+    /// `live + reserved` cap; 0 = unbounded.
+    pub fn max_pages(&self) -> usize {
+        self.core.max_pages
+    }
+
+    /// Resident bytes of one page (both tensors).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.core.n_blocks * self.core.page_tokens * self.core.d * 4
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let g = locked(&self.core.state);
+        PoolStats {
+            live: g.live,
+            free: g.free.len(),
+            reserved: g.reserved,
+            created: g.created,
+            peak_live: g.peak_live,
+            cow_clones: g.cow_clones,
+        }
+    }
+
+    /// Would a fresh table of `cost` tokens fit right now? Advisory (the
+    /// answer can go stale); [`PagePool::new_table`] is the committing
+    /// call.
+    pub fn can_admit(&self, cost: usize) -> bool {
+        if self.core.max_pages == 0 {
+            return true;
+        }
+        let need = pages_for(cost, self.core.page_tokens);
+        let g = locked(&self.core.state);
+        g.live + g.reserved + need <= self.core.max_pages
+    }
+
+    /// Largest request cost any table could ever hold, `None` when the
+    /// pool is unbounded. Requests above this must be rejected up front
+    /// or they would wait for pages forever.
+    pub fn max_cost_tokens(&self) -> Option<usize> {
+        if self.core.max_pages == 0 {
+            None
+        } else {
+            Some(self.core.max_pages * self.core.page_tokens)
+        }
+    }
+
+    /// Reserve `n` future pages against the cap. False when they do not
+    /// fit — nothing is taken.
+    fn try_reserve(&self, n: usize) -> bool {
+        let mut g = locked(&self.core.state);
+        if self.core.max_pages > 0 && g.live + g.reserved + n > self.core.max_pages {
+            return false;
+        }
+        g.reserved += n;
+        true
+    }
+
+    /// Return `n` unused reservations to the cap.
+    fn release(&self, n: usize) {
+        if n > 0 {
+            let mut g = locked(&self.core.state);
+            debug_assert!(g.reserved >= n, "releasing more reservations than held");
+            g.reserved = g.reserved.saturating_sub(n);
+        }
+    }
+
+    /// Materialize one page, preferring the caller's reservation
+    /// (`table_reserved` is decremented); without one, a fresh page is
+    /// authorized against the cap — and the pool being full there is an
+    /// allocator-misuse bug (admission must reserve first), reported as
+    /// an assert, not a quiet corruption.
+    fn take_page(&self, table_reserved: &mut usize) -> Arc<Page> {
+        let core = &self.core;
+        let (k, v) = {
+            let mut g = locked(&core.state);
+            if *table_reserved > 0 {
+                *table_reserved -= 1;
+                debug_assert!(g.reserved > 0, "table reservation not mirrored in pool");
+                g.reserved = g.reserved.saturating_sub(1);
+            } else {
+                assert!(
+                    core.max_pages == 0 || g.live + g.reserved < core.max_pages,
+                    "page pool exhausted (live {}, reserved {}, cap {}): \
+                     admission must reserve before writing",
+                    g.live,
+                    g.reserved,
+                    core.max_pages
+                );
+            }
+            g.live += 1;
+            g.peak_live = g.peak_live.max(g.live);
+            match g.free.pop() {
+                Some(buf) => buf,
+                None => {
+                    g.created += 1;
+                    let n = core.n_blocks * core.page_tokens * core.d;
+                    (vec![0.0; n], vec![0.0; n])
+                }
+            }
+        };
+        Arc::new(Page { k, v, core: Arc::clone(core) })
+    }
+
+    fn note_cow(&self) {
+        locked(&self.core.state).cow_clones += 1;
+    }
+
+    /// Open a fresh table able to hold `cost` tokens, reserving its
+    /// worst-case page count up front. `None` when the pool cap cannot
+    /// cover the reservation — the caller's clean-rejection path.
+    pub fn new_table(&self, cost: usize) -> Option<PageTable> {
+        let need = pages_for(cost, self.core.page_tokens);
+        if !self.try_reserve(need) {
+            return None;
+        }
+        Some(PageTable {
+            pages: Vec::new(),
+            len: 0,
+            cap_tokens: cost,
+            reserved: need,
+            pool: self.clone(),
+        })
+    }
+}
+
+/// One request's view of pool pages: shared `Arc` pages plus the
+/// outstanding admission reservation.
+///
+/// # Invariants
+///
+/// * `len <= pages.len() * page_tokens` — committed positions are backed
+///   by materialized pages; `set_len` only commits rows already written.
+/// * The table can always materialize up to `cap_tokens` positions: its
+///   reservation covers every page it may still need, *including* the
+///   copy-on-write clone of a partially-shared boundary page after
+///   [`PageTable::fork`]. Writes past `cap_tokens` are a caller bug
+///   (asserted), mirroring [`KvCache`]'s capacity check.
+/// * Writes never mutate a page another table can see: a shared page
+///   (refcount > 1) is cloned before the row lands.
+///
+/// Dropping the table releases its unused reservation and unpins its
+/// pages; pages it alone referenced recycle into the pool free list.
+/// Moving a `PageTable` between workers migrates the whole cache without
+/// copying any KV bytes — the decode work-stealing handoff.
+pub struct PageTable {
+    pages: Vec<Arc<Page>>,
+    len: usize,
+    /// capacity in tokens fixed at admission (the request's cost)
+    cap_tokens: usize,
+    /// pages this table may still materialize without re-asking the cap
+    reserved: usize,
+    pool: PagePool,
+}
+
+impl Drop for PageTable {
+    fn drop(&mut self) {
+        self.pool.release(self.reserved);
+        self.reserved = 0;
+    }
+}
+
+impl std::fmt::Debug for PageTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PageTable")
+            .field("len", &self.len)
+            .field("pages", &self.pages.len())
+            .field("cap_tokens", &self.cap_tokens)
+            .field("reserved", &self.reserved)
+            .finish()
+    }
+}
+
+impl PageTable {
+    /// Committed positions (same for every block).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Token capacity fixed at admission.
+    pub fn capacity(&self) -> usize {
+        self.cap_tokens
+    }
+
+    /// Materialized pages (shared ones count; see [`PagePool::stats`] for
+    /// the deduplicated pool-wide view).
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Per-page `Arc` strong counts — the COW refcounts the property
+    /// suite asserts against its reference model.
+    pub fn page_refcounts(&self) -> Vec<usize> {
+        self.pages.iter().map(Arc::strong_count).collect()
+    }
+
+    /// Write the roped key / raw value rows of `block` at `pos`,
+    /// materializing (and, for shared pages, copy-on-write cloning) the
+    /// covering page first. Does not change `len`; commit with
+    /// [`PageTable::set_len`] once every block has written the position.
+    pub fn write(&mut self, block: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        let (nb, d, p) = (self.pool.core.n_blocks, self.pool.core.d, self.pool.core.page_tokens);
+        assert!(block < nb && pos < self.cap_tokens, "kv write out of range");
+        assert!(k_row.len() == d && v_row.len() == d);
+        let pi = pos / p;
+        while self.pages.len() <= pi {
+            let page = self.pool.take_page(&mut self.reserved);
+            self.pages.push(page);
+        }
+        if Arc::get_mut(&mut self.pages[pi]).is_none() {
+            // shared page: clone before the first write lands in it
+            let mut fresh = self.pool.take_page(&mut self.reserved);
+            let fp = Arc::get_mut(&mut fresh);
+            debug_assert!(fp.is_some(), "freshly allocated page is uniquely owned");
+            if let Some(fp) = fp {
+                fp.k.copy_from_slice(&self.pages[pi].k);
+                fp.v.copy_from_slice(&self.pages[pi].v);
+            }
+            self.pool.note_cow();
+            self.pages[pi] = fresh;
+        }
+        let off = (block * p + pos % p) * d;
+        if let Some(pg) = Arc::get_mut(&mut self.pages[pi]) {
+            pg.k[off..off + d].copy_from_slice(k_row);
+            pg.v[off..off + d].copy_from_slice(v_row);
+        }
+    }
+
+    /// Commit positions `0..len`. Shrinking is allowed (benches rewind);
+    /// growing requires the rows to have been written (their pages exist).
+    pub fn set_len(&mut self, len: usize) {
+        let p = self.pool.core.page_tokens;
+        assert!(len <= self.cap_tokens, "kv len {len} > capacity {}", self.cap_tokens);
+        assert!(len <= self.pages.len() * p, "kv len {len} commits unwritten positions");
+        self.len = len;
+    }
+
+    /// Contiguous runs of committed rows: `ceil(len / page_tokens)`.
+    pub fn n_segments(&self) -> usize {
+        pages_for(self.len, self.pool.core.page_tokens)
+    }
+
+    /// Committed rows of `block` inside page `si`, in ascending position
+    /// order across `si` — the page-gather view the attention kernels
+    /// walk.
+    pub fn segment(&self, block: usize, si: usize) -> KvSegment<'_> {
+        let (d, p) = (self.pool.core.d, self.pool.core.page_tokens);
+        let rows = (self.len - si * p).min(p);
+        let base = block * p * d;
+        let page = &self.pages[si];
+        KvSegment {
+            k: &page.k[base..base + rows * d],
+            v: &page.v[base..base + rows * d],
+            rows,
+        }
+    }
+
+    /// Fork a child sharing this table's pages over positions
+    /// `0..prefix` (refcount bump — no KV bytes are copied) and able to
+    /// grow to `cost` total tokens. The child's reservation covers its
+    /// tail pages *plus* the copy-on-write clone of the boundary page
+    /// when `prefix` is not page-aligned, so a forked admission still
+    /// never fails mid-decode. `None` when the pool cap cannot cover the
+    /// reservation.
+    pub fn fork(&self, prefix: usize, cost: usize) -> Option<PageTable> {
+        let p = self.pool.core.page_tokens;
+        assert!(prefix <= self.len, "fork prefix {prefix} > committed {}", self.len);
+        assert!(prefix <= cost, "fork prefix {prefix} > target capacity {cost}");
+        let full = prefix / p;
+        let shared = pages_for(prefix, p);
+        let need = pages_for(cost, p).saturating_sub(full);
+        if !self.pool.try_reserve(need) {
+            return None;
+        }
+        Some(PageTable {
+            pages: self.pages[..shared].to_vec(),
+            len: prefix,
+            cap_tokens: cost,
+            reserved: need,
+            pool: self.pool.clone(),
+        })
+    }
+}
+
+/// A per-request KV handle: one contiguous slab ([`KvCache`]) or a paged
+/// table over a shared pool. The serving engine only ever goes through
+/// this enum, so both representations run the *same* cached-attention
+/// code — the paged == contiguous bitwise parity is by construction
+/// (`tests/serve_parity.rs` pins it anyway).
+pub enum Kv {
+    Contig(KvCache),
+    Paged(PageTable),
+}
+
+impl Kv {
+    /// Committed positions (same for every block).
+    pub fn len(&self) -> usize {
+        match self {
+            Kv::Contig(c) => c.len(),
+            Kv::Paged(t) => t.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// See [`KvCache::write`] / [`PageTable::write`].
+    pub fn write(&mut self, block: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        match self {
+            Kv::Contig(c) => c.write(block, pos, k_row, v_row),
+            Kv::Paged(t) => t.write(block, pos, k_row, v_row),
+        }
+    }
+
+    /// See [`KvCache::set_len`] / [`PageTable::set_len`].
+    pub fn set_len(&mut self, len: usize) {
+        match self {
+            Kv::Contig(c) => c.set_len(len),
+            Kv::Paged(t) => t.set_len(len),
+        }
+    }
+
+    /// Contiguous runs the committed rows of any block split into: 1 for
+    /// a non-empty contiguous cache, `ceil(len / page_tokens)` pages for
+    /// a paged one, 0 when empty.
+    pub fn n_segments(&self) -> usize {
+        match self {
+            Kv::Contig(c) => usize::from(c.len() > 0),
+            Kv::Paged(t) => t.n_segments(),
+        }
+    }
+
+    /// Segment `si` of `block`'s committed rows, ascending in position
+    /// across `si`.
+    pub fn segment(&self, block: usize, si: usize) -> KvSegment<'_> {
+        match self {
+            Kv::Contig(c) => {
+                debug_assert_eq!(si, 0);
+                KvSegment { k: c.k_block(block), v: c.v_block(block), rows: c.len() }
+            }
+            Kv::Paged(t) => t.segment(block, si),
+        }
+    }
+
+    /// Copy `block`'s committed rows (`len * d` floats per tensor) into
+    /// contiguous buffers — the backend packing path and the parity
+    /// suite's byte-compare view.
+    pub fn gather_block_into(&self, block: usize, k_dst: &mut [f32], v_dst: &mut [f32]) {
+        let mut at = 0;
+        for si in 0..self.n_segments() {
+            let seg = self.segment(block, si);
+            k_dst[at..at + seg.k.len()].copy_from_slice(seg.k);
+            v_dst[at..at + seg.v.len()].copy_from_slice(seg.v);
+            at += seg.k.len();
+        }
+        debug_assert!(at == k_dst.len() && at == v_dst.len());
+    }
+
+    /// Resident bytes backing this handle (a paged table counts its
+    /// materialized pages, shared ones included — see [`PagePool::stats`]
+    /// for the deduplicated pool-wide number).
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            Kv::Contig(c) => c.mem_bytes(),
+            Kv::Paged(t) => t.n_pages() * t.pool.page_bytes(),
+        }
+    }
+
+    /// The contiguous representation, when that is what this handle is.
+    pub fn as_contig(&self) -> Option<&KvCache> {
+        match self {
+            Kv::Contig(c) => Some(c),
+            Kv::Paged(_) => None,
+        }
+    }
+
+    /// The page table, when this handle is paged.
+    pub fn as_paged(&self) -> Option<&PageTable> {
+        match self {
+            Kv::Contig(_) => None,
+            Kv::Paged(t) => Some(t),
+        }
+    }
+}
+
+/// Runtime choice of KV backing for a serving run (CLI `--kv`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvMode {
+    /// one `[n_blocks, max_pos, d]` slab per request
+    Contig,
+    /// fixed-size pages from a shared pool; `max_pages == 0` = unbounded
+    Paged { page_tokens: usize, max_pages: usize },
+}
+
+impl KvMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvMode::Contig => "contig",
+            KvMode::Paged { .. } => "paged",
+        }
+    }
+}
+
+/// A [`KvMode`] bound to its live pool for one run — what workers
+/// allocate caches through.
+#[derive(Clone)]
+pub enum KvSpec {
+    Contig,
+    Paged(PagePool),
+}
+
+impl KvSpec {
+    pub fn contig() -> KvSpec {
+        KvSpec::Contig
+    }
+
+    /// Bind `mode` for a model with `n_blocks` blocks of width `d`
+    /// (creates the shared pool in paged mode).
+    pub fn for_mode(mode: KvMode, n_blocks: usize, d: usize) -> KvSpec {
+        match mode {
+            KvMode::Contig => KvSpec::Contig,
+            KvMode::Paged { page_tokens, max_pages } => {
+                KvSpec::Paged(PagePool::new(n_blocks, d, page_tokens, max_pages))
+            }
+        }
+    }
+
+    pub fn pool(&self) -> Option<&PagePool> {
+        match self {
+            KvSpec::Contig => None,
+            KvSpec::Paged(p) => Some(p),
+        }
+    }
+
+    /// Advisory: could a request of `cost` tokens get a cache right now?
+    /// Contiguous allocation always can.
+    pub fn can_admit(&self, cost: usize) -> bool {
+        match self {
+            KvSpec::Contig => true,
+            KvSpec::Paged(p) => p.can_admit(cost),
+        }
+    }
+
+    /// Largest request cost this spec can ever hold (`None` = no bound
+    /// beyond the context length). Larger requests must be rejected up
+    /// front — admitted, they would wait for pages forever.
+    pub fn max_cost_tokens(&self) -> Option<usize> {
+        match self {
+            KvSpec::Contig => None,
+            KvSpec::Paged(p) => p.max_cost_tokens(),
+        }
+    }
+
+    /// Allocate a cache for one request: `capacity` positions for the
+    /// contiguous slab (the context length), `cost` tokens reserved for
+    /// the paged table. `None` only in paged mode, when the pool cap
+    /// cannot cover the reservation.
+    pub fn new_kv(&self, n_blocks: usize, d: usize, capacity: usize, cost: usize) -> Option<Kv> {
+        match self {
+            KvSpec::Contig => Some(Kv::Contig(KvCache::new(n_blocks, d, capacity))),
+            KvSpec::Paged(p) => {
+                debug_assert!(p.core.n_blocks == n_blocks && p.core.d == d, "pool/model shape");
+                p.new_table(cost).map(Kv::Paged)
+            }
+        }
+    }
+}
+
+/// Collect the per-request `&mut Kv` views of a batch for one decode
+/// step — the one shared gather for every continuous-batching loop
+/// (`serve::online`, `serve::bench`, `benches/serve_throughput`).
+pub fn gather_caches<T>(items: &mut [T], kv: fn(&mut T) -> &mut Kv) -> Vec<&mut Kv> {
+    items.iter_mut().map(kv).collect()
+}
+
+/// Shared-prompt registry: registered prompts keep a frozen [`PageTable`]
+/// of their prefill KV state alive; later admissions fork from the
+/// longest matching prefix instead of recomputing it. Entries pin pool
+/// pages, so the registry is best-effort by design: registration skips
+/// when the registry is full or the pool cannot cover the boundary-page
+/// COW reservation, and [`PrefixRegistry::clear`] drops every entry when
+/// the pool runs dry (admissions always beat caching).
+///
+/// Lock order: the entry lock is acquired first, the pool lock (inside
+/// fork/reserve) second — never the reverse.
+pub struct PrefixRegistry {
+    entries: Mutex<Vec<(Vec<i32>, PageTable)>>,
+    cap: usize,
+}
+
+impl PrefixRegistry {
+    /// `cap` bounds the number of registered prompts.
+    pub fn new(cap: usize) -> PrefixRegistry {
+        PrefixRegistry { entries: Mutex::new(Vec::new()), cap }
+    }
+
+    pub fn len(&self) -> usize {
+        locked(&self.entries).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry, releasing the pages it pinned (modulo sharing).
+    pub fn clear(&self) {
+        locked(&self.entries).clear();
+    }
+
+    /// Fork the longest common prefix between `tokens` and any registered
+    /// prompt into a fresh table able to hold `cost` tokens. Under causal
+    /// attention a KV row depends only on the tokens at or before its
+    /// position, so any shared prefix of the *tokens* makes the cached
+    /// rows reusable — the registered prompt need not be a whole-prompt
+    /// match. The prefix is capped at `tokens.len() - 1` so the final
+    /// prompt position is always recomputed (its hidden row feeds the
+    /// first-token logits), and prefixes shorter than one full page are
+    /// skipped (the boundary page would copy-on-write immediately, so
+    /// nothing would actually be shared). `None` when nothing qualifies
+    /// or the pool cannot cover the fork.
+    pub fn fork_longest(&self, tokens: &[i32], cost: usize) -> Option<(usize, PageTable)> {
+        let g = locked(&self.entries);
+        let limit = tokens.len().saturating_sub(1);
+        let mut best: Option<(usize, &PageTable)> = None;
+        for (key, table) in g.iter() {
+            let cap = key.len().min(limit);
+            let p0 = (0..cap).take_while(|&i| tokens[i] == key[i]).count();
+            if p0 < table.pool.core.page_tokens {
+                continue;
+            }
+            if best.map_or(true, |(b, _)| p0 > b) {
+                best = Some((p0, table));
+            }
+        }
+        let (p0, table) = best?;
+        let forked = table.fork(p0, cost)?;
+        Some((p0, forked))
+    }
+
+    /// Register `tokens`' prefill state by sharing `table`'s pages
+    /// (refcount bump, no copy). When the prompt does not end on a page
+    /// boundary the serving table's next decode write will COW the shared
+    /// boundary page, so one extra page is reserved onto `table` here —
+    /// if the pool cannot cover it (or the registry is full, or the
+    /// prompt is already registered) registration is skipped.
+    pub fn register(&self, tokens: &[i32], table: &mut PageTable) {
+        let s = tokens.len();
+        if s == 0 || s > table.len {
+            return;
+        }
+        let mut g = locked(&self.entries);
+        if g.len() >= self.cap || g.iter().any(|(k, _)| k == tokens) {
+            return;
+        }
+        let p = table.pool.core.page_tokens;
+        if s % p != 0 {
+            if !table.pool.try_reserve(1) {
+                return;
+            }
+            table.reserved += 1;
+        }
+        let frozen = PageTable {
+            pages: table.pages[..pages_for(s, p)].to_vec(),
+            len: s,
+            cap_tokens: s,
+            reserved: 0,
+            pool: table.pool.clone(),
+        };
+        g.push((tokens.to_vec(), frozen));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- contiguous KvCache unit tests (moved from kv.rs so the two
+    // representations are covered side by side) ------------------------
+
+    #[test]
+    fn contig_write_commit_read() {
+        let mut c = KvCache::new(2, 3, 4);
+        assert!(c.is_empty());
+        c.write(0, 0, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        c.write(1, 0, &[7.0, 8.0, 9.0], &[1.0, 1.0, 1.0]);
+        assert!(c.k_block(0).is_empty(), "uncommitted rows stay invisible");
+        c.set_len(1);
+        assert_eq!(c.k_block(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.v_block(1), &[1.0, 1.0, 1.0]);
+        c.write(0, 1, &[0.5; 3], &[0.25; 3]);
+        c.write(1, 1, &[0.5; 3], &[0.25; 3]);
+        c.set_len(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(&c.k_block(0)[3..], &[0.5; 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn contig_write_past_capacity_panics() {
+        let mut c = KvCache::new(1, 2, 2);
+        c.write(0, 2, &[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    // ---- paged ---------------------------------------------------------
+
+    fn rows(kv: &Kv, block: usize) -> (Vec<f32>, Vec<f32>) {
+        let d = match kv {
+            Kv::Contig(c) => c.k_block(block).len() / kv.len().max(1),
+            Kv::Paged(t) => t.pool.core.d,
+        };
+        let mut k = vec![0.0; kv.len() * d];
+        let mut v = vec![0.0; kv.len() * d];
+        kv.gather_block_into(block, &mut k, &mut v);
+        (k, v)
+    }
+
+    #[test]
+    fn paged_write_commit_read_matches_contig() {
+        let pool = PagePool::new(2, 3, 2, 0);
+        let mut t = Kv::Paged(pool.new_table(5).expect("unbounded pool"));
+        let mut c = Kv::Contig(KvCache::new(2, 3, 5));
+        for pos in 0..5 {
+            for b in 0..2 {
+                let kr = [pos as f32, b as f32, 0.5];
+                let vr = [1.0, pos as f32, b as f32];
+                t.write(b, pos, &kr, &vr);
+                c.write(b, pos, &kr, &vr);
+            }
+            t.set_len(pos + 1);
+            c.set_len(pos + 1);
+        }
+        for b in 0..2 {
+            assert_eq!(rows(&t, b), rows(&c, b), "block {b}");
+        }
+        // 5 tokens at 2/page = 3 pages materialized
+        assert_eq!(pool.stats().live, 3);
+        let st = pool.stats();
+        assert_eq!(st.live + st.free, st.created, "conservation");
+    }
+
+    #[test]
+    fn free_list_recycles_buffers() {
+        let pool = PagePool::new(1, 2, 2, 0);
+        {
+            let mut t = pool.new_table(4).expect("fits");
+            t.write(0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+            t.write(0, 2, &[1.0, 2.0], &[3.0, 4.0]);
+            assert_eq!(pool.stats().live, 2);
+        }
+        let st = pool.stats();
+        assert_eq!((st.live, st.free, st.created), (0, 2, 2), "pages recycled on drop");
+        {
+            let mut t = pool.new_table(4).expect("fits");
+            t.write(0, 0, &[0.0; 2], &[0.0; 2]);
+            assert_eq!(pool.stats().created, 2, "reuse, not fresh allocation");
+        }
+    }
+
+    #[test]
+    fn pool_cap_bounds_reservations() {
+        let pool = PagePool::new(1, 2, 2, 3);
+        let t1 = pool.new_table(4).expect("2 pages fit");
+        assert!(pool.new_table(4).is_none(), "2 + 2 > 3 pages");
+        let t2 = pool.new_table(2).expect("third page fits");
+        assert_eq!(pool.max_cost_tokens(), Some(6));
+        drop(t1);
+        drop(t2);
+        assert!(pool.new_table(6).is_some(), "reservations released on drop");
+    }
+
+    #[test]
+    fn fork_shares_then_cow_isolates() {
+        let pool = PagePool::new(1, 2, 2, 0);
+        let mut parent = pool.new_table(4).expect("fits");
+        for pos in 0..3 {
+            parent.write(0, pos, &[pos as f32, 1.0], &[pos as f32, 2.0]);
+        }
+        parent.set_len(3);
+        assert_eq!(pool.stats().live, 2);
+
+        // share positions 0..3: page 0 fully, page 1 partially
+        let mut child = parent.fork(3, 4).expect("unbounded pool");
+        assert_eq!(child.page_refcounts(), vec![2, 2], "both pages shared");
+        assert_eq!(pool.stats().live, 2, "fork copies no pages");
+
+        // the child's first write into the shared boundary page clones it
+        child.write(0, 3, &[9.0, 9.0], &[8.0, 8.0]);
+        child.set_len(4);
+        assert_eq!(child.page_refcounts(), vec![2, 1]);
+        assert_eq!(pool.stats().cow_clones, 1);
+        assert_eq!(pool.stats().live, 3);
+
+        // parent rows are untouched
+        let pk = parent.segment(0, 1);
+        assert_eq!(pk.k, &[2.0, 1.0], "parent boundary row survives the child's write");
+        let ck = child.segment(0, 1);
+        assert_eq!(&ck.k[..2], &[2.0, 1.0], "clone kept the shared row");
+        assert_eq!(&ck.k[2..], &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn fork_reservation_covers_cow_and_tail() {
+        // cap exactly: parent 2 pages live; child needs the boundary COW
+        // clone + 1 tail page = 2 reservations; cap 4 fits, cap 3 refuses
+        let pool = PagePool::new(1, 2, 2, 3);
+        let mut parent = pool.new_table(4).expect("fits");
+        for pos in 0..3 {
+            parent.write(0, pos, &[0.0; 2], &[0.0; 2]);
+        }
+        parent.set_len(3);
+        assert!(parent.fork(3, 6).is_none(), "3 live/reserved + 2 > 3");
+        drop(parent);
+
+        let pool = PagePool::new(1, 2, 2, 4);
+        let mut parent = pool.new_table(4).expect("fits");
+        for pos in 0..3 {
+            parent.write(0, pos, &[0.0; 2], &[0.0; 2]);
+        }
+        parent.set_len(3);
+        let mut child = parent.fork(3, 6).expect("2 reservations fit");
+        for pos in 3..6 {
+            child.write(0, pos, &[1.0; 2], &[1.0; 2]);
+        }
+        child.set_len(6);
+        assert_eq!(child.len(), 6, "admitted fork never runs out of pages");
+    }
+
+    #[test]
+    fn registry_forks_longest_prefix_and_clears_under_pressure() {
+        let pool = PagePool::new(1, 2, 2, 0);
+        let reg = PrefixRegistry::new(4);
+        let prompt = vec![5, 6, 7, 8];
+        let mut table = pool.new_table(6).expect("fits");
+        for pos in 0..4 {
+            table.write(0, pos, &[pos as f32; 2], &[0.0; 2]);
+        }
+        table.set_len(4);
+        reg.register(&prompt, &mut table);
+        assert_eq!(reg.len(), 1);
+
+        // identical prompt: capped at len-1 so the last row is recomputed
+        let hit = reg.fork_longest(&[5, 6, 7, 8], 6).expect("prefix hit");
+        assert_eq!(hit.0, 3);
+        // longer prompt sharing the prefix: full 4 positions reused
+        let hit = reg.fork_longest(&[5, 6, 7, 8, 9, 9], 8).expect("prefix hit");
+        assert_eq!(hit.0, 4);
+        // divergent suffix: the longest *common* prefix is what forks
+        let hit = reg.fork_longest(&[5, 6, 9, 9, 9], 8).expect("lcp hit");
+        assert_eq!(hit.0, 2);
+        // a common prefix below one full page shares no pages: skipped
+        assert!(reg.fork_longest(&[5, 9, 7, 8], 6).is_none());
+
+        reg.clear();
+        assert!(reg.is_empty());
+        assert!(reg.fork_longest(&[5, 6, 7, 8], 6).is_none());
+    }
+}

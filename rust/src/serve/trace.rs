@@ -41,6 +41,11 @@ pub struct TraceConfig {
     /// distinct client ids drawn uniformly from `0..clients` (the
     /// token-bucket key in `serve::net`); 1 leaves everyone as client 0
     pub clients: u32,
+    /// tokens of a common prefix prepended to *every* prompt — the
+    /// shared-prompt workload for paged COW prefix sharing. The prefix
+    /// comes from its own corpus stream, so at 0 the trace stays
+    /// byte-identical to a prefix-free trace of the same seed
+    pub shared_prefix_len: usize,
 }
 
 impl Default for TraceConfig {
@@ -59,6 +64,7 @@ impl Default for TraceConfig {
             deadline_max_s: 0.0,
             priority_tiers: 1,
             clients: 1,
+            shared_prefix_len: 0,
         }
     }
 }
@@ -66,7 +72,7 @@ impl Default for TraceConfig {
 impl TraceConfig {
     /// Largest KV footprint any request of this trace can reach.
     pub fn max_request_tokens(&self) -> usize {
-        self.prompt_max + self.gen_max
+        self.shared_prefix_len + self.prompt_max + self.gen_max
     }
 }
 
@@ -92,6 +98,13 @@ pub fn poisson_trace(cfg: &TraceConfig) -> Vec<Request> {
     // streams above stay byte-identical to QoS-free traces of the same
     // seed — policy comparisons then run the exact same workload.
     let mut qrng = Rng::seed(cfg.seed ^ 0x0905);
+    // the shared prompt prefix draws from its own corpus stream so the
+    // arrival/prompt/kind streams stay untouched when it is disabled
+    let prefix: Vec<i32> = if cfg.shared_prefix_len > 0 {
+        Corpus::new(Domain::C4Syn, cfg.seed ^ 0xCAFE).take(cfg.shared_prefix_len)
+    } else {
+        Vec::new()
+    };
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(cfg.n_requests);
     for id in 0..cfg.n_requests {
@@ -120,7 +133,9 @@ pub fn poisson_trace(cfg: &TraceConfig) -> Vec<Request> {
         };
         let client = if cfg.clients > 1 { qrng.below(cfg.clients as usize) as u32 } else { 0 };
         let qos = Qos { deadline_s, priority, client };
-        out.push(Request { id, arrival: t, tokens: corpus.take(plen), kind, qos });
+        let mut tokens = prefix.clone();
+        tokens.extend(corpus.take(plen));
+        out.push(Request { id, arrival: t, tokens, kind, qos });
     }
     out
 }
@@ -206,6 +221,21 @@ mod tests {
         for r in &plain {
             assert!(r.qos.deadline_s.is_infinite());
             assert_eq!((r.qos.priority, r.qos.client), (1, 0));
+        }
+    }
+
+    #[test]
+    fn shared_prefix_prepends_without_touching_base_streams() {
+        let plain = poisson_trace(&TraceConfig::default());
+        let cfg = TraceConfig { shared_prefix_len: 6, ..Default::default() };
+        let shared = poisson_trace(&cfg);
+        let prefix = &shared[0].tokens[..6];
+        for (a, b) in plain.iter().zip(&shared) {
+            assert_eq!(a.arrival, b.arrival, "arrival stream untouched");
+            assert_eq!(a.kind, b.kind, "kind stream untouched");
+            assert_eq!(&b.tokens[..6], prefix, "every prompt shares the prefix");
+            assert_eq!(&b.tokens[6..], &a.tokens[..], "suffix is the base prompt");
+            assert!(b.cost() <= cfg.max_request_tokens());
         }
     }
 

@@ -14,9 +14,10 @@
 //!
 //! Span labels are a stable, closed vocabulary ([`SpanKind::ALL`], one
 //! lowercase token each — see `docs/telemetry.md`): `accept`, `parse`,
-//! `queue`, `admit`, `prefill`, `decode`, `serialize`. Consumers may rely
-//! on these strings never being renamed; new stages extend the enum (and
-//! the doc table) rather than repurposing an existing label.
+//! `queue`, `admit`, `prefill`, `decode`, `serialize`, `migrate`,
+//! `steal`. Consumers may rely on these strings never being renamed; new
+//! stages extend the enum (and the doc table) rather than repurposing an
+//! existing label.
 //!
 //! Timestamps are microseconds since the tracer's epoch (its creation
 //! instant), so one run's spans are mutually comparable and diffable
@@ -51,10 +52,15 @@ pub enum SpanKind {
     Decode,
     /// terminal reply serialized and written (front end)
     Serialize,
+    /// decode parked for handover: decode start (or admission) → park,
+    /// recorded by the origin worker
+    Migrate,
+    /// parked → stolen, recorded by the thief worker (its index)
+    Steal,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 7] = [
+    pub const ALL: [SpanKind; 9] = [
         SpanKind::Accept,
         SpanKind::Parse,
         SpanKind::Queue,
@@ -62,6 +68,8 @@ impl SpanKind {
         SpanKind::Prefill,
         SpanKind::Decode,
         SpanKind::Serialize,
+        SpanKind::Migrate,
+        SpanKind::Steal,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -73,6 +81,8 @@ impl SpanKind {
             SpanKind::Prefill => "prefill",
             SpanKind::Decode => "decode",
             SpanKind::Serialize => "serialize",
+            SpanKind::Migrate => "migrate",
+            SpanKind::Steal => "steal",
         }
     }
 
@@ -231,7 +241,10 @@ mod tests {
 
     #[test]
     fn labels_are_stable_and_round_trip() {
-        let want = ["accept", "parse", "queue", "admit", "prefill", "decode", "serialize"];
+        let want = [
+            "accept", "parse", "queue", "admit", "prefill", "decode", "serialize", "migrate",
+            "steal",
+        ];
         let got: Vec<&str> = SpanKind::ALL.iter().map(|k| k.label()).collect();
         assert_eq!(got, want, "span labels are a frozen vocabulary (docs/telemetry.md)");
         for k in SpanKind::ALL {

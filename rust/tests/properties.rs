@@ -1,8 +1,13 @@
 //! Property-based tests on coordinator/pruning invariants (offline
-//! proptest replacement: besa::util::proptest).
+//! proptest replacement: besa::util::proptest) plus the model-based
+//! fuzz of the paged KV allocator: random alloc / append / fork / free
+//! / migrate / rewind sequences against a contiguous reference model,
+//! with the pool conservation and COW refcount invariants re-asserted
+//! after every single operation.
 
 use besa::prune::importance::{decode_mask, magnitude_scores, ranks, wanda_scores};
 use besa::prune::topk_row_mask;
+use besa::serve::{PagePool, PageTable};
 use besa::sim::{dense_cycles, simulate_spmm, Csr, SimConfig};
 use besa::tensor::Tensor;
 use besa::util::proptest::{check, F32Vec, Strategy, UsizeIn, Zip};
@@ -207,6 +212,272 @@ fn prop_bst_roundtrip_random_tensors() {
         }
         Ok(())
     });
+}
+
+// ===== paged KV allocator: model-based fuzz ==============================
+//
+// The reference model is the obvious contiguous one: each table mirrors
+// to a `Vec` of rows per block. The real allocator shares pages across
+// forks, copy-on-writes them, migrates tables between workers and
+// recycles buffers through the pool free list — none of which the model
+// has — so any divergence in committed rows, lengths, or pool accounting
+// is an allocator bug by definition.
+
+/// KV geometry for the fuzz: small enough that page boundaries, COW
+/// clones and pool exhaustion all happen constantly.
+const FZ_NB: usize = 2;
+const FZ_D: usize = 4;
+const FZ_P: usize = 3;
+
+/// One live table plus its contiguous reference: `rows[pos][block]`.
+struct ModelEntry {
+    table: PageTable,
+    rows: Vec<Vec<(Vec<f32>, Vec<f32>)>>,
+    /// admission-time capacity in tokens
+    cap: usize,
+    /// rewind floor: a forked child never rewrites its fully-shared
+    /// prefix pages (serving never does either — registry parents are
+    /// frozen and children only grow past the fork point)
+    floor: usize,
+    /// fork sources freeze, like registered prefixes: no appends/rewinds
+    frozen: bool,
+}
+
+/// Distinct, deterministic row content (a shared counter, not position),
+/// so stale page reuse or cross-table aliasing can never pass equality.
+fn fz_row(counter: &mut u32) -> (Vec<f32>, Vec<f32>) {
+    let c = *counter as f32;
+    *counter += 1;
+    let k = (0..FZ_D).map(|j| c + j as f32 * 0.125).collect();
+    let v = (0..FZ_D).map(|j| -c - j as f32 * 0.25).collect();
+    (k, v)
+}
+
+/// Committed rows of one block, walked exactly as the attention kernels
+/// walk them (ascending-position segments).
+fn fz_gathered(t: &PageTable, block: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut k = Vec::with_capacity(t.len() * FZ_D);
+    let mut v = Vec::with_capacity(t.len() * FZ_D);
+    for si in 0..t.n_segments() {
+        let seg = t.segment(block, si);
+        k.extend_from_slice(seg.k);
+        v.extend_from_slice(seg.v);
+    }
+    (k, v)
+}
+
+fn fz_pick(workers: &[Vec<ModelEntry>; 2], rng: &mut Rng) -> Option<(usize, usize)> {
+    let total = workers[0].len() + workers[1].len();
+    if total == 0 {
+        return None;
+    }
+    let j = rng.below(total);
+    if j < workers[0].len() {
+        Some((0, j))
+    } else {
+        Some((1, j - workers[0].len()))
+    }
+}
+
+/// The full invariant sweep, run after **every** operation:
+/// * pool conservation: `live + free == created` (no leak, no double
+///   free) and, bounded, `live + reserved <= max_pages`;
+/// * every table's committed rows equal its reference model bitwise;
+/// * COW refcounts: every page handle is live, and summing `1/refcount`
+///   over all table-held pages recovers exactly the pool's live count —
+///   shared pages are counted once, unshared pages once, and a page
+///   referenced by nobody (or double-counted by a broken COW) breaks
+///   the identity.
+fn fz_check_all(pool: &PagePool, workers: &[Vec<ModelEntry>; 2], max_pages: usize, step: usize) {
+    let s = pool.stats();
+    assert_eq!(s.live + s.free, s.created, "step {step}: page conservation broken");
+    if max_pages > 0 {
+        assert!(
+            s.live + s.reserved <= max_pages,
+            "step {step}: cap oversubscribed (live {} + reserved {} > {max_pages})",
+            s.live,
+            s.reserved
+        );
+    }
+    let mut inv_sum = 0.0f64;
+    for w in workers {
+        for e in w {
+            assert_eq!(e.table.len(), e.rows.len(), "step {step}: committed length diverged");
+            for b in 0..FZ_NB {
+                let (k, v) = fz_gathered(&e.table, b);
+                let mk: Vec<f32> = e.rows.iter().flat_map(|r| r[b].0.iter().copied()).collect();
+                let mv: Vec<f32> = e.rows.iter().flat_map(|r| r[b].1.iter().copied()).collect();
+                assert_eq!(k, mk, "step {step} block {b}: keys diverged from the model");
+                assert_eq!(v, mv, "step {step} block {b}: values diverged from the model");
+            }
+            for rc in e.table.page_refcounts() {
+                assert!(rc >= 1, "step {step}: dead page handle");
+                inv_sum += 1.0 / rc as f64;
+            }
+        }
+    }
+    assert!(
+        (inv_sum - s.live as f64).abs() < 1e-6,
+        "step {step}: refcount conservation broken ({inv_sum} distinct pages vs {} live)",
+        s.live
+    );
+}
+
+fn fz_run(seed: u64, max_pages: usize, ops: usize) {
+    let pool = PagePool::new(FZ_NB, FZ_D, FZ_P, max_pages);
+    let mut rng = Rng::seed(seed);
+    let mut counter: u32 = 1;
+    let mut workers: [Vec<ModelEntry>; 2] = [Vec::new(), Vec::new()];
+    let (mut alloc_fails, mut fork_fails, mut forks) = (0usize, 0usize, 0usize);
+    for step in 0..ops {
+        let n_live = workers[0].len() + workers[1].len();
+        match rng.below(16) {
+            // ---- alloc: admission reserves the worst case up front ----
+            0..=2 => {
+                if n_live < 12 {
+                    let cost = 1 + rng.below(12);
+                    match pool.new_table(cost) {
+                        Some(table) => {
+                            let w = rng.below(2);
+                            workers[w].push(ModelEntry {
+                                table,
+                                rows: Vec::new(),
+                                cap: cost,
+                                floor: 0,
+                                frozen: false,
+                            });
+                        }
+                        None => {
+                            assert!(max_pages > 0, "unbounded pool refused an admission");
+                            alloc_fails += 1;
+                        }
+                    }
+                }
+            }
+            // ---- append one committed position (all blocks + set_len) ----
+            3..=8 => {
+                if let Some((w, i)) = fz_pick(&workers, &mut rng) {
+                    let e = &mut workers[w][i];
+                    if !e.frozen && e.rows.len() < e.cap {
+                        let pos = e.rows.len();
+                        let mut row = Vec::with_capacity(FZ_NB);
+                        for b in 0..FZ_NB {
+                            let (k, v) = fz_row(&mut counter);
+                            e.table.write(b, pos, &k, &v);
+                            row.push((k, v));
+                        }
+                        e.table.set_len(pos + 1);
+                        e.rows.push(row);
+                    }
+                }
+            }
+            // ---- rewind (benches do this), never below the fork floor ----
+            9 => {
+                if let Some((w, i)) = fz_pick(&workers, &mut rng) {
+                    let e = &mut workers[w][i];
+                    if !e.frozen && e.floor < e.rows.len() {
+                        let span = e.rows.len() - e.floor;
+                        let new_len = e.floor + rng.below(span + 1);
+                        e.table.set_len(new_len);
+                        e.rows.truncate(new_len);
+                    }
+                }
+            }
+            // ---- fork: COW prefix sharing; the source freezes ----
+            10 | 11 => {
+                if n_live > 0 && n_live < 12 {
+                    if let Some((w, i)) = fz_pick(&workers, &mut rng) {
+                        let len = workers[w][i].rows.len();
+                        if len >= 1 {
+                            let p0 = rng.below(len + 1);
+                            let cost = p0 + 1 + rng.below(9);
+                            match workers[w][i].table.fork(p0, cost) {
+                                Some(table) => {
+                                    // shared prefix pages are refcounted, not copied
+                                    let shared = p0.div_ceil(FZ_P);
+                                    let rc = table.page_refcounts();
+                                    for (j, c) in rc.iter().enumerate().take(shared) {
+                                        assert!(*c >= 2, "fork did not share page {j}");
+                                    }
+                                    let rows = workers[w][i].rows[..p0].to_vec();
+                                    workers[w][i].frozen = true;
+                                    forks += 1;
+                                    let tw = rng.below(2);
+                                    workers[tw].push(ModelEntry {
+                                        table,
+                                        rows,
+                                        cap: cost,
+                                        floor: p0,
+                                        frozen: false,
+                                    });
+                                }
+                                None => {
+                                    assert!(max_pages > 0, "unbounded pool refused a fork");
+                                    fork_fails += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // ---- free: drop the table; its private pages recycle ----
+            12 | 13 => {
+                if let Some((w, i)) = fz_pick(&workers, &mut rng) {
+                    workers[w].swap_remove(i);
+                }
+            }
+            // ---- migrate: the work-stealing handoff is a plain move ----
+            _ => {
+                if let Some((w, i)) = fz_pick(&workers, &mut rng) {
+                    let e = workers[w].swap_remove(i);
+                    workers[1 - w].push(e);
+                }
+            }
+        }
+        fz_check_all(&pool, &workers, max_pages, step);
+    }
+    if max_pages == 0 {
+        assert!(forks > 0, "seed {seed}: fuzz never exercised a fork");
+        assert_eq!(alloc_fails + fork_fails, 0);
+    }
+
+    // drain: every page must come home, every reservation must clear
+    workers[0].clear();
+    workers[1].clear();
+    let s = pool.stats();
+    assert_eq!(s.live, 0, "seed {seed}: drained pool still has live pages");
+    assert_eq!(s.reserved, 0, "seed {seed}: drained pool still holds reservations");
+    assert_eq!(s.free, s.created, "seed {seed}: free list lost pages");
+
+    // free-list reuse: a fresh admission after the drain recycles
+    // buffers instead of minting new ones
+    let before = s.created;
+    assert!(before >= 2, "seed {seed}: fuzz never created two pages");
+    let mut t = pool.new_table(2 * FZ_P).expect("drained pool must admit");
+    for pos in 0..2 * FZ_P {
+        for b in 0..FZ_NB {
+            let (k, v) = fz_row(&mut counter);
+            t.write(b, pos, &k, &v);
+        }
+        t.set_len(pos + 1);
+    }
+    assert_eq!(pool.stats().created, before, "seed {seed}: free-list pages were not reused");
+}
+
+#[test]
+fn prop_paged_allocator_matches_reference_model_unbounded() {
+    for seed in [1u64, 7, 23] {
+        fz_run(seed, 0, 1200);
+    }
+}
+
+#[test]
+fn prop_paged_allocator_matches_reference_model_bounded() {
+    // 48 pages over ≤12 tables of ≤12 tokens: admissions and forks hit
+    // the cap constantly, so the clean-rejection path is exercised too
+    for seed in [2u64, 11, 29] {
+        fz_run(seed, 48, 1200);
+    }
 }
 
 #[test]

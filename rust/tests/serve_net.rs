@@ -1,8 +1,8 @@
 //! Behavior suite for the TCP front end (hermetic, loopback, `test`
 //! config): the HTTP adapter's routes and status codes, line-protocol
 //! error recovery, deterministic overload control (per-client token
-//! buckets, unmeetable deadlines), graceful-drain accounting under
-//! deadline pressure, and span telemetry emission.
+//! buckets, unmeetable deadlines, paged-pool exhaustion), graceful-drain
+//! accounting under deadline pressure, and span telemetry emission.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -13,7 +13,7 @@ use besa::serve::bench::magnitude_prune_in_place;
 use besa::serve::engine::ServeContext;
 use besa::serve::model::{PackedModel, WeightFormat};
 use besa::serve::net::WireEvent;
-use besa::serve::{LineClient, NetConfig, NetServer, SchedulerConfig};
+use besa::serve::{KvMode, LineClient, NetConfig, NetServer, SchedulerConfig};
 use besa::telemetry::{SpanKind, Tracer};
 use besa::util::json::Json;
 
@@ -265,6 +265,79 @@ fn tight_deadlines_account_exactly_and_emit_spans() {
         assert!(kinds.contains(&SpanKind::Prefill));
         assert!(kinds.contains(&SpanKind::Serialize));
     }
+}
+
+/// Tight-memory paged pool: a request whose worst-case KV footprint
+/// exceeds the whole pool is a clean 400 at admission (it could never be
+/// served), while a burst that merely oversubscribes the pool
+/// *transiently* is absorbed as queueing delay or a 503 deadline shed —
+/// never a panic, never a wedged drain, and `queued == finished + shed`
+/// still holds exactly.
+#[test]
+fn paged_pool_exhaustion_rejects_and_sheds_clean() {
+    let (_cfg, ctxs) = contexts(1, 64);
+    let ncfg = NetConfig {
+        // 8 pages × 2 tokens = 16 pool tokens, well under the token
+        // budget: the pool is the binding admission constraint
+        kv: KvMode::Paged { page_tokens: 2, max_pages: 8 },
+        sched: SchedulerConfig { token_budget: 64, max_batch: 4 },
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(ctxs, ncfg, None).unwrap();
+
+    // cost 20 > 16 pool tokens: unservable, rejected before the queue
+    let mut client = LineClient::connect(&server.addr()).unwrap();
+    let line = "{\"id\":1,\"prompt\":[1,2,3,4,5,6,7,8,9,10,11,12],\"max_new\":8}\n";
+    let events = client.request(line).unwrap();
+    match events.last().unwrap() {
+        WireEvent::Rejected { code, reason, .. } => {
+            assert_eq!(*code, 400);
+            assert!(reason.contains("caps"), "{reason}");
+        }
+        other => panic!("wanted a 400 rejection, got {other:?}"),
+    }
+    drop(client);
+
+    // 3 clients × cost-8 requests into 16 pool tokens: at most two fit
+    // at once, so the pool runs dry mid-burst and admissions must wait
+    // for pages (or shed on deadline) instead of panicking
+    let counts = std::sync::Mutex::new((0usize, 0usize));
+    std::thread::scope(|scope| {
+        for c in 0..3u64 {
+            let addr = server.addr();
+            let counts = &counts;
+            scope.spawn(move || {
+                let mut client = LineClient::connect(&addr).unwrap();
+                for i in 0..2u64 {
+                    let line = format!(
+                        "{{\"id\":{},\"prompt\":[5,6,7,8],\"max_new\":4,\"deadline_ms\":2000}}\n",
+                        10 + c * 2 + i
+                    );
+                    let events = client.request(&line).unwrap();
+                    let mut g = counts.lock().unwrap();
+                    match events.last().unwrap() {
+                        WireEvent::Done { .. } => g.0 += 1,
+                        WireEvent::Shed { code, .. } => {
+                            assert_eq!(*code, 503);
+                            g.1 += 1;
+                        }
+                        other => panic!("unexpected terminal {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let (done, shed) = *counts.lock().unwrap();
+    assert_eq!(done + shed, 6, "every request got exactly one terminal event");
+    assert!(done > 0, "the pool must keep serving one admission at a time");
+
+    let stats = server.shutdown().unwrap();
+    assert!(stats.drained_clean, "pool exhaustion must never wedge the drain");
+    assert!(stats.accounted(), "queued == finished + shed under pool pressure");
+    assert_eq!(stats.finished.len(), done);
+    assert_eq!(stats.shed.len(), shed);
+    assert_eq!(stats.requests, 6);
+    assert!(stats.rejected.is_empty(), "transient exhaustion queues, it does not reject");
 }
 
 #[test]

@@ -24,16 +24,17 @@ use besa::quant::{quantize_model, QuantSpec};
 use besa::runtime::Engine;
 use besa::serve::bench::magnitude_prune_in_place;
 use besa::serve::engine::{
-    block_tensors, decode_step_backend, greedy_backend, greedy_cached, greedy_recompute, prefill,
-    score_nll, ServeContext,
+    block_tensors, decode_step, decode_step_backend, greedy_backend, greedy_cached,
+    greedy_recompute, greedy_with_cache, prefill, prefill_continue, score_nll, DecodeScratch,
+    ServeContext,
 };
 use besa::serve::model::{PackedModel, WeightFormat};
 use besa::serve::net::{request_line, WireEvent};
 use besa::serve::scheduler::SchedulerConfig;
 use besa::serve::trace::TraceConfig;
 use besa::serve::{
-    poisson_trace, run_trace, serve_online, LineClient, NetConfig, NetServer, OnlineConfig, Pacing,
-    Policy, ReqKind,
+    poisson_trace, run_trace, serve_online, Kv, KvMode, KvSpec, LineClient, NetConfig, NetServer,
+    OnlineConfig, Pacing, Policy, ReqKind,
 };
 use besa::tensor::Tensor;
 
@@ -144,9 +145,10 @@ fn block_fwd_cached_matches_block_fwd_rows() {
         decode_step_backend(&ctx, &engine, &blocks, &last, &mut caches).unwrap();
     }
     assert_eq!(cache.len(), full_cache.len());
+    let (inc, full) = (cache.as_contig().unwrap(), full_cache.as_contig().unwrap());
     for l in 0..cfg.n_blocks {
-        assert_eq!(cache.k_block(l), full_cache.k_block(l), "block {l} keys");
-        assert_eq!(cache.v_block(l), full_cache.v_block(l), "block {l} values");
+        assert_eq!(inc.k_block(l), full.k_block(l), "block {l} keys");
+        assert_eq!(inc.v_block(l), full.v_block(l), "block {l} values");
     }
 }
 
@@ -245,7 +247,7 @@ fn trace_replay_consistent_across_formats() {
             PackedModel::materialize(&params, &cfg, format).unwrap(),
             tcfg.max_request_tokens(),
         );
-        let stats = run_trace(&ctx, None, requests.clone(), &sched).unwrap();
+        let stats = run_trace(&ctx, None, requests.clone(), &sched, &KvSpec::contig()).unwrap();
         assert_eq!(stats.finished.len(), tcfg.n_requests, "{}: all retire", format.name());
         let mut seen = std::collections::BTreeSet::new();
         for f in &stats.finished {
@@ -299,7 +301,7 @@ fn sharded_online_matches_single_worker_and_offline_replay() {
         PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
         max_pos,
     );
-    let offline = run_trace(&ctx, None, requests.clone(), &sched).unwrap();
+    let offline = run_trace(&ctx, None, requests.clone(), &sched, &KvSpec::contig()).unwrap();
     let reference: BTreeMap<usize, (Vec<i32>, Option<f64>)> = offline
         .finished
         .iter()
@@ -360,6 +362,7 @@ fn queue_policies_preserve_per_request_outputs() {
         deadline_max_s: 30.0,
         priority_tiers: 3,
         clients: 2,
+        shared_prefix_len: 0,
     };
     let sched = SchedulerConfig { token_budget: 64, max_batch: 3 };
     let requests = poisson_trace(&tcfg);
@@ -424,7 +427,7 @@ fn loopback_tcp_matches_offline_replay() {
         PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
         max_pos,
     );
-    let offline = run_trace(&ctx, None, requests.clone(), &sched).unwrap();
+    let offline = run_trace(&ctx, None, requests.clone(), &sched, &KvSpec::contig()).unwrap();
     let reference: BTreeMap<usize, (Vec<i32>, Option<f64>)> = offline
         .finished
         .iter()
@@ -469,4 +472,218 @@ fn loopback_tcp_matches_offline_replay() {
     assert_eq!(stats.finished.len(), requests.len());
     assert_eq!(stats.parse_errors, 0);
     assert_eq!(stats.rejected_rate, 0);
+}
+
+/// The paged-allocator parity pin: prefill hidden states, the per-block
+/// KV rows themselves, and greedy decode tokens must be **bitwise**
+/// identical between the contiguous slab and the paged table, at page
+/// sizes 1 (every row its own page), 3 and 5 (neither divides the
+/// 13-token prompt, so the last page is partial) and 16 (prompt +
+/// decode fit one page). Parity is by construction — both backings run
+/// the same kernels over ascending-position row runs — and this test
+/// keeps it that way.
+#[test]
+fn paged_matches_contiguous_bitwise_across_page_sizes() {
+    let (_engine, cfg, params) = pruned_setup();
+    let n = 6;
+    let prompt: Vec<i32> = (0..13).map(|i| (i * 5 % cfg.vocab) as i32).collect();
+    let max_pos = prompt.len() + n + 1;
+    let ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+        max_pos,
+    );
+    let mut contig = ctx.new_cache();
+    let h_ref = prefill(&ctx, &prompt, &mut contig);
+    let tok_ref = greedy_cached(&ctx, &prompt, n);
+    assert_eq!(tok_ref.len(), n);
+    let d = cfg.d_model;
+    let cref = contig.as_contig().unwrap();
+    for page_tokens in [1usize, 3, 5, 16] {
+        let spec =
+            KvSpec::for_mode(KvMode::Paged { page_tokens, max_pages: 0 }, cfg.n_blocks, cfg.d_model);
+        let mut kv = ctx.new_kv(&spec, max_pos).unwrap();
+        let h = prefill(&ctx, &prompt, &mut kv);
+        assert_eq!(h, h_ref, "page={page_tokens}: prefill hidden bitwise");
+        assert_eq!(kv.len(), contig.len());
+        for l in 0..cfg.n_blocks {
+            let mut k = vec![0.0f32; kv.len() * d];
+            let mut v = vec![0.0f32; kv.len() * d];
+            kv.gather_block_into(l, &mut k, &mut v);
+            assert_eq!(&k[..], cref.k_block(l), "page={page_tokens} block {l} keys");
+            assert_eq!(&v[..], cref.v_block(l), "page={page_tokens} block {l} values");
+        }
+        let mut kv2 = ctx.new_kv(&spec, max_pos).unwrap();
+        let toks = greedy_with_cache(&ctx, &prompt, n, &mut kv2);
+        assert_eq!(toks, tok_ref, "page={page_tokens}: greedy decode token-for-token");
+    }
+}
+
+/// COW prefix sharing: continuing a prefill over a *forked* prefix (at a
+/// page-aligned split and at a mid-page split that forces a
+/// copy-on-write boundary clone) reproduces the full prefill's final
+/// hidden row and KV rows bitwise, and never mutates the parent table.
+#[test]
+fn forked_prefix_prefill_continue_matches_full_prefill() {
+    let (_engine, cfg, params) = pruned_setup();
+    let prompt: Vec<i32> = (0..11).map(|i| (i * 7 % cfg.vocab) as i32).collect();
+    let s = prompt.len();
+    let max_pos = s + 1;
+    let ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+        max_pos,
+    );
+    let d = cfg.d_model;
+    let spec = KvSpec::for_mode(
+        KvMode::Paged { page_tokens: 4, max_pages: 0 },
+        cfg.n_blocks,
+        cfg.d_model,
+    );
+    let mut parent = ctx.new_kv(&spec, max_pos).unwrap();
+    let h_full = prefill(&ctx, &prompt, &mut parent);
+    let h_last = &h_full[(s - 1) * d..s * d];
+    let snapshot: Vec<(Vec<f32>, Vec<f32>)> = (0..cfg.n_blocks)
+        .map(|l| {
+            let mut k = vec![0.0f32; s * d];
+            let mut v = vec![0.0f32; s * d];
+            parent.gather_block_into(l, &mut k, &mut v);
+            (k, v)
+        })
+        .collect();
+
+    // p0 = 8 is page-aligned (shares two full pages); p0 = 6 splits page
+    // 1 mid-way, so the child's first write COW-clones that page
+    for p0 in [8usize, 6] {
+        let cow_before = spec.pool().unwrap().stats().cow_clones;
+        let table = parent.as_paged().unwrap().fork(p0, max_pos).unwrap();
+        let mut child = Kv::Paged(table);
+        assert_eq!(child.len(), p0);
+        let mut scratch = DecodeScratch::new();
+        let h = prefill_continue(&ctx, &prompt, &mut child, &mut scratch);
+        assert_eq!(&h[..], h_last, "p0={p0}: final hidden row bitwise");
+        assert_eq!(child.len(), s);
+        for l in 0..cfg.n_blocks {
+            let mut k = vec![0.0f32; s * d];
+            let mut v = vec![0.0f32; s * d];
+            child.gather_block_into(l, &mut k, &mut v);
+            assert_eq!(k, snapshot[l].0, "p0={p0} block {l}: child keys == full prefill");
+            assert_eq!(v, snapshot[l].1, "p0={p0} block {l}: child values == full prefill");
+        }
+        // the parent's rows are untouched (COW isolated the child)
+        for l in 0..cfg.n_blocks {
+            let mut k = vec![0.0f32; s * d];
+            let mut v = vec![0.0f32; s * d];
+            parent.gather_block_into(l, &mut k, &mut v);
+            assert_eq!(k, snapshot[l].0, "p0={p0} block {l}: parent keys unchanged");
+            assert_eq!(v, snapshot[l].1, "p0={p0} block {l}: parent values unchanged");
+        }
+        let cow_after = spec.pool().unwrap().stats().cow_clones;
+        if p0 % 4 == 0 {
+            assert_eq!(cow_after, cow_before, "aligned fork never COW-clones");
+        } else {
+            assert!(cow_after > cow_before, "mid-page fork must COW the boundary page");
+        }
+    }
+}
+
+/// Work stealing is a page-table *move*, not a recompute: decoding k
+/// steps on one worker replica, migrating the table, and finishing on a
+/// different replica yields the pinned single-worker token sequence
+/// exactly, at a page size that forces mid-decode page boundaries.
+#[test]
+fn stolen_mid_decode_matches_pinned_decode() {
+    let (_engine, cfg, params) = pruned_setup();
+    let n = 8;
+    let prompt: Vec<i32> = (0..9).map(|i| (i * 11 % cfg.vocab) as i32).collect();
+    let max_pos = prompt.len() + n + 1;
+    let mk = || {
+        ServeContext::new(
+            PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+            max_pos,
+        )
+    };
+    let (ctx_a, ctx_b) = (mk(), mk());
+    let reference = greedy_cached(&ctx_a, &prompt, n);
+    assert_eq!(reference.len(), n);
+
+    let spec =
+        KvSpec::for_mode(KvMode::Paged { page_tokens: 3, max_pages: 0 }, cfg.n_blocks, cfg.d_model);
+    let mut kv = ctx_a.new_kv(&spec, max_pos).unwrap();
+    prefill(&ctx_a, &prompt, &mut kv);
+    let mut scratch = DecodeScratch::new();
+    let mut prev = reference[0];
+    for (i, want) in reference.iter().enumerate().skip(1) {
+        // steal after 3 decode steps: the table moves, the context changes
+        let ctx = if i <= 3 { &ctx_a } else { &ctx_b };
+        let last = [prev];
+        let mut caches = [&mut kv];
+        let got = decode_step(ctx, &last, &mut caches, &mut scratch)[0];
+        assert_eq!(got, *want, "stolen decode diverged at step {i}");
+        prev = got;
+    }
+}
+
+/// The online engine with the paged allocator, decode work stealing and
+/// prefix sharing all enabled retires every request with outputs
+/// identical to the contiguous offline single-threaded replay — the
+/// end-to-end pin that none of the allocator machinery (paging, COW
+/// forks, page-table migration) leaks into the math.
+#[test]
+fn online_paged_with_stealing_matches_contig_offline() {
+    let (_engine, cfg, params) = pruned_setup();
+    let tcfg = TraceConfig {
+        n_requests: 12,
+        rate: 500.0,
+        prompt_min: 4,
+        prompt_max: 12,
+        gen_min: 2,
+        gen_max: 8,
+        score_fraction: 0.25,
+        burst: 3,
+        seed: 4242,
+        shared_prefix_len: 6,
+        ..TraceConfig::default()
+    };
+    let sched = SchedulerConfig { token_budget: 64, max_batch: 3 };
+    let requests = poisson_trace(&tcfg);
+    let max_pos = tcfg.max_request_tokens();
+
+    let ctx = ServeContext::new(
+        PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+        max_pos,
+    );
+    let offline = run_trace(&ctx, None, requests.clone(), &sched, &KvSpec::contig()).unwrap();
+    let reference: BTreeMap<usize, (Vec<i32>, Option<f64>)> = offline
+        .finished
+        .iter()
+        .map(|f| (f.id, (f.tokens.clone(), f.nll)))
+        .collect();
+    assert_eq!(reference.len(), tcfg.n_requests);
+
+    for page_tokens in [3usize, 16] {
+        let ctxs: Vec<ServeContext> = (0..2)
+            .map(|_| {
+                ServeContext::new(
+                    PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+                    max_pos,
+                )
+            })
+            .collect();
+        let ocfg = OnlineConfig {
+            workers: 2,
+            sched: sched.clone(),
+            pacing: Pacing::Replay { time_scale: 0.0 },
+            kv: KvMode::Paged { page_tokens, max_pages: 0 },
+            steal: true,
+            share_prefix: true,
+            ..OnlineConfig::default()
+        };
+        let stats = serve_online(&ctxs, requests.clone(), &ocfg).unwrap();
+        assert_eq!(stats.finished.len(), tcfg.n_requests, "page={page_tokens}: all retire");
+        let got: BTreeMap<usize, (Vec<i32>, Option<f64>)> = stats
+            .finished
+            .iter()
+            .map(|f| (f.id, (f.tokens.clone(), f.nll)))
+            .collect();
+        assert_eq!(got, reference, "page={page_tokens}: paged+steal+share == contig offline");
+    }
 }
