@@ -735,6 +735,19 @@ mod tests {
     }
 
     #[test]
+    fn fault_injection_is_in_every_scope() {
+        // serve/fault.rs is deterministic by contract: panics only fire
+        // through the audited inject() allow, and triggers are seeded —
+        // so it stays inside BOTH the hot-path and replay scopes
+        let (f, _) = run_one("serve/fault.rs", "fn f(x: Option<u8>) -> u8 { x.unwrap() }");
+        assert_eq!(rules(&f), vec!["hot-path-panic"]);
+        let (f2, _) = run_one("serve/fault.rs", "fn f() { let _t = Instant::now(); }");
+        assert_eq!(rules(&f2), vec!["wallclock-in-replay"]);
+        let (f3, _) = run_one("serve/fault.rs", "use std::collections::HashMap;\n");
+        assert_eq!(rules(&f3), vec!["nondeterministic-iter"]);
+    }
+
+    #[test]
     fn telemetry_and_net_are_in_hot_path_scope() {
         let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }";
         let (f, _) = run_one("telemetry/mod.rs", src);

@@ -9,7 +9,9 @@
 //! besa serve-bench --config sm --ckpt runs/sm-besa.bst --modes dense,sparse,quant
 //! besa serve-bench --config sm --ckpt runs/sm-besa.bst --async --workers 4
 //! besa serve-bench --config sm --ckpt runs/sm-besa.bst --overload-sweep --deadline-ms 250
+//! besa serve-bench --smoke --overload-sweep --degrade 0.9 --faults stall@decode%40
 //! besa serve-net  --smoke --drive --policy edf --deadline-ms 40 --trace-out spans.jsonl
+//! besa serve-net  --smoke --drive --faults panic@decode:3,disconnect@stream%5 --degrade 0.9
 //! besa kernel-bench --json BENCH_kernels.json
 //! besa exp       table1|table2|table3|table4|table5|table6|fig1a|fig1b|fig3|fig4  [--configs sm,md]
 //! ```
@@ -82,7 +84,12 @@ fn print_help() {
          \x20            --shared-prefix-tokens <n> prepends a common prompt prefix\n\
          \x20            to the trace); paged adds the paged-vs-contig section to\n\
          \x20            the record. --trace-out <path> dumps per-request\n\
-         \x20            telemetry spans as JSONL (docs/telemetry.md)\n\
+         \x20            telemetry spans as JSONL (docs/telemetry.md).\n\
+         \x20            --faults <spec> [--fault-seed <n>] injects deterministic\n\
+         \x20            worker panics/stalls/denials into the async sections;\n\
+         \x20            --degrade <sparsity> adds the shed-only vs sparsity-tiered\n\
+         \x20            degradation goodput comparison to the overload sweep\n\
+         \x20            (docs/robustness.md)\n\
          \x20 serve-net  TCP front end over the same workers: line-delimited JSON\n\
          \x20            + an HTTP/1.1 subset (GET /healthz, POST /v1/generate),\n\
          \x20            per-client token buckets (--bucket-rate, --bucket-burst),\n\
@@ -91,7 +98,12 @@ fn print_help() {
          \x20            (--drain-deadline-s), --kv contig|paged (+ --kv-page,\n\
          \x20            --kv-pages, --steal, --share-prefix: paged allocator, decode\n\
          \x20            work stealing, prefix sharing). --drive runs the hermetic\n\
-         \x20            loopback self-test (--clients, --requests, --deadline-ms);\n\
+         \x20            loopback self-test (--clients, --requests, --deadline-ms).\n\
+         \x20            --faults <spec> [--fault-seed <n>]: worker panics/stalls/\n\
+         \x20            denials fire server-side, disconnect@stream hangs up the\n\
+         \x20            drive clients mid-stream; --retry-budget <n> caps replays;\n\
+         \x20            --degrade <sparsity> serves pressured admissions from a\n\
+         \x20            sparser replica tier instead of shedding (docs/robustness.md).\n\
          \x20            --addr <ip:port> binds (port 0 = ephemeral); docs/serving.md\n\
          \x20 kernel-bench  roofline sweep of the shared microkernel layer:\n\
          \x20            scalar reference vs micro kernel per family (matvec,\n\

@@ -3,8 +3,15 @@
 //! loopback self-test: spawn the server on an ephemeral port, drive a
 //! seeded trace through concurrent line-protocol clients, then shut
 //! down gracefully and verify the overload-control accounting
-//! (`queued == finished + shed`, clean drain, telemetry non-empty).
-//! This is what the CI serve-net smoke job runs.
+//! (`queued == finished + shed + failed`, clean drain, telemetry
+//! non-empty). This is what the CI serve-net smoke and chaos jobs run.
+//!
+//! `--faults <spec>` threads a deterministic fault schedule through the
+//! run: `panic`/`stall`/`deny` clauses fire inside the server workers,
+//! while `disconnect@stream` clauses fire *client-side* in the drive
+//! loop — the driver hangs up mid-stream and reconnects, and the
+//! accounting cross-check then tolerates exactly that: every surplus
+//! server-side finish or failure must map to one client hang-up.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -16,8 +23,8 @@ use crate::model::ParamStore;
 use crate::serve::bench::magnitude_prune_in_place;
 use crate::serve::net::{request_line, WireEvent};
 use crate::serve::{
-    poisson_trace, LineClient, NetConfig, NetServer, NetStats, PackedModel, Policy, Request,
-    SchedulerConfig, ServeContext, TraceConfig, WeightFormat,
+    poisson_trace, FaultAction, FaultPlan, FaultSite, LineClient, NetConfig, NetServer, NetStats,
+    PackedModel, Policy, Request, SchedulerConfig, ServeContext, TraceConfig, WeightFormat,
 };
 use crate::telemetry::Tracer;
 use crate::util::args::Args;
@@ -30,8 +37,11 @@ use super::runs::{engine_for, load_params, parse_kv_mode};
 struct DriveCounts {
     done: usize,
     within_deadline: usize,
+    degraded: usize,
     shed: usize,
     rejected: usize,
+    failed: usize,
+    disconnected: usize,
     errors: usize,
 }
 
@@ -64,6 +74,16 @@ pub fn cmd_serve_net(args: &Args) -> Result<()> {
         token_budget: args.usize_or("token-budget", if smoke { 256 } else { 1024 })?,
         max_batch: args.usize_or("max-batch", 8)?,
     };
+    // `--faults panic@decode:3,disconnect@stream%5 --fault-seed 1`:
+    // worker-side clauses ride in NetConfig; stream clauses fire in the
+    // drive loop below (same plan, so hit counters are shared)
+    let faults = match args.get("faults") {
+        Some(spec) => Some(Arc::new(
+            FaultPlan::parse(spec, args.u64_or("fault-seed", 0xFA17)?)
+                .context("--faults: bad fault spec")?,
+        )),
+        None => None,
+    };
     let ncfg = NetConfig {
         addr: args.str_or("addr", "127.0.0.1:0"),
         workers: args.usize_or("workers", 2)?,
@@ -77,6 +97,8 @@ pub fn cmd_serve_net(args: &Args) -> Result<()> {
         steal: args.has("steal"),
         share_prefix: args.has("share-prefix"),
         drain_deadline: Duration::from_secs_f64(args.f64_or("drain-deadline-s", 10.0)?),
+        faults: faults.clone(),
+        retry_budget: args.usize_or("retry-budget", 2)? as u32,
         ..NetConfig::default()
     };
 
@@ -85,11 +107,33 @@ pub fn cmd_serve_net(args: &Args) -> Result<()> {
     let ctxs = (0..ncfg.workers)
         .map(|_| Ok(ServeContext::new(PackedModel::materialize(&params, &cfg, format)?, max_pos)))
         .collect::<Result<Vec<_>>>()?;
+    // `--degrade <sparsity>`: a second, sparser replica per worker;
+    // pressured admissions are answered from it instead of shed
+    let degrade_ctxs = match args.get("degrade") {
+        Some(s) => {
+            let ds = s
+                .parse::<f64>()
+                .with_context(|| format!("--degrade: bad sparsity '{s}'"))?;
+            let mut dparams = params.clone();
+            magnitude_prune_in_place(&mut dparams, &cfg, ds)?;
+            Some(
+                (0..ncfg.workers)
+                    .map(|_| {
+                        Ok(ServeContext::new(
+                            PackedModel::materialize(&dparams, &cfg, format)?,
+                            max_pos,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            )
+        }
+        None => None,
+    };
 
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let tracer = trace_out.as_ref().map(|_| Arc::new(Tracer::new()));
 
-    let server = NetServer::start(ctxs, ncfg.clone(), tracer.clone())?;
+    let server = NetServer::start_tiered(ctxs, degrade_ctxs, ncfg.clone(), tracer.clone())?;
     let addr = server.addr();
     println!(
         "serve-net: {} on {addr} ({} workers, policy {}, queue cap {}, kv {})",
@@ -100,13 +144,37 @@ pub fn cmd_serve_net(args: &Args) -> Result<()> {
         ncfg.kv.name()
     );
 
-    let stats = if args.has("drive") {
-        drive_loopback(args, smoke, server, &addr)?
+    let outcome = if args.has("drive") {
+        drive_loopback(args, smoke, server, &addr, faults.as_deref())
     } else {
         let secs = args.f64_or("duration-s", 5.0)?;
         println!("serving for {secs:.1}s (pass --drive for the loopback self-test)");
         std::thread::sleep(Duration::from_secs_f64(secs));
-        server.shutdown()?
+        server.shutdown()
+    };
+
+    // flush spans even on an abnormal end (a failed drive, a fault
+    // schedule that broke the run): the spans collected up to the
+    // failure are exactly the ones worth reading
+    let flush = || -> Result<()> {
+        if let (Some(path), Some(t)) = (&trace_out, &tracer) {
+            let n = t.write_jsonl(path)?;
+            println!("[telemetry: {n} spans -> {}]", path.display());
+            if n == 0 {
+                bail!("telemetry dump is empty — spans were never recorded");
+            }
+        }
+        Ok(())
+    };
+    let stats = match outcome {
+        Ok(s) => {
+            flush()?;
+            s
+        }
+        Err(e) => {
+            let _ = flush();
+            return Err(e);
+        }
     };
 
     print_stats(&stats);
@@ -115,18 +183,12 @@ pub fn cmd_serve_net(args: &Args) -> Result<()> {
     }
     if !stats.accounted() {
         bail!(
-            "accounting violated: {} queued but {} finished + {} shed",
+            "accounting violated: {} queued but {} finished + {} shed + {} failed",
             stats.requests,
             stats.finished.len(),
-            stats.shed.len()
+            stats.shed.len(),
+            stats.failed.len()
         );
-    }
-    if let (Some(path), Some(t)) = (&trace_out, &tracer) {
-        let n = t.write_jsonl(path)?;
-        println!("[telemetry: {n} spans -> {}]", path.display());
-        if n == 0 {
-            bail!("telemetry dump is empty — spans were never recorded");
-        }
     }
     Ok(())
 }
@@ -134,12 +196,14 @@ pub fn cmd_serve_net(args: &Args) -> Result<()> {
 /// The loopback self-test: drive a seeded trace through `--clients`
 /// concurrent line-protocol connections as fast as they will go, then
 /// drain and cross-check the client-side event counts against the
-/// server-side accounting.
+/// server-side accounting. `disconnect@stream` clauses of `faults` fire
+/// here — the client hangs up mid-stream and reconnects.
 fn drive_loopback(
     args: &Args,
     smoke: bool,
     server: NetServer,
     addr: &std::net::SocketAddr,
+    faults: Option<&FaultPlan>,
 ) -> Result<NetStats> {
     let deadline_ms = args.f64_or("deadline-ms", if smoke { 250.0 } else { 0.0 })?;
     let (d_req, d_pmin, d_pmax, d_gmin, d_gmax) = if smoke {
@@ -170,11 +234,17 @@ fn drive_loopback(
 
     // shard round-robin by trace id; each client runs its share
     // sequentially, so concurrency (and queue pressure) == `nclients`
+    let inject_disconnect = faults.map(|p| p.covers(FaultSite::Stream)).unwrap_or(false);
     let results = scoped_workers(nclients, |c| -> Result<DriveCounts> {
         let mut client = LineClient::connect(addr)?;
         let mut counts = DriveCounts::default();
         for req in requests.iter().filter(|r| r.id % nclients == c) {
-            drive_one(&mut client, req, &mut counts)?;
+            let hung_up = drive_one(&mut client, req, &mut counts, faults)?;
+            if hung_up {
+                // the socket is gone; the rest of this shard rides a
+                // fresh connection
+                client = LineClient::connect(addr)?;
+            }
         }
         Ok(counts)
     });
@@ -183,68 +253,130 @@ fn drive_loopback(
         let c = r?;
         agg.done += c.done;
         agg.within_deadline += c.within_deadline;
+        agg.degraded += c.degraded;
         agg.shed += c.shed;
         agg.rejected += c.rejected;
+        agg.failed += c.failed;
+        agg.disconnected += c.disconnected;
         agg.errors += c.errors;
     }
     println!(
-        "clients saw: {} done ({} within deadline), {} shed, {} rejected, {} errors",
-        agg.done, agg.within_deadline, agg.shed, agg.rejected, agg.errors
+        "clients saw: {} done ({} within deadline, {} degraded), {} shed, {} rejected, {} failed, {} disconnected, {} errors",
+        agg.done, agg.within_deadline, agg.degraded, agg.shed, agg.rejected, agg.failed,
+        agg.disconnected, agg.errors
     );
     let stats = server.shutdown()?;
-    if agg.done + agg.shed + agg.rejected + agg.errors != total {
-        bail!(
-            "client accounting violated: {} events for {} requests",
-            agg.done + agg.shed + agg.rejected + agg.errors,
-            total
-        );
+    let client_total =
+        agg.done + agg.shed + agg.rejected + agg.failed + agg.disconnected + agg.errors;
+    if client_total != total {
+        bail!("client accounting violated: {client_total} events for {total} requests");
     }
-    if agg.done != stats.finished.len() || agg.shed != stats.shed.len() {
+    if inject_disconnect {
+        // a hung-up request lands server-side as either a finish (the
+        // terminal was already in flight) or an abort-failure — every
+        // surplus over what clients observed must map to one hang-up
+        let surplus_done = stats.finished.len().checked_sub(agg.done);
+        let surplus_failed = stats.failed.len().checked_sub(agg.failed);
+        match (surplus_done, surplus_failed) {
+            (Some(sd), Some(sf)) if sd + sf == agg.disconnected => {}
+            _ => bail!(
+                "client/server disagree under disconnects: clients saw {} done / {} failed / {} hang-ups, server {} / {}",
+                agg.done,
+                agg.failed,
+                agg.disconnected,
+                stats.finished.len(),
+                stats.failed.len()
+            ),
+        }
+    } else if agg.done != stats.finished.len()
+        || agg.shed != stats.shed.len()
+        || agg.failed != stats.failed.len()
+    {
         bail!(
-            "client/server disagree: clients saw {} done / {} shed, server {} / {}",
+            "client/server disagree: clients saw {} done / {} shed / {} failed, server {} / {} / {}",
             agg.done,
             agg.shed,
+            agg.failed,
             stats.finished.len(),
-            stats.shed.len()
+            stats.shed.len(),
+            stats.failed.len()
         );
     }
     Ok(stats)
 }
 
 /// Send one trace request and fold its terminal event into `counts`.
-fn drive_one(client: &mut LineClient, req: &Request, counts: &mut DriveCounts) -> Result<()> {
-    let events = client.request(&request_line(req.id as u64, req))?;
-    match events.last() {
-        Some(WireEvent::Done { deadline_met, .. }) => {
-            counts.done += 1;
-            if *deadline_met {
-                counts.within_deadline += 1;
+/// Returns `true` when a `disconnect@stream` clause fired and the
+/// connection was deliberately dropped mid-stream (the caller must
+/// reconnect).
+fn drive_one(
+    client: &mut LineClient,
+    req: &Request,
+    counts: &mut DriveCounts,
+    faults: Option<&FaultPlan>,
+) -> Result<bool> {
+    client.send_line(&request_line(req.id as u64, req))?;
+    loop {
+        let ev = client.read_event()?;
+        match ev {
+            WireEvent::Token { .. } => {
+                if let Some(FaultAction::Disconnect) =
+                    crate::serve::fault::fire(faults, FaultSite::Stream)
+                {
+                    counts.disconnected += 1;
+                    return Ok(true); // caller replaces the client, closing this socket
+                }
+            }
+            WireEvent::Done { deadline_met, degraded, .. } => {
+                counts.done += 1;
+                if deadline_met {
+                    counts.within_deadline += 1;
+                }
+                if degraded {
+                    counts.degraded += 1;
+                }
+                return Ok(false);
+            }
+            WireEvent::Failed { .. } => {
+                counts.failed += 1;
+                return Ok(false);
+            }
+            WireEvent::Shed { .. } => {
+                counts.shed += 1;
+                return Ok(false);
+            }
+            WireEvent::Rejected { .. } => {
+                counts.rejected += 1;
+                return Ok(false);
+            }
+            WireEvent::Error { .. } => {
+                counts.errors += 1;
+                return Ok(false);
             }
         }
-        Some(WireEvent::Shed { .. }) => counts.shed += 1,
-        Some(WireEvent::Rejected { .. }) => counts.rejected += 1,
-        Some(WireEvent::Error { .. }) => counts.errors += 1,
-        Some(WireEvent::Token { .. }) | None => {
-            bail!("request {} ended without a terminal event", req.id)
-        }
     }
-    Ok(())
 }
 
 fn print_stats(stats: &NetStats) {
     let tokens: usize = stats.finished.iter().map(|f| f.tokens.len()).sum();
     println!(
-        "server: {} conns, {} queued, {} finished ({} tokens), {} shed, {} queue-rejected",
+        "server: {} conns, {} queued, {} finished ({} tokens, {} degraded), {} shed, {} queue-rejected",
         stats.accepted_conns,
         stats.requests,
         stats.finished.len(),
         tokens,
+        stats.degraded(),
         stats.shed.len(),
         stats.rejected.len()
     );
     println!(
-        "        {} rate-limited, {} parse errors, drained clean: {}",
-        stats.rejected_rate, stats.parse_errors, stats.drained_clean
+        "        {} rate-limited, {} parse errors, {} failed, {} restarts, {} requeues, drained clean: {}",
+        stats.rejected_rate,
+        stats.parse_errors,
+        stats.failed.len(),
+        stats.restarts,
+        stats.requeues,
+        stats.drained_clean
     );
     for w in &stats.workers {
         println!(

@@ -267,14 +267,19 @@ pub(crate) fn parse_kv_mode(args: &Args) -> Result<crate::serve::KvMode> {
 /// the paged allocator (`--kv-page` tokens per page, `--share-prefix`
 /// for COW prompt-prefix sharing) and adds the paged-vs-contiguous
 /// section to the record. `--trace-out <path>` dumps per-request
-/// telemetry spans as JSONL. `--smoke`/`--synthetic` build a
-/// magnitude-pruned checkpoint in process so the run is hermetic.
+/// telemetry spans as JSONL. `--faults <spec> [--fault-seed N]` injects
+/// deterministic worker panics / stalls / admission denials into the
+/// async sections (grammar in `docs/robustness.md`); `--degrade <s>`
+/// adds the shed-only vs sparsity-tiered-degradation goodput comparison
+/// (a second replica set pruned to sparsity `s`) to the overload sweep.
+/// `--smoke`/`--synthetic` build a magnitude-pruned checkpoint in
+/// process so the run is hermetic.
 pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     use crate::serve::bench::{
         magnitude_prune_in_place, OnlineBenchConfig, OverloadSweepConfig, ServeMode,
     };
     use crate::serve::model::WeightFormat;
-    use crate::serve::{Pacing, Policy, SchedulerConfig, ServeBenchConfig, TraceConfig};
+    use crate::serve::{FaultPlan, Pacing, Policy, SchedulerConfig, ServeBenchConfig, TraceConfig};
 
     let smoke = args.has("smoke");
     let config = args.str_or("config", if smoke { "test" } else { "sm" });
@@ -335,6 +340,15 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
             .with_context(|| format!("--policy must be fifo|priority|edf, got '{name}'"))?
     };
     let queue_cap = args.usize_or("queue-cap", 0)?;
+    // `--faults panic@decode:3,stall@prefill%7 --fault-seed 1`: the
+    // deterministic fault schedule threaded into every async section
+    let faults = match args.get("faults") {
+        Some(spec) => Some(std::sync::Arc::new(
+            FaultPlan::parse(spec, args.u64_or("fault-seed", 0xFA17)?)
+                .context("--faults: bad fault spec")?,
+        )),
+        None => None,
+    };
     // `--async`: the online multi-worker section. Pacing is closed-loop
     // when `--closed-loop N` is given, else wall-clock trace replay at
     // `--time-scale` (smoke defaults to 0 — flood the queue and measure
@@ -402,6 +416,15 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
             deadline_s: if deadline_ms > 0.0 { deadline_ms / 1e3 } else { defaults.deadline_s },
             queue_cap: args.usize_or("queue-cap", defaults.queue_cap)?,
             admit_reject: !args.has("no-admit-reject"),
+            degrade_sparsity: match args.get("degrade") {
+                Some(s) => {
+                    let ds = s
+                        .parse::<f64>()
+                        .with_context(|| format!("--degrade: bad sparsity '{s}'"))?;
+                    Some(ds)
+                }
+                None => None,
+            },
         })
     } else {
         None
@@ -422,6 +445,7 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
             None => Some(PathBuf::from("BENCH_serve.json")),
         },
         trace_out: args.get("trace-out").map(PathBuf::from),
+        faults,
     };
     crate::serve::bench::run_serve_bench(&engine, &params, &bcfg)?;
     Ok(())

@@ -9,6 +9,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -24,10 +25,11 @@ use super::engine::{
     argmax, block_tensors, decode_step, decode_step_backend, greedy_backend, greedy_cached,
     greedy_recompute, last_logits, prefill, score_nll, BlockTensors, DecodeScratch, ServeContext,
 };
+use super::fault::FaultPlan;
 use super::ingest::Pacing;
 use super::model::{PackedModel, WeightFormat};
 use super::paged::{gather_caches, Kv, KvMode, KvSpec, PagePool, PrefixRegistry};
-use super::online::{serve_online_traced, OnlineConfig, OnlineStats};
+use super::online::{serve_online_tiered, serve_online_traced, OnlineConfig, OnlineStats};
 use super::scheduler::{Policy, ReqKind, Request, Scheduler, SchedulerConfig};
 use super::trace::{poisson_trace, TraceConfig};
 
@@ -347,6 +349,10 @@ pub struct OverloadSweepConfig {
     pub queue_cap: usize,
     /// predictive admit-time shedding
     pub admit_reject: bool,
+    /// sparsity of the degrade tier (`--degrade`): add a shed-only vs
+    /// degrade goodput comparison served from a second, sparser replica
+    /// set; None skips the section
+    pub degrade_sparsity: Option<f64>,
 }
 
 impl Default for OverloadSweepConfig {
@@ -359,6 +365,7 @@ impl Default for OverloadSweepConfig {
             deadline_s: 0.25,
             queue_cap: 64,
             admit_reject: true,
+            degrade_sparsity: None,
         }
     }
 }
@@ -385,6 +392,9 @@ pub struct ServeBenchConfig {
     pub json_path: Option<PathBuf>,
     /// dump per-request telemetry spans of the online sections as JSONL
     pub trace_out: Option<PathBuf>,
+    /// deterministic fault injection for the online sections
+    /// (`--faults`/`--fault-seed`); None is the zero-overhead path
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeBenchConfig {
@@ -406,6 +416,7 @@ impl Default for ServeBenchConfig {
             overload: None,
             json_path: Some(PathBuf::from("BENCH_serve.json")),
             trace_out: None,
+            faults: None,
         }
     }
 }
@@ -556,6 +567,10 @@ fn online_run_summary(stats: &OnlineStats, workers: usize) -> OnlineRunSummary {
         ),
         ("shed", json::num(stats.shed.len() as f64)),
         ("rejected", json::num(stats.rejected.len() as f64)),
+        ("failed", json::num(stats.failed.len() as f64)),
+        ("restarts", json::num(stats.restarts as f64)),
+        ("requeues", json::num(stats.requeues as f64)),
+        ("degraded", json::num(stats.degraded() as f64)),
         ("per_worker", Json::Arr(per_worker)),
     ]);
     OnlineRunSummary {
@@ -625,6 +640,7 @@ fn run_online_bench(
                 queue_cap: ocfg.queue_cap,
                 kv: bcfg.kv,
                 share_prefix: bcfg.share_prefix,
+                faults: bcfg.faults.clone(),
                 ..OnlineConfig::default()
             },
             tracer,
@@ -757,6 +773,10 @@ fn run_overload_sweep(
                 policy,
                 queue_cap: swcfg.queue_cap,
                 admit_reject: swcfg.admit_reject,
+                kv: bcfg.kv,
+                share_prefix: bcfg.share_prefix,
+                faults: bcfg.faults.clone(),
+                ..OnlineConfig::default()
             };
             let stats = serve_online_traced(&ctxs, requests.clone(), &ocfg, tracer)?;
             let within = stats.within_deadline();
@@ -792,7 +812,18 @@ fn run_overload_sweep(
             ("points", Json::Arr(points)),
         ]));
     }
-    Ok(json::obj(vec![
+
+    // sparsity-tiered degradation: the same overload points served twice
+    // — shed-only vs routing pressured admissions to a sparser (faster)
+    // replica set instead of letting them miss their deadlines. The
+    // interesting claim: past saturation, degraded goodput holds above
+    // shed-only, because a sparse answer beats a 503.
+    let degrade = match swcfg.degrade_sparsity {
+        Some(ds) => Some(run_degrade_sweep(params, cfg, bcfg, swcfg, &tcfg, &requests, ds, tracer)?),
+        None => None,
+    };
+
+    let mut fields = vec![
         ("deadline_ms", json::num(swcfg.deadline_s * 1e3)),
         ("workers", json::num(swcfg.workers as f64)),
         ("queue_cap", json::num(swcfg.queue_cap as f64)),
@@ -801,6 +832,106 @@ fn run_overload_sweep(
         ("requests", json::num(n as f64)),
         ("base_rate", json::num(tcfg.rate)),
         ("policies", Json::Arr(policy_rows)),
+    ];
+    if let Some(d) = degrade {
+        fields.push(("degrade", d));
+    }
+    Ok(json::obj(fields))
+}
+
+/// The shed-only vs degrade goodput comparison: every overload multiplier
+/// runs once without a degrade tier and once with one (a second replica
+/// set magnitude-pruned to `degrade_sparsity`, same weight format), on the
+/// same seeded trace and the sweep's first policy.
+#[allow(clippy::too_many_arguments)]
+fn run_degrade_sweep(
+    params: &ParamStore,
+    cfg: &ModelConfig,
+    bcfg: &ServeBenchConfig,
+    swcfg: &OverloadSweepConfig,
+    tcfg: &TraceConfig,
+    requests: &[Request],
+    degrade_sparsity: f64,
+    tracer: Option<&Tracer>,
+) -> Result<Json> {
+    if !(0.0..1.0).contains(&degrade_sparsity) {
+        bail!("degrade sparsity must be in [0, 1), got {degrade_sparsity}");
+    }
+    let policy = swcfg.policies[0];
+    let max_pos = tcfg.max_request_tokens();
+    let n = requests.len();
+    let ctxs = (0..swcfg.workers)
+        .map(|_| {
+            Ok(ServeContext::new(PackedModel::materialize(params, cfg, swcfg.format)?, max_pos))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut degraded_params = params.clone();
+    magnitude_prune_in_place(&mut degraded_params, cfg, degrade_sparsity)?;
+    let dctxs = (0..swcfg.workers)
+        .map(|_| {
+            Ok(ServeContext::new(
+                PackedModel::materialize(&degraded_params, cfg, swcfg.format)?,
+                max_pos,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    println!(
+        "\n== degrade sweep: tier sparsity {:.2}, policy {}, {} workers ==",
+        degrade_sparsity,
+        policy.name(),
+        swcfg.workers
+    );
+    println!(
+        "{:<6} {:>14} {:>13} {:>9} {:>6} {:>7}",
+        "xload", "shed-only r/s", "degrade r/s", "degraded", "shed", "failed"
+    );
+    let mut points: Vec<Json> = Vec::new();
+    for &m in &swcfg.multipliers {
+        let ocfg = OnlineConfig {
+            workers: swcfg.workers,
+            sched: bcfg.sched.clone(),
+            pacing: Pacing::Replay { time_scale: 1.0 / m },
+            policy,
+            queue_cap: swcfg.queue_cap,
+            admit_reject: swcfg.admit_reject,
+            kv: bcfg.kv,
+            share_prefix: bcfg.share_prefix,
+            faults: bcfg.faults.clone(),
+            ..OnlineConfig::default()
+        };
+        let shed_only =
+            serve_online_tiered(&ctxs, None, requests.to_vec(), &ocfg, tracer)?;
+        let tiered =
+            serve_online_tiered(&ctxs, Some(dctxs.as_slice()), requests.to_vec(), &ocfg, tracer)?;
+        let shed_goodput = shed_only.within_deadline() as f64 / shed_only.wall_s.max(1e-9);
+        let tier_goodput = tiered.within_deadline() as f64 / tiered.wall_s.max(1e-9);
+        println!(
+            "{:>5.1}x {:>14.1} {:>13.1} {:>9} {:>6} {:>7}",
+            m,
+            shed_goodput,
+            tier_goodput,
+            tiered.degraded(),
+            tiered.shed.len(),
+            tiered.failed.len()
+        );
+        points.push(json::obj(vec![
+            ("multiplier", json::num(m)),
+            ("offered_rps", json::num(tcfg.rate * m)),
+            ("shed_only_goodput_rps", json::num(shed_goodput)),
+            ("shed_only_within_deadline", json::num(shed_only.within_deadline() as f64)),
+            ("shed_only_shed", json::num(shed_only.shed.len() as f64)),
+            ("degrade_goodput_rps", json::num(tier_goodput)),
+            ("degrade_within_deadline", json::num(tiered.within_deadline() as f64)),
+            ("degraded", json::num(tiered.degraded() as f64)),
+            ("degrade_shed", json::num(tiered.shed.len() as f64)),
+            ("degrade_failed", json::num(tiered.failed.len() as f64)),
+        ]));
+    }
+    Ok(json::obj(vec![
+        ("sparsity", json::num(degrade_sparsity)),
+        ("policy", json::s(policy.name())),
+        ("requests", json::num(n as f64)),
+        ("points", Json::Arr(points)),
     ]))
 }
 
@@ -1188,24 +1319,36 @@ pub fn run_serve_bench(
     // telemetry: one tracer shared by every traced section of the run
     let tracer = bcfg.trace_out.as_ref().map(|_| Tracer::new());
 
-    // async multi-worker section
-    let online = match &bcfg.online {
-        Some(ocfg) => Some(run_online_bench(params, &cfg, bcfg, ocfg, tracer.as_ref())?),
-        None => None,
-    };
+    // the traced sections run inside a closure so the spans collected up
+    // to a failure still reach --trace-out: an abnormal end (e.g. a fault
+    // schedule that exhausts every retry budget) is exactly when the
+    // trace is worth having
+    let traced = (|| -> Result<_> {
+        // async multi-worker section
+        let online = match &bcfg.online {
+            Some(ocfg) => Some(run_online_bench(params, &cfg, bcfg, ocfg, tracer.as_ref())?),
+            None => None,
+        };
 
-    // overload sweep: goodput-vs-offered-load curves per queue policy
-    let overload = match &bcfg.overload {
-        Some(swcfg) => Some(run_overload_sweep(params, &cfg, bcfg, swcfg, tracer.as_ref())?),
-        None => None,
-    };
+        // overload sweep: goodput-vs-offered-load curves per queue policy
+        let overload = match &bcfg.overload {
+            Some(swcfg) => Some(run_overload_sweep(params, &cfg, bcfg, swcfg, tracer.as_ref())?),
+            None => None,
+        };
 
-    // paged-vs-contiguous section: residency, fixed-memory concurrency,
-    // prefix sharing, work stealing
-    let paged = match bcfg.kv {
-        KvMode::Paged { .. } => Some(run_paged_bench(params, &cfg, bcfg, tracer.as_ref())?),
-        KvMode::Contig => None,
-    };
+        // paged-vs-contiguous section: residency, fixed-memory concurrency,
+        // prefix sharing, work stealing
+        let paged = match bcfg.kv {
+            KvMode::Paged { .. } => Some(run_paged_bench(params, &cfg, bcfg, tracer.as_ref())?),
+            KvMode::Contig => None,
+        };
+        Ok((online, overload, paged))
+    })();
+    if let (Some(path), Some(t)) = (&bcfg.trace_out, &tracer) {
+        let n = t.write_jsonl(path)?;
+        println!("[telemetry: {n} spans -> {}]", path.display());
+    }
+    let (online, overload, paged) = traced?;
 
     // machine-readable record
     let mode_rows: Vec<Json> = reports
@@ -1295,10 +1438,6 @@ pub fn run_serve_bench(
         std::fs::write(path, payload.to_string_pretty())
             .with_context(|| format!("writing serve bench record to {}", path.display()))?;
         println!("[results -> {}]", path.display());
-    }
-    if let (Some(path), Some(t)) = (&bcfg.trace_out, &tracer) {
-        let n = t.write_jsonl(path)?;
-        println!("[telemetry: {n} spans -> {}]", path.display());
     }
     Ok(payload)
 }

@@ -58,6 +58,19 @@ impl ServeContext {
     pub fn new_kv(&self, spec: &KvSpec, cost: usize) -> Option<Kv> {
         spec.new_kv(self.model.cfg.n_blocks, self.model.cfg.d_model, self.max_pos, cost)
     }
+
+    /// Can `other` serve as a degrade tier behind this context? The two
+    /// checkpoints must agree on every shape the serving plumbing bakes
+    /// in — KV layout (blocks × width), vocabulary, and position window —
+    /// so a request can be routed to either replica interchangeably.
+    /// Weights (and so sparsity) are free to differ: that is the point.
+    pub fn compatible_tier(&self, other: &ServeContext) -> bool {
+        self.model.cfg.n_blocks == other.model.cfg.n_blocks
+            && self.model.cfg.d_model == other.model.cfg.d_model
+            && self.model.cfg.n_heads == other.model.cfg.n_heads
+            && self.model.cfg.vocab == other.model.cfg.vocab
+            && self.max_pos == other.max_pos
+    }
 }
 
 /// Gather embedding rows: tokens `[n]` -> `[n, d]`.

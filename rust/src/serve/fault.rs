@@ -1,0 +1,393 @@
+//! Deterministic, seeded fault injection for the serving stack
+//! (`--faults <spec> --fault-seed <n>`, see `docs/robustness.md`).
+//!
+//! A [`FaultPlan`] is policy, not mechanism: callers ask
+//! [`FaultPlan::fire`] at fixed *sites* in the serving loop and perform
+//! the returned [`FaultAction`] themselves — the worker panics at its own
+//! call site (so the injected death is indistinguishable from a real
+//! mid-prefill/mid-decode bug to the supervision layer), the loopback
+//! driver closes its own socket, the admission predicate refuses its own
+//! pop. The plan only counts site hits and decides *when* to fire.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! spec    := clause (',' clause)*
+//! clause  := action '@' site trigger [ '=' param ]
+//! action  := 'panic' | 'stall' | 'disconnect' | 'deny'
+//! site    := 'prefill' | 'decode' | 'admit' | 'stream'
+//! trigger := ':' n [ '+' every ]     exact: fire at the n-th site hit
+//!                                    (1-based), then every `every` hits
+//!          | '%' period              seeded: fire on a pseudo-random
+//!                                    1/period of hits (splitmix64 over
+//!                                    (seed, site, hit index))
+//! param   := stall milliseconds (stall only; default 10)
+//! ```
+//!
+//! Examples: `panic@prefill:2` (die during the 2nd prefill pool-wide),
+//! `panic@decode:3+5` (3rd batched decode step, then every 5th),
+//! `stall@decode%4=25` (sleep 25 ms on a seeded quarter of decode
+//! steps), `disconnect@stream:4` (the driver closes the client socket
+//! after the 4th streamed token event), `deny@admit%3` (refuse a seeded
+//! third of admission attempts — synthetic page-pool pressure).
+//!
+//! # Determinism
+//!
+//! Site counters are global atomics: for a fixed spec and seed, the set
+//! of *site-hit indices* that fire is exactly reproducible. Which worker
+//! or request owns a given hit still depends on thread interleaving —
+//! deliberately so: the chaos suite's invariants (accounting, pool
+//! drain, one terminal event per stream) must hold under *any*
+//! schedule, and the seeded trigger explores a different one per seed.
+//!
+//! # Zero overhead when disabled
+//!
+//! Every injection point guards on `Option<&FaultPlan>`; with `None`
+//! (the default — no `--faults`) the check is a branch on a constant
+//! `None`, no atomics touched, and a fault-free run is bitwise identical
+//! to a build without the harness in the loop (pinned by
+//! `tests/chaos.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Where in the serving loop a fault can fire. Hit counters are
+/// per-site, pool-wide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// a worker is about to prefill an admitted request
+    Prefill,
+    /// a worker is about to run one batched decode step
+    Decode,
+    /// a worker's admission predicate is examining the queue front
+    Admit,
+    /// the loopback driver received one streamed token event
+    Stream,
+}
+
+const N_SITES: usize = 4;
+
+impl FaultSite {
+    pub const ALL: [FaultSite; N_SITES] =
+        [FaultSite::Prefill, FaultSite::Decode, FaultSite::Admit, FaultSite::Stream];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSite::Prefill => "prefill",
+            FaultSite::Decode => "decode",
+            FaultSite::Admit => "admit",
+            FaultSite::Stream => "stream",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            FaultSite::Prefill => 0,
+            FaultSite::Decode => 1,
+            FaultSite::Admit => 2,
+            FaultSite::Stream => 3,
+        }
+    }
+
+    fn from_name(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// What the caller must do when a clause fires at its site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// panic right here (an injected worker death — the supervision
+    /// layer must recover)
+    Panic,
+    /// sleep this many milliseconds (a slow worker / stall)
+    Stall(u64),
+    /// close the client side of the stream (mid-stream disconnect)
+    Disconnect,
+    /// refuse this admission once (synthetic page-pool pressure)
+    Deny,
+}
+
+impl FaultAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultAction::Panic => "panic",
+            FaultAction::Stall(_) => "stall",
+            FaultAction::Disconnect => "disconnect",
+            FaultAction::Deny => "deny",
+        }
+    }
+}
+
+/// When a clause fires, in terms of its site's 1-based hit counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Trigger {
+    /// exactly hit `n`, and then every `every` hits after it (0 = once)
+    Nth { n: u64, every: u64 },
+    /// a seeded pseudo-random 1/period of all hits
+    Seeded { period: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Clause {
+    site: FaultSite,
+    action: FaultAction,
+    trigger: Trigger,
+}
+
+impl Clause {
+    fn fires(&self, hit: u64, seed: u64) -> bool {
+        match self.trigger {
+            Trigger::Nth { n, every } => {
+                hit == n || (every > 0 && hit > n && (hit - n) % every == 0)
+            }
+            Trigger::Seeded { period } => {
+                splitmix64(seed ^ (self.site.index() as u64) << 32 ^ hit) % period == 0
+            }
+        }
+    }
+}
+
+/// SplitMix64: the standard 64-bit finalizer — a tiny, seedable,
+/// platform-independent hash (same constants as `util::rng`'s family).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// A parsed, seeded fault schedule. Shared by reference (or `Arc`)
+/// across the worker pool; all state is atomic counters.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    clauses: Vec<Clause>,
+    /// 1-based hit counters, one per [`FaultSite`]
+    hits: [AtomicU64; N_SITES],
+    fired: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a `--faults` spec (grammar in the module docs). Rejects
+    /// unknown actions/sites, zero counts/periods, and action/site
+    /// combinations that have no injection point (`panic`/`stall` fire
+    /// inside workers at `prefill`/`decode`; `deny` only at `admit`;
+    /// `disconnect` only at `stream`).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut clauses = Vec::new();
+        for raw in spec.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            clauses.push(parse_clause(raw).map_err(|e| anyhow!("fault clause '{raw}': {e}"))?);
+        }
+        if clauses.is_empty() {
+            bail!("--faults spec '{spec}' contains no clauses");
+        }
+        Ok(FaultPlan {
+            seed,
+            clauses,
+            hits: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            fired: AtomicU64::new(0),
+        })
+    }
+
+    /// Count one hit at `site` and return the action of the first clause
+    /// that fires there, if any. The caller performs the action.
+    pub fn fire(&self, site: FaultSite) -> Option<FaultAction> {
+        let hit = self.hits[site.index()].fetch_add(1, Ordering::Relaxed) + 1;
+        let action = self
+            .clauses
+            .iter()
+            .find(|c| c.site == site && c.fires(hit, self.seed))
+            .map(|c| c.action);
+        if action.is_some() {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        action
+    }
+
+    /// Faults fired so far (all sites).
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::Relaxed)
+    }
+
+    /// Hits counted at `site` so far (fired or not).
+    pub fn hits(&self, site: FaultSite) -> u64 {
+        self.hits[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// True when the plan has a clause at `site` — lets a caller skip
+    /// plumbing (e.g. the driver only threads the plan into its client
+    /// loop when a `stream` clause exists).
+    pub fn covers(&self, site: FaultSite) -> bool {
+        self.clauses.iter().any(|c| c.site == site)
+    }
+}
+
+/// Convenience guard for injection points: counts a hit only when a plan
+/// is attached. `None` is the zero-overhead disabled path.
+#[inline]
+pub fn fire(plan: Option<&FaultPlan>, site: FaultSite) -> Option<FaultAction> {
+    match plan {
+        Some(p) => p.fire(site),
+        None => None,
+    }
+}
+
+fn parse_clause(raw: &str) -> Result<Clause> {
+    // action '@' site trigger ['=' param]
+    let (action_s, rest) = raw
+        .split_once('@')
+        .ok_or_else(|| anyhow!("expected action@site:trigger (e.g. panic@prefill:2)"))?;
+    let (rest, param) = match rest.split_once('=') {
+        Some((r, p)) => {
+            let ms: u64 = p
+                .trim()
+                .trim_end_matches("ms")
+                .parse()
+                .map_err(|_| anyhow!("stall parameter '{p}' is not a millisecond count"))?;
+            (r, Some(ms))
+        }
+        None => (rest, None),
+    };
+    let (site_s, trigger) = if let Some((s, t)) = rest.split_once(':') {
+        let (n_s, every_s) = match t.split_once('+') {
+            Some((n, e)) => (n, Some(e)),
+            None => (t, None),
+        };
+        let n: u64 = n_s.trim().parse().map_err(|_| anyhow!("hit count '{n_s}' is not a number"))?;
+        if n == 0 {
+            bail!("hit counts are 1-based; ':0' never fires");
+        }
+        let every = match every_s {
+            Some(e) => {
+                let every: u64 =
+                    e.trim().parse().map_err(|_| anyhow!("repeat '{e}' is not a number"))?;
+                if every == 0 {
+                    bail!("'+0' repeat is meaningless; omit it to fire once");
+                }
+                every
+            }
+            None => 0,
+        };
+        (s, Trigger::Nth { n, every })
+    } else if let Some((s, p)) = rest.split_once('%') {
+        let period: u64 =
+            p.trim().parse().map_err(|_| anyhow!("period '{p}' is not a number"))?;
+        if period == 0 {
+            bail!("'%0' would divide by zero; use %1 to fire on every hit");
+        }
+        (s, Trigger::Seeded { period })
+    } else {
+        bail!("missing trigger: append ':n', ':n+k' or '%period'");
+    };
+    let site = FaultSite::from_name(site_s.trim())
+        .ok_or_else(|| anyhow!("unknown site '{site_s}' (prefill|decode|admit|stream)"))?;
+    let action = match action_s.trim() {
+        "panic" => FaultAction::Panic,
+        "stall" => FaultAction::Stall(param.unwrap_or(10)),
+        "disconnect" => FaultAction::Disconnect,
+        "deny" => FaultAction::Deny,
+        other => bail!("unknown action '{other}' (panic|stall|disconnect|deny)"),
+    };
+    if param.is_some() && !matches!(action, FaultAction::Stall(_)) {
+        bail!("'=' parameter only applies to stall");
+    }
+    match (action, site) {
+        (FaultAction::Panic | FaultAction::Stall(_), FaultSite::Prefill | FaultSite::Decode) => {}
+        (FaultAction::Deny, FaultSite::Admit) => {}
+        (FaultAction::Disconnect, FaultSite::Stream) => {}
+        (a, s) => bail!("action '{}' has no injection point at site '{}'", a.name(), s.name()),
+    }
+    Ok(Clause { site, action, trigger })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_grammar() {
+        let p = FaultPlan::parse(
+            "panic@prefill:2, panic@decode:3+5, stall@decode%4=25, disconnect@stream:4, deny@admit%3",
+            7,
+        )
+        .unwrap();
+        assert_eq!(p.clauses.len(), 5);
+        assert!(p.covers(FaultSite::Stream));
+        assert_eq!(p.clauses[2].action, FaultAction::Stall(25));
+        // 'ms' suffix tolerated on the stall parameter
+        let p = FaultPlan::parse("stall@decode:1=40ms", 0).unwrap();
+        assert_eq!(p.clauses[0].action, FaultAction::Stall(40));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "panic",
+            "panic@prefill",
+            "panic@nowhere:1",
+            "explode@decode:1",
+            "panic@prefill:0",
+            "panic@prefill:2+0",
+            "stall@decode%0",
+            "panic@stream:1",     // panic has no stream injection point
+            "disconnect@decode:1", // disconnect is client-side only
+            "deny@prefill:1",
+            "panic@prefill:1=5",  // param is stall-only
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "spec '{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_on_schedule() {
+        let p = FaultPlan::parse("panic@prefill:3+2", 0).unwrap();
+        let fired: Vec<bool> =
+            (1..=9).map(|_| p.fire(FaultSite::Prefill).is_some()).collect();
+        assert_eq!(
+            fired,
+            [false, false, true, false, true, false, true, false, true],
+            "fires at hit 3, then every 2nd"
+        );
+        assert_eq!(p.fired(), 4);
+        assert_eq!(p.hits(FaultSite::Prefill), 9);
+        // other sites are untouched
+        assert_eq!(p.fire(FaultSite::Decode), None);
+    }
+
+    #[test]
+    fn seeded_trigger_is_deterministic_per_seed() {
+        let runs: Vec<Vec<bool>> = (0..2)
+            .map(|_| {
+                let p = FaultPlan::parse("deny@admit%3", 42).unwrap();
+                (0..64).map(|_| p.fire(FaultSite::Admit).is_some()).collect()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "same seed, same schedule");
+        let fired = runs[0].iter().filter(|b| **b).count();
+        assert!(fired > 0 && fired < 64, "a %3 trigger fires on some but not all hits");
+        // a different seed explores a different schedule
+        let p = FaultPlan::parse("deny@admit%3", 43).unwrap();
+        let other: Vec<bool> = (0..64).map(|_| p.fire(FaultSite::Admit).is_some()).collect();
+        assert_ne!(runs[0], other, "seed 43 should differ from seed 42");
+    }
+
+    #[test]
+    fn first_matching_clause_wins() {
+        let p = FaultPlan::parse("stall@decode:2=5,panic@decode:2", 0).unwrap();
+        assert_eq!(p.fire(FaultSite::Decode), None);
+        assert_eq!(p.fire(FaultSite::Decode), Some(FaultAction::Stall(5)));
+    }
+
+    #[test]
+    fn disabled_plan_is_a_no_op() {
+        assert_eq!(fire(None, FaultSite::Prefill), None);
+        assert_eq!(fire(None, FaultSite::Decode), None);
+    }
+}

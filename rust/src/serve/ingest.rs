@@ -36,9 +36,13 @@
 //!   race-free: nothing can slip into a closing queue.
 //!
 //! Every outcome is recorded exactly once: a request either reaches a
-//! worker (and retires through `note_done`), is shed, or is rejected —
+//! worker (and retires through `note_done`, or terminally fails through
+//! `note_failed` under fault injection), is shed, or is rejected —
 //! [`IngestQueue::take_outcomes`] returns the shed/rejected ledgers so
-//! callers can assert `finished + shed + rejected == submitted`.
+//! callers can assert `finished + failed + shed + rejected == submitted`.
+//! A supervised restart may `requeue` a popped-but-unserved request; it
+//! re-enters at its original place in line and retires exactly once like
+//! any other.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
@@ -62,6 +66,9 @@ pub struct ArrivedRequest {
     pub reply: Option<Sender<Reply>>,
     /// arrival sequence number — the FIFO tiebreak inside every policy
     pub(crate) seq: u64,
+    /// completed service attempts (0 on arrival; bumped each time a
+    /// supervised restart requeues this request for replay from scratch)
+    pub(crate) attempts: u32,
 }
 
 /// How the producer paces the trace into the queue.
@@ -92,9 +99,16 @@ pub enum Reply {
     Token { index: usize, token: i32 },
     /// The request retired normally. `tokens` is the full generated
     /// sequence (empty for scoring requests, which carry `nll` instead).
-    Done { tokens: Vec<i32>, nll: Option<f64>, deadline_met: bool },
+    /// `degraded` marks an answer served from the sparser degrade tier
+    /// (bit-exact for *that* checkpoint, not the primary).
+    Done { tokens: Vec<i32>, nll: Option<f64>, deadline_met: bool, degraded: bool },
     /// The request was shed from the queue after its deadline passed.
     Shed { waited_s: f64 },
+    /// The request terminally failed after `attempts` service attempts
+    /// (worker died mid-service and the retry budget or deadline was
+    /// exhausted — or tokens had already streamed, so a replay could
+    /// never be spliced without emitting a token twice).
+    Failed { attempts: u32 },
 }
 
 /// Why a push was turned away at the door.
@@ -285,7 +299,8 @@ impl IngestQueue {
                 None => {
                     let seq = g.next_seq;
                     g.next_seq += 1;
-                    let arrived = ArrivedRequest { req, enqueued: now, deadline_at, reply, seq };
+                    let arrived =
+                        ArrivedRequest { req, enqueued: now, deadline_at, reply, seq, attempts: 0 };
                     // stable back-scan insertion: arrivals are usually
                     // near their final slot, and FIFO never scans at all
                     let mut pos = g.ready.len();
@@ -388,6 +403,56 @@ impl IngestQueue {
         }
         drop(g);
         self.retired.notify_all();
+    }
+
+    /// Return a popped-but-unserved request to the queue for replay from
+    /// scratch (supervised-restart recovery). A requeue is *not* a new
+    /// arrival: it bypasses the draining/capacity/deadline admission
+    /// checks (the request was already admitted once — its expired
+    /// deadline, if any, is the pop-time sweep's business) and reinserts
+    /// by its **original** seq, so under every policy the request takes
+    /// exactly the place in line it held before the worker died.
+    pub(crate) fn requeue(&self, a: ArrivedRequest) {
+        {
+            let mut g = locked(&self.state);
+            debug_assert!(g.in_flight > 0, "requeue without a matching pop");
+            g.in_flight = g.in_flight.saturating_sub(1);
+            let mut pos = g.ready.len();
+            // orders_before alone is total for Priority/Edf (seq is in the
+            // key); Fifo compares nothing, so fall through to raw seq
+            while pos > 0 && {
+                let b = &g.ready[pos - 1];
+                orders_before(&a, b, self.cfg.policy)
+                    || (!orders_before(b, &a, self.cfg.policy) && a.seq < b.seq)
+            } {
+                pos -= 1;
+            }
+            if pos == g.ready.len() {
+                g.ready.push_back(a);
+            } else {
+                g.ready.insert(pos, a);
+            }
+        }
+        self.arrived.notify_all();
+    }
+
+    /// A popped request terminally failed (its ledger entry is the
+    /// caller's business — the queue only releases the in-flight slot so
+    /// closed-loop pacing and drain accounting stay exact).
+    pub(crate) fn note_failed(&self) {
+        {
+            let mut g = locked(&self.state);
+            debug_assert!(g.in_flight > 0, "note_failed without a matching pop");
+            g.in_flight = g.in_flight.saturating_sub(1);
+        }
+        self.retired.notify_all();
+    }
+
+    /// Queue pressure snapshot for degrade routing: (queued depth, EWMA
+    /// of per-request service seconds; 0 before any retirement).
+    pub fn pressure(&self) -> (usize, f64) {
+        let g = locked(&self.state);
+        (g.ready.len(), g.ewma_service_s)
     }
 
     /// Closed-loop producer throttle: block until fewer than `clients`
@@ -643,6 +708,66 @@ mod tests {
         // ledgers drain exactly once
         let (shed2, _) = q.take_outcomes();
         assert!(shed2.is_empty());
+    }
+
+    #[test]
+    fn requeue_restores_original_position() {
+        // FIFO: a requeued request goes back to the *front* of later
+        // arrivals (its original seq), not the back of the line
+        let q = IngestQueue::new();
+        for i in 0..3 {
+            q.push(req(i, 1));
+        }
+        let mut a = match q.try_pop(|_| true) {
+            Pop::Got(a) => a,
+            _ => panic!("front should pop"),
+        };
+        assert_eq!(a.req.id, 0);
+        a.attempts += 1;
+        q.requeue(a);
+        assert_eq!(pop_ids(&q), vec![0, 1, 2]);
+
+        // EDF: requeue honors the deadline order, seq only as tiebreak
+        let q = IngestQueue::with_config(QueueConfig { policy: Policy::Edf, ..Default::default() });
+        q.push(req_qos(0, Qos::with_deadline(5.0)));
+        q.push(req_qos(1, Qos::with_deadline(1.0)));
+        let a = match q.try_pop(|_| true) {
+            Pop::Got(a) => a,
+            _ => panic!("front should pop"),
+        };
+        assert_eq!(a.req.id, 1, "EDF serves the tighter deadline first");
+        q.requeue(a);
+        assert_eq!(pop_ids(&q), vec![1, 0]);
+    }
+
+    #[test]
+    fn requeue_bypasses_admission_checks() {
+        // a full, closed queue still takes a requeue — it is a replay of
+        // an already-admitted request, not a new arrival
+        let q = IngestQueue::with_config(QueueConfig { capacity: 1, ..Default::default() });
+        q.push(req(0, 1));
+        let a = match q.try_pop(|_| true) {
+            Pop::Got(a) => a,
+            _ => panic!("front should pop"),
+        };
+        q.push(req(1, 1)); // refills capacity
+        q.close();
+        q.requeue(a);
+        assert_eq!(pop_ids(&q), vec![0, 1]);
+        assert!(q.is_drained());
+    }
+
+    #[test]
+    fn note_failed_frees_the_in_flight_slot() {
+        let q = IngestQueue::new();
+        q.push(req(0, 1));
+        assert!(matches!(q.try_pop(|_| true), Pop::Got(_)));
+        q.note_failed();
+        // wait_capacity(1) would deadlock if the slot leaked
+        q.wait_capacity(1);
+        let (depth, ewma) = q.pressure();
+        assert_eq!(depth, 0);
+        assert_eq!(ewma, 0.0, "failures never feed the service-time EWMA");
     }
 
     #[test]

@@ -39,6 +39,14 @@
 //!   p50/p95/p99 latency, per-worker utilization and the queue-wait vs
 //!   compute split into `BENCH_serve.json` — and `--overload-sweep`,
 //!   goodput-vs-offered-load curves per queue [`scheduler::Policy`].
+//! * [`fault`] — deterministic, seeded fault injection (`--faults`):
+//!   worker panics mid-prefill/mid-decode, slow-worker stalls, client
+//!   disconnects mid-stream, and admission pressure at scheduled points,
+//!   exercising the supervision layer in [`online`] (panic isolation,
+//!   capped-backoff restart, requeue-or-fail recovery) and the
+//!   sparsity-tiered degradation path (`--degrade`: answer from a
+//!   sparser replica instead of shedding). Grammar, invariants and the
+//!   chaos suite in `docs/robustness.md`.
 //! * [`net`] — the TCP front end (`besa serve-net`): line-delimited JSON
 //!   + an HTTP/1.1-subset adapter over the very same `worker_loop`, with
 //!   overload control (per-client token buckets, deadline shedding,
@@ -93,6 +101,7 @@
 
 pub mod bench;
 pub mod engine;
+pub mod fault;
 pub mod ingest;
 pub mod kv;
 pub mod model;
@@ -104,11 +113,15 @@ pub mod trace;
 
 pub use bench::{run_serve_bench, run_trace, ServeBenchConfig, ServeMode};
 pub use engine::ServeContext;
+pub use fault::{FaultAction, FaultPlan, FaultSite};
 pub use ingest::{Admit, IngestQueue, Pacing, QueueConfig, RejectReason, Reply};
 pub use kv::KvCache;
 pub use model::{PackedModel, WeightFormat};
 pub use net::{LineClient, NetConfig, NetServer, NetStats};
-pub use online::{serve_online, serve_online_traced, OnlineConfig, OnlineStats};
+pub use online::{
+    serve_online, serve_online_tiered, serve_online_traced, FailedOutcome, OnlineConfig,
+    OnlineStats,
+};
 pub use paged::{gather_caches, Kv, KvMode, KvSpec, PagePool, PageTable, PrefixRegistry};
 pub use scheduler::{Policy, Qos, ReqKind, Request, Scheduler, SchedulerConfig};
 pub use trace::{poisson_trace, TraceConfig};

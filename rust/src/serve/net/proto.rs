@@ -23,8 +23,18 @@
 //! {"event":"done","id":7,"status":"ok","tokens":[42,17],"nll":null,"deadline_met":true}
 //! {"event":"done","id":7,"status":"shed","code":503,"waited_ms":12.5}
 //! {"event":"done","id":7,"status":"rejected","code":429,"reason":"client 2 rate-limited"}
+//! {"event":"done","id":7,"status":"failed","code":500,"attempts":3}
 //! {"event":"error","code":400,"reason":"unknown field 'deadline_m'"}
 //! ```
+//!
+//! A `done/ok` answered by the sparsity-tiered degrade replica
+//! (`--degrade`, see `docs/robustness.md`) additionally carries
+//! `"degraded":true`; the field is omitted entirely — not `false` — on
+//! the primary path, so non-degraded output is byte-identical with and
+//! without the feature compiled against. `done/failed` is the terminal
+//! event of a request whose worker died mid-service past its retry
+//! budget (or whose stream had already seen tokens — a replay never
+//! emits a token twice).
 //!
 //! Number formatting goes through [`crate::util::json`], whose shortest
 //! round-trip `f64` printing makes the NLL in a `done` line bit-exact
@@ -271,21 +281,57 @@ pub fn token_line(id: u64, index: usize, token: i32) -> String {
 }
 
 /// Terminal `done/ok` body (no terminator — the HTTP adapter sends it as
-/// a response body).
-pub fn done_body(id: u64, tokens: &[i32], nll: Option<f64>, deadline_met: bool) -> String {
-    json::obj(vec![
+/// a response body). `degraded` appears only when true, so the primary
+/// path's bytes are identical to a build that never heard of tiers.
+pub fn done_body(
+    id: u64,
+    tokens: &[i32],
+    nll: Option<f64>,
+    deadline_met: bool,
+    degraded: bool,
+) -> String {
+    let mut fields = vec![
         ("event", json::s("done")),
         ("id", json::num(id as f64)),
         ("status", json::s("ok")),
         ("tokens", json::arr(tokens.iter().map(|t| json::num(*t as f64)))),
         ("nll", nll_json(nll)),
         ("deadline_met", Json::Bool(deadline_met)),
+    ];
+    if degraded {
+        fields.push(("degraded", Json::Bool(true)));
+    }
+    json::obj(fields).to_string()
+}
+
+pub fn done_line(
+    id: u64,
+    tokens: &[i32],
+    nll: Option<f64>,
+    deadline_met: bool,
+    degraded: bool,
+) -> String {
+    let mut line = done_body(id, tokens, nll, deadline_met, degraded);
+    line.push('\n');
+    line
+}
+
+/// Terminal `done/failed` body: the request's worker died mid-service
+/// and recovery could not replay it (retry budget or deadline exhausted,
+/// or tokens had already streamed).
+pub fn failed_body(id: u64, attempts: u32) -> String {
+    json::obj(vec![
+        ("event", json::s("done")),
+        ("id", json::num(id as f64)),
+        ("status", json::s("failed")),
+        ("code", json::num(500.0)),
+        ("attempts", json::num(attempts as f64)),
     ])
     .to_string()
 }
 
-pub fn done_line(id: u64, tokens: &[i32], nll: Option<f64>, deadline_met: bool) -> String {
-    let mut line = done_body(id, tokens, nll, deadline_met);
+pub fn failed_line(id: u64, attempts: u32) -> String {
+    let mut line = failed_body(id, attempts);
     line.push('\n');
     line
 }
@@ -346,9 +392,10 @@ pub fn error_line(code: u16, reason: &str) -> String {
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireEvent {
     Token { id: u64, index: usize, token: i32 },
-    Done { id: u64, tokens: Vec<i32>, nll: Option<f64>, deadline_met: bool },
+    Done { id: u64, tokens: Vec<i32>, nll: Option<f64>, deadline_met: bool, degraded: bool },
     Shed { id: u64, code: u16, waited_ms: f64 },
     Rejected { id: u64, code: u16, reason: String },
+    Failed { id: u64, code: u16, attempts: u32 },
     Error { code: u16, reason: String },
 }
 
@@ -395,7 +442,8 @@ pub fn parse_event(line: &str) -> Result<WireEvent> {
                         .ok_or_else(|| anyhow!("non-numeric token in done/ok"))?;
                     let nll = v.get("nll").and_then(Json::as_f64);
                     let deadline_met = matches!(v.get("deadline_met"), Some(Json::Bool(true)));
-                    Ok(WireEvent::Done { id, tokens, nll, deadline_met })
+                    let degraded = matches!(v.get("degraded"), Some(Json::Bool(true)));
+                    Ok(WireEvent::Done { id, tokens, nll, deadline_met, degraded })
                 }
                 "shed" => Ok(WireEvent::Shed {
                     id,
@@ -406,6 +454,11 @@ pub fn parse_event(line: &str) -> Result<WireEvent> {
                     id,
                     code: need_f64(&v, "code")? as u16,
                     reason: need_str(&v, "reason")?.to_string(),
+                }),
+                "failed" => Ok(WireEvent::Failed {
+                    id,
+                    code: need_f64(&v, "code")? as u16,
+                    attempts: need_f64(&v, "attempts")? as u32,
                 }),
                 other => Err(anyhow!("unknown done status '{other}'")),
             }
@@ -537,16 +590,34 @@ mod tests {
         assert_eq!(ev, WireEvent::Token { id: 7, index: 0, token: 42 });
         assert!(!ev.is_terminal());
 
-        let ev = parse_event(done_line(7, &[42, 17], None, true).trim()).unwrap();
+        let line = done_line(7, &[42, 17], None, true, false);
+        assert!(
+            !line.contains("degraded"),
+            "primary-path done lines must not carry a degraded key: {line}"
+        );
+        let ev = parse_event(line.trim()).unwrap();
         assert_eq!(
             ev,
-            WireEvent::Done { id: 7, tokens: vec![42, 17], nll: None, deadline_met: true }
+            WireEvent::Done {
+                id: 7,
+                tokens: vec![42, 17],
+                nll: None,
+                deadline_met: true,
+                degraded: false
+            }
         );
         assert!(ev.is_terminal());
 
+        let line = done_line(7, &[42], None, true, true);
+        assert!(line.contains(r#""degraded":true"#), "degrade tier must be marked: {line}");
+        match parse_event(line.trim()).unwrap() {
+            WireEvent::Done { degraded, .. } => assert!(degraded),
+            other => panic!("bad event {other:?}"),
+        }
+
         // NLL round-trips bit-exactly through the shortest-repr writer
         let nll = 123.456789012345678_f64 / 7.0;
-        match parse_event(done_line(1, &[], Some(nll), false).trim()).unwrap() {
+        match parse_event(done_line(1, &[], Some(nll), false, false).trim()).unwrap() {
             WireEvent::Done { nll: Some(back), deadline_met, .. } => {
                 assert_eq!(back, nll, "f64 must round-trip exactly over the wire");
                 assert!(!deadline_met);
@@ -559,6 +630,10 @@ mod tests {
 
         let ev = parse_event(reject_line(6, 429, "client 2 rate-limited").trim()).unwrap();
         assert!(matches!(ev, WireEvent::Rejected { id: 6, code: 429, .. }));
+
+        let ev = parse_event(failed_line(9, 3).trim()).unwrap();
+        assert_eq!(ev, WireEvent::Failed { id: 9, code: 500, attempts: 3 });
+        assert!(ev.is_terminal());
 
         let ev = parse_event(error_line(400, "bad json").trim()).unwrap();
         assert!(matches!(ev, WireEvent::Error { code: 400, .. }));

@@ -1,10 +1,10 @@
 //! The TCP front end: a [`NetServer`] binds a listener, parses both wire
 //! protocols ([`super::proto`] lines and the [`super::http`] subset) into
 //! the shared arrival queue ([`crate::serve::ingest::IngestQueue`]), and
-//! streams generated tokens back while the same
-//! [`crate::serve::online::worker_loop`] workers as the offline engine do
-//! the serving — the socket edge adds *no* model code, which is what
-//! makes loopback == offline replay parity (`tests/serve_parity.rs`)
+//! streams generated tokens back while the same supervised worker loop
+//! ([`crate::serve::online::supervised_worker`]) as the offline engine
+//! does the serving — the socket edge adds *no* model code, which is
+//! what makes loopback == offline replay parity (`tests/serve_parity.rs`)
 //! structural rather than lucky.
 //!
 //! # Threads
@@ -32,7 +32,21 @@
 //! immediately. A servable request that cannot get pool pages *right
 //! now* is not rejected: the worker parks it and retries, so transient
 //! pool exhaustion shows up as queueing delay (or a deadline shed), and
-//! `queued == finished + shed` keeps holding.
+//! `queued == finished + shed + failed` keeps holding.
+//!
+//! # Fault tolerance
+//!
+//! Workers run under [`crate::serve::online::supervised_worker`]: a
+//! panic mid-service is caught, interrupted requests are requeued for a
+//! from-scratch replay (or answered `done/failed` once tokens already
+//! streamed or the retry budget ran out), and the worker restarts with
+//! capped backoff. A client that disconnects mid-stream makes the
+//! worker's token send fail; the worker drops the request's KV state,
+//! counts it failed, and keeps serving its batch. With
+//! [`NetConfig::degrade`] tier replicas installed, overloaded
+//! admissions route to the sparser tier (marked `"degraded":true` on
+//! the wire) instead of shedding. `docs/robustness.md` has the full
+//! policy.
 //!
 //! # Graceful drain
 //!
@@ -40,7 +54,7 @@
 //! to `drain_deadline` for open connections to finish, *then* closes the
 //! queue (so late in-flight submissions still land) and joins the
 //! workers. [`NetStats`] reports whether the drain beat the deadline and
-//! the exact `queued == finished + shed` accounting.
+//! the exact `queued == finished + shed + failed` accounting.
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -56,17 +70,22 @@ use crate::telemetry::{sink_or_disabled, SpanKind, SpanSink, Tracer};
 use crate::util::par::{locked, spawn_named, wait_timeout_on};
 
 use super::super::engine::ServeContext;
+use super::super::fault::FaultPlan;
 use super::super::ingest::{
     Admit, IngestQueue, QueueConfig, RejectOutcome, Reply, ShedOutcome,
 };
-use super::super::online::{worker_loop, OnlineFinished, WorkerEnv, WorkerStats};
-use super::super::paged::{KvMode, KvSpec};
+use super::super::online::{
+    supervised_worker, FailedOutcome, OnlineFinished, WorkerEnv, WorkerReport, WorkerRun,
+    WorkerStats,
+};
+use super::super::paged::{KvMode, KvSpec, PoolStats};
 use super::super::scheduler::{Policy, SchedulerConfig};
 use super::bucket::ClientBuckets;
 use super::http::{read_request, write_response};
 use super::proto::{
-    done_body, done_line, error_body, error_line, parse_event, parse_request, reject_body,
-    reject_line, shed_body, shed_line, token_line, ProtoLimits, WireEvent, WireRequest,
+    done_body, done_line, error_body, error_line, failed_body, failed_line, parse_event,
+    parse_request, reject_body, reject_line, shed_body, shed_line, token_line, ProtoLimits,
+    WireEvent, WireRequest,
 };
 
 /// Accept-loop poll interval while the listener is nonblocking-idle.
@@ -108,6 +127,12 @@ pub struct NetConfig {
     /// how long [`NetServer::shutdown`] waits for open connections
     pub drain_deadline: Duration,
     pub limits: ProtoLimits,
+    /// deterministic fault-injection schedule (`--faults`); `None`
+    /// compiles the harness out of the hot path entirely
+    pub faults: Option<Arc<FaultPlan>>,
+    /// from-scratch replays a panic-interrupted request gets before it
+    /// is answered `done/failed`
+    pub retry_budget: u32,
 }
 
 impl Default for NetConfig {
@@ -126,6 +151,8 @@ impl Default for NetConfig {
             share_prefix: false,
             drain_deadline: Duration::from_secs(10),
             limits: ProtoLimits::default(),
+            faults: None,
+            retry_budget: 2,
         }
     }
 }
@@ -184,9 +211,17 @@ pub struct NetStats {
     /// requests rejected by the queue (bounded capacity, unmeetable
     /// deadline, draining)
     pub rejected: Vec<RejectOutcome>,
+    /// requests that terminally failed: the client went away mid-stream,
+    /// or a worker died mid-service past the retry budget
+    pub failed: Vec<FailedOutcome>,
+    /// supervised worker restarts after caught panics
+    pub restarts: usize,
+    /// panic-interrupted requests put back for a from-scratch replay
+    pub requeues: usize,
     /// connections accepted over the lifetime
     pub accepted_conns: usize,
-    /// requests that entered the queue — `finished + shed` exactly
+    /// requests that entered the queue — `finished + shed + failed`
+    /// exactly
     pub requests: usize,
     /// lines/bodies that failed protocol validation
     pub parse_errors: usize,
@@ -197,10 +232,16 @@ pub struct NetStats {
 }
 
 impl NetStats {
-    /// The graceful-drain invariant: every queued request retired or was
-    /// shed — nothing vanished.
+    /// The graceful-drain invariant: every queued request retired, was
+    /// shed, or terminally failed — nothing vanished, even under
+    /// injected panics and client disconnects.
     pub fn accounted(&self) -> bool {
-        self.requests == self.finished.len() + self.shed.len()
+        self.requests == self.finished.len() + self.shed.len() + self.failed.len()
+    }
+
+    /// Retired requests answered by the degrade tier.
+    pub fn degraded(&self) -> usize {
+        self.finished.iter().filter(|f| f.degraded).count()
     }
 }
 
@@ -210,7 +251,7 @@ pub struct NetServer {
     shared: Arc<Shared>,
     addr: SocketAddr,
     listener: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<(WorkerStats, Vec<OnlineFinished>)>>,
+    workers: Vec<JoinHandle<WorkerReport>>,
 }
 
 impl NetServer {
@@ -222,11 +263,36 @@ impl NetServer {
         cfg: NetConfig,
         tracer: Option<Arc<Tracer>>,
     ) -> Result<NetServer> {
+        NetServer::start_tiered(ctxs, None, cfg, tracer)
+    }
+
+    /// [`NetServer::start`] plus an optional degrade tier: one sparser
+    /// [`ServeContext`] replica per worker, served to requests admitted
+    /// under queue pressure instead of shedding them (`--degrade`).
+    pub fn start_tiered(
+        ctxs: Vec<ServeContext>,
+        degrade_ctxs: Option<Vec<ServeContext>>,
+        cfg: NetConfig,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Result<NetServer> {
         if cfg.workers == 0 {
             anyhow::bail!("serve-net needs at least one worker");
         }
         if ctxs.len() != cfg.workers {
             anyhow::bail!("got {} model replicas for {} workers", ctxs.len(), cfg.workers);
+        }
+        if let Some(d) = &degrade_ctxs {
+            if d.len() != cfg.workers {
+                anyhow::bail!("got {} degrade replicas for {} workers", d.len(), cfg.workers);
+            }
+            for (p, dc) in ctxs.iter().zip(d.iter()) {
+                if !p.compatible_tier(dc) {
+                    anyhow::bail!(
+                        "degrade tier shape mismatch: both tiers must share the model \
+                         architecture and context window"
+                    );
+                }
+            }
         }
         if cfg.sched.max_batch == 0 {
             anyhow::bail!("scheduler max_batch must be >= 1");
@@ -275,11 +341,24 @@ impl NetServer {
         });
 
         let mut workers = Vec::with_capacity(shared.cfg.workers);
+        let mut degrade_iter = degrade_ctxs.map(Vec::into_iter);
         for (wid, ctx) in ctxs.into_iter().enumerate() {
+            let dctx = degrade_iter.as_mut().and_then(Iterator::next);
             let sh = Arc::clone(&shared);
             let spawned = spawn_named(&format!("besa-serve-worker-{wid}"), move || {
                 let mut sink = sink_or_disabled(sh.tracer.as_deref());
-                worker_loop(wid, &ctx, &sh.queue, &sh.cfg.sched, &sh.env, &mut sink)
+                let run = WorkerRun {
+                    wid,
+                    ctx: &ctx,
+                    degrade: dctx.as_ref(),
+                    queue: &sh.queue,
+                    scfg: &sh.cfg.sched,
+                    env: &sh.env,
+                    faults: sh.cfg.faults.as_deref(),
+                    retry_budget: sh.cfg.retry_budget,
+                    queue_cap: sh.cfg.queue_cap,
+                };
+                supervised_worker(&run, &mut sink)
             });
             match spawned {
                 Ok(h) => workers.push(h),
@@ -311,6 +390,13 @@ impl NetServer {
         self.addr
     }
 
+    /// Live snapshot of the shared page pool's accounting (`--kv paged`
+    /// only) — what the disconnect tests poll to see a dead client's
+    /// pages come back.
+    pub fn pool_stats(&self) -> Option<PoolStats> {
+        self.shared.env.kv().pool().map(|p| p.stats())
+    }
+
     /// Graceful drain: stop accepting, wait for open connections (up to
     /// the drain deadline), close the queue, join the workers, and
     /// return the full accounting.
@@ -332,19 +418,39 @@ impl NetServer {
         // rejected as Draining — race-free by construction
         self.shared.queue.close();
         let mut finished = Vec::new();
+        let mut failed = Vec::new();
         let mut workers = Vec::new();
+        let mut restarts = 0;
+        let mut requeues = 0;
         for h in self.workers.drain(..) {
-            let (ws, fin) = h.join().map_err(|_| anyhow!("serve-net worker panicked"))?;
-            workers.push(ws);
-            finished.extend(fin);
+            let rep = h.join().map_err(|_| anyhow!("serve-net worker panicked"))?;
+            workers.push(rep.stats);
+            finished.extend(rep.finished);
+            failed.extend(rep.failed);
+            restarts += rep.restarts;
+            requeues += rep.requeues;
         }
         finished.sort_by_key(|f| f.id);
+        failed.sort_by_key(|f| f.id);
         let (shed, rejected) = self.shared.queue.take_outcomes();
+        if let Some(ps) = self.shared.env.kv().pool().map(|p| p.stats()) {
+            if !ps.drained() {
+                return Err(anyhow!(
+                    "page pool failed to drain: live {} free {} created {}",
+                    ps.live,
+                    ps.free,
+                    ps.created
+                ));
+            }
+        }
         Ok(NetStats {
             finished,
             workers,
             shed,
             rejected,
+            failed,
+            restarts,
+            requeues,
             accepted_conns: self.shared.accepted.load(Ordering::Relaxed),
             requests: self.shared.queued.load(Ordering::Relaxed),
             parse_errors: self.shared.parse_errors.load(Ordering::Relaxed),
@@ -510,15 +616,20 @@ fn stream_replies(
                     return false;
                 }
             }
-            Ok(Reply::Done { tokens, nll, deadline_met }) => {
+            Ok(Reply::Done { tokens, nll, deadline_met, degraded }) => {
                 let t_ser = Instant::now();
-                let line = done_line(wire_id, &tokens, nll, deadline_met);
+                let line = done_line(wire_id, &tokens, nll, deadline_met, degraded);
                 let ok = writer.write_all(line.as_bytes()).is_ok() && writer.flush().is_ok();
                 sink.record(internal, SpanKind::Serialize, -1, t_ser, Instant::now(), ok);
                 return ok;
             }
             Ok(Reply::Shed { waited_s }) => {
                 let ok = writer.write_all(shed_line(wire_id, waited_s).as_bytes()).is_ok()
+                    && writer.flush().is_ok();
+                return ok;
+            }
+            Ok(Reply::Failed { attempts }) => {
+                let ok = writer.write_all(failed_line(wire_id, attempts).as_bytes()).is_ok()
                     && writer.flush().is_ok();
                 return ok;
             }
@@ -598,15 +709,19 @@ fn collect_http_reply(
     loop {
         match rx.recv_timeout(REPLY_TIMEOUT) {
             Ok(Reply::Token { .. }) => continue,
-            Ok(Reply::Done { tokens, nll, deadline_met }) => {
+            Ok(Reply::Done { tokens, nll, deadline_met, degraded }) => {
                 let t_ser = Instant::now();
-                let body = done_body(wire_id, &tokens, nll, deadline_met);
+                let body = done_body(wire_id, &tokens, nll, deadline_met, degraded);
                 let ok = write_response(writer, 200, &body).is_ok();
                 sink.record(internal, SpanKind::Serialize, -1, t_ser, Instant::now(), ok);
                 return;
             }
             Ok(Reply::Shed { waited_s }) => {
                 let _ = write_response(writer, 503, &shed_body(wire_id, waited_s));
+                return;
+            }
+            Ok(Reply::Failed { attempts }) => {
+                let _ = write_response(writer, 500, &failed_body(wire_id, attempts));
                 return;
             }
             Err(_) => {

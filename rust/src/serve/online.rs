@@ -58,7 +58,7 @@
 //! merges these into aggregate throughput and latency percentiles for
 //! `BENCH_serve.json`.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -70,6 +70,7 @@ use super::engine::{
     argmax, decode_step, last_logits, prefill, prefill_continue, score_nll, DecodeScratch,
     ServeContext,
 };
+use super::fault::{self, FaultAction, FaultPlan, FaultSite};
 use super::ingest::{
     run_producer, ArrivedRequest, IngestQueue, Pacing, Pop, QueueConfig, RejectOutcome, Reply,
     ShedOutcome,
@@ -104,6 +105,13 @@ pub struct OnlineConfig {
     /// copy-on-write prompt-prefix sharing across requests — paged mode
     /// only (`--share-prefix`)
     pub share_prefix: bool,
+    /// seeded fault-injection schedule (`--faults`); None — the default —
+    /// is the zero-overhead disabled path, bitwise identical to a run
+    /// without the harness (pinned by `tests/chaos.rs`)
+    pub faults: Option<Arc<FaultPlan>>,
+    /// failed service attempts tolerated per request before a supervised
+    /// restart terminal-fails it instead of requeueing for replay
+    pub retry_budget: u32,
 }
 
 impl Default for OnlineConfig {
@@ -118,6 +126,8 @@ impl Default for OnlineConfig {
             kv: KvMode::Contig,
             steal: false,
             share_prefix: false,
+            faults: None,
+            retry_budget: 2,
         }
     }
 }
@@ -140,6 +150,20 @@ pub struct OnlineFinished {
     pub nll: Option<f64>,
     /// retired before its deadline (always true without a deadline)
     pub deadline_met: bool,
+    /// served by the sparser degrade tier under queue pressure
+    /// (`--degrade`) — bit-exact for *that* checkpoint, not the primary
+    pub degraded: bool,
+}
+
+/// A request that terminally failed: its worker died mid-service and the
+/// retry budget or deadline was exhausted, its stream had already seen
+/// tokens (a replay could never splice without emitting one twice), or
+/// its client disconnected mid-stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailedOutcome {
+    pub id: usize,
+    /// service attempts consumed, the last one included
+    pub attempts: u32,
 }
 
 /// Counters of one worker's whole run.
@@ -162,12 +186,19 @@ pub struct OnlineStats {
     pub shed: Vec<ShedOutcome>,
     /// requests rejected at push (bounded queue, unmeetable deadline)
     pub rejected: Vec<RejectOutcome>,
+    /// requests that terminally failed under fault injection (always
+    /// empty without `--faults` and a live TCP client)
+    pub failed: Vec<FailedOutcome>,
     /// wall-clock seconds from pool start to last worker exit
     pub wall_s: f64,
     /// decodes parked for handover (with `steal` enabled)
     pub parks: usize,
     /// parked decodes taken over by another worker
     pub steals: usize,
+    /// supervised worker restarts (panics caught and recovered)
+    pub restarts: usize,
+    /// requests requeued for replay from scratch across restarts
+    pub requeues: usize,
 }
 
 impl OnlineStats {
@@ -179,6 +210,11 @@ impl OnlineStats {
     /// retired requests that met their deadline (the goodput numerator).
     pub fn within_deadline(&self) -> usize {
         self.finished.iter().filter(|f| f.deadline_met).count()
+    }
+
+    /// retired requests served by the degrade tier.
+    pub fn degraded(&self) -> usize {
+        self.finished.iter().filter(|f| f.degraded).count()
     }
 }
 
@@ -197,6 +233,16 @@ struct Active {
     tokens: Vec<i32>,
     /// first batched decode step this request took part in
     decode_started: Option<Instant>,
+    /// original arrival seq — preserved so a supervised-restart requeue
+    /// puts the request back in its place in line
+    seq: u64,
+    /// failed service attempts before this one
+    attempts: u32,
+    /// decoding on the sparser degrade tier
+    degraded: bool,
+    /// the reply channel died mid-stream (client disconnect) — tear down
+    /// at the next retire sweep instead of decoding for nobody
+    aborted: bool,
 }
 
 /// A decode parked for handover: the whole [`Active`] (page table
@@ -339,9 +385,12 @@ impl WorkerEnv {
     /// On pool exhaustion the registry is dropped and allocation retried
     /// once — admissions always beat caching. `None` means genuinely no
     /// room now: the caller holds the request and retries later.
-    fn acquire(&self, ctx: &ServeContext, req: &Request) -> Option<(Kv, usize)> {
+    /// `allow_fork` is false for degrade-tier requests: registered
+    /// prefixes were prefilled by the *primary* model, so sharing them
+    /// across tiers would mix KV contents from two checkpoints.
+    fn acquire(&self, ctx: &ServeContext, req: &Request, allow_fork: bool) -> Option<(Kv, usize)> {
         if let Some(reg) = &self.registry {
-            if matches!(req.kind, ReqKind::Generate { .. }) {
+            if allow_fork && matches!(req.kind, ReqKind::Generate { .. }) {
                 if let Some((p0, table)) = reg.fork_longest(&req.tokens, req.cost()) {
                     return Some((Kv::Paged(table), p0));
                 }
@@ -411,6 +460,23 @@ pub fn serve_online_traced(
     ocfg: &OnlineConfig,
     tracer: Option<&Tracer>,
 ) -> Result<OnlineStats> {
+    serve_online_tiered(ctxs, None, requests, ocfg, tracer)
+}
+
+/// [`serve_online_traced`] with an optional sparsity-tiered degrade pool
+/// (`--degrade`): one *sparser* [`ServeContext`] replica per worker.
+/// When queue pressure crosses the shed threshold (a request's remaining
+/// deadline falls under the EWMA service estimate, or a bounded queue
+/// fills past half), a worker routes the request to the degrade replica
+/// instead of letting it shed — the answer is marked `degraded` and is
+/// bit-exact for the sparser checkpoint, not the primary.
+pub fn serve_online_tiered(
+    ctxs: &[ServeContext],
+    degrade_ctxs: Option<&[ServeContext]>,
+    requests: Vec<Request>,
+    ocfg: &OnlineConfig,
+    tracer: Option<&Tracer>,
+) -> Result<OnlineStats> {
     if ocfg.workers == 0 {
         bail!("online serving needs at least one worker");
     }
@@ -423,6 +489,16 @@ pub fn serve_online_traced(
     if let Pacing::ClosedLoop { clients } = ocfg.pacing {
         if clients == 0 {
             bail!("closed-loop pacing needs at least one client");
+        }
+    }
+    if let Some(dctxs) = degrade_ctxs {
+        if dctxs.len() != ocfg.workers {
+            bail!("got {} degrade-tier replicas for {} workers", dctxs.len(), ocfg.workers);
+        }
+        for (i, (p, d)) in ctxs.iter().zip(dctxs).enumerate() {
+            if !p.compatible_tier(d) {
+                bail!("degrade-tier replica {i} has a different shape than the primary");
+            }
         }
     }
     // reject up front anything that could never be admitted — with a
@@ -497,25 +573,72 @@ pub fn serve_online_traced(
             None
         } else {
             let mut sink = sink_or_disabled(tracer);
-            Some(worker_loop(i - 1, &ctxs[i - 1], &queue, &ocfg.sched, &env, &mut sink))
+            let run = WorkerRun {
+                wid: i - 1,
+                ctx: &ctxs[i - 1],
+                degrade: degrade_ctxs.map(|d| &d[i - 1]),
+                queue: &queue,
+                scfg: &ocfg.sched,
+                env: &env,
+                faults: ocfg.faults.as_deref(),
+                retry_budget: ocfg.retry_budget,
+                queue_cap: ocfg.queue_cap,
+            };
+            Some(supervised_worker(&run, &mut sink))
         }
     });
     let wall_s = start.elapsed().as_secs_f64();
     let mut finished = Vec::with_capacity(total);
+    let mut failed = Vec::new();
     let mut workers = Vec::with_capacity(ocfg.workers);
-    for (stats, fin) in results.into_iter().flatten() {
-        workers.push(stats);
-        finished.extend(fin);
+    let (mut restarts, mut requeues) = (0usize, 0usize);
+    for rep in results.into_iter().flatten() {
+        workers.push(rep.stats);
+        finished.extend(rep.finished);
+        failed.extend(rep.failed);
+        restarts += rep.restarts;
+        requeues += rep.requeues;
     }
     finished.sort_by_key(|f| f.id);
+    failed.sort_by_key(|f| f.id);
     let (shed, rejected) = queue.take_outcomes();
-    debug_assert_eq!(
-        finished.len() + shed.len() + rejected.len(),
-        total,
-        "every request retires, sheds, or is rejected exactly once"
-    );
+    // the chaos headline invariants hold under *any* fault schedule —
+    // hard checks, not debug asserts, so CI's chaos matrix can trust a
+    // green run of the release binary
+    if finished.len() + shed.len() + rejected.len() + failed.len() != total {
+        bail!(
+            "accounting violated: {} queued but {} finished + {} shed + {} rejected + {} failed",
+            total,
+            finished.len(),
+            shed.len(),
+            rejected.len(),
+            failed.len()
+        );
+    }
+    if let Some(pool) = env.kv().pool() {
+        let ps = pool.stats();
+        if !ps.drained() {
+            bail!(
+                "page pool failed to drain: live {} free {} created {}",
+                ps.live,
+                ps.free,
+                ps.created
+            );
+        }
+    }
     let (parks, steals) = env.steal_counts();
-    Ok(OnlineStats { finished, workers, shed, rejected, wall_s, parks, steals })
+    Ok(OnlineStats {
+        finished,
+        workers,
+        shed,
+        rejected,
+        failed,
+        wall_s,
+        parks,
+        steals,
+        restarts,
+        requeues,
+    })
 }
 
 /// Retire one request: release its budget, answer the reply channel,
@@ -541,7 +664,12 @@ fn retire(
         sink.record(wire, SpanKind::Decode, wid as i64, start, now, true);
     }
     if let Some(tx) = &x.reply {
-        let _ = tx.send(Reply::Done { tokens: x.tokens.clone(), nll, deadline_met });
+        let _ = tx.send(Reply::Done {
+            tokens: x.tokens.clone(),
+            nll,
+            deadline_met,
+            degraded: x.degraded,
+        });
     }
     finished.push(OnlineFinished {
         id: x.req.id,
@@ -552,6 +680,7 @@ fn retire(
         tokens: x.tokens,
         nll,
         deadline_met,
+        degraded: x.degraded,
     });
     queue.note_done(now.saturating_duration_since(x.admitted_at).as_secs_f64());
 }
@@ -585,6 +714,256 @@ fn steal_one(
     true
 }
 
+/// Everything one supervised worker needs, bundled so the supervisor,
+/// recovery, and inner loop share one view (and so `serve::net` can
+/// spawn the same worker from its connection-handling front end).
+pub(crate) struct WorkerRun<'a> {
+    pub wid: usize,
+    pub ctx: &'a ServeContext,
+    /// sparser degrade-tier replica (`--degrade`); None disables routing
+    pub degrade: Option<&'a ServeContext>,
+    pub queue: &'a IngestQueue,
+    pub scfg: &'a SchedulerConfig,
+    pub env: &'a WorkerEnv,
+    /// seeded fault-injection schedule; None is the zero-overhead path
+    pub faults: Option<&'a FaultPlan>,
+    /// failed attempts tolerated before a recovery terminal-fails
+    pub retry_budget: u32,
+    /// arrival-queue capacity (0 = unbounded) — the degrade router's
+    /// backlog-pressure threshold
+    pub queue_cap: usize,
+}
+
+/// What one supervised worker hands back at exit.
+pub(crate) struct WorkerReport {
+    pub stats: WorkerStats,
+    pub finished: Vec<OnlineFinished>,
+    pub failed: Vec<FailedOutcome>,
+    pub restarts: usize,
+    pub requeues: usize,
+}
+
+/// Recovery snapshot of the request whose service is in flight *right
+/// now* (between pop and retire-or-activate): a clone of the original's
+/// routing info, held outside the unwindable frame. If the worker dies
+/// mid-prefill, recovery rebuilds the [`ArrivedRequest`] from this and
+/// requeues it — replay from scratch is deterministic, so nothing is
+/// lost but time.
+struct Slot {
+    req: Request,
+    enqueued: Instant,
+    deadline_at: Option<Instant>,
+    reply: Option<std::sync::mpsc::Sender<Reply>>,
+    seq: u64,
+    attempts: u32,
+    /// token 0 was sent (or was about to be) — a replay would emit it
+    /// twice, so a streamed request can only terminal-fail on recovery
+    streamed: bool,
+}
+
+impl Slot {
+    fn of(a: &ArrivedRequest) -> Slot {
+        Slot {
+            req: a.req.clone(),
+            enqueued: a.enqueued,
+            deadline_at: a.deadline_at,
+            reply: a.reply.clone(),
+            seq: a.seq,
+            attempts: a.attempts,
+            streamed: false,
+        }
+    }
+}
+
+/// Worker state that lives *outside* `catch_unwind`: everything a panic
+/// must not take down with it — popped-but-unserved requests, active
+/// decodes (their KV caches release pages on drop during recovery), the
+/// in-service slot, counters and ledgers.
+struct WorkerState {
+    active: Vec<Active>,
+    /// popped but waiting for pool pages: budget-counted, retried in
+    /// arrival order before fresh admissions
+    pending: Vec<ArrivedRequest>,
+    /// the admission round being consumed front-first — whatever a panic
+    /// leaves here goes back to the queue whole during recovery
+    batch: Vec<ArrivedRequest>,
+    slot: Option<Slot>,
+    in_flight_tokens: usize,
+    finished: Vec<OnlineFinished>,
+    failed: Vec<FailedOutcome>,
+    stats: WorkerStats,
+    requeues: usize,
+}
+
+/// Supervisor cap on the doubling restart backoff.
+const RESTART_BACKOFF_MAX: Duration = Duration::from_millis(32);
+
+/// One worker's whole supervised lifetime: run the continuous-batching
+/// loop inside `catch_unwind`; on a panic, recover the interrupted
+/// requests ([`recover`]), sleep a capped exponential backoff, record a
+/// Restart span, and re-enter. The worker only returns when the queue is
+/// drained — a death can never abort the pool or strand admitted work.
+pub(crate) fn supervised_worker(run: &WorkerRun<'_>, sink: &mut SpanSink<'_>) -> WorkerReport {
+    let mut st = WorkerState {
+        active: Vec::new(),
+        pending: Vec::new(),
+        batch: Vec::new(),
+        slot: None,
+        in_flight_tokens: 0,
+        finished: Vec::new(),
+        failed: Vec::new(),
+        stats: WorkerStats {
+            worker: run.wid,
+            requests: 0,
+            prompt_tokens: 0,
+            gen_tokens: 0,
+            busy_s: 0.0,
+            peak_active: 0,
+        },
+        requeues: 0,
+    };
+    let mut restarts = 0usize;
+    let mut backoff = Duration::from_millis(1);
+    loop {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            worker_loop_inner(run, &mut st, sink)
+        }));
+        match outcome {
+            Ok(()) => break,
+            Err(_payload) => {
+                let died = Instant::now();
+                restarts += 1;
+                recover(run, &mut st, sink);
+                std::thread::sleep(backoff);
+                sink.record(0, SpanKind::Restart, run.wid as i64, died, Instant::now(), false);
+                backoff = (backoff * 2).min(RESTART_BACKOFF_MAX);
+            }
+        }
+    }
+    WorkerReport {
+        stats: st.stats,
+        finished: st.finished,
+        failed: st.failed,
+        restarts,
+        requeues: st.requeues,
+    }
+}
+
+/// Roll the worker back to a clean restart point after a caught panic.
+/// Every interrupted request either goes back to the queue for
+/// deterministic replay from scratch (original seq — it retakes its
+/// exact place in line) or terminally fails (retry budget or deadline
+/// exhausted, or its stream already saw tokens — never emit a token
+/// twice). Active KV caches are dropped here, releasing their pages and
+/// prefix refcounts *before* anything is requeued, so the pool can
+/// absorb the replays.
+fn recover(run: &WorkerRun<'_>, st: &mut WorkerState, sink: &mut SpanSink<'_>) {
+    let now = Instant::now();
+    // the request whose service the panic interrupted, if any
+    if let Some(s) = st.slot.take() {
+        let streamed = s.streamed && s.reply.is_some();
+        let a = ArrivedRequest {
+            req: s.req,
+            enqueued: s.enqueued,
+            deadline_at: s.deadline_at,
+            reply: s.reply,
+            seq: s.seq,
+            attempts: s.attempts,
+        };
+        requeue_or_fail(run, st, sink, a, streamed, now);
+    }
+    // a mid-decode panic can leave *any* active's KV half-appended
+    // (decode_step mutates the whole batch), so every active is torn
+    // down — cache dropped, pages released — and replayed or failed
+    for x in std::mem::take(&mut st.active) {
+        // token 0 streams as soon as a live reply exists, so any active
+        // with a reply channel has already emitted
+        let streamed = x.reply.is_some();
+        let a = ArrivedRequest {
+            req: x.req,
+            enqueued: x.enqueued,
+            deadline_at: x.deadline_at,
+            reply: x.reply,
+            seq: x.seq,
+            attempts: x.attempts,
+        };
+        requeue_or_fail(run, st, sink, a, streamed, now);
+        // x.cache drops here, after the requeue decision, which is fine:
+        // replay allocates a fresh cache when the request is re-admitted
+    }
+    // popped but never served: back in line whole, no attempt consumed
+    for a in std::mem::take(&mut st.batch) {
+        run.queue.requeue(a);
+    }
+    for a in std::mem::take(&mut st.pending) {
+        run.queue.requeue(a);
+    }
+    st.in_flight_tokens = 0;
+}
+
+/// One interrupted request: requeue for replay (an attempt is consumed)
+/// or terminal-fail when replay is impossible (tokens already streamed)
+/// or pointless (budget or deadline exhausted). The failure is the
+/// stream's single terminal event.
+fn requeue_or_fail(
+    run: &WorkerRun<'_>,
+    st: &mut WorkerState,
+    sink: &mut SpanSink<'_>,
+    mut a: ArrivedRequest,
+    streamed: bool,
+    now: Instant,
+) {
+    a.attempts += 1;
+    let expired = matches!(a.deadline_at, Some(d) if d <= now);
+    if streamed || expired || a.attempts > run.retry_budget {
+        if let Some(tx) = &a.reply {
+            let _ = tx.send(Reply::Failed { attempts: a.attempts });
+        }
+        st.failed.push(FailedOutcome { id: a.req.id, attempts: a.attempts });
+        run.queue.note_failed();
+    } else {
+        sink.record(a.req.id as u64, SpanKind::Requeue, run.wid as i64, now, now, false);
+        st.requeues += 1;
+        run.queue.requeue(a);
+    }
+}
+
+/// Perform a worker-side injected fault: record the Fault span, then
+/// panic or stall *here*, at the real call site — to the supervisor an
+/// injected death is indistinguishable from a genuine mid-service bug.
+fn inject(action: FaultAction, req: u64, wid: usize, sink: &mut SpanSink<'_>, site: &str) {
+    let now = Instant::now();
+    sink.record(req, SpanKind::Fault, wid as i64, now, now, false);
+    match action {
+        // besa-lint: allow(hot-path-panic) — injected worker death; the supervisor catches and recovers
+        FaultAction::Panic => panic!("injected fault: worker panic {site}"),
+        FaultAction::Stall(ms) => std::thread::sleep(Duration::from_millis(ms)),
+        // Deny fires inside the admission predicate and Disconnect is
+        // client-side; neither routes through here
+        FaultAction::Deny | FaultAction::Disconnect => {}
+    }
+}
+
+/// Degrade-tier routing decision at service start: route to the sparser
+/// replica when the queue says shedding is imminent — the request's
+/// remaining deadline is under the EWMA service estimate, or a bounded
+/// queue has filled past half.
+fn wants_degrade(run: &WorkerRun<'_>, a: &ArrivedRequest) -> bool {
+    if run.degrade.is_none() {
+        return false;
+    }
+    let (depth, ewma) = run.queue.pressure();
+    if run.queue_cap > 0 && depth * 2 >= run.queue_cap {
+        return true;
+    }
+    if let Some(d) = a.deadline_at {
+        if ewma > 0.0 {
+            return d.saturating_duration_since(Instant::now()).as_secs_f64() < ewma;
+        }
+    }
+    false
+}
+
 /// One worker's continuous-batching loop: admit from the shared queue
 /// while budget and slots allow, prefill admissions (continuing from a
 /// shared prompt prefix when the registry has one), one batched decode
@@ -596,49 +975,49 @@ fn steal_one(
 /// drained, the board is empty and nothing is left in flight. Streams
 /// each generated token to the request's reply channel (when one is
 /// attached) as soon as it exists, and records per-request spans into
-/// `sink`.
-pub(crate) fn worker_loop(
-    wid: usize,
-    ctx: &ServeContext,
-    queue: &IngestQueue,
-    scfg: &SchedulerConfig,
-    env: &WorkerEnv,
-    sink: &mut SpanSink<'_>,
-) -> (WorkerStats, Vec<OnlineFinished>) {
-    let d = ctx.model.cfg.d_model;
-    let mut active: Vec<Active> = Vec::new();
-    // popped but waiting for pool pages: budget-counted, retried in
-    // arrival order before fresh admissions
-    let mut pending: Vec<ArrivedRequest> = Vec::new();
-    let mut in_flight_tokens = 0usize;
-    let mut finished: Vec<OnlineFinished> = Vec::new();
+/// `sink`. Runs inside [`supervised_worker`]'s `catch_unwind`; all
+/// request-holding state lives in `st`, outside the unwindable frame.
+fn worker_loop_inner(run: &WorkerRun<'_>, st: &mut WorkerState, sink: &mut SpanSink<'_>) {
+    let wid = run.wid;
+    let (queue, scfg, env) = (run.queue, run.scfg, run.env);
+    let d = run.ctx.model.cfg.d_model;
     let mut scratch = DecodeScratch::new();
-    let mut stats = WorkerStats {
-        worker: wid,
-        requests: 0,
-        prompt_tokens: 0,
-        gen_tokens: 0,
-        busy_s: 0.0,
-        peak_active: 0,
-    };
     loop {
         // admit while the per-worker budget and batch slots allow; the
-        // queue wait ends here, at the pop
-        let mut admitted: Vec<ArrivedRequest> = Vec::new();
-        while active.len() + pending.len() + admitted.len() < scfg.max_batch {
+        // queue wait ends here, at the pop. Admissions go straight into
+        // st.batch so a panic can never strand them.
+        let mut denied: Option<u64> = None;
+        while st.active.len() + st.pending.len() + st.batch.len() < scfg.max_batch {
             match queue.try_pop(|r| {
-                in_flight_tokens + r.cost() <= scfg.token_budget && env.can_admit(r.cost())
+                let fits = st.in_flight_tokens + r.cost() <= scfg.token_budget
+                    && env.can_admit(r.cost());
+                // injected admission pressure: refuse a request the pool
+                // would have taken (it stays at the front and is retried)
+                if fits
+                    && matches!(
+                        fault::fire(run.faults, FaultSite::Admit),
+                        Some(FaultAction::Deny)
+                    )
+                {
+                    denied = Some(r.id as u64);
+                    return false;
+                }
+                fits
             }) {
                 Pop::Got(a) => {
-                    in_flight_tokens += a.req.cost();
-                    admitted.push(a);
+                    st.in_flight_tokens += a.req.cost();
+                    st.batch.push(a);
                 }
                 Pop::Refused | Pop::Empty | Pop::Drained => break,
             }
         }
-        if admitted.is_empty() && pending.is_empty() && active.is_empty() {
+        if let Some(id) = denied {
+            let now = Instant::now();
+            sink.record(id, SpanKind::Fault, wid as i64, now, now, false);
+        }
+        if st.batch.is_empty() && st.pending.is_empty() && st.active.is_empty() {
             // idle: take over a parked decode before sleeping or exiting
-            if steal_one(env, wid, scfg.token_budget, sink, &mut active, &mut in_flight_tokens)
+            if steal_one(env, wid, scfg.token_budget, sink, &mut st.active, &mut st.in_flight_tokens)
             {
                 continue;
             }
@@ -653,39 +1032,59 @@ pub(crate) fn worker_loop(
         }
         let work = Instant::now();
         // pending first (arrival fairness), then this round's admissions
-        let mut batch = std::mem::take(&mut pending);
-        batch.extend(admitted);
+        let mut round = std::mem::take(&mut st.pending);
+        round.append(&mut st.batch);
+        st.batch = round;
         let mut progressed = false;
-        for a in batch {
-            let (mut cache, prefix) = match env.acquire(ctx, &a.req) {
+        while !st.batch.is_empty() {
+            // snapshot the front into the recovery slot *before* moving
+            // it out of st.batch: from here to retire-or-activate, the
+            // slot is the request's panic-survivable record
+            let degraded = wants_degrade(run, &st.batch[0]);
+            st.slot = Some(Slot::of(&st.batch[0]));
+            let a = st.batch.remove(0);
+            // degraded requests run every stage on the sparser replica —
+            // never mixing tiers within one request's KV
+            let tctx = match run.degrade {
+                Some(dc) if degraded => dc,
+                _ => run.ctx,
+            };
+            let (mut cache, prefix) = match env.acquire(tctx, &a.req, !degraded) {
                 Some(got) => got,
                 None => {
                     // pool dry right now: hold the request (budget stays
                     // counted) and retry once pages free up
-                    pending.push(a);
+                    st.slot = None;
+                    st.pending.push(a);
                     continue;
                 }
             };
             progressed = true;
-            let ArrivedRequest { req, enqueued, deadline_at, reply, .. } = a;
+            let ArrivedRequest { req, enqueued, deadline_at, reply, seq, attempts } = a;
             let admitted_at = work;
             let queue_wait_s = admitted_at.saturating_duration_since(enqueued).as_secs_f64();
             let wire = req.id as u64;
             sink.record(wire, SpanKind::Queue, wid as i64, enqueued, admitted_at, true);
-            stats.prompt_tokens += req.tokens.len();
+            if degraded {
+                sink.record(wire, SpanKind::Degrade, wid as i64, admitted_at, admitted_at, true);
+            }
+            st.stats.prompt_tokens += req.tokens.len();
             let s = req.tokens.len();
             let t_prefill = Instant::now();
             sink.record(wire, SpanKind::Admit, wid as i64, admitted_at, t_prefill, true);
+            if let Some(action) = fault::fire(run.faults, FaultSite::Prefill) {
+                inject(action, wire, wid, sink, "mid-prefill");
+            }
             match req.kind {
                 ReqKind::Score => {
                     // scoring reads every position's hidden row, so it
                     // always runs the full prefill (acquire never forks
                     // a prefix for Score)
-                    let hidden = prefill(ctx, &req.tokens, &mut cache);
+                    let hidden = prefill(tctx, &req.tokens, &mut cache);
                     sink.record(wire, SpanKind::Prefill, wid as i64, t_prefill, Instant::now(), true);
-                    let nll = score_nll(ctx, &hidden, &req.tokens);
+                    let nll = score_nll(tctx, &hidden, &req.tokens);
                     let nll_sum: f64 = nll.iter().map(|v| *v as f64).sum();
-                    in_flight_tokens -= req.cost();
+                    st.in_flight_tokens -= req.cost();
                     retire(
                         Active {
                             req,
@@ -699,14 +1098,19 @@ pub(crate) fn worker_loop(
                             produced: 0,
                             tokens: Vec::new(),
                             decode_started: None,
+                            seq,
+                            attempts,
+                            degraded,
+                            aborted: false,
                         },
                         wid,
                         queue,
                         sink,
-                        &mut finished,
-                        &mut stats,
+                        &mut st.finished,
+                        &mut st.stats,
                         Some(nll_sum),
                     );
+                    st.slot = None;
                 }
                 ReqKind::Generate { max_new } => {
                     // a forked cache already holds `prefix` positions;
@@ -714,17 +1118,35 @@ pub(crate) fn worker_loop(
                     // rows — bitwise identical to the full prefill's
                     // final row (parity-pinned)
                     let first = if prefix > 0 {
-                        let row = prefill_continue(ctx, &req.tokens, &mut cache, &mut scratch);
-                        argmax(&last_logits(ctx, &row)) as i32
+                        let row = prefill_continue(tctx, &req.tokens, &mut cache, &mut scratch);
+                        argmax(&last_logits(tctx, &row)) as i32
                     } else {
-                        let hidden = prefill(ctx, &req.tokens, &mut cache);
-                        env.register(&req.tokens, &mut cache);
-                        argmax(&last_logits(ctx, &hidden[(s - 1) * d..s * d])) as i32
+                        let hidden = prefill(tctx, &req.tokens, &mut cache);
+                        if !degraded {
+                            env.register(&req.tokens, &mut cache);
+                        }
+                        argmax(&last_logits(tctx, &hidden[(s - 1) * d..s * d])) as i32
                     };
                     sink.record(wire, SpanKind::Prefill, wid as i64, t_prefill, Instant::now(), true);
-                    stats.gen_tokens += 1;
+                    st.stats.gen_tokens += 1;
+                    // from the send on, a replay would duplicate token 0:
+                    // recovery may only terminal-fail this request now
+                    if let Some(slot) = st.slot.as_mut() {
+                        slot.streamed = true;
+                    }
+                    let mut dead_client = false;
                     if let Some(tx) = &reply {
-                        let _ = tx.send(Reply::Token { index: 0, token: first });
+                        dead_client = tx.send(Reply::Token { index: 0, token: first }).is_err();
+                    }
+                    if dead_client {
+                        // client gone before its first token: release the
+                        // cache and the queue slot, count the failure —
+                        // no terminal event, nobody is listening
+                        st.in_flight_tokens -= req.cost();
+                        st.failed.push(FailedOutcome { id: req.id, attempts: attempts + 1 });
+                        queue.note_failed();
+                        st.slot = None;
+                        continue;
                     }
                     let x = Active {
                         req,
@@ -738,25 +1160,30 @@ pub(crate) fn worker_loop(
                         produced: 1,
                         tokens: vec![first],
                         decode_started: None,
+                        seq,
+                        attempts,
+                        degraded,
+                        aborted: false,
                     };
                     if max_new <= 1 {
-                        in_flight_tokens -= x.req.cost();
-                        retire(x, wid, queue, sink, &mut finished, &mut stats, None);
+                        st.in_flight_tokens -= x.req.cost();
+                        retire(x, wid, queue, sink, &mut st.finished, &mut st.stats, None);
                     } else {
-                        active.push(x);
+                        st.active.push(x);
                     }
+                    st.slot = None;
                 }
             }
         }
-        stats.peak_active = stats.peak_active.max(active.len());
+        st.stats.peak_active = st.stats.peak_active.max(st.active.len());
         // park one decode when idle workers are asking — the one with
         // the most tokens left, and never the last one (the parker must
         // keep retiring work so parked pages always drain)
         if let Some(board) = env.board() {
-            if active.len() >= 2 && board.should_park() {
+            if st.active.len() >= 2 && board.should_park() {
                 let mut pick = 0;
                 let mut most = 0usize;
-                for (i, x) in active.iter().enumerate() {
+                for (i, x) in st.active.iter().enumerate() {
                     let remaining = match x.req.kind {
                         ReqKind::Generate { max_new } => max_new.saturating_sub(x.produced),
                         ReqKind::Score => 0,
@@ -766,63 +1193,95 @@ pub(crate) fn worker_loop(
                         pick = i;
                     }
                 }
-                let mut x = active.remove(pick);
+                let mut x = st.active.remove(pick);
                 let now = Instant::now();
                 let from = x.decode_started.unwrap_or(x.admitted_at);
                 sink.record(x.req.id as u64, SpanKind::Migrate, wid as i64, from, now, true);
                 x.decode_started = None;
-                in_flight_tokens -= x.req.cost();
+                st.in_flight_tokens -= x.req.cost();
                 board.park(x, wid, now);
             }
         }
-        if !active.is_empty() {
+        if !st.active.is_empty() {
             let t_step = Instant::now();
-            for x in active.iter_mut() {
+            for x in st.active.iter_mut() {
                 if x.decode_started.is_none() {
                     x.decode_started = Some(t_step);
                 }
             }
-            let last: Vec<i32> = active.iter().map(|x| x.last).collect();
+            if let Some(action) = fault::fire(run.faults, FaultSite::Decode) {
+                inject(action, 0, wid, sink, "mid-decode");
+            }
+            // tier partition: primary first, degrade after. The sort is
+            // stable and keyed only by the flag, so with degradation off
+            // (every key false) it is the identity — batch order, and
+            // with it bitwise parity, is untouched
+            if run.degrade.is_some() {
+                st.active.sort_by_key(|x| x.degraded);
+            }
+            let split = st.active.iter().position(|x| x.degraded).unwrap_or(st.active.len());
             let next = {
-                let mut caches = gather_caches(&mut active, |x| &mut x.cache);
-                decode_step(ctx, &last, &mut caches, &mut scratch)
+                let (prim, degr) = st.active.split_at_mut(split);
+                let dctx = run.degrade.unwrap_or(run.ctx);
+                let mut next: Vec<i32> = Vec::with_capacity(prim.len() + degr.len());
+                for (group, tctx) in [(prim, run.ctx), (degr, dctx)] {
+                    if group.is_empty() {
+                        continue;
+                    }
+                    let last: Vec<i32> = group.iter().map(|x| x.last).collect();
+                    let mut caches = gather_caches(group, |x| &mut x.cache);
+                    next.extend(decode_step(tctx, &last, &mut caches, &mut scratch));
+                }
+                next
             };
-            stats.gen_tokens += next.len();
-            for (x, t) in active.iter_mut().zip(&next) {
+            st.stats.gen_tokens += next.len();
+            for (x, t) in st.active.iter_mut().zip(&next) {
                 x.last = *t;
                 x.produced += 1;
                 x.tokens.push(*t);
                 if let Some(tx) = &x.reply {
-                    let _ = tx.send(Reply::Token { index: x.produced - 1, token: *t });
+                    if tx.send(Reply::Token { index: x.produced - 1, token: *t }).is_err() {
+                        // client vanished mid-stream: stop decoding for
+                        // nobody at the next sweep
+                        x.aborted = true;
+                    }
                 }
             }
             let mut i = 0;
-            while i < active.len() {
-                let max_new = match active[i].req.kind {
+            while i < st.active.len() {
+                if st.active[i].aborted {
+                    let x = st.active.swap_remove(i);
+                    st.in_flight_tokens -= x.req.cost();
+                    st.failed.push(FailedOutcome { id: x.req.id, attempts: x.attempts + 1 });
+                    queue.note_failed();
+                    // x.cache drops here: the disconnect releases every
+                    // page the request held
+                    continue;
+                }
+                let max_new = match st.active[i].req.kind {
                     ReqKind::Generate { max_new } => max_new,
                     ReqKind::Score => 0,
                 };
-                if active[i].produced >= max_new {
-                    let x = active.swap_remove(i);
-                    in_flight_tokens -= x.req.cost();
-                    retire(x, wid, queue, sink, &mut finished, &mut stats, None);
+                if st.active[i].produced >= max_new {
+                    let x = st.active.swap_remove(i);
+                    st.in_flight_tokens -= x.req.cost();
+                    retire(x, wid, queue, sink, &mut st.finished, &mut st.stats, None);
                 } else {
                     i += 1;
                 }
             }
-        } else if !progressed && !pending.is_empty() {
+        } else if !progressed && !st.pending.is_empty() {
             // nothing to compute and the pool is dry: try to take over a
             // parked decode (its retirement frees pages), else wait for
             // another worker to release some
-            let room = scfg.token_budget.saturating_sub(in_flight_tokens);
-            if !steal_one(env, wid, room, sink, &mut active, &mut in_flight_tokens) {
+            let room = scfg.token_budget.saturating_sub(st.in_flight_tokens);
+            if !steal_one(env, wid, room, sink, &mut st.active, &mut st.in_flight_tokens) {
                 std::thread::sleep(IDLE_POLL);
             }
         }
-        stats.busy_s += work.elapsed().as_secs_f64();
+        st.stats.busy_s += work.elapsed().as_secs_f64();
     }
-    debug_assert!(pending.is_empty(), "drained with requests still waiting for pages");
-    (stats, finished)
+    debug_assert!(st.pending.is_empty(), "drained with requests still waiting for pages");
 }
 
 #[cfg(test)]

@@ -110,6 +110,17 @@ pub struct PoolStats {
     pub cow_clones: usize,
 }
 
+impl PoolStats {
+    /// The chaos suite's pool-drain invariant: every page released
+    /// (`live == 0`) and every created page accounted for
+    /// (`live + free == created`) — true after any clean shutdown,
+    /// including one that survived injected faults and client
+    /// disconnects.
+    pub fn drained(&self) -> bool {
+        self.live == 0 && self.live + self.free == self.created
+    }
+}
+
 /// A shared pool of fixed-size KV pages (cheaply clonable handle).
 ///
 /// # Invariants

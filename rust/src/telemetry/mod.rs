@@ -15,9 +15,9 @@
 //! Span labels are a stable, closed vocabulary ([`SpanKind::ALL`], one
 //! lowercase token each — see `docs/telemetry.md`): `accept`, `parse`,
 //! `queue`, `admit`, `prefill`, `decode`, `serialize`, `migrate`,
-//! `steal`. Consumers may rely on these strings never being renamed; new
-//! stages extend the enum (and the doc table) rather than repurposing an
-//! existing label.
+//! `steal`, `fault`, `restart`, `requeue`, `degrade`. Consumers may rely
+//! on these strings never being renamed; new stages extend the enum (and
+//! the doc table) rather than repurposing an existing label.
 //!
 //! Timestamps are microseconds since the tracer's epoch (its creation
 //! instant), so one run's spans are mutually comparable and diffable
@@ -57,10 +57,20 @@ pub enum SpanKind {
     Migrate,
     /// parked → stolen, recorded by the thief worker (its index)
     Steal,
+    /// an injected fault fired (`--faults`, `ok:false`; zero-length —
+    /// the instant of the fault, recorded by the affected worker)
+    Fault,
+    /// supervised worker restart: panic caught → loop re-entered
+    /// (duration covers recovery plus the backoff sleep)
+    Restart,
+    /// an interrupted request was returned to the queue for replay
+    Requeue,
+    /// the request was routed to the degrade (higher-sparsity) tier
+    Degrade,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 9] = [
+    pub const ALL: [SpanKind; 13] = [
         SpanKind::Accept,
         SpanKind::Parse,
         SpanKind::Queue,
@@ -70,6 +80,10 @@ impl SpanKind {
         SpanKind::Serialize,
         SpanKind::Migrate,
         SpanKind::Steal,
+        SpanKind::Fault,
+        SpanKind::Restart,
+        SpanKind::Requeue,
+        SpanKind::Degrade,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -83,6 +97,10 @@ impl SpanKind {
             SpanKind::Serialize => "serialize",
             SpanKind::Migrate => "migrate",
             SpanKind::Steal => "steal",
+            SpanKind::Fault => "fault",
+            SpanKind::Restart => "restart",
+            SpanKind::Requeue => "requeue",
+            SpanKind::Degrade => "degrade",
         }
     }
 
@@ -243,7 +261,7 @@ mod tests {
     fn labels_are_stable_and_round_trip() {
         let want = [
             "accept", "parse", "queue", "admit", "prefill", "decode", "serialize", "migrate",
-            "steal",
+            "steal", "fault", "restart", "requeue", "degrade",
         ];
         let got: Vec<&str> = SpanKind::ALL.iter().map(|k| k.label()).collect();
         assert_eq!(got, want, "span labels are a frozen vocabulary (docs/telemetry.md)");

@@ -131,8 +131,36 @@ where
 /// steals small uniform items — each call here *is* one worker for its
 /// whole lifetime: the online serving engine passes a closure that runs a
 /// producer or a continuous-batching worker loop until the request queue
-/// drains. A panicking worker propagates the panic to the caller.
+/// drains. A panicking worker is *reported, not cascaded*: every other
+/// worker is joined first, then one panic naming the dead workers
+/// propagates — so a single death can never abort the process mid-join
+/// while siblings still run (use [`try_scoped_workers`] to handle worker
+/// deaths without panicking at all).
 pub fn scoped_workers<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let results = try_scoped_workers(n, f);
+    let mut dead: Vec<String> = Vec::new();
+    let mut out = Vec::with_capacity(results.len());
+    for (i, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(v) => out.push(v),
+            Err(payload) => dead.push(format!("worker {i}: {}", panic_message(&payload))),
+        }
+    }
+    if !dead.is_empty() {
+        panic!("{} scoped worker(s) panicked — {}", dead.len(), dead.join("; "));
+    }
+    out
+}
+
+/// [`scoped_workers`] with per-worker panic isolation: every worker is
+/// joined and its result returned as `Ok(value)` or `Err(payload)` in
+/// index order. One worker's death never takes down its siblings or the
+/// caller — the supervision layer in `serve::online` builds on this.
+pub fn try_scoped_workers<R, F>(n: usize, f: F) -> Vec<std::thread::Result<R>>
 where
     R: Send,
     F: Fn(usize) -> R + Sync,
@@ -141,13 +169,30 @@ where
         return Vec::new();
     }
     if n == 1 {
-        return vec![f(0)];
+        // same isolation as the threaded path: catch instead of unwinding
+        // through the caller (the closure is reconstructible state — the
+        // payload is reported, never silently reused)
+        return vec![std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)))];
     }
     std::thread::scope(|scope| {
         let f = &f;
         let handles: Vec<_> = (0..n).map(|i| scope.spawn(move || f(i))).collect();
-        handles.into_iter().map(|h| h.join().expect("scoped worker panicked")).collect()
+        // join() already returns Err(payload) for a panicked thread —
+        // collect them all so every worker is reaped before anyone reacts
+        handles.into_iter().map(|h| h.join()).collect()
     })
+}
+
+/// Best-effort human-readable text of a panic payload (`&str` and
+/// `String` payloads cover `panic!`/`assert!`; anything else is opaque).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "<non-string panic payload>"
+    }
 }
 
 #[cfg(test)]
@@ -206,5 +251,52 @@ mod tests {
             i
         });
         assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn try_scoped_workers_isolates_panics() {
+        let results = try_scoped_workers(4, |i| {
+            if i == 2 {
+                panic!("boom at {i}");
+            }
+            i * 10
+        });
+        assert_eq!(results.len(), 4);
+        for (i, r) in results.iter().enumerate() {
+            match r {
+                Ok(v) => {
+                    assert_ne!(i, 2);
+                    assert_eq!(*v, i * 10);
+                }
+                Err(p) => {
+                    assert_eq!(i, 2);
+                    assert_eq!(panic_message(p.as_ref()), "boom at 2");
+                }
+            }
+        }
+        // n == 1 path catches too
+        let one = try_scoped_workers(1, |_| -> usize { panic!("solo") });
+        assert!(one[0].is_err());
+    }
+
+    #[test]
+    fn scoped_workers_reports_not_cascades() {
+        // the surviving workers still complete (the barrier proves all 3
+        // were joined, not aborted by worker 1's death), and the final
+        // panic names the dead worker
+        let done = std::sync::atomic::AtomicUsize::new(0);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            scoped_workers(3, |i| {
+                if i == 1 {
+                    panic!("die");
+                }
+                done.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                i
+            })
+        }));
+        let payload = caught.expect_err("a worker death must still be reported");
+        let msg = panic_message(payload.as_ref());
+        assert!(msg.contains("worker 1"), "panic names the dead worker: {msg}");
+        assert_eq!(done.load(std::sync::atomic::Ordering::SeqCst), 2);
     }
 }

@@ -180,7 +180,7 @@ mod tests {
         assert_eq!(t.f64_or("prune.adam.lr", 0.0), 0.01);
         match t.get("prune.adam.steps").unwrap() {
             Value::Arr(a) => assert_eq!(a.len(), 3),
-            _ => panic!(),
+            other => panic!("prune.adam.steps should parse as an array, got {other:?}"),
         }
     }
 

@@ -1,0 +1,250 @@
+//! Chaos suite for the fault-tolerance plane (hermetic, `test` config):
+//! deterministic fault schedules — worker panics mid-prefill and
+//! mid-decode, slow-worker stalls, admission denials — crossed with
+//! queue policies and KV backings, checking the headline invariants:
+//!
+//! * accounting: every queued request ends in exactly one of
+//!   `finished` / `shed` / `rejected` / `failed`, with disjoint ids;
+//! * replay determinism: a request that survives any number of
+//!   supervised restarts produces the same tokens as a fault-free run
+//!   (replay is from scratch — never splice, never emit a token twice);
+//! * pool drain: in paged mode the page pool ends at `live == 0` with
+//!   `live + free == created` (checked by a hard bail inside
+//!   `serve_online_tiered`, so `Ok(_)` is itself the assertion);
+//! * zero-overhead disabled path: a plan whose triggers never fire is
+//!   bitwise identical to `faults: None`;
+//! * sparsity-tiered degradation: requests routed to the degrade tier
+//!   under pressure are bit-exact against a run served entirely by that
+//!   tier, and never mix with primary-tier outputs.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use besa::model::{ModelConfig, ParamStore};
+use besa::serve::bench::magnitude_prune_in_place;
+use besa::serve::engine::ServeContext;
+use besa::serve::model::{PackedModel, WeightFormat};
+use besa::serve::{
+    serve_online, serve_online_tiered, FaultPlan, KvMode, OnlineConfig, OnlineStats, Pacing,
+    Policy, Qos, ReqKind, Request, SchedulerConfig,
+};
+
+const MAX_POS: usize = 64;
+
+/// `workers` CSR replicas over a magnitude-pruned test model at
+/// `sparsity`.
+fn contexts(workers: usize, sparsity: f64) -> Vec<ServeContext> {
+    let cfg = ModelConfig::builtin("test").expect("built-in test config");
+    let mut params = ParamStore::init(&cfg, 42);
+    magnitude_prune_in_place(&mut params, &cfg, sparsity).unwrap();
+    (0..workers)
+        .map(|_| {
+            ServeContext::new(
+                PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+                MAX_POS,
+            )
+        })
+        .collect()
+}
+
+/// A small deterministic request mix: generation and scoring, varied
+/// prompt lengths, no deadlines (so nothing sheds and the finished set
+/// is the whole admitted set).
+fn requests(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i,
+            arrival: 0.0,
+            tokens: (0..(3 + i % 5)).map(|t| 1 + ((i * 7 + t) % 13) as i32).collect(),
+            kind: if i % 4 == 3 {
+                ReqKind::Score
+            } else {
+                ReqKind::Generate { max_new: 2 + i % 3 }
+            },
+            qos: Qos::default(),
+        })
+        .collect()
+}
+
+fn flood(workers: usize) -> OnlineConfig {
+    OnlineConfig {
+        workers,
+        sched: SchedulerConfig { token_budget: 128, max_batch: 4 },
+        pacing: Pacing::Replay { time_scale: 0.0 },
+        ..OnlineConfig::default()
+    }
+}
+
+/// Per-id terminal outputs of a run, for bitwise comparison.
+fn outputs(stats: &OnlineStats) -> BTreeMap<usize, (Vec<i32>, Option<f64>)> {
+    stats.finished.iter().map(|f| (f.id, (f.tokens.clone(), f.nll))).collect()
+}
+
+/// Every request must end in exactly one terminal set, ids disjoint.
+fn assert_exactly_one_terminal(stats: &OnlineStats, n: usize) {
+    let mut seen = std::collections::BTreeSet::new();
+    for id in stats
+        .finished
+        .iter()
+        .map(|f| f.id)
+        .chain(stats.shed.iter().map(|s| s.id))
+        .chain(stats.rejected.iter().map(|r| r.id))
+        .chain(stats.failed.iter().map(|f| f.id))
+    {
+        assert!(seen.insert(id), "request {id} has two terminal outcomes");
+    }
+    assert_eq!(seen.len(), n, "every request ends in exactly one terminal set");
+}
+
+#[test]
+fn never_firing_plan_is_bitwise_identical_to_disabled() {
+    let ctxs = contexts(2, 0.5);
+    let reqs = requests(12);
+    let baseline = serve_online(&ctxs, reqs.clone(), &flood(2)).unwrap();
+
+    // triggers far beyond anything the trace can reach: the harness is
+    // armed but silent, and the run must be bitwise identical
+    let plan = FaultPlan::parse("panic@prefill:1000000,stall@decode:1000000=5", 7).unwrap();
+    let armed = OnlineConfig { faults: Some(Arc::new(plan)), ..flood(2) };
+    let silent = serve_online_tiered(&ctxs, None, reqs.clone(), &armed, None).unwrap();
+
+    assert_eq!(baseline.finished.len(), reqs.len());
+    assert_eq!(outputs(&baseline), outputs(&silent), "armed-but-silent run must be bit-exact");
+    assert_eq!(silent.restarts, 0);
+    assert_eq!(silent.requeues, 0);
+    assert!(silent.failed.is_empty());
+    assert_eq!(silent.degraded(), 0);
+}
+
+/// The chaos matrix: fault schedules × queue policies × KV backings.
+/// Survivors must reproduce the fault-free tokens bitwise; accounting
+/// and (in paged mode) pool drain must hold under every schedule.
+#[test]
+fn fault_schedules_preserve_accounting_and_token_parity() {
+    let ctxs = contexts(2, 0.5);
+    let reqs = requests(16);
+    let reference = outputs(&serve_online(&ctxs, reqs.clone(), &flood(2)).unwrap());
+
+    let schedules = [
+        "panic@prefill:2+5",
+        "panic@decode:3+7",
+        "stall@decode:2+9=5",
+        "deny@admit%4",
+        "panic@prefill:4+9,stall@decode:5+11=3,deny@admit%6",
+    ];
+    for policy in [Policy::Fifo, Policy::Edf] {
+        for kv in [KvMode::Contig, KvMode::Paged { page_tokens: 4, max_pages: 0 }] {
+            for spec in schedules {
+                let plan = FaultPlan::parse(spec, 0xC4A05).unwrap();
+                let ocfg = OnlineConfig {
+                    policy,
+                    kv,
+                    faults: Some(Arc::new(plan)),
+                    retry_budget: 8,
+                    ..flood(2)
+                };
+                // Ok(_) already proves the internal hard checks passed:
+                // accounting and, in paged mode, a fully drained pool
+                let stats = serve_online_tiered(&ctxs, None, reqs.clone(), &ocfg, None)
+                    .unwrap_or_else(|e| panic!("[{spec} / {policy:?} / {kv:?}] {e:#}"));
+                assert_exactly_one_terminal(&stats, reqs.len());
+                let label = format!("{spec} / {policy:?} / {kv:?}");
+                if spec.contains("panic") {
+                    assert!(stats.restarts > 0, "[{label}] panics must restart the worker");
+                    assert!(stats.requeues > 0 || !stats.failed.is_empty(), "[{label}]");
+                }
+                for f in &stats.finished {
+                    assert_eq!(
+                        (&f.tokens, f.nll),
+                        (&reference[&f.id].0, reference[&f.id].1),
+                        "[{label}] request {} must replay to the fault-free output",
+                        f.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A retry budget of zero turns every mid-service worker death into a
+/// terminal failure — and the accounting still balances.
+#[test]
+fn exhausted_retry_budget_fails_terminally() {
+    let ctxs = contexts(1, 0.5);
+    let reqs = requests(8);
+    let plan = FaultPlan::parse("panic@prefill:3", 0).unwrap();
+    let ocfg = OnlineConfig {
+        // batch of 1: exactly one request is ever mid-service, so the
+        // one panic dooms exactly one request
+        sched: SchedulerConfig { token_budget: 128, max_batch: 1 },
+        faults: Some(Arc::new(plan)),
+        retry_budget: 0,
+        ..flood(1)
+    };
+    let stats = serve_online_tiered(&ctxs, None, reqs.clone(), &ocfg, None).unwrap();
+    assert_exactly_one_terminal(&stats, reqs.len());
+    assert_eq!(stats.failed.len(), 1, "the one injected panic fails its request");
+    assert_eq!(stats.failed[0].attempts, 1);
+    assert_eq!(stats.restarts, 1);
+    assert_eq!(stats.requeues, 0, "budget 0 never requeues");
+    assert_eq!(stats.finished.len(), reqs.len() - 1);
+}
+
+/// Sparsity-tiered degradation under queue pressure: a bounded queue
+/// past half full routes admissions to the sparser tier. Degraded
+/// outputs are bit-exact against a run served *entirely* by the degrade
+/// tier; primary outputs against the primary tier — the two never mix.
+#[test]
+fn degrade_tier_outputs_are_bit_exact_per_tier() {
+    let ctxs = contexts(1, 0.5);
+    let dctxs = contexts(1, 0.9);
+    let reqs = requests(24);
+
+    let primary_ref = outputs(&serve_online(&ctxs, reqs.clone(), &flood(1)).unwrap());
+    let degrade_ref = outputs(&serve_online(&dctxs, reqs.clone(), &flood(1)).unwrap());
+
+    // flood a bounded queue: depth*2 >= cap at service start routes to
+    // the degrade tier; overflow past the cap is rejected at push
+    let ocfg = OnlineConfig { queue_cap: 4, ..flood(1) };
+    let stats = serve_online_tiered(&ctxs, Some(&dctxs), reqs.clone(), &ocfg, None).unwrap();
+    assert_exactly_one_terminal(&stats, reqs.len());
+    assert!(stats.degraded() > 0, "a flooded bounded queue must trigger degrade routing");
+    for f in &stats.finished {
+        let want = if f.degraded { &degrade_ref[&f.id] } else { &primary_ref[&f.id] };
+        assert_eq!(
+            (&f.tokens, f.nll),
+            (&want.0, want.1),
+            "request {} ({}) must be bit-exact for its tier",
+            f.id,
+            if f.degraded { "degraded" } else { "primary" }
+        );
+    }
+}
+
+/// Faults and degradation compose: panics restart workers while
+/// pressure routes to the sparser tier, and every invariant still
+/// holds — including per-tier token parity for replayed requests.
+#[test]
+fn faults_and_degrade_compose() {
+    let ctxs = contexts(2, 0.5);
+    let dctxs = contexts(2, 0.9);
+    let reqs = requests(24);
+
+    let primary_ref = outputs(&serve_online(&ctxs, reqs.clone(), &flood(2)).unwrap());
+    let degrade_ref = outputs(&serve_online(&dctxs, reqs.clone(), &flood(2)).unwrap());
+
+    let plan = FaultPlan::parse("panic@decode:4+9,deny@admit%7", 3).unwrap();
+    let ocfg = OnlineConfig {
+        queue_cap: 6,
+        kv: KvMode::Paged { page_tokens: 4, max_pages: 0 },
+        faults: Some(Arc::new(plan)),
+        retry_budget: 8,
+        ..flood(2)
+    };
+    let stats = serve_online_tiered(&ctxs, Some(&dctxs), reqs.clone(), &ocfg, None).unwrap();
+    assert_exactly_one_terminal(&stats, reqs.len());
+    for f in &stats.finished {
+        let want = if f.degraded { &degrade_ref[&f.id] } else { &primary_ref[&f.id] };
+        assert_eq!((&f.tokens, f.nll), (&want.0, want.1), "request {} per-tier parity", f.id);
+    }
+}

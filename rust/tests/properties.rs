@@ -493,3 +493,198 @@ fn prop_json_roundtrip_numbers() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// model-based fuzz of the supervised retry/requeue state machine
+// ---------------------------------------------------------------------------
+
+/// A randomly drawn chaos scenario: a fault schedule plus the knobs that
+/// shape the retry/requeue state machine around it.
+#[derive(Debug, Clone)]
+struct ChaosCase {
+    spec: String,
+    fault_seed: u64,
+    retry_budget: u32,
+    policy_idx: usize,
+    paged: bool,
+    n_requests: usize,
+}
+
+struct ChaosStrat;
+
+impl Strategy for ChaosStrat {
+    type Value = ChaosCase;
+    fn sample(&self, rng: &mut Rng) -> Self::Value {
+        // 1-3 clauses; counts/periods kept ≥3 so restart-backoff sleeps
+        // stay bounded and the run always terminates quickly
+        let n_clauses = 1 + (rng.next_u64() % 3) as usize;
+        let mut clauses = Vec::new();
+        for _ in 0..n_clauses {
+            let site = ["prefill", "decode"][(rng.next_u64() % 2) as usize];
+            let (action, param) = match rng.next_u64() % 3 {
+                0 => ("panic", String::new()),
+                1 => ("stall", format!("={}", 1 + rng.next_u64() % 3)),
+                _ => ("deny", String::new()),
+            };
+            let clause = if action == "deny" {
+                format!("deny@admit%{}", 4 + rng.next_u64() % 6)
+            } else {
+                match rng.next_u64() % 3 {
+                    0 => format!("{action}@{site}:{}{param}", 3 + rng.next_u64() % 7),
+                    1 => format!(
+                        "{action}@{site}:{}+{}{param}",
+                        3 + rng.next_u64() % 7,
+                        4 + rng.next_u64() % 6
+                    ),
+                    _ => format!("{action}@{site}%{}{param}", 4 + rng.next_u64() % 6),
+                }
+            };
+            clauses.push(clause);
+        }
+        ChaosCase {
+            spec: clauses.join(","),
+            fault_seed: rng.next_u64(),
+            retry_budget: (rng.next_u64() % 4) as u32,
+            policy_idx: (rng.next_u64() % 2) as usize,
+            paged: rng.next_u64() % 2 == 0,
+            n_requests: 4 + (rng.next_u64() % 5) as usize,
+        }
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        // drop clauses one at a time, then shrink the trace
+        let clauses: Vec<&str> = v.spec.split(',').collect();
+        if clauses.len() > 1 {
+            for skip in 0..clauses.len() {
+                let spec: Vec<&str> = clauses
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != skip)
+                    .map(|(_, c)| *c)
+                    .collect();
+                out.push(ChaosCase { spec: spec.join(","), ..v.clone() });
+            }
+        }
+        if v.n_requests > 4 {
+            out.push(ChaosCase { n_requests: v.n_requests - 1, ..v.clone() });
+        }
+        out
+    }
+}
+
+/// The abstract model the engine must refine: every request is admitted
+/// at most `retry_budget + 1` times, ends in exactly one terminal state,
+/// and — when it finishes — produces the fault-free output bitwise,
+/// because replay always restarts from scratch.
+#[test]
+fn prop_retry_requeue_state_machine() {
+    use std::sync::Arc;
+
+    use besa::model::{ModelConfig, ParamStore};
+    use besa::serve::bench::magnitude_prune_in_place;
+    use besa::serve::engine::ServeContext;
+    use besa::serve::model::{PackedModel, WeightFormat};
+    use besa::serve::{
+        serve_online, serve_online_tiered, FaultPlan, KvMode, OnlineConfig, Pacing, Policy, Qos,
+        ReqKind, Request, SchedulerConfig,
+    };
+
+    let cfg = ModelConfig::builtin("test").expect("built-in test config");
+    let mut params = ParamStore::init(&cfg, 42);
+    magnitude_prune_in_place(&mut params, &cfg, 0.5).unwrap();
+    let ctxs: Vec<ServeContext> = (0..2)
+        .map(|_| {
+            ServeContext::new(
+                PackedModel::materialize(&params, &cfg, WeightFormat::Csr).unwrap(),
+                64,
+            )
+        })
+        .collect();
+    let mk_requests = |n: usize| -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                id: i,
+                arrival: 0.0,
+                tokens: (0..(3 + i % 4)).map(|t| 1 + ((i * 5 + t) % 11) as i32).collect(),
+                kind: if i % 3 == 2 {
+                    ReqKind::Score
+                } else {
+                    ReqKind::Generate { max_new: 2 + i % 2 }
+                },
+                qos: Qos::default(),
+            })
+            .collect()
+    };
+    let base = OnlineConfig {
+        workers: 2,
+        sched: SchedulerConfig { token_budget: 128, max_batch: 3 },
+        pacing: Pacing::Replay { time_scale: 0.0 },
+        ..OnlineConfig::default()
+    };
+    // fault-free reference outputs for the largest trace; a prefix of
+    // the id space serves every smaller n (outputs are per-request)
+    let reference: std::collections::BTreeMap<usize, (Vec<i32>, Option<f64>)> =
+        serve_online(&ctxs, mk_requests(8), &base)
+            .unwrap()
+            .finished
+            .iter()
+            .map(|f| (f.id, (f.tokens.clone(), f.nll)))
+            .collect();
+
+    check("supervised retry/requeue refines the abstract model", 16, &ChaosStrat, |case| {
+        let plan = FaultPlan::parse(&case.spec, case.fault_seed)
+            .map_err(|e| format!("{:?}: bad spec: {e:#}", case))?;
+        let ocfg = OnlineConfig {
+            policy: [Policy::Fifo, Policy::Edf][case.policy_idx],
+            kv: if case.paged {
+                KvMode::Paged { page_tokens: 4, max_pages: 0 }
+            } else {
+                KvMode::Contig
+            },
+            faults: Some(Arc::new(plan)),
+            retry_budget: case.retry_budget,
+            ..base.clone()
+        };
+        // Ok(_) certifies the engine's own hard invariants: accounting
+        // balances and the page pool drained to zero live pages
+        let stats = serve_online_tiered(&ctxs, None, mk_requests(case.n_requests), &ocfg, None)
+            .map_err(|e| format!("{case:?}: {e:#}"))?;
+
+        let mut seen = std::collections::BTreeSet::new();
+        for id in stats
+            .finished
+            .iter()
+            .map(|f| f.id)
+            .chain(stats.shed.iter().map(|s| s.id))
+            .chain(stats.rejected.iter().map(|r| r.id))
+            .chain(stats.failed.iter().map(|f| f.id))
+        {
+            if !seen.insert(id) {
+                return Err(format!("{case:?}: request {id} has two terminal outcomes"));
+            }
+        }
+        if seen.len() != case.n_requests {
+            return Err(format!("{case:?}: {} terminals for {} requests", seen.len(), case.n_requests));
+        }
+        for f in &stats.failed {
+            // attempts consumed by a terminal failure can exceed the
+            // budget by at most one (the fatal attempt itself)
+            if f.attempts == 0 || f.attempts > case.retry_budget + 1 {
+                return Err(format!("{case:?}: failure consumed {} attempts", f.attempts));
+            }
+        }
+        if stats.requeues > 0 && stats.restarts == 0 {
+            return Err(format!("{case:?}: requeues without a restart"));
+        }
+        for f in &stats.finished {
+            let (want_tokens, want_nll) = &reference[&f.id];
+            if &f.tokens != want_tokens || f.nll != *want_nll {
+                return Err(format!(
+                    "{case:?}: request {} diverged from the fault-free output after {} restarts",
+                    f.id, stats.restarts
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -340,6 +340,71 @@ fn paged_pool_exhaustion_rejects_and_sheds_clean() {
     assert!(stats.rejected.is_empty(), "transient exhaustion queues, it does not reject");
 }
 
+/// A client that hangs up mid-stream must not leak its KV pages, stall
+/// the worker, or corrupt the accounting: the abandoned request counts
+/// as `failed` (no terminal event has anywhere to go), the paged pool
+/// drains back to zero live pages, and the next request on a fresh
+/// connection is served normally.
+#[test]
+fn client_disconnect_mid_stream_releases_pages_and_counts_failed() {
+    let (_cfg, ctxs) = contexts(1, 512);
+    let ncfg = NetConfig {
+        kv: KvMode::Paged { page_tokens: 2, max_pages: 0 },
+        sched: SchedulerConfig { token_budget: 512, max_batch: 4 },
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(ctxs, ncfg, None).unwrap();
+
+    // a long generation, abandoned after the first streamed token: the
+    // worker discovers the dead client on a later token send and aborts
+    let mut client = LineClient::connect(&server.addr()).unwrap();
+    client.send_line("{\"id\":1,\"prompt\":[1,2,3,4],\"max_new\":200}\n").unwrap();
+    match client.read_event().unwrap() {
+        WireEvent::Token { id, .. } => assert_eq!(id, 1),
+        other => panic!("wanted the first token, got {other:?}"),
+    }
+    drop(client); // hang up with ~199 tokens still to stream
+
+    // the worker is not stalled: a fresh connection is served to
+    // completion while (or after) the abort is swept
+    let mut client2 = LineClient::connect(&server.addr()).unwrap();
+    let events = client2.request("{\"id\":2,\"prompt\":[5,6,7],\"max_new\":3}\n").unwrap();
+    match events.last().unwrap() {
+        WireEvent::Done { id, tokens, .. } => {
+            assert_eq!(*id, 2);
+            assert_eq!(tokens.len(), 3);
+        }
+        other => panic!("wanted done, got {other:?}"),
+    }
+    drop(client2);
+
+    // the aborted request's pages come back to the pool once the sweep
+    // runs; poll rather than sleep — the abort lands on a token send,
+    // not at a fixed time
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let ps = server.pool_stats().expect("paged mode has a pool");
+        if ps.live == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "disconnected request still holds {} live pages",
+            ps.live
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    let stats = server.shutdown().unwrap(); // Err here would mean an undrained pool
+    assert!(stats.drained_clean);
+    assert!(stats.accounted(), "queued == finished + shed + failed");
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.finished.len(), 1, "only the second request finishes");
+    assert_eq!(stats.failed.len(), 1, "the abandoned request counts as failed");
+    assert_eq!(stats.failed[0].id, 1);
+    assert!(stats.shed.is_empty());
+}
+
 #[test]
 fn idle_server_drains_clean() {
     let (_cfg, ctxs) = contexts(2, 64);

@@ -447,9 +447,10 @@ fn loopback_tcp_matches_offline_replay() {
         let events = client.request(&request_line(req.id as u64, req)).unwrap();
         let (want_tokens, want_nll) = &reference[&req.id];
         match events.last().unwrap() {
-            WireEvent::Done { id, tokens, nll, deadline_met } => {
+            WireEvent::Done { id, tokens, nll, deadline_met, degraded } => {
                 assert_eq!(*id, req.id as u64);
                 assert!(*deadline_met, "no deadlines in this trace");
+                assert!(!*degraded, "no degrade tier in this run");
                 assert_eq!(tokens, want_tokens, "request {} tokens over TCP", req.id);
                 assert_eq!(*nll, *want_nll, "request {} NLL bit-exact over the wire", req.id);
             }
